@@ -1,0 +1,33 @@
+//! Quickstart: 30 lines from dataset to embedding.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::coordinator::isomap;
+use isospark::data::swiss_roll;
+use isospark::eval::procrustes;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A dataset: 600 points on the isometric swiss roll (D = 3).
+    let ds = swiss_roll::euler_isometric(600, 42);
+
+    // 2. Isomap hyper-parameters (paper defaults: k=10, tol=1e-9, l=100).
+    let cfg = IsomapConfig { k: 10, d: 2, block: 64, ..Default::default() };
+
+    // 3. A cluster: local() = single executor, free network — pure compute.
+    let cluster = ClusterConfig::local();
+
+    // 4. Run the four-stage pipeline (kNN → APSP → centering → eigen).
+    let out = isomap::run(&ds.points, &cfg, &cluster)?;
+
+    println!("embedding: {} × {}", out.embedding.nrows(), out.embedding.ncols());
+    println!("eigenvalues: {:?}", out.eigenvalues);
+    println!("kNN graph components: {}", out.graph_components);
+    let err = procrustes(ds.ground_truth.as_ref().unwrap(), &out.embedding);
+    println!("procrustes error vs latent ground truth: {err:.3e}");
+    assert!(err < 1e-2, "embedding failed to recover the manifold");
+    println!("OK");
+    Ok(())
+}

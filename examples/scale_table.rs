@@ -1,0 +1,108 @@
+//! Regenerate the paper's scalability evaluation (Tables I–III + Fig. 6)
+//! on the simulated 25-node GbE testbed, with the cost model calibrated
+//! from this machine's real kernels. Also validates the projection against
+//! a *real* engine run at small n. Recorded in EXPERIMENTS.md §T1–T3/§F6.
+//!
+//! ```bash
+//! cargo run --release --example scale_table
+//! ```
+
+use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::coordinator::isomap;
+use isospark::data::swiss_roll;
+use isospark::sim::{self, CostModel, Workload};
+use isospark::util::fmt::render_table;
+
+fn main() -> anyhow::Result<()> {
+    println!("calibrating cost model from native kernels (b=256)…");
+    let model = CostModel::calibrate(256);
+    println!(
+        "  coefficients (s/elem-op): dist={:.2e} minplus={:.2e} fw={:.2e} gemm={:.2e}\n",
+        model.dist, model.minplus, model.fw, model.gemm
+    );
+
+    let nodes = [2usize, 4, 8, 12, 16, 20, 24];
+    let suite = Workload::paper_suite(1500);
+
+    // ---- Table I ----
+    let mut rows = vec![{
+        let mut h = vec!["Name".to_string()];
+        h.extend(nodes.iter().map(|p| p.to_string()));
+        h
+    }];
+    let mut per_suite: Vec<Vec<Option<f64>>> = Vec::new();
+    for w in &suite {
+        let mut row = vec![w.name.clone()];
+        let mut per = Vec::new();
+        for &p in &nodes {
+            let proj = sim::project(w, &ClusterConfig::paper_testbed(p), &model);
+            per.push(proj.total_secs);
+            row.push(proj.total_secs.map_or("-".into(), |s| format!("{:.2}", s / 60.0)));
+        }
+        per_suite.push(per);
+        rows.push(row);
+    }
+    println!("== Table I: execution time (virtual minutes) ==\n{}", render_table(&rows));
+
+    // ---- Table II ----
+    let mut rows2 = rows[..1].to_vec();
+    for (w, per) in suite.iter().zip(&per_suite) {
+        let base = per.iter().flatten().next().cloned();
+        let mut row = vec![w.name.clone()];
+        for v in per {
+            row.push(match (base, v) {
+                (Some(b), Some(t)) => format!("{:.2}", b / t),
+                _ => "-".into(),
+            });
+        }
+        rows2.push(row);
+    }
+    println!("== Table II: relative speedup ==\n{}", render_table(&rows2));
+
+    // ---- Table III ----
+    let mut rows3 = rows[..1].to_vec();
+    for (w, per) in suite.iter().zip(&per_suite) {
+        let base = per.iter().zip(&nodes).find_map(|(v, &p)| v.map(|t| (t, p)));
+        let mut row = vec![w.name.clone()];
+        for (v, &p) in per.iter().zip(&nodes) {
+            row.push(match (base, v) {
+                (Some((tb, pb)), Some(t)) => format!("{:.2}", (tb / t) * pb as f64 / p as f64),
+                _ => "-".into(),
+            });
+        }
+        rows3.push(row);
+    }
+    println!("== Table III: relative efficiency ==\n{}", render_table(&rows3));
+
+    // ---- Fig. 6: block-size sweep on Swiss75 @ 24 nodes ----
+    let mut rows6 = vec![vec!["b".to_string(), "q".to_string(), "total".to_string(), "apsp".to_string()]];
+    let mut best: Option<(usize, f64)> = None;
+    for b in [500usize, 750, 1000, 1500, 2000, 2500, 3000, 4000] {
+        let w = Workload::new("Swiss75", 75_000, 3, b);
+        let proj = sim::project(&w, &ClusterConfig::paper_testbed(24), &model);
+        let t = proj.total_secs.unwrap();
+        if best.map_or(true, |(_, bt)| t < bt) {
+            best = Some((b, t));
+        }
+        rows6.push(vec![
+            b.to_string(),
+            75_000usize.div_ceil(b).to_string(),
+            format!("{:.2} min", t / 60.0),
+            format!("{:.2} min", proj.apsp_secs / 60.0),
+        ]);
+    }
+    println!("== Fig. 6: block-size sweep (Swiss75, 24 nodes) ==\n{}", render_table(&rows6));
+    let (bb, _) = best.unwrap();
+    println!("sweet spot: b = {bb} (paper: b = 1500)\n");
+
+    // ---- Projection sanity: real engine run vs projection at small n ----
+    println!("validating projection against a real engine run (n=1024, b=128, 4 nodes)…");
+    let ds = swiss_roll::euler_isometric(1024, 3);
+    let cfg = IsomapConfig { k: 10, d: 2, block: 128, ..Default::default() };
+    let out = isomap::run(&ds.points, &cfg, &ClusterConfig::paper_testbed(4))?;
+    let w = Workload { eigen_iters: out.eigen_iterations, ..Workload::new("v", 1024, 3, 128) };
+    let proj = sim::project(&w, &ClusterConfig::paper_testbed(4), &CostModel::calibrate(128));
+    let (a, b) = (out.virtual_secs, proj.total_secs.unwrap());
+    println!("  engine virtual time: {a:.2}s | projected: {b:.2}s | ratio {:.2}", a / b);
+    Ok(())
+}

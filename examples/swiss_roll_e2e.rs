@@ -1,0 +1,105 @@
+//! END-TO-END DRIVER (paper Fig. 4 at laptop scale).
+//!
+//! Exercises the full three-layer system on a real workload:
+//!   * L1/L2: the AOT Pallas/JAX artifacts execute every full-block
+//!     distance, min-plus, Floyd–Warshall, centering and gemm op through
+//!     the PJRT runtime (falls back to the native backend with a warning
+//!     if `make artifacts` has not been run);
+//!   * L3: the blocked dataflow engine on a simulated 4-node paper
+//!     testbed, with shuffle accounting, lineage checkpointing and the
+//!     virtual clock.
+//!
+//! n = 2048 swiss-roll points (divisible by b = 128 so the hot path stays
+//! on PJRT), k = 10, d = 2 — then reports Procrustes error vs the latent
+//! rectangle, residual variance, per-stage metrics, and writes
+//! `out/swiss_e2e_embedding.csv`. Recorded in EXPERIMENTS.md §F4.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example swiss_roll_e2e
+//! ```
+
+use isospark::backend::Backend;
+
+use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::coordinator::isomap;
+use isospark::data::{io, swiss_roll};
+use isospark::eval;
+use isospark::util::fmt::{human_bytes, human_duration};
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let n = 2048;
+    let ds = swiss_roll::euler_isometric(n, 4);
+    let cfg = IsomapConfig { k: 10, d: 2, block: 128, ..Default::default() };
+    let cluster = ClusterConfig::paper_testbed(4);
+
+    let backend = match Backend::pjrt_from_dir(Path::new("artifacts")) {
+        Ok(b) => {
+            println!("backend: pjrt (AOT Pallas/JAX artifacts)");
+            b
+        }
+        Err(e) => {
+            println!("backend: native (PJRT unavailable: {e:#})");
+            Backend::Native
+        }
+    };
+
+    println!(
+        "swiss roll: n={n} D=3 | k={} d={} b={} | 4-node simulated testbed",
+        cfg.k, cfg.d, cfg.block
+    );
+    let sw = isospark::util::Stopwatch::start();
+    let out = isomap::run_with(&ds.points, &cfg, &cluster, &backend)?;
+    let wall = sw.secs();
+
+    let truth = ds.ground_truth.as_ref().unwrap();
+    let perr = eval::procrustes(truth, &out.embedding);
+
+    // Residual variance against the *true* geodesics: the roll is
+    // isometric to the latent rectangle, so latent Euclidean distances are
+    // exact manifold distances (no graph approximation error in the
+    // reference). Computed on a subsample.
+    let sub: Vec<usize> = (0..n).step_by(8).collect();
+    let m = sub.len();
+    let mut true_geo = isospark::linalg::Matrix::zeros(m, m);
+    let mut ys = isospark::linalg::Matrix::zeros(m, 2);
+    for (r, &i) in sub.iter().enumerate() {
+        ys.row_mut(r).copy_from_slice(out.embedding.row(i));
+        for (c, &j) in sub.iter().enumerate() {
+            let dt = truth[(i, 0)] - truth[(j, 0)];
+            let dh = truth[(i, 1)] - truth[(j, 1)];
+            true_geo[(r, c)] = (dt * dt + dh * dh).sqrt();
+        }
+    }
+    let rv = eval::residual_variance(&true_geo, &ys, 20_000);
+
+    println!("\n=== results (EXPERIMENTS.md §F4) ===");
+    println!("wall time (real, 1 core):        {}", human_duration(wall));
+    println!("virtual time (4-node testbed):   {}", human_duration(out.virtual_secs));
+    println!("total shuffled:                  {}", human_bytes(out.shuffle_bytes));
+    println!(
+        "eigen iterations:                {} (converged={})",
+        out.eigen_iterations, out.eigen_converged
+    );
+    println!("eigenvalues:                     {:.1?}", out.eigenvalues);
+    println!("graph components:                {}", out.graph_components);
+    println!("procrustes vs ground truth:      {perr:.3e}   (paper: 2.67e-5 at n=50k)");
+    println!("residual variance (subsample):   {rv:.3e}");
+    println!("\nper-stage metrics:\n{}", out.metrics_table);
+
+    assert_eq!(out.graph_components, 1, "kNN graph must be connected");
+    assert!(perr < 5e-3, "procrustes too high: {perr}");
+
+    std::fs::create_dir_all("out")?;
+    let mut dump = isospark::linalg::Matrix::zeros(n, 4);
+    for i in 0..n {
+        dump[(i, 0)] = out.embedding[(i, 0)];
+        dump[(i, 1)] = out.embedding[(i, 1)];
+        dump[(i, 2)] = truth[(i, 0)];
+        dump[(i, 3)] = truth[(i, 1)];
+    }
+    io::write_csv(Path::new("out/swiss_e2e_embedding.csv"), &dump, Some(&["y1", "y2", "t", "h"]))?;
+    println!("embedding + ground truth written to out/swiss_e2e_embedding.csv");
+    println!("E2E OK");
+    Ok(())
+}

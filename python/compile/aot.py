@@ -1,0 +1,107 @@
+"""AOT lowering: JAX/Pallas block ops → HLO text + manifest.json.
+
+Run once by ``make artifacts``. HLO *text* (not ``.serialize()``) is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which the Rust side's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Shapes are static in HLO, so every (op, shape) pair in the artifact matrix
+below becomes one file; the Rust runtime picks by shape and falls back to
+the native kernel for anything else (ragged tail blocks).
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+# Block sizes the Rust coordinator uses by default (tests use 32/64; the
+# examples/benches run 128). Keep this list short: each entry costs a
+# lowering at build time and a compile at first use.
+BLOCK_SIZES = (32, 64, 128)
+# Ambient dimensionalities for the distance kernel: swiss roll / s-curve
+# (3), the clusters benchmark (16), synthetic EMNIST (784).
+DIST_DIMS = (3, 16, 784)
+# gemm artifacts are lowered at this padded width; the runtime zero-pads
+# Q's columns (exact for matmul) and slices the result.
+DMAX = 8
+
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True so the Rust
+    side unwraps a 1-tuple, matching the reference wiring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+def artifact_matrix():
+    """Yield (op, params, example-args) for every artifact to build."""
+    for b in BLOCK_SIZES:
+        yield "minplus", {"b": b}, (spec(b, b), spec(b, b))
+        yield "fw", {"b": b}, (spec(b, b),)
+        yield "center", {"b": b}, (spec(b, b), spec(b), spec(b), spec())
+        # d=2 is the overwhelmingly common visualization case (§Perf:
+        # avoids padding every power-iteration block product to DMAX).
+        for d in (2, DMAX):
+            yield "gemm", {"b": b, "d": d}, (spec(b, b), spec(b, d))
+            yield "gemmt", {"b": b, "d": d}, (spec(b, b), spec(b, d))
+        for dim in DIST_DIMS:
+            yield "dist", {"b": b, "dim": dim}, (spec(b, dim), spec(b, dim))
+
+
+FNS = {
+    "minplus": model.minplus,
+    "fw": model.fw,
+    "center": model.center,
+    "gemm": model.gemm,
+    "gemmt": model.gemmt,
+    "dist": model.dist,
+}
+
+
+def build(out_dir: pathlib.Path) -> dict:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    ops = []
+    for op, params, args in artifact_matrix():
+        name = op + "".join(f"_{k}{v}" for k, v in sorted(params.items()))
+        fname = f"{name}.hlo.txt"
+        lowered = jax.jit(FNS[op]).lower(*args)
+        text = to_hlo_text(lowered)
+        (out_dir / fname).write_text(text)
+        entry = {"op": op, "file": fname}
+        entry.update(params)
+        ops.append(entry)
+        print(f"  {fname:<28} {len(text):>9} chars")
+    manifest = {"version": 1, "dmax": DMAX, "ops": ops}
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = parser.parse_args()
+    out = pathlib.Path(args.out)
+    manifest = build(out)
+    print(f"wrote {len(manifest['ops'])} artifacts + manifest.json to {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1 Pallas kernels for the Isomap block ops.
+
+Authored for the TPU mental model (VMEM-tiled BlockSpecs, MXU-shaped inner
+products where the semiring allows) but always lowered with
+``interpret=True``: the CPU PJRT plugin cannot execute Mosaic custom-calls,
+and interpret mode lowers each kernel to plain HLO that the Rust runtime's
+CPU client runs bit-for-bit (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from . import fw, minplus, ref, sqdist  # noqa: F401

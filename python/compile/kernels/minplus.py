@@ -1,0 +1,72 @@
+"""Tiled min-plus (tropical) matrix-product Pallas kernel — the APSP hot
+spot (the paper's Numba-JIT'd Python routine).
+
+TPU mapping (DESIGN.md §9): the semiring product has no MXU path (it is a
+select-add, not a multiply-accumulate), so the kernel targets the VPU with
+a 3-D broadcast over a short `k` tile. Tiles of (bm, bk)·(bk, bn) stay
+resident in VMEM; the accumulator tile is initialized to +∞ on the first
+`k` step and min-reduced across the `k` grid dimension. With the default
+(128, 8, 128) tiling the working set is 128·8·128 f64 ≈ 1 MiB — well
+inside VMEM with room to double-buffer.
+"""
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax.experimental import pallas as pl  # noqa: E402
+
+# Default k-tile. The kernel loops rank-1 updates inside the tile, so the
+# working set is just the three 2-D tiles (no 3-D broadcast intermediate —
+# §Perf: the (bm, bk, bn) tensor formulation was 1.6–2.4 ms/block at
+# b=128 vs ~1 ms for the rank-1 loop).
+BK = 128
+
+
+def _minplus_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: bk rank-1 updates o = min(o, a[:,k]+b[k,:]).
+
+    Mirrors the FW kernel's structure: each step is a fully vectorized
+    (bm, bn) VPU op with the pivot column/row broadcast from VMEM.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, jnp.inf)
+
+    a = a_ref[...]  # (bm, bk)
+    b = b_ref[...]  # (bk, bn)
+
+    def body(k, o):
+        col = jax.lax.dynamic_slice_in_dim(a, k, 1, axis=1)  # (bm, 1)
+        row = jax.lax.dynamic_slice_in_dim(b, k, 1, axis=0)  # (1, bn)
+        return jnp.minimum(o, col + row)
+
+    o_ref[...] = jax.lax.fori_loop(0, a.shape[1], body, o_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def minplus(a, b, *, bm=None, bn=None, bk=None):
+    """C = A ⊗ B over (min, +). Shapes (m, k)·(k, n); tiles must divide."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"shape mismatch {a.shape} x {b.shape}"
+    bm = bm or min(m, 128)
+    bn = bn or min(n, 128)
+    bk = bk or min(k, BK)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, "tiles must divide"
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)

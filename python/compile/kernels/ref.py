@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every block op.
+
+These are the correctness ground truth: pytest asserts each Pallas kernel
+(and the composed L2 model ops) against these under hypothesis-driven
+shape/value sweeps. They are intentionally written in the most obvious
+formulation — no tiling, no tricks.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+
+def minplus_ref(a, b):
+    """Min-plus (tropical) matrix product: C[i,j] = min_k A[i,k] + B[k,j]."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def dist_ref(xi, xj):
+    """Pairwise Euclidean distances between row sets."""
+    diff = xi[:, None, :] - xj[None, :, :]
+    return jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+
+
+def fw_ref(g):
+    """Floyd–Warshall via a lax scan over pivots."""
+
+    def body(d, k):
+        d = jnp.minimum(d, d[:, k][:, None] + d[k, :][None, :])
+        return d, None
+
+    out, _ = jax.lax.scan(body, g, jnp.arange(g.shape[0]))
+    return out
+
+
+def center_ref(block, mu_r, mu_c, grand):
+    """Double-centering application with the classical-MDS -1/2 factor."""
+    return -0.5 * (block - mu_r[:, None] - mu_c[None, :] + grand)
+
+
+def gemm_ref(a, q):
+    """Plain block product A·Q."""
+    return a @ q
+
+
+def gemmt_ref(a, q):
+    """Transposed block product Aᵀ·Q."""
+    return a.T @ q

@@ -1,0 +1,42 @@
+"""Pairwise Euclidean-distance block Pallas kernel (kNN stage).
+
+Uses the Gram expansion ‖x‖² + ‖y‖² − 2·x·yᵀ so the inner product is a
+plain matmul: on a real TPU this is the MXU-eligible formulation (the
+point blocks stream through the systolic array), unlike the naive
+(bi, bj, D) difference tensor which is VPU-bound and D× larger in VMEM.
+At (b=128, D=784) the VMEM working set is 2·128·784·8 ≈ 1.6 MiB.
+Cancellation guard: clamp tiny negative d² to 0 before the sqrt.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax.experimental import pallas as pl  # noqa: E402
+
+
+def _sqdist_kernel(xi_ref, xj_ref, o_ref):
+    xi = xi_ref[...]  # (bi, D)
+    xj = xj_ref[...]  # (bj, D)
+    gram = jax.lax.dot_general(
+        xi, xj, (((1,), (1,)), ((), ())), preferred_element_type=xi.dtype
+    )  # xi @ xj.T
+    ni = jnp.sum(xi * xi, axis=1, keepdims=True)
+    nj = jnp.sum(xj * xj, axis=1)
+    d2 = ni + nj[None, :] - 2.0 * gram
+    o_ref[...] = jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+@jax.jit
+def dist_block(xi, xj):
+    """(bi, D) × (bj, D) → (bi, bj) Euclidean distance block."""
+    bi, dim = xi.shape
+    bj, dim2 = xj.shape
+    assert dim == dim2, f"dimension mismatch {xi.shape} x {xj.shape}"
+    # One block pair per call: the engine's unit of work is already a tile.
+    return pl.pallas_call(
+        _sqdist_kernel,
+        out_shape=jax.ShapeDtypeStruct((bi, bj), xi.dtype),
+        interpret=True,
+    )(xi, xj)

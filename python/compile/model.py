@@ -1,0 +1,50 @@
+"""L2 — the JAX block-op compute graph.
+
+Each function here is one unit of executor work in the Rust coordinator's
+pipeline (paper Alg. 1), composed from the L1 Pallas kernels where the
+paper offloads to BLAS/Numba, and plain jnp where XLA's native lowering is
+already optimal (centering is a fused elementwise op; the power-iteration
+block product is a native matmul the MXU/`dot` path handles directly).
+`aot.py` lowers every function below to HLO text once at build time.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import fw as fw_kernel  # noqa: E402
+from .kernels import minplus as minplus_kernel  # noqa: E402
+from .kernels import sqdist as sqdist_kernel  # noqa: E402
+
+
+def dist(xi, xj):
+    """kNN stage: one distance block M^{(I,J)} (L1 sqdist kernel)."""
+    return (sqdist_kernel.dist_block(xi, xj),)
+
+
+def minplus(a, b):
+    """APSP Phases 2/3: one min-plus block product (L1 kernel)."""
+    return (minplus_kernel.minplus(a, b),)
+
+
+def fw(g):
+    """APSP Phase 1: in-block Floyd–Warshall (L1 kernel)."""
+    return (fw_kernel.floyd_warshall(g),)
+
+
+def center(block, mu_r, mu_c, grand):
+    """Centering stage: a ← −½(a − μ_row − μ_col + μ̂), fused by XLA."""
+    return (-0.5 * (block - mu_r[:, None] - mu_c[None, :] + grand),)
+
+
+def gemm(a, q):
+    """Power iteration: V_I contribution A^{(I,J)}·Q_J."""
+    return (a @ q,)
+
+
+def gemmt(a, q):
+    """Power iteration, transposed contribution (A^{(I,J)})ᵀ·Q_I for the
+    upper-triangular storage."""
+    return (a.T @ q,)

@@ -1,0 +1,91 @@
+//! Ablation: native Rust kernels vs the AOT Pallas/JAX artifacts through
+//! PJRT — the reproduction's analogue of the paper's "offload to BLAS"
+//! argument. Per-op block throughput plus the end-to-end pipeline on each
+//! backend. Skips PJRT cases when `make artifacts` has not run.
+//!
+//! Run: `cargo bench --bench ablation_backend`
+
+use isospark::backend::Backend;
+use isospark::bench::Bencher;
+use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::coordinator::isomap;
+use isospark::data::swiss_roll;
+use isospark::kernels;
+use isospark::linalg::Matrix;
+use isospark::runtime::PjrtEngine;
+use isospark::util::Rng;
+use std::path::Path;
+
+fn random(r: usize, c: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seed(seed);
+    let mut m = Matrix::zeros(r, c);
+    for i in 0..r {
+        for j in 0..c {
+            m[(i, j)] = rng.range(0.0, 5.0);
+        }
+    }
+    m
+}
+
+fn main() {
+    let mut bench = Bencher::with(4.0, 10, 1);
+    let rt = PjrtEngine::load(Path::new("artifacts")).ok();
+    if rt.is_none() {
+        println!("(PJRT artifacts missing — native-only run; `make artifacts` to compare)");
+    }
+
+    for b in [64usize, 128] {
+        let a = random(b, b, 1);
+        let c = random(b, b, 2);
+        let mut dst = Matrix::full(b, b, f64::INFINITY);
+        bench.case(&format!("minplus:native:b{b}"), || {
+            kernels::minplus::minplus_into(&a, &c, &mut dst);
+        });
+        if let Some(rt) = &rt {
+            bench.case(&format!("minplus:pjrt:b{b}"), || {
+                rt.minplus(&a, &c).unwrap();
+            });
+        }
+
+        let xi = random(b, 784, 3);
+        let xj = random(b, 784, 4);
+        bench.case(&format!("dist:native:b{b}:D784"), || {
+            kernels::sqdist::dist_block(&xi, &xj);
+        });
+        if let Some(rt) = &rt {
+            bench.case(&format!("dist:pjrt:b{b}:D784"), || {
+                rt.dist_block(&xi, &xj).unwrap();
+            });
+        }
+
+        let g = random(b, b, 5);
+        bench.case(&format!("fw:native:b{b}"), || {
+            kernels::floyd_warshall::floyd_warshall(&g);
+        });
+        if let Some(rt) = &rt {
+            bench.case(&format!("fw:pjrt:b{b}"), || {
+                rt.floyd_warshall(&g).unwrap();
+            });
+        }
+    }
+
+    // End-to-end on each backend.
+    println!("\n== end-to-end pipeline by backend (n=512, b=128) ==");
+    let ds = swiss_roll::euler_isometric(512, 11);
+    let cfg = IsomapConfig { k: 10, d: 2, block: 128, ..Default::default() };
+    // warmup=1 so the PJRT case's one-time executable compiles are not
+    // measured.
+    let mut e2e = Bencher::with(20.0, 3, 1);
+    e2e.case("pipeline:native", || {
+        isomap::run_with(&ds.points, &cfg, &ClusterConfig::local(), &Backend::Native).unwrap();
+    });
+    if rt.is_some() {
+        let be = Backend::pjrt_from_dir(Path::new("artifacts")).unwrap();
+        e2e.case("pipeline:pjrt", || {
+            isomap::run_with(&ds.points, &cfg, &ClusterConfig::local(), &be).unwrap();
+        });
+    }
+
+    std::fs::create_dir_all("out").ok();
+    std::fs::write("out/ablation_backend.json", bench.json()).ok();
+}

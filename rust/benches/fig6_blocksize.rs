@@ -1,0 +1,43 @@
+//! Bench: regenerate paper Fig. 6 — total execution time of Swiss75 on 24
+//! nodes as a function of the logical block size b (the U-shaped curve
+//! with the sweet spot near b=1500–2500). Also runs a *real* engine sweep
+//! at laptop scale (n=1024) to show the same U-shape in actual seconds.
+//!
+//! Run: `cargo bench --bench fig6_blocksize`
+
+use isospark::bench::Bencher;
+use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::coordinator::isomap;
+use isospark::data::swiss_roll;
+use isospark::sim::{self, CostModel, Workload};
+
+fn main() {
+    let mut bench = Bencher::new();
+
+    println!("== Fig. 6 (paper scale, simulated): Swiss75 @ 24 nodes ==");
+    let model = CostModel::calibrate(256);
+    for b in [500usize, 750, 1000, 1500, 2000, 2500, 3000, 4000] {
+        let w = Workload::new("Swiss75", 75_000, 3, b);
+        let proj = sim::project(&w, &ClusterConfig::paper_testbed(24), &model);
+        bench.report_value(
+            &format!("fig6:sim:b{b}:minutes"),
+            proj.total_secs.unwrap() / 60.0,
+            "min",
+        );
+    }
+
+    println!("\n== Fig. 6 (laptop scale, real engine): n=1024 swiss roll ==");
+    let ds = swiss_roll::euler_isometric(1024, 6);
+    let mut real = Bencher::with(8.0, 3, 0);
+    for b in [32usize, 64, 128, 256, 512] {
+        let cfg = IsomapConfig { k: 10, d: 2, block: b, ..Default::default() };
+        real.case(&format!("fig6:real:b{b}"), || {
+            let out = isomap::run(&ds.points, &cfg, &ClusterConfig::local()).unwrap();
+            assert_eq!(out.graph_components, 1);
+        });
+    }
+
+    std::fs::create_dir_all("out").ok();
+    std::fs::write("out/fig6.json", bench.json()).ok();
+    println!("JSON written to out/fig6.json");
+}

@@ -1,0 +1,73 @@
+//! Bench: simultaneous power iteration (paper §III-D) — per-iteration cost
+//! of the blocked A·Q product + driver QR, across block sizes and d.
+//!
+//! Run: `cargo bench --bench stage_eigen`
+
+use isospark::backend::Backend;
+use isospark::bench::Bencher;
+use isospark::config::ClusterConfig;
+use isospark::coordinator::{blocks_from_dense, eigen, num_blocks};
+use isospark::engine::partitioner::UpperTriangularPartitioner;
+use isospark::engine::SparkContext;
+use isospark::linalg::{qr::qr_thin, Matrix};
+use isospark::util::Rng;
+use std::rc::Rc;
+
+fn random_symmetric(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seed(seed);
+    let mut m = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            let x = rng.gaussian();
+            m[(i, j)] = x;
+            m[(j, i)] = x;
+        }
+    }
+    m
+}
+
+fn main() {
+    let mut bench = Bencher::with(5.0, 5, 1);
+
+    // Driver-side QR on tall-skinny V (what the paper offloads to BLAS).
+    for (n, d) in [(1024usize, 2usize), (1024, 8), (4096, 2)] {
+        let mut rng = Rng::seed(3);
+        let mut v = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                v[(i, j)] = rng.gaussian();
+            }
+        }
+        bench.case(&format!("eigen:qr:n{n}:d{d}"), || {
+            let (q, _) = qr_thin(&v);
+            assert_eq!(q.ncols(), d);
+        });
+    }
+
+    // Full power iteration over the engine.
+    let n = 1024;
+    for (b, d) in [(128usize, 2usize), (128, 3), (256, 2)] {
+        let m = random_symmetric(n, 7);
+        let q = num_blocks(n, b);
+        bench.case(&format!("eigen:power:n{n}:b{b}:d{d}"), || {
+            let ctx = SparkContext::new(ClusterConfig::local());
+            let part = Rc::new(UpperTriangularPartitioner::new(q, q))
+                as Rc<dyn isospark::engine::Partitioner>;
+            let rdd = ctx.parallelize("a", blocks_from_dense(&m, b), part);
+            let out = eigen::simultaneous_power_iteration(
+                &rdd,
+                n,
+                b,
+                d,
+                1e-6,
+                40,
+                &Backend::Native,
+            )
+            .unwrap();
+            assert!(out.iterations > 0);
+        });
+    }
+
+    std::fs::create_dir_all("out").ok();
+    std::fs::write("out/stage_eigen.json", bench.json()).ok();
+}

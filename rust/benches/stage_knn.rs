@@ -1,0 +1,51 @@
+//! Bench: the kNN stage (distance blocks + heap top-k + graph fill) on the
+//! real engine, across block sizes and ambient dimensionality — the
+//! paper's §III-A workload. Reports measured single-core compute and the
+//! shuffle volume the custom partitioner produces.
+//!
+//! Run: `cargo bench --bench stage_knn`
+
+use isospark::backend::Backend;
+use isospark::bench::Bencher;
+use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::coordinator::knn;
+use isospark::data::{emnist_synth, swiss_roll};
+use isospark::engine::SparkContext;
+
+fn main() {
+    let mut bench = Bencher::with(6.0, 5, 1);
+
+    let n = 1024;
+    let swiss = swiss_roll::euler_isometric(n, 5);
+    for b in [64usize, 128, 256] {
+        let cfg = IsomapConfig { k: 10, block: b, ..Default::default() };
+        bench.case(&format!("knn:swiss:n{n}:b{b}:D3"), || {
+            let ctx = SparkContext::new(ClusterConfig::local());
+            let g = knn::build(&ctx, &swiss.points, &cfg, &Backend::Native).unwrap();
+            assert_eq!(g.lists.len(), n);
+        });
+    }
+
+    let emnist = emnist_synth::generate(512, 5);
+    for b in [64usize, 128] {
+        let cfg = IsomapConfig { k: 10, block: b, ..Default::default() };
+        bench.case(&format!("knn:emnist:n512:b{b}:D784"), || {
+            let ctx = SparkContext::new(ClusterConfig::local());
+            let g = knn::build(&ctx, &emnist.points, &cfg, &Backend::Native).unwrap();
+            assert_eq!(g.lists.len(), 512);
+        });
+    }
+
+    // Shuffle accounting on a multi-node simulated cluster.
+    let cfg = IsomapConfig { k: 10, block: 128, ..Default::default() };
+    let ctx = SparkContext::new(ClusterConfig::paper_testbed(4));
+    knn::build(&ctx, &swiss.points, &cfg, &Backend::Native).unwrap();
+    bench.report_value(
+        "knn:swiss:n1024:b128:shuffle",
+        ctx.total_shuffle_bytes() as f64 / (1 << 20) as f64,
+        "MiB",
+    );
+
+    std::fs::create_dir_all("out").ok();
+    std::fs::write("out/stage_knn.json", bench.json()).ok();
+}

@@ -1,0 +1,42 @@
+//! Bench: regenerate paper Tables I–III (execution time / relative speedup
+//! / relative efficiency across 2–24 nodes for the five benchmark
+//! datasets) on the simulated testbed, cost model calibrated from this
+//! machine's kernels. Writes `out/table1.json`.
+//!
+//! Run: `cargo bench --bench table1_scaling`
+
+use isospark::bench::Bencher;
+use isospark::config::ClusterConfig;
+use isospark::sim::{self, CostModel, Workload};
+
+fn main() {
+    println!("== Table I–III: scalability on the simulated paper testbed ==");
+    let model = CostModel::calibrate(256);
+    let mut bench = Bencher::new();
+    let nodes = [2usize, 4, 8, 12, 16, 20, 24];
+    for w in Workload::paper_suite(1500) {
+        let mut base: Option<(f64, usize)> = None;
+        for &p in &nodes {
+            let proj = sim::project(&w, &ClusterConfig::paper_testbed(p), &model);
+            match proj.total_secs {
+                None => println!("table1:{}:p{p:<2} {:>44}", w.name, "- (out of memory)"),
+                Some(t) => {
+                    if base.is_none() {
+                        base = Some((t, p));
+                    }
+                    let (tb, pb) = base.unwrap();
+                    bench.report_value(&format!("table1:{}:p{p}:minutes", w.name), t / 60.0, "min");
+                    bench.report_value(&format!("table2:{}:p{p}:speedup", w.name), tb / t, "x");
+                    bench.report_value(
+                        &format!("table3:{}:p{p}:efficiency", w.name),
+                        (tb / t) * pb as f64 / p as f64,
+                        "",
+                    );
+                }
+            }
+        }
+    }
+    std::fs::create_dir_all("out").ok();
+    std::fs::write("out/table1.json", bench.json()).ok();
+    println!("JSON written to out/table1.json");
+}

@@ -1,0 +1,155 @@
+//! Compute-backend abstraction.
+//!
+//! Every numerically heavy block operation the coordinator issues goes
+//! through a [`Backend`], which either runs the native Rust kernels
+//! ([`crate::kernels`]) or executes the AOT-compiled Pallas/JAX artifacts
+//! through PJRT ([`crate::runtime`]). The `runtime_equivalence` test suite
+//! asserts the two agree to tight tolerances; benches compare their
+//! throughput (ablation d: BLAS-offload vs interpreter, mirroring the
+//! paper's NumPy→MKL offload argument).
+
+use crate::kernels;
+use crate::linalg::Matrix;
+use crate::runtime::PjrtEngine;
+use anyhow::Result;
+use std::rc::Rc;
+
+/// Which engine executes block math.
+#[derive(Clone)]
+pub enum Backend {
+    /// Pure-Rust kernels (always available; also the perf baseline).
+    Native,
+    /// AOT Pallas/JAX artifacts via the PJRT CPU client.
+    Pjrt(Rc<PjrtEngine>),
+}
+
+impl Backend {
+    /// Load the PJRT backend from an artifact directory (`make artifacts`).
+    pub fn pjrt_from_dir(dir: &std::path::Path) -> Result<Backend> {
+        Ok(Backend::Pjrt(Rc::new(PjrtEngine::load(dir)?)))
+    }
+
+    /// Human-readable name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt(_) => "pjrt",
+        }
+    }
+
+    /// Pairwise-distance block `‖x_i − y_j‖₂`.
+    pub fn dist_block(&self, xi: &Matrix, xj: &Matrix) -> Matrix {
+        match self {
+            Backend::Native => kernels::sqdist::dist_block(xi, xj),
+            Backend::Pjrt(rt) => rt
+                .dist_block(xi, xj)
+                .unwrap_or_else(|_| kernels::sqdist::dist_block(xi, xj)),
+        }
+    }
+
+    /// `dst = min(dst, a ⊗ b)` over the min-plus semiring.
+    pub fn minplus_into(&self, a: &Matrix, b: &Matrix, dst: &mut Matrix) {
+        match self {
+            Backend::Native => kernels::minplus::minplus_into(a, b, dst),
+            Backend::Pjrt(rt) => {
+                if let Ok(c) = rt.minplus(a, b) {
+                    kernels::minplus::elementwise_min_into(dst, &c);
+                } else {
+                    kernels::minplus::minplus_into(a, b, dst);
+                }
+            }
+        }
+    }
+
+    /// In-place Floyd–Warshall on a square block.
+    pub fn fw_inplace(&self, g: &mut Matrix) {
+        match self {
+            Backend::Native => kernels::floyd_warshall::floyd_warshall_inplace(g),
+            Backend::Pjrt(rt) => match rt.floyd_warshall(g) {
+                Ok(out) => *g = out,
+                Err(_) => kernels::floyd_warshall::floyd_warshall_inplace(g),
+            },
+        }
+    }
+
+    /// Double-centering application on one block.
+    pub fn center_block(&self, block: &mut Matrix, mu_r: &[f64], mu_c: &[f64], grand: f64) {
+        match self {
+            Backend::Native => kernels::centering::center_block(block, mu_r, mu_c, grand),
+            Backend::Pjrt(rt) => match rt.center_block(block, mu_r, mu_c, grand) {
+                Ok(out) => *block = out,
+                Err(_) => kernels::centering::center_block(block, mu_r, mu_c, grand),
+            },
+        }
+    }
+
+    /// `out += a · q` (power-iteration block product).
+    pub fn gemm_acc(&self, a: &Matrix, q: &Matrix, out: &mut Matrix) {
+        match self {
+            Backend::Native => kernels::matvec::gemm_acc(a, q, out),
+            Backend::Pjrt(rt) => match rt.gemm(a, q) {
+                Ok(c) => {
+                    for (o, &x) in out.as_mut_slice().iter_mut().zip(c.as_slice()) {
+                        *o += x;
+                    }
+                }
+                Err(_) => kernels::matvec::gemm_acc(a, q, out),
+            },
+        }
+    }
+
+    /// `out += aᵀ · q` (transposed contribution of upper-triangular blocks).
+    pub fn gemm_t_acc(&self, a: &Matrix, q: &Matrix, out: &mut Matrix) {
+        match self {
+            Backend::Native => kernels::matvec::gemm_t_acc(a, q, out),
+            Backend::Pjrt(rt) => match rt.gemm_t(a, q) {
+                Ok(c) => {
+                    for (o, &x) in out.as_mut_slice().iter_mut().zip(c.as_slice()) {
+                        *o += x;
+                    }
+                }
+                Err(_) => kernels::matvec::gemm_t_acc(a, q, out),
+            },
+        }
+    }
+}
+
+impl std::fmt::Debug for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Backend::{}", self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random(m: usize, n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed(seed);
+        let mut a = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                a[(i, j)] = rng.range(0.0, 5.0);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn native_backend_smoke() {
+        let be = Backend::Native;
+        assert_eq!(be.name(), "native");
+        let x = random(4, 3, 1);
+        let d = be.dist_block(&x, &x);
+        assert_eq!(d.nrows(), 4);
+        let a = random(4, 4, 2);
+        let b = random(4, 4, 3);
+        let mut dst = Matrix::full(4, 4, f64::INFINITY);
+        be.minplus_into(&a, &b, &mut dst);
+        assert!(dst.as_slice().iter().all(|v| v.is_finite()));
+        let mut out = Matrix::zeros(4, 2);
+        be.gemm_acc(&a, &random(4, 2, 4), &mut out);
+        assert!(out.fro_norm() > 0.0);
+    }
+}

@@ -1,0 +1,151 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use [`Bencher`] to run warmups + timed iterations
+//! and print criterion-style lines plus a machine-readable JSON report.
+
+use crate::util::json::Json;
+use crate::util::Stopwatch;
+
+/// Statistics of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub std_secs: f64,
+    pub min_secs: f64,
+    pub max_secs: f64,
+}
+
+impl BenchResult {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_secs", Json::num(self.mean_secs)),
+            ("std_secs", Json::num(self.std_secs)),
+            ("min_secs", Json::num(self.min_secs)),
+            ("max_secs", Json::num(self.max_secs)),
+        ])
+    }
+}
+
+/// Bench runner with a global time budget per case.
+pub struct Bencher {
+    /// Max seconds to spend measuring one case.
+    pub budget_secs: f64,
+    /// Max timed iterations.
+    pub max_iters: usize,
+    /// Warmup iterations.
+    pub warmup: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { budget_secs: 3.0, max_iters: 20, warmup: 1, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick-profile configuration for expensive end-to-end cases.
+    pub fn heavy() -> Self {
+        Self { budget_secs: 10.0, max_iters: 5, warmup: 0, results: Vec::new() }
+    }
+
+    /// Fully custom configuration.
+    pub fn with(budget_secs: f64, max_iters: usize, warmup: usize) -> Self {
+        Self { budget_secs, max_iters, warmup, results: Vec::new() }
+    }
+
+    /// Time `f`, printing a summary line. Returns the mean seconds.
+    pub fn case(&mut self, name: &str, mut f: impl FnMut()) -> f64 {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::new();
+        let budget = Stopwatch::start();
+        while samples.len() < self.max_iters
+            && (samples.is_empty() || budget.secs() < self.budget_secs)
+        {
+            let sw = Stopwatch::start();
+            f();
+            samples.push(sw.secs());
+        }
+        let n = samples.len() as f64;
+        let mean = samples.iter().sum::<f64>() / n;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean_secs: mean,
+            std_secs: var.sqrt(),
+            min_secs: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            max_secs: samples.iter().cloned().fold(0.0, f64::max),
+        };
+        println!(
+            "{:<48} {:>12} ± {:<10} ({} iters)",
+            result.name,
+            crate::util::fmt::human_duration(result.mean_secs),
+            crate::util::fmt::human_duration(result.std_secs),
+            result.iters
+        );
+        self.results.push(result);
+        mean
+    }
+
+    /// Report a derived (not directly timed) scalar in the same output
+    /// stream, e.g. a simulated Table-I cell.
+    pub fn report_value(&mut self, name: &str, value: f64, unit: &str) {
+        println!("{name:<48} {value:>12.4} {unit}");
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: 0,
+            mean_secs: value,
+            std_secs: 0.0,
+            min_secs: value,
+            max_secs: value,
+        });
+    }
+
+    /// All results so far.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Dump results as JSON (written next to the bench output for the
+    /// EXPERIMENTS.md tables).
+    pub fn json(&self) -> String {
+        Json::arr(self.results.iter().map(BenchResult::to_json).collect()).to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn case_collects_stats() {
+        let mut b = Bencher { budget_secs: 0.2, max_iters: 5, warmup: 1, results: vec![] };
+        let mean = b.case("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(mean >= 0.0);
+        let r = &b.results()[0];
+        assert!(r.iters >= 1 && r.iters <= 5);
+        assert!(r.min_secs <= r.mean_secs && r.mean_secs <= r.max_secs + 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut b = Bencher { budget_secs: 0.05, max_iters: 2, warmup: 0, results: vec![] };
+        b.case("x", || {});
+        b.report_value("table1:swiss50:p2", 294.92, "virtual-min");
+        let parsed = Json::parse(&b.json()).unwrap();
+        assert_eq!(parsed.as_arr().unwrap().len(), 2);
+    }
+}

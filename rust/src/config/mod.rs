@@ -1,0 +1,265 @@
+//! Typed configuration: Isomap hyper-parameters, cluster topology, and the
+//! INI-style config-file loader used by the launcher (`isospark run
+//! --config cluster.toml`). A hand-rolled parser (serde/toml are not
+//! available offline) supporting `[section]`, `key = value`, and comments.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Isomap algorithm parameters (paper Alg. 1 + §IV defaults).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IsomapConfig {
+    /// Neighborhood size (paper: k = 10).
+    pub k: usize,
+    /// Target dimensionality (paper: d = 2 for visualization).
+    pub d: usize,
+    /// Logical block size b (paper sweet spot 1000–2500 at n < 100k;
+    /// laptop-scale default 128).
+    pub block: usize,
+    /// Power-iteration convergence threshold (paper: 1e-9).
+    pub tol: f64,
+    /// Power-iteration max iterations (paper: 100).
+    pub max_iter: usize,
+    /// Checkpoint the APSP lineage every this many diagonal iterations
+    /// (paper: 10). 0 disables checkpointing.
+    pub checkpoint_every: usize,
+    /// Random seed used by data generators / landmark selection.
+    pub seed: u64,
+}
+
+impl Default for IsomapConfig {
+    fn default() -> Self {
+        Self { k: 10, d: 2, block: 128, tol: 1e-9, max_iter: 100, checkpoint_every: 10, seed: 42 }
+    }
+}
+
+impl IsomapConfig {
+    /// Validate parameter sanity against a dataset size.
+    pub fn validate(&self, n: usize) -> Result<()> {
+        if self.k == 0 || self.k >= n {
+            bail!("k={} must be in 1..n={n}", self.k);
+        }
+        if self.d == 0 || self.d > n {
+            bail!("d={} must be in 1..=n", self.d);
+        }
+        if self.block == 0 {
+            bail!("block size must be positive");
+        }
+        if !(self.tol > 0.0) {
+            bail!("tol must be positive");
+        }
+        if self.max_iter == 0 {
+            bail!("max_iter must be positive");
+        }
+        Ok(())
+    }
+}
+
+/// Simulated cluster topology (paper §IV testbed: 25 nodes, 20 cores,
+/// GbE, one executor per node, 56 GB heap).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterConfig {
+    /// Number of executor nodes.
+    pub nodes: usize,
+    /// Cores per executor (degree of intra-node task parallelism).
+    pub cores_per_node: usize,
+    /// Network bandwidth per link, bytes/second (GbE ≈ 117 MiB/s effective).
+    pub net_bandwidth: f64,
+    /// Per-message network latency, seconds.
+    pub net_latency: f64,
+    /// Driver scheduling overhead charged per task, seconds. Models the
+    /// Spark driver cost that grows with lineage (paper §III-B).
+    pub sched_overhead: f64,
+    /// Executor memory in bytes (56 GB in the paper); the engine fails a
+    /// run whose resident blocks exceed node capacity, reproducing the "-"
+    /// (impossible) entries of Table I.
+    pub mem_per_node: u64,
+    /// Local disk bandwidth (bytes/s) charged by `checkpoint()` — the
+    /// paper's nodes have standard SATA drives. Creates the checkpoint
+    /// cadence trade-off (§III-B: every 10 iterations performed best).
+    pub disk_bandwidth: f64,
+    /// Multiplier from measured single-core seconds on *this* machine to
+    /// virtual seconds on one simulated core (calibration knob).
+    pub compute_scale: f64,
+}
+
+impl ClusterConfig {
+    /// Local mode: a single executor, zero-cost network — used for
+    /// correctness runs where virtual time does not matter.
+    pub fn local() -> Self {
+        Self {
+            nodes: 1,
+            cores_per_node: 1,
+            net_bandwidth: f64::INFINITY,
+            net_latency: 0.0,
+            sched_overhead: 0.0,
+            mem_per_node: u64::MAX,
+            disk_bandwidth: f64::INFINITY,
+            compute_scale: 1.0,
+        }
+    }
+
+    /// The paper's testbed with `nodes` executors: 20-core Xeon E5v3 nodes,
+    /// gigabit Ethernet, 56 GB executor heap.
+    pub fn paper_testbed(nodes: usize) -> Self {
+        Self {
+            nodes,
+            cores_per_node: 20,
+            net_bandwidth: 117.0e6, // effective GbE payload rate
+            net_latency: 250e-6,    // typical GbE + JVM serialization setup
+            sched_overhead: 3e-3,   // Spark driver per-task scheduling cost
+            mem_per_node: 56 * (1u64 << 30),
+            disk_bandwidth: 100.0e6, // SATA HDD sequential
+            compute_scale: 1.0,
+        }
+    }
+
+    /// Total cores across the cluster.
+    pub fn total_cores(&self) -> usize {
+        self.nodes * self.cores_per_node
+    }
+}
+
+/// Raw INI-ish file: sections of key/value pairs.
+#[derive(Debug, Default)]
+pub struct RawConfig {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl RawConfig {
+    /// Parse from text. Lines: `[section]`, `key = value`, `# comment`.
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut out = RawConfig::default();
+        let mut current = String::from("global");
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                current = name.trim().to_string();
+            } else if let Some((k, v)) = line.split_once('=') {
+                out.sections
+                    .entry(current.clone())
+                    .or_default()
+                    .insert(k.trim().to_string(), v.trim().trim_matches('"').to_string());
+            } else {
+                bail!("line {}: expected `key = value`, got {raw:?}", lineno + 1);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    fn typed<T: std::str::FromStr>(&self, section: &str, key: &str, default: T) -> Result<T> {
+        match self.get(section, key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad value {s:?} for {section}.{key}")),
+        }
+    }
+
+    /// Materialize an [`IsomapConfig`], starting from defaults.
+    pub fn isomap(&self) -> Result<IsomapConfig> {
+        let d = IsomapConfig::default();
+        Ok(IsomapConfig {
+            k: self.typed("isomap", "k", d.k)?,
+            d: self.typed("isomap", "d", d.d)?,
+            block: self.typed("isomap", "block", d.block)?,
+            tol: self.typed("isomap", "tol", d.tol)?,
+            max_iter: self.typed("isomap", "max_iter", d.max_iter)?,
+            checkpoint_every: self.typed("isomap", "checkpoint_every", d.checkpoint_every)?,
+            seed: self.typed("isomap", "seed", d.seed)?,
+        })
+    }
+
+    /// Materialize a [`ClusterConfig`], starting from the paper testbed.
+    pub fn cluster(&self) -> Result<ClusterConfig> {
+        let d = ClusterConfig::paper_testbed(4);
+        Ok(ClusterConfig {
+            nodes: self.typed("cluster", "nodes", d.nodes)?,
+            cores_per_node: self.typed("cluster", "cores_per_node", d.cores_per_node)?,
+            net_bandwidth: self.typed("cluster", "net_bandwidth", d.net_bandwidth)?,
+            net_latency: self.typed("cluster", "net_latency", d.net_latency)?,
+            sched_overhead: self.typed("cluster", "sched_overhead", d.sched_overhead)?,
+            mem_per_node: self.typed("cluster", "mem_per_node", d.mem_per_node)?,
+            disk_bandwidth: self.typed("cluster", "disk_bandwidth", d.disk_bandwidth)?,
+            compute_scale: self.typed("cluster", "compute_scale", d.compute_scale)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = IsomapConfig::default();
+        assert_eq!(c.k, 10);
+        assert_eq!(c.tol, 1e-9);
+        assert_eq!(c.max_iter, 100);
+        assert_eq!(c.checkpoint_every, 10);
+    }
+
+    #[test]
+    fn validation() {
+        let c = IsomapConfig::default();
+        assert!(c.validate(1000).is_ok());
+        assert!(c.validate(5).is_err()); // k >= n
+        let bad = IsomapConfig { block: 0, ..Default::default() };
+        assert!(bad.validate(1000).is_err());
+        let bad_tol = IsomapConfig { tol: 0.0, ..Default::default() };
+        assert!(bad_tol.validate(1000).is_err());
+    }
+
+    #[test]
+    fn parse_ini() {
+        let raw = RawConfig::parse(
+            "# comment\n[isomap]\nk = 12\nblock=256\n[cluster]\nnodes = 8\ncores_per_node = 4\n",
+        )
+        .unwrap();
+        let iso = raw.isomap().unwrap();
+        assert_eq!(iso.k, 12);
+        assert_eq!(iso.block, 256);
+        assert_eq!(iso.d, 2); // default survives
+        let cl = raw.cluster().unwrap();
+        assert_eq!(cl.nodes, 8);
+        assert_eq!(cl.cores_per_node, 4);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(RawConfig::parse("[unterminated\n").is_err());
+        assert!(RawConfig::parse("not a kv line\n").is_err());
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let raw = RawConfig::parse("[isomap]\nk = banana\n").unwrap();
+        assert!(raw.isomap().is_err());
+    }
+
+    #[test]
+    fn local_cluster_free_network() {
+        let c = ClusterConfig::local();
+        assert_eq!(c.nodes, 1);
+        assert_eq!(c.net_latency, 0.0);
+        assert_eq!(ClusterConfig::paper_testbed(25).total_cores(), 500);
+    }
+}

@@ -1,0 +1,231 @@
+//! Communication-avoiding blocked Floyd–Warshall APSP (paper §III-B).
+//!
+//! Per diagonal iteration `I` (the critical path of length `q`):
+//!
+//! * **Phase 1** — sequential Floyd–Warshall on diagonal block `(I,I)`;
+//!   the solved block is replicated to every block of row `I` / column `I`.
+//! * **Phase 2** — those blocks are min-plus-updated with the pivot:
+//!   `A_{IJ} ← A_{IJ} ⊕ (D ⊗ A_{IJ})`, `A_{ÎI} ← A_{ÎI} ⊕ (A_{ÎI} ⊗ D)`;
+//!   each updated segment is replicated (transposing as needed for the
+//!   upper-triangular storage) to the Phase-3 blocks that need it.
+//! * **Phase 3** — every remaining block folds in the rank-`b` update
+//!   `A_{RC} ← A_{RC} ⊕ (A_{RI} ⊗ A_{IC})`.
+//!
+//! Every data movement is a keyed shuffle (`flat_map` + `join_update`),
+//! never a collect/broadcast through the driver — the paper found that
+//! decisive on Spark. Lineage is checkpointed every
+//! `checkpoint_every` iterations (paper: 10) to keep the driver model's
+//! scheduling overhead bounded.
+
+use crate::backend::Backend;
+use crate::config::IsomapConfig;
+use crate::engine::{BlockId, BlockRdd};
+use crate::linalg::Matrix;
+use anyhow::Result;
+
+/// Left operand marker (`A_RI`) in Phase-3 messages.
+const LEFT: usize = 0;
+/// Right operand marker (`A_IC`).
+const RIGHT: usize = 1;
+
+/// Solve APSP in place over the graph's upper-triangular blocks; returns
+/// the *feature matrix* `A = G°²` (squared geodesics), ready for
+/// double centering.
+pub fn solve(
+    graph: BlockRdd<Matrix>,
+    q: usize,
+    cfg: &IsomapConfig,
+    backend: &Backend,
+) -> Result<BlockRdd<Matrix>> {
+    let mut g = graph;
+
+    for piv in 0..q {
+        // ---- Phase 1: FW on the diagonal block, then replicate. ----
+        let diag = g
+            .filter_blocks(&format!("apsp:p1_filter[{piv}]"), |id| id.i == piv && id.j == piv)
+            .map_values(&format!("apsp:p1_fw[{piv}]"), |_, blk| {
+                let mut d = blk.clone();
+                backend.fw_inplace(&mut d);
+                d
+            });
+        let diag_msgs = diag.flat_map(&format!("apsp:p1_emit[{piv}]"), |_, d| {
+            let mut out = vec![(BlockId::new(piv, piv), d.clone())];
+            for j in (piv + 1)..q {
+                out.push((BlockId::new(piv, j), d.clone()));
+            }
+            for i in 0..piv {
+                out.push((BlockId::new(i, piv), d.clone()));
+            }
+            out
+        });
+
+        // ---- Phase 2: pivot-row/column update (and diagonal swap). ----
+        g = g.join_update(&format!("apsp:p2[{piv}]"), diag_msgs, |id, blk, ds| {
+            let Some(d) = ds.first() else { return }; // not in row/col piv
+            if id.i == piv && id.j == piv {
+                *blk = d.clone();
+            } else if id.i == piv {
+                // Row segment A_{piv,J}: left-multiply by the pivot.
+                let old = blk.clone();
+                backend.minplus_into(d, &old, blk);
+            } else {
+                // Column segment A_{Î,piv}: right-multiply by the pivot.
+                let old = blk.clone();
+                backend.minplus_into(&old, d, blk);
+            }
+        });
+
+        // ---- Phase-2 replication toward Phase 3. ----
+        // Row segment (piv, J) carries A_{piv,J}; its transpose carries
+        // A_{J,piv}. Column segment (Î, piv) carries A_{Î,piv}; transpose
+        // carries A_{piv,Î}. Each Phase-3 block (R,C) needs LEFT = A_{R,piv}
+        // and RIGHT = A_{piv,C}.
+        let p2 = g.filter_blocks(&format!("apsp:p2_filter[{piv}]"), |id| {
+            (id.i == piv) ^ (id.j == piv)
+        });
+        let p3_msgs = p2.flat_map(&format!("apsp:p2_emit[{piv}]"), |id, m| {
+            let mut out = Vec::new();
+            if id.i == piv {
+                let jj = id.j; // row segment A_{piv,jj}
+                for r in 0..=jj {
+                    if r != piv {
+                        out.push((BlockId::new(r, jj), (RIGHT, m.clone())));
+                    }
+                }
+                let t = m.transpose(); // A_{jj,piv}
+                for c in jj..q {
+                    if c != piv {
+                        out.push((BlockId::new(jj, c), (LEFT, t.clone())));
+                    }
+                }
+            } else {
+                let ii = id.i; // column segment A_{ii,piv}
+                for c in ii..q {
+                    if c != piv {
+                        out.push((BlockId::new(ii, c), (LEFT, m.clone())));
+                    }
+                }
+                let t = m.transpose(); // A_{piv,ii}
+                for r in 0..=ii {
+                    if r != piv {
+                        out.push((BlockId::new(r, ii), (RIGHT, t.clone())));
+                    }
+                }
+            }
+            out
+        });
+
+        // ---- Phase 3: rank-b min-plus update of the remaining blocks. ----
+        g = g.join_update(&format!("apsp:p3[{piv}]"), p3_msgs, |id, blk, msgs| {
+            if msgs.is_empty() {
+                return; // pivot row/column blocks: already final this iter
+            }
+            debug_assert!(id.i != piv && id.j != piv, "phase-3 message hit pivot block {id}");
+            let left = msgs.iter().find(|(role, _)| *role == LEFT);
+            let right = msgs.iter().find(|(role, _)| *role == RIGHT);
+            if let (Some((_, l)), Some((_, r))) = (left, right) {
+                backend.minplus_into(l, r, blk);
+            }
+        });
+
+        // ---- Lineage maintenance (paper: checkpoint every 10 iters). ----
+        if cfg.checkpoint_every > 0 && (piv + 1) % cfg.checkpoint_every == 0 {
+            g.checkpoint();
+            g.persist("G")?;
+        }
+    }
+
+    // Feature matrix: element-wise square of the geodesics.
+    let a = g.map_values("apsp:square", |_, blk| blk.map(|v| v * v));
+    a.persist("G")?;
+    Ok(a)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::config::ClusterConfig;
+    use crate::coordinator::{block_range, knn};
+    use crate::data::swiss_roll;
+    use crate::engine::SparkContext;
+
+    /// Run kNN+APSP through the engine and densify the result
+    /// (square-rooted back to geodesic distances).
+    fn engine_geodesics(n: usize, b: usize, k: usize, checkpoint_every: usize) -> (Matrix, Matrix) {
+        let ds = swiss_roll::euler_isometric(n, 21);
+        let ctx = SparkContext::new(ClusterConfig::local());
+        let cfg = IsomapConfig { k, block: b, checkpoint_every, ..Default::default() };
+        let backend = Backend::Native;
+        let kg = knn::build(&ctx, &ds.points, &cfg, &backend).unwrap();
+        let a = solve(kg.graph, kg.q, &cfg, &backend).unwrap();
+        let mut dense = Matrix::full(n, n, f64::INFINITY);
+        for (id, blk) in a.iter() {
+            let (rs, _) = block_range(n, b, id.i);
+            let (cs, _) = block_range(n, b, id.j);
+            for r in 0..blk.nrows() {
+                for c in 0..blk.ncols() {
+                    let v = blk[(r, c)].sqrt();
+                    dense[(rs + r, cs + c)] = v;
+                    dense[(cs + c, rs + r)] = v;
+                }
+            }
+        }
+        (ds.points, dense)
+    }
+
+    fn reference_geodesics(x: &Matrix, k: usize) -> Matrix {
+        let g = baselines::knn_graph_dense(&baselines::brute_knn(x, k));
+        baselines::dijkstra_apsp(&g)
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f64) {
+        for i in 0..a.nrows() {
+            for j in 0..a.ncols() {
+                let (x, y) = (a[(i, j)], b[(i, j)]);
+                if x.is_infinite() || y.is_infinite() {
+                    assert!(x.is_infinite() && y.is_infinite(), "({i},{j}): {x} vs {y}");
+                } else {
+                    assert!((x - y).abs() <= tol, "({i},{j}): {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_dijkstra_divisible() {
+        let (x, got) = engine_geodesics(48, 16, 6, 10);
+        let want = reference_geodesics(&x, 6);
+        assert_close(&got, &want, 1e-9);
+    }
+
+    #[test]
+    fn matches_dijkstra_ragged_blocks() {
+        let (x, got) = engine_geodesics(50, 16, 6, 10);
+        let want = reference_geodesics(&x, 6);
+        assert_close(&got, &want, 1e-9);
+    }
+
+    #[test]
+    fn matches_dijkstra_single_block() {
+        // q = 1: only Phase 1 runs.
+        let (x, got) = engine_geodesics(20, 32, 5, 10);
+        let want = reference_geodesics(&x, 5);
+        assert_close(&got, &want, 1e-9);
+    }
+
+    #[test]
+    fn checkpoint_cadence_does_not_change_results() {
+        let (_, a) = engine_geodesics(40, 8, 5, 0); // never checkpoint
+        let (_, b) = engine_geodesics(40, 8, 5, 2); // every 2 iters
+        assert_close(&a, &b, 0.0);
+    }
+
+    #[test]
+    fn many_small_blocks() {
+        // Large q stresses the 3-phase replication logic.
+        let (x, got) = engine_geodesics(42, 5, 6, 3);
+        let want = reference_geodesics(&x, 6);
+        assert_close(&got, &want, 1e-9);
+    }
+}

@@ -1,0 +1,149 @@
+//! Distributed double centering (paper §III-C).
+//!
+//! The feature matrix is symmetric, so only column sums are reduced:
+//! every block contributes its column sums keyed by block column `J` (and,
+//! for off-diagonal blocks, its row sums keyed by `I` — the transposed
+//! contribution of the never-materialized lower triangle). Partial sums
+//! are `reduceByKey`-ed, collected to the driver, turned into means,
+//! broadcast back, and applied block-wise with the MDS `-½` factor.
+
+use super::block_range;
+use crate::backend::Backend;
+use crate::engine::{BlockId, BlockRdd};
+use crate::kernels::centering::{col_sums, row_sums};
+use crate::linalg::Matrix;
+use anyhow::{bail, Result};
+
+/// Double-center the feature matrix; returns the centered blocks and the
+/// broadcast column means (useful for diagnostics).
+pub fn center(
+    feature: BlockRdd<Matrix>,
+    n: usize,
+    b: usize,
+    backend: &Backend,
+) -> Result<(BlockRdd<Matrix>, Vec<f64>)> {
+    let ctx = feature.context();
+
+    // Per-block partial sums: key (J,0) carries column sums, and for
+    // off-diagonal (I,J) key (I,0) additionally carries row sums (the
+    // columns of the transposed block under the diagonal).
+    let partials = feature.flat_map("center:sums", |id, blk| {
+        let mut out = vec![(BlockId::new(id.j, 0), col_sums(blk))];
+        if id.i != id.j {
+            out.push((BlockId::new(id.i, 0), row_sums(blk)));
+        }
+        out
+    });
+    let reduced = partials.reduce_by_key("center:reduce", feature.partitioner(), |mut a, c| {
+        for (x, y) in a.iter_mut().zip(&c) {
+            *x += y;
+        }
+        a
+    });
+
+    // Driver: assemble means (reduce + collectAsMap in the paper).
+    let collected = reduced.collect();
+    let mut mu = vec![0.0f64; n];
+    for (id, sums) in collected {
+        let (s, e) = block_range(n, b, id.i);
+        if sums.len() != e - s {
+            bail!("centering: block {} produced {} sums for {} columns", id, sums.len(), e - s);
+        }
+        for (dst, v) in mu[s..e].iter_mut().zip(&sums) {
+            if !v.is_finite() {
+                bail!(
+                    "centering: infinite column sum — the kNN graph is disconnected; increase k"
+                );
+            }
+            *dst = v / n as f64;
+        }
+    }
+    let grand = mu.iter().sum::<f64>() / n as f64;
+
+    // Broadcast the means vector to the executors.
+    ctx.broadcast("center:means", (n as u64) * 8 + 8);
+
+    // Apply: a ← −½ (a − μ_row − μ_col + μ̂), per block.
+    let mu_apply = mu.clone();
+    let centered = feature.map_values("center:apply", move |id, blk| {
+        let (rs, re) = block_range(n, b, id.i);
+        let (cs, ce) = block_range(n, b, id.j);
+        let mut out = blk.clone();
+        backend.center_block(&mut out, &mu_apply[rs..re], &mu_apply[cs..ce], grand);
+        out
+    });
+    centered.persist("G")?;
+    Ok((centered, mu))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, IsomapConfig};
+    use crate::coordinator::{apsp, knn};
+    use crate::data::swiss_roll;
+    use crate::engine::SparkContext;
+    use crate::kernels::centering::center_full_direct;
+
+    /// Dense symmetric matrix from UT blocks.
+    fn densify(rdd: &BlockRdd<Matrix>, n: usize, b: usize) -> Matrix {
+        let mut out = Matrix::zeros(n, n);
+        for (id, blk) in rdd.iter() {
+            let (rs, _) = block_range(n, b, id.i);
+            let (cs, _) = block_range(n, b, id.j);
+            for r in 0..blk.nrows() {
+                for c in 0..blk.ncols() {
+                    out[(rs + r, cs + c)] = blk[(r, c)];
+                    out[(cs + c, rs + r)] = blk[(r, c)];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_centering_matches_dense() {
+        let n = 45;
+        let b = 16;
+        let ds = swiss_roll::euler_isometric(n, 5);
+        let ctx = SparkContext::new(ClusterConfig::local());
+        let cfg = IsomapConfig { k: 8, block: b, ..Default::default() };
+        let be = Backend::Native;
+        let kg = knn::build(&ctx, &ds.points, &cfg, &be).unwrap();
+        let a = apsp::solve(kg.graph, kg.q, &cfg, &be).unwrap();
+        let dense_a = densify(&a, n, b);
+
+        let (centered, mu) = center(a, n, b, &be).unwrap();
+        let got = densify(&centered, n, b);
+
+        let mut want = dense_a.clone();
+        center_full_direct(&mut want);
+        assert!(got.max_abs_diff(&want) < 1e-9);
+
+        // Means diagnostics are the actual column means.
+        let expect_mu = dense_a.col_means();
+        for (a, b) in mu.iter().zip(&expect_mu) {
+            assert!((a - b).abs() < 1e-9);
+        }
+
+        // Row/col means of the centered matrix are ~0.
+        for i in 0..n {
+            let rm: f64 = got.row(i).iter().sum::<f64>() / n as f64;
+            assert!(rm.abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn disconnected_graph_reports_error() {
+        // Two far-apart Gaussian blobs with tiny k disconnect the graph.
+        let x = crate::data::clusters::gaussian_clusters(30, 3, 2, 0.01, 3).points;
+        let ctx = SparkContext::new(ClusterConfig::local());
+        let cfg = IsomapConfig { k: 2, block: 8, ..Default::default() };
+        let be = Backend::Native;
+        let kg = knn::build(&ctx, &x, &cfg, &be).unwrap();
+        assert!(!crate::eval::connectivity(&kg.lists));
+        let a = apsp::solve(kg.graph, kg.q, &cfg, &be).unwrap();
+        let err = center(a, 30, 8, &be).unwrap_err();
+        assert!(format!("{err:#}").contains("disconnected"));
+    }
+}

@@ -1,0 +1,213 @@
+//! Simultaneous power iteration (paper §III-D, Alg. 2).
+//!
+//! The driver owns the tall-skinny `Q (n×d)` and runs BLAS QR on it; the
+//! executors compute the blocked product `V = A·Q`: each upper-triangular
+//! block `(I,J)` contributes `A^{(I,J)}·Q_J` to `V_I` and, when off-
+//! diagonal, `(A^{(I,J)})ᵀ·Q_I` to `V_J` (the paper's transposed yield for
+//! upper-triangular storage). `Q` is broadcast each iteration — small for
+//! practical `d` — so no block pairing/shuffle of `A` is ever needed.
+//! Convergence: `‖Qᶦ − Qᶦ⁻¹‖_F < t` or `l` iterations.
+
+use super::block_range;
+use crate::backend::Backend;
+use crate::engine::{BlockId, BlockRdd};
+use crate::linalg::qr::qr_thin;
+use crate::linalg::Matrix;
+use anyhow::{bail, Result};
+
+/// Result of the spectral stage.
+#[derive(Debug)]
+pub struct EigenOutput {
+    /// Top-`d` eigenvectors (orthonormal columns, sign-fixed).
+    pub q: Matrix,
+    /// Corresponding eigenvalue estimates (diag of R).
+    pub eigenvalues: Vec<f64>,
+    /// Power iterations executed.
+    pub iterations: usize,
+    /// Whether the Frobenius test converged before `max_iter`.
+    pub converged: bool,
+}
+
+/// Run simultaneous power iteration over the centered feature matrix.
+pub fn simultaneous_power_iteration(
+    a: &BlockRdd<Matrix>,
+    n: usize,
+    b: usize,
+    d: usize,
+    tol: f64,
+    max_iter: usize,
+    backend: &Backend,
+) -> Result<EigenOutput> {
+    if d == 0 || d > n {
+        bail!("eigen: d={d} out of range for n={n}");
+    }
+    let ctx = a.context();
+
+    // V¹ = I_{n×d}; Q¹ from its QR (== the first d basis vectors).
+    let (mut q, mut r) = qr_thin(&Matrix::eye(n, d));
+    let mut iterations = 0;
+    let mut converged = false;
+
+    for it in 1..=max_iter {
+        iterations = it;
+        // Driver broadcasts the whole Qᶦ⁻¹ to all executors.
+        ctx.broadcast("eigen:q", (n as u64) * (d as u64) * 8);
+
+        // Executors: blocked product V = A·Q.
+        let q_ref = &q;
+        let products = a.flat_map("eigen:matvec", move |id, blk| {
+            let (rs, re) = block_range(n, b, id.i);
+            let (cs, ce) = block_range(n, b, id.j);
+            let qj = q_ref.slice(cs, ce, 0, d);
+            let mut c = Matrix::zeros(re - rs, d);
+            backend.gemm_acc(blk, &qj, &mut c);
+            let mut out = vec![(BlockId::new(id.i, 0), c)];
+            if id.i != id.j {
+                let qi = q_ref.slice(rs, re, 0, d);
+                let mut ct = Matrix::zeros(ce - cs, d);
+                backend.gemm_t_acc(blk, &qi, &mut ct);
+                out.push((BlockId::new(id.j, 0), ct));
+            }
+            out
+        });
+        let v_blocks = products.reduce_by_key("eigen:reduce", a.partitioner(), |mut x, y| {
+            for (xa, ya) in x.as_mut_slice().iter_mut().zip(y.as_slice()) {
+                *xa += ya;
+            }
+            x
+        });
+
+        // Driver: collect V, QR-decompose, test convergence.
+        let collected = v_blocks.collect();
+        let mut v = Matrix::zeros(n, d);
+        for (id, blk) in collected {
+            let (rs, _) = block_range(n, b, id.i);
+            v.paste(rs, 0, &blk);
+        }
+        let (qn, rn) = qr_thin(&v);
+        let delta = qn.fro_dist(&q);
+        q = qn;
+        r = rn;
+        if delta < tol {
+            converged = true;
+            break;
+        }
+    }
+
+    // Eigenvalue estimates from R's diagonal; fix eigenvector signs
+    // (largest-|entry| positive) for reproducibility.
+    let eigenvalues: Vec<f64> = (0..d).map(|j| r[(j, j)]).collect();
+    for j in 0..d {
+        let mut imax = 0;
+        for i in 0..n {
+            if q[(i, j)].abs() > q[(imax, j)].abs() {
+                imax = i;
+            }
+        }
+        if q[(imax, j)] < 0.0 {
+            for i in 0..n {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+
+    Ok(EigenOutput { q, eigenvalues, iterations, converged })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::engine::partitioner::UpperTriangularPartitioner;
+    use crate::engine::SparkContext;
+    use crate::linalg::jacobi;
+    use crate::util::Rng;
+    use std::rc::Rc;
+
+    /// Symmetric matrix with a known, well-separated spectrum
+    /// (λ_i = 100/1.5^i), split into UT blocks on a local context.
+    fn blocked_symmetric(n: usize, b: usize, seed: u64) -> (BlockRdd<Matrix>, Matrix) {
+        let mut rng = Rng::seed(seed);
+        let mut g = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                g[(i, j)] = rng.gaussian();
+            }
+        }
+        let (qq, _) = crate::linalg::qr::qr_thin(&g);
+        let mut lam = Matrix::zeros(n, n);
+        for i in 0..n {
+            lam[(i, i)] = 100.0 / 1.5f64.powi(i as i32);
+        }
+        let m = qq.matmul(&lam).matmul(&qq.transpose());
+        let q = n.div_ceil(b);
+        let part = Rc::new(UpperTriangularPartitioner::new(q, q));
+        let ctx = SparkContext::new(ClusterConfig::local());
+        let mut blocks = Vec::new();
+        for i in 0..q {
+            for j in i..q {
+                let (rs, re) = block_range(n, b, i);
+                let (cs, ce) = block_range(n, b, j);
+                blocks.push((BlockId::new(i, j), m.slice(rs, re, cs, ce)));
+            }
+        }
+        (ctx.parallelize("a", blocks, part), m)
+    }
+
+    #[test]
+    fn recovers_top_eigenpairs() {
+        let (rdd, dense) = blocked_symmetric(40, 8, 3);
+        let out =
+            simultaneous_power_iteration(&rdd, 40, 8, 3, 1e-10, 500, &Backend::Native).unwrap();
+        assert!(out.converged, "did not converge in 500 iterations");
+        let (want_vals, want_vecs) = jacobi::top_d(&dense, 3);
+        for j in 0..3 {
+            assert!(
+                (out.eigenvalues[j] - want_vals[j]).abs() / want_vals[j].abs() < 1e-6,
+                "eigenvalue {j}: {} vs {}",
+                out.eigenvalues[j],
+                want_vals[j]
+            );
+            // Eigenvector up to sign (both sign-fixed the same way).
+            for i in 0..40 {
+                assert!(
+                    (out.q[(i, j)] - want_vecs[(i, j)]).abs() < 1e-5,
+                    "vec {j} entry {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_blocks_work() {
+        let (rdd, dense) = blocked_symmetric(37, 8, 4);
+        let out =
+            simultaneous_power_iteration(&rdd, 37, 8, 2, 1e-10, 500, &Backend::Native).unwrap();
+        let (want_vals, _) = jacobi::top_d(&dense, 2);
+        assert!((out.eigenvalues[0] - want_vals[0]).abs() / want_vals[0] < 1e-6);
+    }
+
+    #[test]
+    fn iteration_cap_respected() {
+        let (rdd, _) = blocked_symmetric(24, 8, 5);
+        let out = simultaneous_power_iteration(&rdd, 24, 8, 2, 1e-30, 3, &Backend::Native).unwrap();
+        assert_eq!(out.iterations, 3);
+        assert!(!out.converged);
+    }
+
+    #[test]
+    fn q_columns_orthonormal() {
+        let (rdd, _) = blocked_symmetric(30, 7, 6);
+        let out =
+            simultaneous_power_iteration(&rdd, 30, 7, 3, 1e-10, 300, &Backend::Native).unwrap();
+        let qtq = out.q.transpose().matmul(&out.q);
+        assert!(qtq.max_abs_diff(&Matrix::eye(3, 3)) < 1e-8);
+    }
+
+    #[test]
+    fn rejects_bad_d() {
+        let (rdd, _) = blocked_symmetric(10, 5, 7);
+        assert!(simultaneous_power_iteration(&rdd, 10, 5, 0, 1e-9, 10, &Backend::Native).is_err());
+        assert!(simultaneous_power_iteration(&rdd, 10, 5, 11, 1e-9, 10, &Backend::Native).is_err());
+    }
+}

@@ -1,0 +1,247 @@
+//! Blocked kNN search and neighborhood-graph construction (paper §III-A).
+//!
+//! 1-D decompose `X` into `q` point blocks; enumerate only the
+//! upper-triangular block pairs `(I,J), J ≥ I` (exploiting distance-matrix
+//! symmetry — the paper's alternative to the wasteful `cartesian`);
+//! materialize the distance block matrix `M`; heap-select per-block `L_k`
+//! lists (scanning columns of each block for the under-diagonal
+//! transposes); merge lists per point; finally reuse `M`'s blocks to store
+//! the neighborhood graph `G` (∞-filled, kNN distances set symmetrically).
+
+use super::{block_range, default_partitions, num_blocks};
+use crate::backend::Backend;
+use crate::config::IsomapConfig;
+use crate::engine::partitioner::UpperTriangularPartitioner;
+use crate::engine::{BlockId, BlockRdd, SparkContext};
+use crate::kernels::kselect::{merge_topk, row_topk, Neighbor};
+use crate::linalg::Matrix;
+use anyhow::Result;
+use std::rc::Rc;
+
+/// Output of the kNN stage.
+pub struct KnnGraph {
+    /// Upper-triangular blocks of the neighborhood graph `G` (∞ = no edge,
+    /// 0 diagonal).
+    pub graph: BlockRdd<Matrix>,
+    /// Logical block count `q`.
+    pub q: usize,
+    /// Global kNN lists (collected to the driver for connectivity checks
+    /// and L-Isomap; `n·k` entries, small even at paper scale).
+    pub lists: Vec<Vec<Neighbor>>,
+}
+
+/// Run the blocked kNN stage.
+pub fn build(ctx: &SparkContext, x: &Matrix, cfg: &IsomapConfig, backend: &Backend) -> Result<KnnGraph> {
+    let n = x.nrows();
+    let b = cfg.block;
+    let q = num_blocks(n, b);
+    let parts = default_partitions(q, ctx.cluster().total_cores());
+    let part: Rc<dyn crate::engine::Partitioner> =
+        Rc::new(UpperTriangularPartitioner::new(q, parts));
+
+    // 1-D decomposition: block I holds rows [I·b, min((I+1)b, n)).
+    let point_blocks: Vec<(BlockId, Matrix)> = (0..q)
+        .map(|i| {
+            let (s, e) = block_range(n, b, i);
+            (BlockId::new(i, i), x.slice(s, e, 0, x.ncols()))
+        })
+        .collect();
+    let points = ctx.parallelize("knn:points", point_blocks, Rc::clone(&part));
+
+    // Pair enumeration: block I is the left member of (I,J) for J ≥ I and
+    // the right member of (K,I) for K < I. Data replication (q copies of
+    // each block) deliberately exposes the parallelism of the distance
+    // computation, as in the paper.
+    let pairs = points.flat_map("knn:pairs", |id, xi| {
+        let i = id.i;
+        let mut out = Vec::with_capacity(q);
+        for j in i..q {
+            out.push((BlockId::new(i, j), (i, xi.clone())));
+        }
+        for k in 0..i {
+            out.push((BlockId::new(k, i), (i, xi.clone())));
+        }
+        out
+    });
+    let grouped = pairs.group_by_key("knn:pairgroup", Rc::clone(&part));
+
+    // Distance blocks M^{(I,J)} = ‖x_i − x_j‖₂ (BLAS-offloaded in the
+    // paper; Pallas/native kernel here).
+    let m = grouped.map_values("knn:dist", |id, members| {
+        let xi = &members.iter().find(|(o, _)| *o == id.i).expect("left member").1;
+        if id.i == id.j {
+            let mut d = backend.dist_block(xi, xi);
+            for r in 0..d.nrows() {
+                d[(r, r)] = 0.0;
+            }
+            d
+        } else {
+            let xj = &members.iter().find(|(o, _)| *o == id.j).expect("right member").1;
+            backend.dist_block(xi, xj)
+        }
+    });
+    m.persist("M")?;
+
+    // Per-block L_k lists. Keys are (block-row, local-row): rows of block
+    // (I,J) contribute to points of block I; columns contribute to points
+    // of block J (the transposed under-diagonal blocks, never materialized).
+    let k = cfg.k;
+    let local = m.flat_map("knn:topk_local", |id, blk| {
+        let (ri, _) = block_range(n, b, id.i);
+        let (cj, _) = block_range(n, b, id.j);
+        let mut out = Vec::new();
+        for r in 0..blk.nrows() {
+            let exclude = if id.i == id.j { Some(ri + r) } else { None };
+            out.push((BlockId::new(id.i, r), row_topk(blk.row(r), k, cj, exclude)));
+        }
+        if id.i != id.j {
+            for c in 0..blk.ncols() {
+                let col: Vec<f64> = (0..blk.nrows()).map(|r| blk[(r, c)]).collect();
+                out.push((BlockId::new(id.j, c), row_topk(&col, k, ri, None)));
+            }
+        }
+        out
+    });
+    let knn_lists =
+        local.reduce_by_key("knn:topk_merge", Rc::clone(&part), |a, c| merge_topk(k, &[a, c]));
+
+    // Collect the (small) global lists for connectivity/eval use.
+    let collected = knn_lists.collect();
+    let mut lists: Vec<Vec<Neighbor>> = vec![Vec::new(); n];
+    for (id, list) in collected {
+        let (s, _) = block_range(n, b, id.i);
+        lists[s + id.j] = list;
+    }
+
+    // Neighborhood-graph fill: reuse M's blocks, overwrite with ∞, set kNN
+    // distances symmetrically (edge (i,j) lands in the upper block).
+    let edges = knn_lists.flat_map("knn:edges", |id, list| {
+        let (s, _) = block_range(n, b, id.i);
+        let gi = s + id.j;
+        let mut out = Vec::with_capacity(list.len());
+        for &(dist, gj) in list {
+            let (bi, li) = (gi / b, gi % b);
+            let (bj, lj) = (gj / b, gj % b);
+            if bi <= bj {
+                out.push((BlockId::new(bi, bj), (li, lj, dist)));
+            } else {
+                out.push((BlockId::new(bj, bi), (lj, li, dist)));
+            }
+        }
+        out
+    });
+    let graph = m.join_update("knn:graph_fill", edges, |id, blk, es| {
+        for v in blk.as_mut_slice() {
+            *v = f64::INFINITY;
+        }
+        if id.i == id.j {
+            for r in 0..blk.nrows() {
+                blk[(r, r)] = 0.0;
+            }
+        }
+        for (li, lj, d) in es {
+            if d < blk[(li, lj)] {
+                blk[(li, lj)] = d;
+                if id.i == id.j {
+                    blk[(lj, li)] = d;
+                }
+            }
+        }
+    });
+    graph.persist("G")?;
+    ctx.clear_resident("M");
+
+    Ok(KnnGraph { graph, q, lists })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::config::ClusterConfig;
+    use crate::data::swiss_roll;
+
+    fn run_knn(n: usize, b: usize, k: usize) -> (Matrix, KnnGraph, Matrix) {
+        let ds = swiss_roll::euler_isometric(n, 11);
+        let ctx = SparkContext::new(ClusterConfig::local());
+        let cfg = IsomapConfig { k, block: b, ..Default::default() };
+        let g = build(&ctx, &ds.points, &cfg, &Backend::Native).unwrap();
+        // Materialize the dense graph from blocks.
+        let mut dense = Matrix::full(n, n, f64::INFINITY);
+        for (id, blk) in g.graph.iter() {
+            let (rs, _) = block_range(n, b, id.i);
+            let (cs, _) = block_range(n, b, id.j);
+            for r in 0..blk.nrows() {
+                for c in 0..blk.ncols() {
+                    dense[(rs + r, cs + c)] = blk[(r, c)];
+                }
+            }
+        }
+        (ds.points, g, dense)
+    }
+
+    fn symmetrized_reference(x: &Matrix, k: usize) -> Matrix {
+        baselines::knn_graph_dense(&baselines::brute_knn(x, k))
+    }
+
+    #[test]
+    fn matches_bruteforce_exact_divisible() {
+        let (x, _g, dense) = run_knn(48, 16, 5);
+        let want = symmetrized_reference(&x, 5);
+        // Upper triangle of dense must equal reference upper triangle.
+        for i in 0..48 {
+            for j in i..48 {
+                let (a, b) = (dense[(i, j)], want[(i, j)]);
+                if a.is_infinite() || b.is_infinite() {
+                    assert!(a.is_infinite() && b.is_infinite(), "({i},{j}): {a} vs {b}");
+                } else {
+                    assert!((a - b).abs() < 1e-10, "({i},{j}): {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matches_bruteforce_ragged() {
+        // n not divisible by b exercises the ragged last block.
+        let (x, _g, dense) = run_knn(53, 16, 4);
+        let want = symmetrized_reference(&x, 4);
+        for i in 0..53 {
+            for j in i..53 {
+                let (a, b) = (dense[(i, j)], want[(i, j)]);
+                if a.is_infinite() || b.is_infinite() {
+                    assert!(a.is_infinite() && b.is_infinite(), "({i},{j})");
+                } else {
+                    assert!((a - b).abs() < 1e-10, "({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lists_match_bruteforce() {
+        let (x, g, _) = run_knn(40, 8, 6);
+        let want = baselines::brute_knn(&x, 6);
+        for i in 0..40 {
+            let got: Vec<usize> = g.lists[i].iter().map(|&(_, j)| j).collect();
+            let exp: Vec<usize> = want[i].iter().map(|&(_, j)| j).collect();
+            assert_eq!(got, exp, "point {i}");
+        }
+    }
+
+    #[test]
+    fn swiss_roll_knn_connected() {
+        let (_, g, _) = run_knn(200, 64, 10);
+        assert!(crate::eval::connectivity(&g.lists));
+    }
+
+    #[test]
+    fn diagonal_zero_and_block_count() {
+        let (_, g, dense) = run_knn(30, 10, 3);
+        assert_eq!(g.q, 3);
+        assert_eq!(g.graph.len(), 6); // UT blocks of q=3
+        for i in 0..30 {
+            assert_eq!(dense[(i, i)], 0.0);
+        }
+    }
+}

@@ -1,0 +1,183 @@
+//! Landmark Isomap (L-Isomap) — the approximate variant the paper
+//! contrasts with (§V, de Silva & Tenenbaum): `m` landmarks are embedded
+//! by exact MDS on their geodesic distances; the remaining points are
+//! placed by distance-based triangulation. Shares the distributed kNN
+//! stage with the exact pipeline; the `m × n` geodesics come from
+//! per-landmark Dijkstra over the (sparse) neighborhood graph.
+
+use crate::backend::Backend;
+use crate::config::{ClusterConfig, IsomapConfig};
+use crate::engine::SparkContext;
+use crate::linalg::{jacobi, Matrix};
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+
+/// L-Isomap output.
+#[derive(Debug)]
+pub struct LandmarkOutput {
+    /// The `n × d` embedding.
+    pub embedding: Matrix,
+    /// Indices of the selected landmarks.
+    pub landmarks: Vec<usize>,
+    /// Top-`d` eigenvalues of the landmark MDS.
+    pub eigenvalues: Vec<f64>,
+}
+
+/// Run L-Isomap with `m` randomly selected landmarks.
+pub fn run(
+    x: &Matrix,
+    cfg: &IsomapConfig,
+    m: usize,
+    cluster: &ClusterConfig,
+    backend: &Backend,
+) -> Result<LandmarkOutput> {
+    let n = x.nrows();
+    cfg.validate(n)?;
+    if m < cfg.d + 1 || m > n {
+        bail!("landmark count m={m} must be in {}..={n}", cfg.d + 1);
+    }
+    let ctx = SparkContext::new(cluster.clone());
+
+    // Distributed kNN stage (same as exact Isomap).
+    let kg = super::knn::build(&ctx, x, cfg, backend).context("kNN stage")?;
+    if crate::eval::components(&kg.lists) != 1 {
+        bail!("kNN graph disconnected; increase k");
+    }
+
+    // Landmark selection (uniform, as in de Silva & Tenenbaum).
+    let mut rng = Rng::seed(cfg.seed);
+    let landmarks = rng.sample_indices(n, m);
+
+    // Sparse symmetric adjacency from the kNN lists.
+    let mut adj: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+    for (i, list) in kg.lists.iter().enumerate() {
+        for &(d, j) in list {
+            adj[i].push((j, d));
+            adj[j].push((i, d));
+        }
+    }
+
+    // Geodesics landmark -> all points (m Dijkstra runs; the O(n³) APSP is
+    // exactly what L-Isomap avoids).
+    let mut delta = Matrix::zeros(m, n); // squared distances
+    for (li, &l) in landmarks.iter().enumerate() {
+        let dist = dijkstra_sparse(&adj, l);
+        for (j, dj) in dist.iter().enumerate() {
+            if !dj.is_finite() {
+                bail!("landmark {l} cannot reach point {j}");
+            }
+            delta[(li, j)] = dj * dj;
+        }
+    }
+
+    // MDS on the m×m landmark sub-matrix.
+    let mut dl = Matrix::zeros(m, m);
+    for a in 0..m {
+        for bb in 0..m {
+            dl[(a, bb)] = delta[(a, landmarks[bb])];
+        }
+    }
+    crate::kernels::centering::center_full_direct(&mut dl);
+    let (vals, vecs) = jacobi::top_d(&dl, cfg.d);
+    if vals[cfg.d - 1] <= 0.0 {
+        bail!("landmark MDS produced non-positive eigenvalue {}", vals[cfg.d - 1]);
+    }
+
+    // Triangulation: y_i = ½·Λ^{-½}·Qᵀ·(δ̄ − δ_i), δ̄ = mean landmark row.
+    let mut mean_delta = vec![0.0; m];
+    for a in 0..m {
+        for bb in 0..m {
+            mean_delta[a] += dl_raw(&delta, &landmarks, a, bb);
+        }
+        mean_delta[a] /= m as f64;
+    }
+    let mut embedding = Matrix::zeros(n, cfg.d);
+    for i in 0..n {
+        for j in 0..cfg.d {
+            let mut acc = 0.0;
+            for a in 0..m {
+                acc += vecs[(a, j)] * (mean_delta[a] - delta[(a, i)]);
+            }
+            embedding[(i, j)] = 0.5 * acc / vals[j].sqrt();
+        }
+    }
+
+    Ok(LandmarkOutput { embedding, landmarks, eigenvalues: vals })
+}
+
+/// Raw squared landmark-landmark distance (helper for the mean row).
+fn dl_raw(delta: &Matrix, landmarks: &[usize], a: usize, b: usize) -> f64 {
+    delta[(a, landmarks[b])]
+}
+
+fn dijkstra_sparse(adj: &[Vec<(usize, f64)>], src: usize) -> Vec<f64> {
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+    #[derive(PartialEq)]
+    struct Item(f64, usize);
+    impl Eq for Item {}
+    impl Ord for Item {
+        fn cmp(&self, o: &Self) -> Ordering {
+            o.0.partial_cmp(&self.0).unwrap_or(Ordering::Equal)
+        }
+    }
+    impl PartialOrd for Item {
+        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    let n = adj.len();
+    let mut dist = vec![f64::INFINITY; n];
+    let mut heap = BinaryHeap::new();
+    dist[src] = 0.0;
+    heap.push(Item(0.0, src));
+    while let Some(Item(d, u)) = heap.pop() {
+        if d > dist[u] {
+            continue;
+        }
+        for &(v, w) in &adj[u] {
+            let nd = d + w;
+            if nd < dist[v] {
+                dist[v] = nd;
+                heap.push(Item(nd, v));
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::swiss_roll;
+    use crate::eval::procrustes;
+
+    #[test]
+    fn landmarks_approximate_exact_isomap() {
+        let ds = swiss_roll::euler_isometric(600, 23);
+        let cfg = IsomapConfig { k: 10, d: 2, block: 128, ..Default::default() };
+        let exact = super::super::isomap::run(&ds.points, &cfg, &ClusterConfig::local()).unwrap();
+        let lm = run(&ds.points, &cfg, 100, &ClusterConfig::local(), &Backend::Native).unwrap();
+        assert_eq!(lm.landmarks.len(), 100);
+        let err = procrustes(&exact.embedding, &lm.embedding);
+        // Approximation, not exact — but must be structurally the same.
+        assert!(err < 0.05, "L-Isomap vs exact procrustes = {err}");
+    }
+
+    #[test]
+    fn landmark_embedding_matches_truth_roughly() {
+        let ds = swiss_roll::euler_isometric(600, 29);
+        let cfg = IsomapConfig { k: 10, d: 2, block: 128, ..Default::default() };
+        let lm = run(&ds.points, &cfg, 80, &ClusterConfig::local(), &Backend::Native).unwrap();
+        let err = procrustes(ds.ground_truth.as_ref().unwrap(), &lm.embedding);
+        assert!(err < 0.05, "procrustes = {err}");
+    }
+
+    #[test]
+    fn rejects_bad_m() {
+        let ds = swiss_roll::euler_isometric(30, 3);
+        let cfg = IsomapConfig { k: 5, d: 2, block: 16, ..Default::default() };
+        assert!(run(&ds.points, &cfg, 2, &ClusterConfig::local(), &Backend::Native).is_err());
+        assert!(run(&ds.points, &cfg, 31, &ClusterConfig::local(), &Backend::Native).is_err());
+    }
+}

@@ -1,0 +1,93 @@
+//! The Isomap pipeline over the dataflow engine — the paper's system
+//! contribution (§III): blocked kNN, communication-avoiding blocked
+//! Floyd–Warshall APSP, distributed double centering, and simultaneous
+//! power iteration with driver-side QR, glued end-to-end by
+//! [`isomap::run`]. [`landmark`] adds the L-Isomap variant the paper
+//! discusses in §V as the approximate alternative.
+
+pub mod apsp;
+pub mod centering;
+pub mod eigen;
+pub mod isomap;
+pub mod knn;
+pub mod landmark;
+pub mod lle;
+pub mod streaming;
+
+/// Row range `[start, end)` of block `i` in a 1-D decomposition of `n`
+/// points into blocks of size `b` (the last block may be ragged).
+pub fn block_range(n: usize, b: usize, i: usize) -> (usize, usize) {
+    let start = i * b;
+    (start, ((i + 1) * b).min(n))
+}
+
+/// Number of logical blocks `q = ⌈n/b⌉`.
+pub fn num_blocks(n: usize, b: usize) -> usize {
+    n.div_ceil(b)
+}
+
+/// Default partition count: the paper sets `p'` so that `B = Q/p'` blocks
+/// land on each partition; we default to one partition per cluster core,
+/// capped by the number of upper-triangular blocks.
+pub fn default_partitions(q: usize, total_cores: usize) -> usize {
+    crate::engine::partitioner::ut_count(q).min(total_cores.max(1))
+}
+
+/// Split a dense symmetric matrix into its upper-triangular logical blocks
+/// (benches and tests feed graphs straight into [`apsp::solve`] this way).
+pub fn blocks_from_dense(
+    g: &crate::linalg::Matrix,
+    b: usize,
+) -> Vec<(crate::engine::BlockId, crate::linalg::Matrix)> {
+    let n = g.nrows();
+    let q = num_blocks(n, b);
+    let mut out = Vec::with_capacity(crate::engine::partitioner::ut_count(q));
+    for i in 0..q {
+        for j in i..q {
+            let (rs, re) = block_range(n, b, i);
+            let (cs, ce) = block_range(n, b, j);
+            out.push((crate::engine::BlockId::new(i, j), g.slice(rs, re, cs, ce)));
+        }
+    }
+    out
+}
+
+/// Reassemble a dense symmetric matrix from upper-triangular blocks.
+pub fn dense_from_blocks(
+    rdd: &crate::engine::BlockRdd<crate::linalg::Matrix>,
+    n: usize,
+    b: usize,
+) -> crate::linalg::Matrix {
+    let mut out = crate::linalg::Matrix::zeros(n, n);
+    for (id, blk) in rdd.iter() {
+        let (rs, _) = block_range(n, b, id.i);
+        let (cs, _) = block_range(n, b, id.j);
+        for r in 0..blk.nrows() {
+            for c in 0..blk.ncols() {
+                out[(rs + r, cs + c)] = blk[(r, c)];
+                out[(cs + c, rs + r)] = blk[(r, c)];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ranges() {
+        assert_eq!(block_range(10, 4, 0), (0, 4));
+        assert_eq!(block_range(10, 4, 2), (8, 10)); // ragged tail
+        assert_eq!(num_blocks(10, 4), 3);
+        assert_eq!(num_blocks(8, 4), 2);
+    }
+
+    #[test]
+    fn partitions_capped() {
+        assert_eq!(default_partitions(2, 500), 3); // Q = 3
+        assert_eq!(default_partitions(10, 4), 4);
+        assert_eq!(default_partitions(10, 0), 1);
+    }
+}

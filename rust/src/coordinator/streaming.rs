@@ -1,0 +1,289 @@
+//! Streaming Isomap — the companion method the paper discusses in §V
+//! (Schoeneman et al., SDM 2017): learn a faithful manifold from an
+//! initial batch, then map new points arriving on a stream in O(k·m) each,
+//! without re-running the O(n³) pipeline. "Both methods could be combined
+//! in case when the initial batch is large" — this module is that
+//! combination: the batch model comes from the distributed exact pipeline.
+
+use crate::backend::Backend;
+use crate::config::{ClusterConfig, IsomapConfig};
+use crate::kernels::kselect::row_topk;
+use crate::linalg::{jacobi, Matrix};
+use crate::util::Rng;
+use anyhow::{bail, Context, Result};
+
+/// A fitted streaming model: batch data + landmark geodesic tables.
+pub struct StreamingModel {
+    /// Batch points (n × D), kept for kNN of incoming points.
+    batch: Matrix,
+    /// Landmark indices into the batch.
+    landmarks: Vec<usize>,
+    /// Squared geodesic distances landmark → every batch point (m × n).
+    delta: Matrix,
+    /// Mean squared landmark-landmark distance per landmark (δ̄).
+    mean_delta: Vec<f64>,
+    /// Landmark MDS eigenpairs used for triangulation.
+    eigvals: Vec<f64>,
+    eigvecs: Matrix,
+    /// Output dimensionality.
+    d: usize,
+    /// Neighborhood size used for incoming points.
+    k: usize,
+    /// Batch embedding (n × d) — triangulated, same frame as new points.
+    pub batch_embedding: Matrix,
+}
+
+impl StreamingModel {
+    /// Fit the model: run the distributed kNN stage on the batch, select
+    /// `m` landmarks, Dijkstra their geodesics, landmark MDS.
+    pub fn fit(
+        x: &Matrix,
+        cfg: &IsomapConfig,
+        m: usize,
+        cluster: &ClusterConfig,
+        backend: &Backend,
+    ) -> Result<StreamingModel> {
+        let n = x.nrows();
+        cfg.validate(n)?;
+        if m < cfg.d + 1 || m > n {
+            bail!("landmark count m={m} out of range");
+        }
+        let ctx = crate::engine::SparkContext::new(cluster.clone());
+        let kg = super::knn::build(&ctx, x, cfg, backend).context("kNN stage")?;
+        if crate::eval::components(&kg.lists) != 1 {
+            bail!("batch kNN graph disconnected; increase k");
+        }
+
+        // Symmetric sparse adjacency.
+        let mut adj: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        for (i, list) in kg.lists.iter().enumerate() {
+            for &(dist, j) in list {
+                adj[i].push((j, dist));
+                adj[j].push((i, dist));
+            }
+        }
+
+        let mut rng = Rng::seed(cfg.seed);
+        let landmarks = rng.sample_indices(n, m);
+        let mut delta = Matrix::zeros(m, n);
+        for (li, &l) in landmarks.iter().enumerate() {
+            let dist = dijkstra(&adj, l);
+            for (j, dj) in dist.iter().enumerate() {
+                if !dj.is_finite() {
+                    bail!("landmark {l} cannot reach point {j}");
+                }
+                delta[(li, j)] = dj * dj;
+            }
+        }
+
+        // Landmark MDS.
+        let mut dl = Matrix::zeros(m, m);
+        for a in 0..m {
+            for b in 0..m {
+                dl[(a, b)] = delta[(a, landmarks[b])];
+            }
+        }
+        let mut mean_delta = vec![0.0; m];
+        for a in 0..m {
+            mean_delta[a] = (0..m).map(|b| dl[(a, b)]).sum::<f64>() / m as f64;
+        }
+        crate::kernels::centering::center_full_direct(&mut dl);
+        let (vals, vecs) = jacobi::top_d(&dl, cfg.d);
+        if vals[cfg.d - 1] <= 0.0 {
+            bail!("landmark MDS spectrum not positive: {vals:?}");
+        }
+
+        let mut model = StreamingModel {
+            batch: x.clone(),
+            landmarks,
+            delta,
+            mean_delta,
+            eigvals: vals,
+            eigvecs: vecs,
+            d: cfg.d,
+            k: cfg.k,
+            batch_embedding: Matrix::zeros(n, cfg.d),
+        };
+        // Triangulate the batch itself into the landmark frame.
+        for i in 0..n {
+            let di: Vec<f64> = (0..m).map(|a| model.delta[(a, i)]).collect();
+            let y = model.triangulate(&di);
+            model.batch_embedding.row_mut(i).copy_from_slice(&y);
+        }
+        Ok(model)
+    }
+
+    /// Number of landmarks.
+    pub fn num_landmarks(&self) -> usize {
+        self.landmarks.len()
+    }
+
+    /// Map one new point from the stream: kNN against the batch, geodesics
+    /// to landmarks through those neighbors, distance-based triangulation.
+    pub fn map_point(&self, p: &[f64]) -> Result<Vec<f64>> {
+        if p.len() != self.batch.ncols() {
+            bail!("point dimensionality {} != batch D {}", p.len(), self.batch.ncols());
+        }
+        let n = self.batch.nrows();
+        // Distances to every batch point (O(n·D) — the stream fast path).
+        let dists: Vec<f64> = (0..n)
+            .map(|i| {
+                self.batch
+                    .row(i)
+                    .iter()
+                    .zip(p)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .collect();
+        let nbrs = row_topk(&dists, self.k, 0, None);
+        // Geodesic to each landmark ≈ min over neighbors of (edge + geo).
+        let m = self.landmarks.len();
+        let mut dsq = vec![0.0; m];
+        for (a, ds) in dsq.iter_mut().enumerate() {
+            let mut best = f64::INFINITY;
+            for &(edge, j) in &nbrs {
+                let geo = self.delta[(a, j)].sqrt();
+                best = best.min(edge + geo);
+            }
+            *ds = best * best;
+        }
+        Ok(self.triangulate(&dsq))
+    }
+
+    /// Map a batch of streaming points.
+    pub fn map_points(&self, pts: &Matrix) -> Result<Matrix> {
+        let mut out = Matrix::zeros(pts.nrows(), self.d);
+        for i in 0..pts.nrows() {
+            let y = self.map_point(pts.row(i))?;
+            out.row_mut(i).copy_from_slice(&y);
+        }
+        Ok(out)
+    }
+
+    /// L-Isomap triangulation: y = ½·Λ^{-½}·Qᵀ·(δ̄ − δ).
+    fn triangulate(&self, dsq: &[f64]) -> Vec<f64> {
+        let m = self.landmarks.len();
+        (0..self.d)
+            .map(|j| {
+                let mut acc = 0.0;
+                for a in 0..m {
+                    acc += self.eigvecs[(a, j)] * (self.mean_delta[a] - dsq[a]);
+                }
+                0.5 * acc / self.eigvals[j].sqrt()
+            })
+            .collect()
+    }
+}
+
+fn dijkstra(adj: &[Vec<(usize, f64)>], src: usize) -> Vec<f64> {
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+    #[derive(PartialEq)]
+    struct Item(f64, usize);
+    impl Eq for Item {}
+    impl Ord for Item {
+        fn cmp(&self, o: &Self) -> Ordering {
+            o.0.partial_cmp(&self.0).unwrap_or(Ordering::Equal)
+        }
+    }
+    impl PartialOrd for Item {
+        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    let n = adj.len();
+    let mut dist = vec![f64::INFINITY; n];
+    let mut heap = BinaryHeap::new();
+    dist[src] = 0.0;
+    heap.push(Item(0.0, src));
+    while let Some(Item(d, u)) = heap.pop() {
+        if d > dist[u] {
+            continue;
+        }
+        for &(v, w) in &adj[u] {
+            let nd = d + w;
+            if nd < dist[v] {
+                dist[v] = nd;
+                heap.push(Item(nd, v));
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::swiss_roll;
+    use crate::eval::procrustes;
+
+    fn fitted(n: usize, m: usize, seed: u64) -> (StreamingModel, crate::data::Dataset) {
+        let ds = swiss_roll::euler_isometric(n, seed);
+        let cfg = IsomapConfig { k: 10, d: 2, block: 64, ..Default::default() };
+        let model =
+            StreamingModel::fit(&ds.points, &cfg, m, &ClusterConfig::local(), &Backend::Native)
+                .unwrap();
+        (model, ds)
+    }
+
+    #[test]
+    fn batch_embedding_recovers_latents() {
+        let (model, ds) = fitted(600, 100, 23);
+        let err = procrustes(ds.ground_truth.as_ref().unwrap(), &model.batch_embedding);
+        assert!(err < 0.05, "batch procrustes = {err}");
+    }
+
+    #[test]
+    fn streamed_points_land_near_truth() {
+        let (model, _) = fitted(600, 100, 31);
+        // New points from the same manifold, different seed.
+        let fresh = swiss_roll::euler_isometric(200, 97);
+        let mapped = model.map_points(&fresh.points).unwrap();
+        // Compare in the latent frame: fit the similarity transform on the
+        // *batch* only, then apply the same comparison to streamed points —
+        // procrustes over the combined set bounds both.
+        let err = procrustes(fresh.ground_truth.as_ref().unwrap(), &mapped);
+        assert!(err < 0.05, "streamed procrustes = {err}");
+    }
+
+    #[test]
+    fn stream_mapping_is_fast() {
+        let (model, _) = fitted(600, 80, 5);
+        let fresh = swiss_roll::euler_isometric(50, 98);
+        let sw = crate::util::Stopwatch::start();
+        let _ = model.map_points(&fresh.points).unwrap();
+        let per_point = sw.secs() / 50.0;
+        assert!(per_point < 0.01, "stream path too slow: {per_point}s/pt");
+    }
+
+    #[test]
+    fn batch_point_maps_to_its_embedding() {
+        // A point already in the batch must map (approximately) onto its
+        // own batch-embedding position.
+        let (model, ds) = fitted(500, 80, 7);
+        let y = model.map_point(ds.points.row(123)).unwrap();
+        let want = model.batch_embedding.row(123);
+        let dist: f64 =
+            y.iter().zip(want).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        // Scale-aware tolerance: small fraction of the embedding diameter.
+        assert!(dist < 0.5, "self-mapping error {dist}");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let (model, _) = fitted(200, 40, 9);
+        assert!(model.map_point(&[1.0, 2.0]).is_err()); // wrong D
+        let ds = swiss_roll::euler_isometric(50, 1);
+        let cfg = IsomapConfig { k: 10, d: 2, block: 16, ..Default::default() };
+        assert!(StreamingModel::fit(
+            &ds.points,
+            &cfg,
+            2, // m < d+1
+            &ClusterConfig::local(),
+            &Backend::Native
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,70 @@
+//! Gaussian cluster generator — a generic high-dimensional workload used by
+//! engine/scalability benchmarks where manifold structure is irrelevant.
+
+use super::Dataset;
+use crate::linalg::Matrix;
+use crate::util::Rng;
+
+/// `n` points split evenly across `c` spherical Gaussian clusters in `R^dim`
+/// with the given per-axis standard deviation. Cluster centers are drawn
+/// uniformly from the unit hypercube scaled by 4.
+pub fn gaussian_clusters(n: usize, dim: usize, c: usize, std: f64, seed: u64) -> Dataset {
+    assert!(c >= 1 && dim >= 1);
+    let mut rng = Rng::seed(seed);
+    let centers: Vec<Vec<f64>> = (0..c)
+        .map(|_| (0..dim).map(|_| rng.range(0.0, 4.0)).collect())
+        .collect();
+    let mut points = Matrix::zeros(n, dim);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let k = i % c;
+        for j in 0..dim {
+            points[(i, j)] = centers[k][j] + rng.normal(0.0, std);
+        }
+        labels.push(k);
+    }
+    Dataset { points, labels: Some(labels), ground_truth: None, name: format!("clusters{n}") }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes() {
+        let d = gaussian_clusters(30, 5, 3, 0.1, 1);
+        assert_eq!(d.n(), 30);
+        assert_eq!(d.dim(), 5);
+        assert_eq!(d.labels.as_ref().unwrap().len(), 30);
+    }
+
+    #[test]
+    fn clusters_are_tight() {
+        let d = gaussian_clusters(300, 8, 3, 0.05, 2);
+        let labels = d.labels.unwrap();
+        // Mean intra-cluster distance should be far below inter-cluster.
+        let dist = |a: usize, b: usize| -> f64 {
+            d.points
+                .row(a)
+                .iter()
+                .zip(d.points.row(b))
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let (mut intra, mut ni) = (0.0, 0);
+        let (mut inter, mut nx) = (0.0, 0);
+        for a in 0..100 {
+            for b in (a + 1)..100 {
+                if labels[a] == labels[b] {
+                    intra += dist(a, b);
+                    ni += 1;
+                } else {
+                    inter += dist(a, b);
+                    nx += 1;
+                }
+            }
+        }
+        assert!(intra / ni as f64 * 3.0 < inter / nx as f64);
+    }
+}

@@ -1,0 +1,138 @@
+//! Lightweight matrix IO: CSV (for embeddings/reports consumed by plotting
+//! tools) and a raw little-endian f64 binary format for fast round-trips.
+
+use crate::linalg::Matrix;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Write a matrix as CSV with an optional header row.
+pub fn write_csv(path: &Path, m: &Matrix, header: Option<&[&str]>) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    if let Some(h) = header {
+        writeln!(w, "{}", h.join(","))?;
+    }
+    for i in 0..m.nrows() {
+        let row: Vec<String> = m.row(i).iter().map(|x| format!("{x}")).collect();
+        writeln!(w, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Read a CSV of floats; `skip_header` drops the first line.
+pub fn read_csv(path: &Path, skip_header: bool) -> Result<Matrix> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let reader = std::io::BufReader::new(f);
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if lineno == 0 && skip_header {
+            continue;
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row: Result<Vec<f64>, _> = line.split(',').map(|c| c.trim().parse::<f64>()).collect();
+        let row = row.with_context(|| format!("{path:?}:{} bad float", lineno + 1))?;
+        if let Some(first) = rows.first() {
+            if first.len() != row.len() {
+                bail!("{path:?}:{} ragged row", lineno + 1);
+            }
+        }
+        rows.push(row);
+    }
+    if rows.is_empty() {
+        bail!("{path:?}: empty CSV");
+    }
+    Ok(Matrix::from_rows(&rows))
+}
+
+/// Binary format: magic, u64 rows, u64 cols, then rows*cols little-endian f64.
+const MAGIC: &[u8; 8] = b"ISOSPK01";
+
+/// Write the raw binary matrix format.
+pub fn write_bin(path: &Path, m: &Matrix) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(m.nrows() as u64).to_le_bytes())?;
+    w.write_all(&(m.ncols() as u64).to_le_bytes())?;
+    for x in m.as_slice() {
+        w.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the raw binary matrix format.
+pub fn read_bin(path: &Path) -> Result<Matrix> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    if buf.len() < 24 || &buf[..8] != MAGIC {
+        bail!("{path:?}: bad magic");
+    }
+    let rows = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+    let cols = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
+    let need = 24 + rows * cols * 8;
+    if buf.len() != need {
+        bail!("{path:?}: truncated ({} != {need})", buf.len());
+    }
+    let data: Vec<f64> = buf[24..]
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("isospark_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let m = Matrix::from_rows(&[vec![1.5, -2.0], vec![0.25, 1e-3]]);
+        let p = tmp("a.csv");
+        write_csv(&p, &m, Some(&["x", "y"])).unwrap();
+        let r = read_csv(&p, true).unwrap();
+        assert!(r.max_abs_diff(&m) < 1e-15);
+    }
+
+    #[test]
+    fn csv_no_header() {
+        let m = Matrix::from_rows(&[vec![1.0], vec![2.0]]);
+        let p = tmp("b.csv");
+        write_csv(&p, &m, None).unwrap();
+        let r = read_csv(&p, false).unwrap();
+        assert_eq!(r.nrows(), 2);
+    }
+
+    #[test]
+    fn bin_roundtrip_exact() {
+        let m = Matrix::from_rows(&[vec![std::f64::consts::PI, f64::MIN_POSITIVE], vec![-0.0, 1e308]]);
+        let p = tmp("c.bin");
+        write_bin(&p, &m).unwrap();
+        let r = read_bin(&p).unwrap();
+        assert_eq!(r.as_slice(), m.as_slice());
+    }
+
+    #[test]
+    fn bin_rejects_corrupt() {
+        let p = tmp("d.bin");
+        std::fs::write(&p, b"NOTMAGIC123").unwrap();
+        assert!(read_bin(&p).is_err());
+    }
+
+    #[test]
+    fn csv_rejects_ragged() {
+        let p = tmp("e.csv");
+        std::fs::write(&p, "1,2\n3\n").unwrap();
+        assert!(read_csv(&p, false).is_err());
+    }
+}

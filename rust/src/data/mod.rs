@@ -1,0 +1,71 @@
+//! Dataset generators and IO.
+//!
+//! The paper evaluates on (a) the *Euler Isometric Swiss Roll* [Schoeneman
+//! et al., SDM 2017] sampled at n = 50k/75k/100k and (b) random samples of
+//! EMNIST (28×28 handwritten digits, D = 784). EMNIST images are not
+//! available in this offline environment, so [`emnist_synth`] renders
+//! synthetic stroke-based digits with controlled slant/curvature factors —
+//! the same dimensionality and the same qualitative structure Fig. 5 of the
+//! paper reads off (see DESIGN.md §5 substitutions).
+
+pub mod clusters;
+pub mod emnist_synth;
+pub mod io;
+pub mod swiss_roll;
+
+use crate::linalg::Matrix;
+
+/// A dataset: `n × D` points, optional integer labels, and (for synthetic
+/// manifolds) the ground-truth low-dimensional coordinates used to compute
+/// Procrustes error.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// High-dimensional points, one per row.
+    pub points: Matrix,
+    /// Class labels (e.g. digit identity), when meaningful.
+    pub labels: Option<Vec<usize>>,
+    /// Ground-truth latent coordinates, when known.
+    pub ground_truth: Option<Matrix>,
+    /// Human-readable name used in reports.
+    pub name: String,
+}
+
+impl Dataset {
+    /// Number of points.
+    pub fn n(&self) -> usize {
+        self.points.nrows()
+    }
+
+    /// Ambient dimensionality `D`.
+    pub fn dim(&self) -> usize {
+        self.points.ncols()
+    }
+}
+
+/// Named dataset presets mirroring the paper's benchmarks (at laptop scale
+/// `n` is a parameter; the paper's n=50k+ sizes are reached through the
+/// calibrated simulator, see `sim`).
+pub fn by_name(name: &str, n: usize, seed: u64) -> Option<Dataset> {
+    match name {
+        "swiss" | "swiss_roll" => Some(swiss_roll::euler_isometric(n, seed)),
+        "emnist" | "emnist_synth" => Some(emnist_synth::generate(n, seed)),
+        "clusters" => Some(clusters::gaussian_clusters(n, 16, 8, 0.3, seed)),
+        "s_curve" => Some(swiss_roll::s_curve(n, seed)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_exist() {
+        for name in ["swiss", "emnist", "clusters", "s_curve"] {
+            let d = by_name(name, 64, 1).unwrap();
+            assert_eq!(d.n(), 64, "{name}");
+            assert!(d.dim() >= 3, "{name}");
+        }
+        assert!(by_name("nope", 10, 1).is_none());
+    }
+}

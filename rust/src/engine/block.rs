@@ -1,0 +1,116 @@
+//! Block identifiers and payload sizing.
+//!
+//! The engine moves *logical blocks*: the paper's `b × b` NumPy sub-matrices
+//! (and smaller keyed payloads like per-row kNN candidate lists). A
+//! [`BlockId`] is the 2-D key `(I, J)`; payloads implement [`HasBytes`] so
+//! shuffles, collects and broadcasts can be charged to the network model.
+
+use crate::linalg::Matrix;
+
+/// Key of a logical block: `(I, J)` in the paper's 2-D decomposition.
+/// For non-matrix keyed data the components are reused (e.g. kNN candidate
+/// lists are keyed `(I, i_loc)`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct BlockId {
+    pub i: usize,
+    pub j: usize,
+}
+
+impl BlockId {
+    pub fn new(i: usize, j: usize) -> Self {
+        Self { i, j }
+    }
+
+    /// True when this key lies in the upper triangle (`i <= j`).
+    pub fn upper(&self) -> bool {
+        self.i <= self.j
+    }
+
+    /// The transposed key.
+    pub fn t(&self) -> Self {
+        Self { i: self.j, j: self.i }
+    }
+}
+
+impl std::fmt::Display for BlockId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "({},{})", self.i, self.j)
+    }
+}
+
+/// Serialized size estimate, used for shuffle/collect/broadcast accounting
+/// and the per-node memory model (paper: 56 GB executor heaps; exceeding
+/// them makes a run "impossible on given resources", Table I's `-`).
+pub trait HasBytes {
+    fn nbytes(&self) -> u64;
+}
+
+/// Fixed per-object overhead mirroring JVM/pickle headers.
+const OBJ_OVERHEAD: u64 = 16;
+
+impl HasBytes for Matrix {
+    fn nbytes(&self) -> u64 {
+        OBJ_OVERHEAD + 8 * (self.nrows() as u64) * (self.ncols() as u64)
+    }
+}
+
+impl HasBytes for f64 {
+    fn nbytes(&self) -> u64 {
+        8
+    }
+}
+
+impl HasBytes for usize {
+    fn nbytes(&self) -> u64 {
+        8
+    }
+}
+
+impl<T: HasBytes> HasBytes for Vec<T> {
+    fn nbytes(&self) -> u64 {
+        OBJ_OVERHEAD + self.iter().map(HasBytes::nbytes).sum::<u64>()
+    }
+}
+
+impl<T: HasBytes> HasBytes for Option<T> {
+    fn nbytes(&self) -> u64 {
+        self.as_ref().map_or(0, HasBytes::nbytes)
+    }
+}
+
+impl<A: HasBytes, B: HasBytes> HasBytes for (A, B) {
+    fn nbytes(&self) -> u64 {
+        self.0.nbytes() + self.1.nbytes()
+    }
+}
+
+impl<A: HasBytes, B: HasBytes, C: HasBytes> HasBytes for (A, B, C) {
+    fn nbytes(&self) -> u64 {
+        self.0.nbytes() + self.1.nbytes() + self.2.nbytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_id_orientation() {
+        let b = BlockId::new(1, 3);
+        assert!(b.upper());
+        assert!(!b.t().upper());
+        assert_eq!(b.t(), BlockId::new(3, 1));
+        assert_eq!(format!("{b}"), "(1,3)");
+    }
+
+    #[test]
+    fn sizes() {
+        let m = Matrix::zeros(4, 8);
+        assert_eq!(m.nbytes(), 16 + 8 * 32);
+        assert_eq!((1.0f64, 2usize).nbytes(), 16);
+        let v: Vec<f64> = vec![0.0; 10];
+        assert_eq!(v.nbytes(), 16 + 80);
+        assert_eq!(Some(3.0f64).nbytes(), 8);
+        assert_eq!(None::<f64>.nbytes(), 0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Virtual-time executor model.
+//!
+//! Every task in a stage really executes (on this machine's single core)
+//! and its measured duration is replayed onto a simulated cluster of
+//! `nodes × cores` virtual cores: a task assigned to node `v` starts on
+//! `v`'s earliest-free core no sooner than the stage's start, and the stage
+//! (Spark stages are barriers) completes when the last task finishes.
+//! Network and driver charges advance the global clock serially.
+
+/// Virtual cluster clock: per-core free times plus a global barrier `now`.
+#[derive(Clone, Debug)]
+pub struct VirtualClock {
+    /// `free[v][c]` = virtual time when core `c` of node `v` becomes idle.
+    free: Vec<Vec<f64>>,
+    now: f64,
+}
+
+/// One schedulable task: which node it must run on (data locality) and its
+/// measured duration in seconds.
+#[derive(Clone, Copy, Debug)]
+pub struct Task {
+    pub node: usize,
+    pub duration: f64,
+}
+
+impl VirtualClock {
+    pub fn new(nodes: usize, cores_per_node: usize) -> Self {
+        assert!(nodes > 0 && cores_per_node > 0);
+        Self { free: vec![vec![0.0; cores_per_node]; nodes], now: 0.0 }
+    }
+
+    /// Current virtual time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Serial charge on the critical path (driver work, network transfer).
+    pub fn advance(&mut self, dt: f64) {
+        debug_assert!(dt >= 0.0, "negative advance {dt}");
+        self.now += dt;
+    }
+
+    /// Run one barrier stage. Tasks are placed greedily in the given order
+    /// onto their node's earliest-free core. Returns the stage makespan
+    /// (time from stage start to last task completion); `now` advances to
+    /// the barrier.
+    pub fn run_stage(&mut self, tasks: &[Task]) -> f64 {
+        if tasks.is_empty() {
+            return 0.0;
+        }
+        let start = self.now;
+        // Cores idle before the stage cannot start tasks in the past.
+        for node in &mut self.free {
+            for c in node.iter_mut() {
+                *c = c.max(start);
+            }
+        }
+        let mut end = start;
+        for t in tasks {
+            let cores = &mut self.free[t.node];
+            // Earliest-free core of the required node.
+            let (ci, _) = cores
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            let begin = cores[ci];
+            let fin = begin + t.duration;
+            cores[ci] = fin;
+            end = end.max(fin);
+        }
+        self.now = end;
+        end - start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_parallelism() {
+        // 4 equal tasks on 4 single-core nodes -> makespan = 1 task.
+        let mut c = VirtualClock::new(4, 1);
+        let tasks: Vec<Task> = (0..4).map(|v| Task { node: v, duration: 2.0 }).collect();
+        let span = c.run_stage(&tasks);
+        assert!((span - 2.0).abs() < 1e-12);
+        assert!((c.now() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serialization_on_one_node() {
+        // 4 equal tasks all pinned to node 0 with 1 core -> serial.
+        let mut c = VirtualClock::new(2, 1);
+        let tasks: Vec<Task> = (0..4).map(|_| Task { node: 0, duration: 1.0 }).collect();
+        assert!((c.run_stage(&tasks) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn multicore_node() {
+        // 4 tasks on one 2-core node -> 2 waves.
+        let mut c = VirtualClock::new(1, 2);
+        let tasks: Vec<Task> = (0..4).map(|_| Task { node: 0, duration: 1.0 }).collect();
+        assert!((c.run_stage(&tasks) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stage_barrier_and_advance() {
+        let mut c = VirtualClock::new(2, 1);
+        c.run_stage(&[Task { node: 0, duration: 5.0 }, Task { node: 1, duration: 1.0 }]);
+        // Barrier: both nodes now free at t=5.
+        assert!((c.now() - 5.0).abs() < 1e-12);
+        c.advance(0.5);
+        let span = c.run_stage(&[Task { node: 1, duration: 1.0 }]);
+        assert!((span - 1.0).abs() < 1e-12);
+        assert!((c.now() - 6.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalanced_tasks_straggler() {
+        // One long task dominates the makespan.
+        let mut c = VirtualClock::new(4, 1);
+        let mut tasks: Vec<Task> = (0..3).map(|v| Task { node: v, duration: 0.1 }).collect();
+        tasks.push(Task { node: 3, duration: 9.0 });
+        assert!((c.run_stage(&tasks) - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stage_is_free() {
+        let mut c = VirtualClock::new(1, 1);
+        assert_eq!(c.run_stage(&[]), 0.0);
+        assert_eq!(c.now(), 0.0);
+    }
+}

@@ -1,0 +1,308 @@
+//! The driver context — the engine's analogue of Spark's `SparkContext`.
+//!
+//! Owns the simulated cluster (virtual clock + network model), the metrics
+//! sink, the lineage DAG, and the per-node resident-memory model. All
+//! transformations on [`super::rdd::BlockRdd`] report back through this
+//! context. Execution is eager and single-process (every task really runs,
+//! bit-exactly); *time* is simulated — see DESIGN.md §3.
+
+use super::clock::VirtualClock;
+use super::lineage::LineageGraph;
+use super::metrics::{Metrics, StageMetrics};
+use super::network::{NetworkModel, Traffic};
+use crate::config::ClusterConfig;
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// Extra driver scheduling cost per unit of lineage depth (fraction of the
+/// base per-task overhead). Models the paper's observation that unbounded
+/// lineage "overwhelms the Spark driver".
+pub const LINEAGE_OVERHEAD_FACTOR: f64 = 0.05;
+
+pub(crate) struct CtxState {
+    pub cluster: ClusterConfig,
+    pub clock: VirtualClock,
+    pub net: NetworkModel,
+    pub metrics: Metrics,
+    pub lineage: LineageGraph,
+    /// Persisted bytes per node, by tag (e.g. "G", "A").
+    resident: BTreeMap<String, Vec<u64>>,
+}
+
+/// Cheaply cloneable handle to the driver state.
+#[derive(Clone)]
+pub struct SparkContext {
+    pub(crate) st: Rc<RefCell<CtxState>>,
+}
+
+impl SparkContext {
+    /// Create a context over a simulated cluster.
+    pub fn new(cluster: ClusterConfig) -> Self {
+        let clock = VirtualClock::new(cluster.nodes, cluster.cores_per_node);
+        let net = NetworkModel::new(&cluster);
+        Self {
+            st: Rc::new(RefCell::new(CtxState {
+                cluster,
+                clock,
+                net,
+                metrics: Metrics::new(),
+                lineage: LineageGraph::new(),
+                resident: BTreeMap::new(),
+            })),
+        }
+    }
+
+    /// Executor node hosting a partition. Contiguous *ranges* of partition
+    /// ids map to the same executor — Spark's locality-aware scheduling
+    /// keeps consecutively-created partitions together, and this is the
+    /// placement the paper's upper-triangular packing (Fig. 2) relies on:
+    /// neighboring blocks → neighboring partitions → same executor.
+    pub fn node_of(&self, partition: usize, num_partitions: usize) -> usize {
+        let nodes = self.st.borrow().cluster.nodes;
+        (partition * nodes / num_partitions.max(1)).min(nodes - 1)
+    }
+
+    /// Number of executor nodes.
+    pub fn nodes(&self) -> usize {
+        self.st.borrow().cluster.nodes
+    }
+
+    /// Cluster configuration snapshot.
+    pub fn cluster(&self) -> ClusterConfig {
+        self.st.borrow().cluster.clone()
+    }
+
+    /// Current virtual time (seconds since run start).
+    pub fn virtual_now(&self) -> f64 {
+        self.st.borrow().clock.now()
+    }
+
+    /// Borrow the metrics (cloned snapshot report).
+    pub fn metrics_report(&self, prefixes: &[&str]) -> String {
+        self.st.borrow().metrics.report(prefixes)
+    }
+
+    /// Total bytes shuffled so far.
+    pub fn total_shuffle_bytes(&self) -> u64 {
+        self.st.borrow().metrics.total_shuffle_bytes()
+    }
+
+    /// Total measured single-core compute seconds so far.
+    pub fn total_compute_real(&self) -> f64 {
+        self.st.borrow().metrics.total_compute_real()
+    }
+
+    /// Stage-level metrics aggregated by prefix.
+    pub fn stage_aggregate(&self, prefix: &str) -> StageMetrics {
+        self.st.borrow().metrics.by_prefix(prefix)
+    }
+
+    /// Lineage DAG dump for diagnostics.
+    pub fn lineage_dump(&self) -> String {
+        self.st.borrow().lineage.dump()
+    }
+
+    /// Lineage depth of an RDD.
+    pub fn lineage_depth(&self, id: usize) -> usize {
+        self.st.borrow().lineage.depth(id)
+    }
+
+    /// Size of an RDD's ancestry (transformations replayed on recovery).
+    pub fn lineage_ancestry(&self, id: usize) -> usize {
+        self.st.borrow().lineage.ancestry_size(id)
+    }
+
+    /// Total tasks executed so far.
+    pub fn total_tasks(&self) -> usize {
+        self.st.borrow().metrics.total_tasks()
+    }
+
+    /// Advance the virtual clock by a serial charge (fault recovery).
+    pub(crate) fn advance_clock(&self, dt: f64) {
+        self.st.borrow_mut().clock.advance(dt);
+    }
+
+    pub(crate) fn lineage_add(&self, op: &str, parents: &[usize]) -> usize {
+        self.st.borrow_mut().lineage.add(op, parents)
+    }
+
+    /// Charge the driver for scheduling `ntasks` tasks of an RDD at the
+    /// given lineage depth. Serial on the critical path.
+    pub(crate) fn charge_driver(&self, name: &str, ntasks: usize, depth: usize) -> f64 {
+        let mut st = self.st.borrow_mut();
+        let per_task = st.cluster.sched_overhead * (1.0 + LINEAGE_OVERHEAD_FACTOR * depth as f64);
+        let dt = per_task * ntasks as f64;
+        st.clock.advance(dt);
+        let _ = name;
+        dt
+    }
+
+    /// Charge a shuffle's network time; returns (bytes, seconds).
+    pub(crate) fn charge_shuffle(&self, traffic: &Traffic) -> (u64, f64) {
+        let mut st = self.st.borrow_mut();
+        let dt = st.net.shuffle_time(traffic);
+        st.clock.advance(dt);
+        (traffic.total(), dt)
+    }
+
+    /// Charge a collect-to-driver of `bytes` in `messages` messages.
+    pub(crate) fn charge_collect(&self, bytes: u64, messages: u64) -> f64 {
+        let mut st = self.st.borrow_mut();
+        let dt = st.net.collect_time(bytes, messages);
+        st.clock.advance(dt);
+        dt
+    }
+
+    /// Broadcast `bytes` from the driver to all executors (public: the
+    /// coordinator broadcasts means and Q matrices).
+    pub fn broadcast(&self, name: &str, bytes: u64) {
+        let mut st = self.st.borrow_mut();
+        let dt = st.net.broadcast_time(bytes);
+        st.clock.advance(dt);
+        let stage = StageMetrics {
+            name: format!("{name}:broadcast"),
+            tasks: 0,
+            compute_real: 0.0,
+            virtual_span: 0.0,
+            shuffle_bytes: bytes,
+            network_time: dt,
+            driver_time: 0.0,
+        };
+        st.metrics.push(stage);
+    }
+
+    /// Run a barrier stage of `(node, duration)` tasks; durations are real
+    /// measured seconds, scaled by the calibration factor.
+    pub(crate) fn run_stage(&self, tasks: &[super::clock::Task]) -> f64 {
+        let mut st = self.st.borrow_mut();
+        let scale = st.cluster.compute_scale;
+        let scaled: Vec<super::clock::Task> = tasks
+            .iter()
+            .map(|t| super::clock::Task { node: t.node, duration: t.duration * scale })
+            .collect();
+        st.clock.run_stage(&scaled)
+    }
+
+    pub(crate) fn push_metrics(&self, s: StageMetrics) {
+        self.st.borrow_mut().metrics.push(s);
+    }
+
+    /// Register the resident footprint of a persisted RDD under `tag`,
+    /// replacing any previous footprint with the same tag. Errors when a
+    /// node would exceed executor memory — the paper's "impossible to
+    /// process on given resources" (Table I `-`).
+    pub fn set_resident(&self, tag: &str, per_node: Vec<u64>) -> Result<()> {
+        let mut st = self.st.borrow_mut();
+        st.resident.insert(tag.to_string(), per_node);
+        let nodes = st.cluster.nodes;
+        for v in 0..nodes {
+            let total: u64 = st.resident.values().map(|r| r.get(v).copied().unwrap_or(0)).sum();
+            if total > st.cluster.mem_per_node {
+                let need = crate::util::fmt::human_bytes(total);
+                let cap = crate::util::fmt::human_bytes(st.cluster.mem_per_node);
+                bail!(
+                    "dataset impossible on given resources: node {v} needs {need} resident, \
+                     executor memory is {cap}"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Drop a resident tag (unpersist).
+    pub fn clear_resident(&self, tag: &str) {
+        self.st.borrow_mut().resident.remove(tag);
+    }
+
+    /// Charge a checkpoint of `per_node` bytes to local disk (max node is
+    /// the straggler) and prune the RDD's lineage.
+    pub fn charge_checkpoint(&self, lineage_id: usize, per_node: &[u64]) {
+        let mut st = self.st.borrow_mut();
+        let worst = per_node.iter().copied().max().unwrap_or(0) as f64;
+        let dt = if st.cluster.disk_bandwidth.is_finite() {
+            worst / st.cluster.disk_bandwidth
+        } else {
+            0.0
+        };
+        st.clock.advance(dt);
+        st.lineage.checkpoint(lineage_id);
+        let stage = StageMetrics {
+            name: "checkpoint".to_string(),
+            tasks: 0,
+            compute_real: 0.0,
+            virtual_span: dt,
+            shuffle_bytes: 0,
+            network_time: 0.0,
+            driver_time: dt,
+        };
+        st.metrics.push(stage);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_assignment_contiguous_ranges() {
+        let ctx = SparkContext::new(ClusterConfig { nodes: 3, ..ClusterConfig::local() });
+        // 9 partitions over 3 nodes: 0-2 -> node 0, 3-5 -> node 1, 6-8 -> 2.
+        assert_eq!(ctx.node_of(0, 9), 0);
+        assert_eq!(ctx.node_of(2, 9), 0);
+        assert_eq!(ctx.node_of(3, 9), 1);
+        assert_eq!(ctx.node_of(8, 9), 2);
+        // Out-of-range partition ids clamp to the last node.
+        assert_eq!(ctx.node_of(100, 9), 2);
+        assert_eq!(ctx.nodes(), 3);
+    }
+
+    #[test]
+    fn memory_model_rejects_oversize() {
+        let mut cfg = ClusterConfig::local();
+        cfg.mem_per_node = 1000;
+        let ctx = SparkContext::new(cfg);
+        assert!(ctx.set_resident("a", vec![500]).is_ok());
+        assert!(ctx.set_resident("b", vec![400]).is_ok());
+        assert!(ctx.set_resident("c", vec![200]).is_err());
+        ctx.clear_resident("b");
+        assert!(ctx.set_resident("c", vec![200]).is_ok());
+    }
+
+    #[test]
+    fn replacing_tag_does_not_accumulate() {
+        let mut cfg = ClusterConfig::local();
+        cfg.mem_per_node = 1000;
+        let ctx = SparkContext::new(cfg);
+        for _ in 0..10 {
+            ctx.set_resident("g", vec![900]).unwrap();
+        }
+    }
+
+    #[test]
+    fn driver_charge_grows_with_depth() {
+        let mut cfg = ClusterConfig::local();
+        cfg.sched_overhead = 1.0;
+        let ctx = SparkContext::new(cfg);
+        let shallow = ctx.charge_driver("s", 10, 0);
+        let deep = ctx.charge_driver("d", 10, 20);
+        assert!(deep > shallow * 1.5, "deep={deep} shallow={shallow}");
+        assert!((ctx.virtual_now() - (shallow + deep)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn checkpoint_prunes_and_charges() {
+        let mut cfg = ClusterConfig::local();
+        cfg.disk_bandwidth = 100.0;
+        let ctx = SparkContext::new(cfg);
+        let mut id = ctx.lineage_add("root", &[]);
+        for _ in 0..5 {
+            id = ctx.lineage_add("it", &[id]);
+        }
+        assert_eq!(ctx.lineage_depth(id), 5);
+        ctx.charge_checkpoint(id, &[1000]);
+        assert_eq!(ctx.lineage_depth(id), 0);
+        assert!((ctx.virtual_now() - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,147 @@
+//! Per-stage execution metrics: real compute time, virtual cluster time,
+//! shuffle volumes, task counts. The scalability tables are produced from
+//! the virtual clock; the §Perf work reads the real timings.
+
+use crate::util::fmt::{human_bytes, human_duration, render_table};
+
+/// Record of one executed stage.
+#[derive(Clone, Debug)]
+pub struct StageMetrics {
+    pub name: String,
+    pub tasks: usize,
+    /// Sum of measured single-core task durations (real seconds).
+    pub compute_real: f64,
+    /// Stage makespan on the virtual cluster.
+    pub virtual_span: f64,
+    /// Bytes that crossed the simulated network.
+    pub shuffle_bytes: u64,
+    /// Virtual seconds charged to the network for this stage.
+    pub network_time: f64,
+    /// Virtual seconds charged to the driver (scheduling × lineage).
+    pub driver_time: f64,
+}
+
+/// Accumulated metrics for a run.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub stages: Vec<StageMetrics>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, s: StageMetrics) {
+        self.stages.push(s);
+    }
+
+    pub fn total_compute_real(&self) -> f64 {
+        self.stages.iter().map(|s| s.compute_real).sum()
+    }
+
+    pub fn total_shuffle_bytes(&self) -> u64 {
+        self.stages.iter().map(|s| s.shuffle_bytes).sum()
+    }
+
+    pub fn total_network_time(&self) -> f64 {
+        self.stages.iter().map(|s| s.network_time).sum()
+    }
+
+    pub fn total_driver_time(&self) -> f64 {
+        self.stages.iter().map(|s| s.driver_time).sum()
+    }
+
+    pub fn total_tasks(&self) -> usize {
+        self.stages.iter().map(|s| s.tasks).sum()
+    }
+
+    /// Aggregate stages by a prefix of their name (e.g. "knn", "apsp").
+    pub fn by_prefix(&self, prefix: &str) -> StageMetrics {
+        let mut agg = StageMetrics {
+            name: prefix.to_string(),
+            tasks: 0,
+            compute_real: 0.0,
+            virtual_span: 0.0,
+            shuffle_bytes: 0,
+            network_time: 0.0,
+            driver_time: 0.0,
+        };
+        for s in self.stages.iter().filter(|s| s.name.starts_with(prefix)) {
+            agg.tasks += s.tasks;
+            agg.compute_real += s.compute_real;
+            agg.virtual_span += s.virtual_span;
+            agg.shuffle_bytes += s.shuffle_bytes;
+            agg.network_time += s.network_time;
+            agg.driver_time += s.driver_time;
+        }
+        agg
+    }
+
+    /// Text report of the per-prefix aggregates.
+    pub fn report(&self, prefixes: &[&str]) -> String {
+        let mut rows = vec![vec![
+            "stage".to_string(),
+            "tasks".to_string(),
+            "compute(real)".to_string(),
+            "virtual".to_string(),
+            "shuffle".to_string(),
+            "net".to_string(),
+            "driver".to_string(),
+        ]];
+        for p in prefixes {
+            let a = self.by_prefix(p);
+            rows.push(vec![
+                a.name,
+                a.tasks.to_string(),
+                human_duration(a.compute_real),
+                human_duration(a.virtual_span),
+                human_bytes(a.shuffle_bytes),
+                human_duration(a.network_time),
+                human_duration(a.driver_time),
+            ]);
+        }
+        render_table(&rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(name: &str, compute: f64, bytes: u64) -> StageMetrics {
+        StageMetrics {
+            name: name.to_string(),
+            tasks: 2,
+            compute_real: compute,
+            virtual_span: compute / 2.0,
+            shuffle_bytes: bytes,
+            network_time: 0.1,
+            driver_time: 0.01,
+        }
+    }
+
+    #[test]
+    fn totals_and_prefix_aggregation() {
+        let mut m = Metrics::new();
+        m.push(stage("knn:dist", 2.0, 100));
+        m.push(stage("knn:topk", 1.0, 50));
+        m.push(stage("apsp:iter0", 4.0, 200));
+        assert_eq!(m.total_tasks(), 6);
+        assert!((m.total_compute_real() - 7.0).abs() < 1e-12);
+        assert_eq!(m.total_shuffle_bytes(), 350);
+        let knn = m.by_prefix("knn");
+        assert_eq!(knn.tasks, 4);
+        assert!((knn.compute_real - 3.0).abs() < 1e-12);
+        assert_eq!(knn.shuffle_bytes, 150);
+    }
+
+    #[test]
+    fn report_renders() {
+        let mut m = Metrics::new();
+        m.push(stage("knn:dist", 2.0, 100));
+        let r = m.report(&["knn"]);
+        assert!(r.contains("knn"));
+        assert!(r.contains("tasks"));
+    }
+}

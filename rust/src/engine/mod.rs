@@ -1,0 +1,29 @@
+//! The Spark-substitute blocked dataflow engine.
+//!
+//! Spark itself is not available (nor a cluster); per DESIGN.md §3 the
+//! engine executes every task *really* — results are bit-exact — while
+//! replaying measured task durations onto a simulated cluster: a
+//! [`clock::VirtualClock`] of `nodes × cores`, a GbE [`network`] model for
+//! shuffles/collects/broadcasts, a [`lineage`] DAG driving the
+//! driver-overhead model, and an executor [`context::SparkContext`] memory
+//! model that rejects runs exceeding node memory (Table I's `-` entries).
+//!
+//! The op vocabulary ([`rdd::BlockRdd`]) mirrors the PySpark subset the
+//! paper uses: `parallelize`, `mapValues`, `flatMap`, `filter`,
+//! `reduceByKey`, `groupByKey`, `union+combineByKey` (as `join_update`),
+//! `collect`, `broadcast`, `checkpoint`.
+
+pub mod block;
+pub mod clock;
+pub mod context;
+pub mod fault;
+pub mod lineage;
+pub mod metrics;
+pub mod network;
+pub mod partitioner;
+pub mod rdd;
+
+pub use block::{BlockId, HasBytes};
+pub use context::SparkContext;
+pub use partitioner::{GridPartitioner, HashPartitioner, Partitioner, UpperTriangularPartitioner};
+pub use rdd::{BlockRdd, Keyed};

@@ -1,0 +1,150 @@
+//! Interconnect model for the simulated cluster.
+//!
+//! The paper's testbed is gigabit Ethernet; shuffles dominated their tuning
+//! decisions (§III-B: combineByKey vs collect/broadcast vs HDFS). The
+//! model charges each node's NIC for the bytes it sends/receives — links
+//! run in parallel across nodes but a node's own traffic serializes — plus
+//! a per-message latency that models TCP/serialization setup.
+
+use crate::config::ClusterConfig;
+
+/// Per-shuffle traffic summary used for charging time.
+#[derive(Clone, Debug, Default)]
+pub struct Traffic {
+    /// Bytes entering each node.
+    pub in_bytes: Vec<u64>,
+    /// Bytes leaving each node.
+    pub out_bytes: Vec<u64>,
+    /// Number of distinct messages (records crossing nodes).
+    pub messages: u64,
+}
+
+impl Traffic {
+    pub fn new(nodes: usize) -> Self {
+        Self { in_bytes: vec![0; nodes], out_bytes: vec![0; nodes], messages: 0 }
+    }
+
+    /// Record one record moving `src → dst` (no cost when co-located).
+    pub fn record(&mut self, src: usize, dst: usize, bytes: u64) {
+        if src != dst {
+            self.out_bytes[src] += bytes;
+            self.in_bytes[dst] += bytes;
+            self.messages += 1;
+        }
+    }
+
+    /// Total bytes crossing the network.
+    pub fn total(&self) -> u64 {
+        self.in_bytes.iter().sum()
+    }
+}
+
+/// The network model itself (parameters come from [`ClusterConfig`]).
+#[derive(Clone, Debug)]
+pub struct NetworkModel {
+    bandwidth: f64,
+    latency: f64,
+    nodes: usize,
+}
+
+impl NetworkModel {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        Self { bandwidth: cfg.net_bandwidth, latency: cfg.net_latency, nodes: cfg.nodes }
+    }
+
+    /// Virtual seconds for an all-to-all shuffle with the given traffic.
+    /// Bottleneck = the busiest NIC (max of its in/out serialized), plus
+    /// latency for that node's message share (messages pipeline across
+    /// nodes).
+    pub fn shuffle_time(&self, t: &Traffic) -> f64 {
+        if t.total() == 0 {
+            return 0.0;
+        }
+        let mut worst: f64 = 0.0;
+        for v in 0..self.nodes {
+            let bytes = t.in_bytes[v].max(t.out_bytes[v]) as f64;
+            worst = worst.max(bytes / self.bandwidth);
+        }
+        let msg_share = (t.messages as f64 / self.nodes as f64).ceil();
+        worst + self.latency * msg_share
+    }
+
+    /// Collect to the driver: all bytes land on the driver's single NIC.
+    pub fn collect_time(&self, bytes: u64, messages: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        bytes as f64 / self.bandwidth + self.latency * messages as f64
+    }
+
+    /// Torrent-style broadcast from the driver to all executors:
+    /// `log2(nodes)` store-and-forward rounds of the full payload.
+    pub fn broadcast_time(&self, bytes: u64) -> f64 {
+        if bytes == 0 || self.nodes <= 1 {
+            return 0.0;
+        }
+        let rounds = (self.nodes as f64).log2().ceil().max(1.0);
+        (bytes as f64 / self.bandwidth + self.latency) * rounds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(nodes: usize) -> NetworkModel {
+        let mut cfg = ClusterConfig::paper_testbed(nodes);
+        cfg.net_bandwidth = 100.0; // bytes/s for easy arithmetic
+        cfg.net_latency = 0.5;
+        NetworkModel::new(&cfg)
+    }
+
+    #[test]
+    fn local_traffic_is_free() {
+        let m = model(4);
+        let mut t = Traffic::new(4);
+        t.record(2, 2, 1_000_000);
+        assert_eq!(t.total(), 0);
+        assert_eq!(m.shuffle_time(&t), 0.0);
+    }
+
+    #[test]
+    fn shuffle_bottleneck_is_busiest_nic() {
+        let m = model(4);
+        let mut t = Traffic::new(4);
+        // Node 0 sends 400 bytes to node 1; node 2 sends 100 to node 3.
+        t.record(0, 1, 400);
+        t.record(2, 3, 100);
+        // busiest NIC moves 400 bytes at 100 B/s = 4 s; 2 msgs over 4 nodes
+        // -> ceil(0.5) = 1 latency unit.
+        assert!((m.shuffle_time(&t) - 4.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shuffle_scales_down_with_spread() {
+        let m = model(4);
+        // Same total volume, concentrated vs spread.
+        let mut conc = Traffic::new(4);
+        conc.record(0, 1, 300);
+        conc.record(0, 2, 300);
+        let mut spread = Traffic::new(4);
+        spread.record(0, 1, 300);
+        spread.record(2, 3, 300);
+        assert!(m.shuffle_time(&spread) < m.shuffle_time(&conc));
+    }
+
+    #[test]
+    fn collect_and_broadcast() {
+        let m = model(8);
+        assert_eq!(m.collect_time(0, 0), 0.0);
+        assert!((m.collect_time(1000, 2) - (10.0 + 1.0)).abs() < 1e-12);
+        // 8 nodes -> 3 rounds of (bytes/bw + latency).
+        assert!((m.broadcast_time(100) - 3.0 * 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_node_broadcast_free() {
+        let m = model(1);
+        assert_eq!(m.broadcast_time(1 << 30), 0.0);
+    }
+}

@@ -1,0 +1,244 @@
+//! Partitioners: map a [`BlockId`] to an RDD partition.
+//!
+//! The paper's key locality optimization (§III-A, Fig. 2) is a custom
+//! partitioner for upper-triangular block matrices: blocks are numbered in
+//! row-major upper-triangular order and `B = ⌈Q/p'⌉` *consecutive* blocks
+//! are packed per partition, so the row/column neighborhoods touched
+//! together by the APSP phases land in few partitions. We also implement
+//! the two alternatives the paper compares against — MLlib-style
+//! `GridPartitioner` and Spark's default hash partitioner — for the
+//! ablation benchmark.
+
+use super::block::BlockId;
+
+/// Maps block keys to partitions `0..num_partitions`.
+pub trait Partitioner {
+    /// Partition index for a key.
+    fn partition(&self, id: BlockId) -> usize;
+    /// Total number of partitions.
+    fn num_partitions(&self) -> usize;
+    /// Short name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Row-major index of `(i, j)` within the `q×q` upper triangle.
+/// `idx(i,j) = i·q − i(i−1)/2 + (j − i)` for `i ≤ j < q`.
+pub fn ut_index(i: usize, j: usize, q: usize) -> usize {
+    debug_assert!(i <= j && j < q, "({i},{j}) not upper-triangular for q={q}");
+    // Row i starts after q + (q-1) + … + (q-i+1) = i(2q - i - 1)/2 + i
+    // entries; equivalently idx = i(2q - i - 1)/2 + j.
+    i * (2 * q - i - 1) / 2 + j
+}
+
+/// Number of blocks in the upper triangle: `Q = q(q+1)/2`.
+pub fn ut_count(q: usize) -> usize {
+    q * (q + 1) / 2
+}
+
+/// The paper's custom upper-triangular partitioner.
+#[derive(Clone, Debug)]
+pub struct UpperTriangularPartitioner {
+    q: usize,
+    parts: usize,
+    blocks_per_part: usize,
+}
+
+impl UpperTriangularPartitioner {
+    /// `q` logical block rows, `parts` RDD partitions.
+    pub fn new(q: usize, parts: usize) -> Self {
+        assert!(q > 0 && parts > 0);
+        let total = ut_count(q);
+        let blocks_per_part = total.div_ceil(parts);
+        Self { q, parts, blocks_per_part }
+    }
+
+    pub fn q(&self) -> usize {
+        self.q
+    }
+}
+
+impl Partitioner for UpperTriangularPartitioner {
+    fn partition(&self, id: BlockId) -> usize {
+        // Keys outside the strict upper triangle (e.g. kNN lists keyed
+        // (I, i_loc), power-iteration keys (I, 0)) fall back to hashing the
+        // row index, keeping all keys of one block row co-located.
+        if id.j >= id.i && id.j < self.q && id.i < self.q {
+            (ut_index(id.i, id.j, self.q) / self.blocks_per_part).min(self.parts - 1)
+        } else {
+            mix(id.i as u64) as usize % self.parts
+        }
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.parts
+    }
+
+    fn name(&self) -> &'static str {
+        "upper-triangular"
+    }
+}
+
+/// MLlib-style grid partitioner: the `q×q` grid of blocks is cut into a
+/// `pr × pc` grid of partition rectangles.
+#[derive(Clone, Debug)]
+pub struct GridPartitioner {
+    q: usize,
+    pr: usize,
+    pc: usize,
+}
+
+impl GridPartitioner {
+    pub fn new(q: usize, parts: usize) -> Self {
+        // Choose the most-square factorization pr*pc >= parts.
+        let pr = (parts as f64).sqrt().floor().max(1.0) as usize;
+        let pc = parts.div_ceil(pr);
+        Self { q, pr, pc }
+    }
+}
+
+impl Partitioner for GridPartitioner {
+    fn partition(&self, id: BlockId) -> usize {
+        let rows_per = self.q.div_ceil(self.pr).max(1);
+        let cols_per = self.q.div_ceil(self.pc).max(1);
+        let r = (id.i / rows_per).min(self.pr - 1);
+        let c = (id.j / cols_per).min(self.pc - 1);
+        r * self.pc + c
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.pr * self.pc
+    }
+
+    fn name(&self) -> &'static str {
+        "grid"
+    }
+}
+
+/// Spark's default: hash of the key modulo partition count.
+#[derive(Clone, Debug)]
+pub struct HashPartitioner {
+    parts: usize,
+}
+
+impl HashPartitioner {
+    pub fn new(parts: usize) -> Self {
+        assert!(parts > 0);
+        Self { parts }
+    }
+}
+
+fn mix(x: u64) -> u64 {
+    // SplitMix64 finalizer.
+    let mut z = x.wrapping_add(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Partitioner for HashPartitioner {
+    fn partition(&self, id: BlockId) -> usize {
+        (mix((id.i as u64) << 32 | id.j as u64) % self.parts as u64) as usize
+    }
+
+    fn num_partitions(&self) -> usize {
+        self.parts
+    }
+
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ut_index_row_major() {
+        // q = 4: row 0 -> 0..3, row 1 -> 4..6, row 2 -> 7..8, row 3 -> 9.
+        assert_eq!(ut_index(0, 0, 4), 0);
+        assert_eq!(ut_index(0, 3, 4), 3);
+        assert_eq!(ut_index(1, 1, 4), 4);
+        assert_eq!(ut_index(1, 3, 4), 6);
+        assert_eq!(ut_index(2, 2, 4), 7);
+        assert_eq!(ut_index(3, 3, 4), 9);
+        assert_eq!(ut_count(4), 10);
+    }
+
+    #[test]
+    fn ut_index_bijective() {
+        let q = 9;
+        let mut seen = vec![false; ut_count(q)];
+        for i in 0..q {
+            for j in i..q {
+                let idx = ut_index(i, j, q);
+                assert!(!seen[idx], "collision at ({i},{j})");
+                seen[idx] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn ut_partitioner_balanced_and_contiguous() {
+        // Fig. 2 of the paper: q=4, 10 blocks, 5 partitions of 2.
+        let p = UpperTriangularPartitioner::new(4, 5);
+        assert_eq!(p.partition(BlockId::new(0, 0)), 0);
+        assert_eq!(p.partition(BlockId::new(0, 1)), 0);
+        assert_eq!(p.partition(BlockId::new(0, 2)), 1);
+        assert_eq!(p.partition(BlockId::new(0, 3)), 1);
+        assert_eq!(p.partition(BlockId::new(1, 1)), 2);
+        assert_eq!(p.partition(BlockId::new(3, 3)), 4);
+        // All partitions in range and every partition used.
+        let mut used = vec![0usize; 5];
+        for i in 0..4 {
+            for j in i..4 {
+                used[p.partition(BlockId::new(i, j))] += 1;
+            }
+        }
+        assert_eq!(used, vec![2, 2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn ut_fallback_for_non_ut_keys() {
+        let p = UpperTriangularPartitioner::new(4, 3);
+        // Lower-triangular and out-of-range keys must still map in range.
+        for id in [BlockId::new(3, 1), BlockId::new(0, 100), BlockId::new(50, 2)] {
+            assert!(p.partition(id) < 3);
+        }
+        // Row-hash fallback keeps a block row together.
+        assert_eq!(p.partition(BlockId::new(2, 100)), p.partition(BlockId::new(2, 200)));
+    }
+
+    #[test]
+    fn grid_in_range_and_deterministic() {
+        let p = GridPartitioner::new(10, 6);
+        for i in 0..10 {
+            for j in 0..10 {
+                let a = p.partition(BlockId::new(i, j));
+                assert!(a < p.num_partitions());
+                assert_eq!(a, p.partition(BlockId::new(i, j)));
+            }
+        }
+    }
+
+    #[test]
+    fn hash_spreads() {
+        let p = HashPartitioner::new(7);
+        let mut used = vec![0usize; 7];
+        for i in 0..20 {
+            for j in i..20 {
+                used[p.partition(BlockId::new(i, j))] += 1;
+            }
+        }
+        // All partitions should receive something.
+        assert!(used.iter().all(|&c| c > 0), "{used:?}");
+    }
+
+    #[test]
+    fn names() {
+        assert_eq!(UpperTriangularPartitioner::new(2, 1).name(), "upper-triangular");
+        assert_eq!(GridPartitioner::new(2, 1).name(), "grid");
+        assert_eq!(HashPartitioner::new(1).name(), "hash");
+    }
+}

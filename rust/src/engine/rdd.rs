@@ -1,0 +1,544 @@
+//! Block RDDs: eager, keyed, partitioned collections with Spark-shaped
+//! transformations.
+//!
+//! Every transformation (a) really executes its closure over each block on
+//! this machine, (b) measures per-partition compute time and replays it on
+//! the virtual cluster, (c) charges shuffles/collects/broadcasts to the
+//! network model, and (d) records a lineage node whose depth drives the
+//! driver-overhead model. The op names mirror PySpark's.
+
+use super::block::{BlockId, HasBytes};
+use super::clock::Task;
+use super::context::SparkContext;
+use super::metrics::StageMetrics;
+use super::network::Traffic;
+use super::partitioner::Partitioner;
+use crate::util::Stopwatch;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// A partitioned, keyed collection of blocks.
+pub struct BlockRdd<T> {
+    ctx: SparkContext,
+    items: BTreeMap<BlockId, T>,
+    part: Rc<dyn Partitioner>,
+    /// Lineage node of this RDD.
+    pub lineage_id: usize,
+}
+
+impl<T> std::fmt::Debug for BlockRdd<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "BlockRdd({} blocks, {} partitions, lineage #{})",
+            self.items.len(),
+            self.part.num_partitions(),
+            self.lineage_id
+        )
+    }
+}
+
+/// Keyed records emitted by `flat_map`, not yet reduced: each record knows
+/// the node that produced it so the following wide op can charge the
+/// network for records that change nodes.
+pub struct Keyed<U> {
+    ctx: SparkContext,
+    records: Vec<(BlockId, U, usize)>,
+    pub lineage_id: usize,
+}
+
+impl SparkContext {
+    /// Create an RDD from driver-side data (the paper's initial load of X
+    /// into an RDD + `combineByKey` into blocks). Charges a broadcast-like
+    /// distribution of the data to the executors.
+    pub fn parallelize<T: HasBytes>(
+        &self,
+        name: &str,
+        items: Vec<(BlockId, T)>,
+        part: Rc<dyn Partitioner>,
+    ) -> BlockRdd<T> {
+        let lineage_id = self.lineage_add(name, &[]);
+        let bytes: u64 = items.iter().map(|(_, v)| v.nbytes()).sum();
+        let dt = self.charge_collect(bytes, items.len() as u64); // driver -> executors
+        self.push_metrics(StageMetrics {
+            name: format!("{name}:parallelize"),
+            tasks: items.len(),
+            compute_real: 0.0,
+            virtual_span: 0.0,
+            shuffle_bytes: bytes,
+            network_time: dt,
+            driver_time: 0.0,
+        });
+        BlockRdd { ctx: self.clone(), items: items.into_iter().collect(), part, lineage_id }
+    }
+}
+
+impl<T: HasBytes> BlockRdd<T> {
+    /// Number of blocks.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Borrow one block.
+    pub fn get(&self, id: BlockId) -> Option<&T> {
+        self.items.get(&id)
+    }
+
+    /// Iterate blocks in key order.
+    pub fn iter(&self) -> impl Iterator<Item = (&BlockId, &T)> {
+        self.items.iter()
+    }
+
+    /// The partitioner in force.
+    pub fn partitioner(&self) -> Rc<dyn Partitioner> {
+        Rc::clone(&self.part)
+    }
+
+    /// The owning context.
+    pub fn context(&self) -> SparkContext {
+        self.ctx.clone()
+    }
+
+    /// Resident bytes per executor node (for the memory model).
+    pub fn per_node_bytes(&self) -> Vec<u64> {
+        let mut per = vec![0u64; self.ctx.nodes()];
+        for (&id, v) in &self.items {
+            per[self.ctx.node_of(self.part.partition(id), self.part.num_partitions())] += v.nbytes();
+        }
+        per
+    }
+
+    /// Persist this RDD under `tag` in the executor-memory model.
+    pub fn persist(&self, tag: &str) -> anyhow::Result<()> {
+        self.ctx.set_resident(tag, self.per_node_bytes())
+    }
+
+    /// Checkpoint: charge a disk write and prune this RDD's lineage
+    /// (paper §III-B, every ~10 APSP iterations).
+    pub fn checkpoint(&self) {
+        let per_node = self.per_node_bytes();
+        self.ctx.charge_checkpoint(self.lineage_id, &per_node);
+    }
+
+    fn finish_stage<U: HasBytes>(
+        &self,
+        name: &str,
+        parents: &[usize],
+        items: BTreeMap<BlockId, U>,
+        per_part: BTreeMap<usize, f64>,
+        part: Rc<dyn Partitioner>,
+        shuffle_bytes: u64,
+        network_time: f64,
+    ) -> BlockRdd<U> {
+        let lineage_id = self.ctx.lineage_add(name, parents);
+        let depth = self.ctx.lineage_depth(lineage_id);
+        let tasks: Vec<Task> = per_part
+            .iter()
+            .map(|(&p, &dur)| Task { node: self.ctx.node_of(p, self.part.num_partitions()), duration: dur })
+            .collect();
+        let driver_time = self.ctx.charge_driver(name, tasks.len(), depth);
+        let span = self.ctx.run_stage(&tasks);
+        self.ctx.push_metrics(StageMetrics {
+            name: name.to_string(),
+            tasks: tasks.len(),
+            compute_real: per_part.values().sum(),
+            virtual_span: span,
+            shuffle_bytes,
+            network_time,
+            driver_time,
+        });
+        BlockRdd { ctx: self.ctx.clone(), items, part, lineage_id }
+    }
+
+    /// Narrow transformation: apply `f` to every block, preserving keys and
+    /// partitioning (PySpark `mapValues`).
+    pub fn map_values<U: HasBytes>(
+        &self,
+        name: &str,
+        mut f: impl FnMut(BlockId, &T) -> U,
+    ) -> BlockRdd<U> {
+        let mut out = BTreeMap::new();
+        let mut per_part: BTreeMap<usize, f64> = BTreeMap::new();
+        for (&id, v) in &self.items {
+            let sw = Stopwatch::start();
+            let u = f(id, v);
+            *per_part.entry(self.part.partition(id)).or_default() += sw.secs();
+            out.insert(id, u);
+        }
+        self.finish_stage(name, &[self.lineage_id], out, per_part, Rc::clone(&self.part), 0, 0.0)
+    }
+
+    /// Narrow transformation keeping only blocks satisfying `pred`
+    /// (PySpark `filter` over keys).
+    pub fn filter_blocks(&self, name: &str, mut pred: impl FnMut(BlockId) -> bool) -> BlockRdd<T>
+    where
+        T: Clone,
+    {
+        let mut out = BTreeMap::new();
+        let mut per_part: BTreeMap<usize, f64> = BTreeMap::new();
+        for (&id, v) in &self.items {
+            let sw = Stopwatch::start();
+            let keep = pred(id);
+            *per_part.entry(self.part.partition(id)).or_default() += sw.secs();
+            if keep {
+                out.insert(id, v.clone());
+            }
+        }
+        self.finish_stage(name, &[self.lineage_id], out, per_part, Rc::clone(&self.part), 0, 0.0)
+    }
+
+    /// Emit keyed records from every block (PySpark `flatMap`). The records
+    /// remain unshuffled until a wide op consumes them.
+    pub fn flat_map<U: HasBytes>(
+        &self,
+        name: &str,
+        mut f: impl FnMut(BlockId, &T) -> Vec<(BlockId, U)>,
+    ) -> Keyed<U> {
+        let mut records = Vec::new();
+        let mut per_part: BTreeMap<usize, f64> = BTreeMap::new();
+        for (&id, v) in &self.items {
+            let sw = Stopwatch::start();
+            let emitted = f(id, v);
+            let p = self.part.partition(id);
+            *per_part.entry(p).or_default() += sw.secs();
+            let src = self.ctx.node_of(p, self.part.num_partitions());
+            records.extend(emitted.into_iter().map(|(k, u)| (k, u, src)));
+        }
+        let lineage_id = self.ctx.lineage_add(name, &[self.lineage_id]);
+        let depth = self.ctx.lineage_depth(lineage_id);
+        let tasks: Vec<Task> = per_part
+            .iter()
+            .map(|(&p, &dur)| Task { node: self.ctx.node_of(p, self.part.num_partitions()), duration: dur })
+            .collect();
+        let driver_time = self.ctx.charge_driver(name, tasks.len(), depth);
+        let span = self.ctx.run_stage(&tasks);
+        self.ctx.push_metrics(StageMetrics {
+            name: name.to_string(),
+            tasks: tasks.len(),
+            compute_real: per_part.values().sum(),
+            virtual_span: span,
+            shuffle_bytes: 0,
+            network_time: 0.0,
+            driver_time,
+        });
+        Keyed { ctx: self.ctx.clone(), records, lineage_id }
+    }
+
+    /// The paper's `union` + `partitionBy` + `combineByKey` pattern: route
+    /// `incoming` records to this RDD's partitioning and fold them into the
+    /// matching blocks in place (via clone-on-write). `f` is invoked for
+    /// *every* block — with an empty record vector when nothing was routed
+    /// to it — matching Spark's combineByKey-over-union semantics where the
+    /// combiner sees each original block exactly once.
+    pub fn join_update<U: HasBytes>(
+        &self,
+        name: &str,
+        incoming: Keyed<U>,
+        mut f: impl FnMut(BlockId, &mut T, Vec<U>),
+    ) -> BlockRdd<T>
+    where
+        T: Clone,
+    {
+        // Shuffle accounting: records that land on a different node pay.
+        let mut traffic = Traffic::new(self.ctx.nodes());
+        for (k, u, src) in &incoming.records {
+            let dst = self.ctx.node_of(self.part.partition(*k), self.part.num_partitions());
+            traffic.record(*src, dst, u.nbytes());
+        }
+        let (shuffle_bytes, network_time) = self.ctx.charge_shuffle(&traffic);
+
+        // Group records by destination key.
+        let mut grouped: BTreeMap<BlockId, Vec<U>> = BTreeMap::new();
+        for (k, u, _) in incoming.records {
+            grouped.entry(k).or_default().push(u);
+        }
+
+        let mut out = BTreeMap::new();
+        let mut per_part: BTreeMap<usize, f64> = BTreeMap::new();
+        for (&id, v) in &self.items {
+            let sw = Stopwatch::start();
+            let mut nv = v.clone();
+            f(id, &mut nv, grouped.remove(&id).unwrap_or_default());
+            *per_part.entry(self.part.partition(id)).or_default() += sw.secs();
+            out.insert(id, nv);
+        }
+        debug_assert!(
+            grouped.is_empty(),
+            "join_update: {} records had no matching block (first key {:?})",
+            grouped.len(),
+            grouped.keys().next()
+        );
+        self.finish_stage(
+            name,
+            &[self.lineage_id, incoming.lineage_id],
+            out,
+            per_part,
+            Rc::clone(&self.part),
+            shuffle_bytes,
+            network_time,
+        )
+    }
+
+    /// Action: bring every block to the driver (PySpark `collect`).
+    pub fn collect(&self) -> BTreeMap<BlockId, T>
+    where
+        T: Clone,
+    {
+        let bytes: u64 = self.items.values().map(HasBytes::nbytes).sum();
+        let dt = self.ctx.charge_collect(bytes, self.items.len() as u64);
+        self.ctx.push_metrics(StageMetrics {
+            name: "collect".to_string(),
+            tasks: 0,
+            compute_real: 0.0,
+            virtual_span: 0.0,
+            shuffle_bytes: bytes,
+            network_time: dt,
+            driver_time: 0.0,
+        });
+        self.items.clone()
+    }
+}
+
+impl<U: HasBytes> Keyed<U> {
+    /// Number of pending records.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Wide op: shuffle records to `part` and fold values sharing a key
+    /// with `f` (PySpark `reduceByKey`/`combineByKey`).
+    pub fn reduce_by_key(
+        self,
+        name: &str,
+        part: Rc<dyn Partitioner>,
+        mut f: impl FnMut(U, U) -> U,
+    ) -> BlockRdd<U> {
+        let ctx = self.ctx.clone();
+        let mut traffic = Traffic::new(ctx.nodes());
+        for (k, u, src) in &self.records {
+            let dst = ctx.node_of(part.partition(*k), part.num_partitions());
+            traffic.record(*src, dst, u.nbytes());
+        }
+        let (shuffle_bytes, network_time) = ctx.charge_shuffle(&traffic);
+
+        let mut acc: BTreeMap<BlockId, U> = BTreeMap::new();
+        let mut per_part: BTreeMap<usize, f64> = BTreeMap::new();
+        for (k, u, _) in self.records {
+            let sw = Stopwatch::start();
+            match acc.remove(&k) {
+                None => {
+                    acc.insert(k, u);
+                }
+                Some(prev) => {
+                    acc.insert(k, f(prev, u));
+                }
+            }
+            *per_part.entry(part.partition(k)).or_default() += sw.secs();
+        }
+
+        let lineage_id = ctx.lineage_add(name, &[self.lineage_id]);
+        let depth = ctx.lineage_depth(lineage_id);
+        let tasks: Vec<Task> = per_part
+            .iter()
+            .map(|(&p, &dur)| Task { node: ctx.node_of(p, part.num_partitions()), duration: dur })
+            .collect();
+        let driver_time = ctx.charge_driver(name, tasks.len(), depth);
+        let span = ctx.run_stage(&tasks);
+        ctx.push_metrics(StageMetrics {
+            name: name.to_string(),
+            tasks: tasks.len(),
+            compute_real: per_part.values().sum(),
+            virtual_span: span,
+            shuffle_bytes,
+            network_time,
+            driver_time,
+        });
+        BlockRdd { ctx, items: acc, part, lineage_id }
+    }
+
+    /// Wide op: shuffle and gather all values per key (PySpark
+    /// `groupByKey`).
+    pub fn group_by_key(self, name: &str, part: Rc<dyn Partitioner>) -> BlockRdd<Vec<U>> {
+        let ctx = self.ctx.clone();
+        let mut traffic = Traffic::new(ctx.nodes());
+        for (k, u, src) in &self.records {
+            let dst = ctx.node_of(part.partition(*k), part.num_partitions());
+            traffic.record(*src, dst, u.nbytes());
+        }
+        let (shuffle_bytes, network_time) = ctx.charge_shuffle(&traffic);
+
+        let mut acc: BTreeMap<BlockId, Vec<U>> = BTreeMap::new();
+        for (k, u, _) in self.records {
+            acc.entry(k).or_default().push(u);
+        }
+
+        let lineage_id = ctx.lineage_add(name, &[self.lineage_id]);
+        let depth = ctx.lineage_depth(lineage_id);
+        let tasks: Vec<Task> = acc
+            .keys()
+            .map(|&k| part.partition(k))
+            .collect::<std::collections::BTreeSet<_>>()
+            .into_iter()
+            .map(|p| Task { node: ctx.node_of(p, part.num_partitions()), duration: 0.0 })
+            .collect();
+        let driver_time = ctx.charge_driver(name, tasks.len(), depth);
+        let span = ctx.run_stage(&tasks);
+        ctx.push_metrics(StageMetrics {
+            name: name.to_string(),
+            tasks: tasks.len(),
+            compute_real: 0.0,
+            virtual_span: span,
+            shuffle_bytes,
+            network_time,
+            driver_time,
+        });
+        BlockRdd { ctx, items: acc, part, lineage_id }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::engine::partitioner::HashPartitioner;
+
+    fn ctx(nodes: usize) -> SparkContext {
+        SparkContext::new(ClusterConfig { nodes, ..ClusterConfig::local() })
+    }
+
+    fn small_rdd(ctx: &SparkContext) -> BlockRdd<f64> {
+        let items: Vec<(BlockId, f64)> =
+            (0..6).map(|i| (BlockId::new(i, i), i as f64)).collect();
+        ctx.parallelize("x", items, Rc::new(HashPartitioner::new(3)))
+    }
+
+    #[test]
+    fn map_values_preserves_keys() {
+        let ctx = ctx(2);
+        let r = small_rdd(&ctx);
+        let m = r.map_values("double", |_, v| v * 2.0);
+        assert_eq!(m.len(), 6);
+        assert_eq!(*m.get(BlockId::new(3, 3)).unwrap(), 6.0);
+    }
+
+    #[test]
+    fn filter_drops() {
+        let ctx = ctx(2);
+        let r = small_rdd(&ctx);
+        let f = r.filter_blocks("even", |id| id.i % 2 == 0);
+        assert_eq!(f.len(), 3);
+        assert!(f.get(BlockId::new(1, 1)).is_none());
+    }
+
+    #[test]
+    fn flat_map_reduce_by_key() {
+        let ctx = ctx(3);
+        let r = small_rdd(&ctx);
+        // Emit every value to key (0,0) and sum.
+        let k = r.flat_map("emit", |_, v| vec![(BlockId::new(0, 0), *v)]);
+        assert_eq!(k.len(), 6);
+        let red = k.reduce_by_key("sum", Rc::new(HashPartitioner::new(2)), |a, b| a + b);
+        assert_eq!(red.len(), 1);
+        assert_eq!(*red.get(BlockId::new(0, 0)).unwrap(), 15.0);
+    }
+
+    #[test]
+    fn group_by_key_gathers() {
+        let ctx = ctx(2);
+        let r = small_rdd(&ctx);
+        let k = r.flat_map("emit", |id, v| vec![(BlockId::new(id.i % 2, 0), *v)]);
+        let g = k.group_by_key("group", Rc::new(HashPartitioner::new(2)));
+        assert_eq!(g.len(), 2);
+        let evens = g.get(BlockId::new(0, 0)).unwrap();
+        assert_eq!(evens.iter().sum::<f64>(), 0.0 + 2.0 + 4.0);
+    }
+
+    #[test]
+    fn join_update_applies_and_passes_through() {
+        let ctx = ctx(2);
+        let r = small_rdd(&ctx);
+        let inc = r.flat_map("emit", |id, v| {
+            if id.i < 2 {
+                vec![(id, v + 100.0)]
+            } else {
+                vec![]
+            }
+        });
+        let j = r.join_update("apply", inc, |_, v, us| {
+            for u in us {
+                *v += u;
+            }
+        });
+        assert_eq!(*j.get(BlockId::new(0, 0)).unwrap(), 100.0); // 0 + (0+100)
+        assert_eq!(*j.get(BlockId::new(1, 1)).unwrap(), 102.0); // 1 + (1+100)
+        assert_eq!(*j.get(BlockId::new(5, 5)).unwrap(), 5.0); // untouched
+    }
+
+    #[test]
+    fn shuffle_bytes_counted_multi_node() {
+        let ctx = ctx(4);
+        let r = small_rdd(&ctx);
+        let before = ctx.total_shuffle_bytes();
+        let k = r.flat_map("emit", |_, v| vec![(BlockId::new(0, 0), *v)]);
+        let _ = k.reduce_by_key("sum", Rc::new(HashPartitioner::new(4)), |a, b| a + b);
+        // With 4 nodes at least some records cross nodes.
+        assert!(ctx.total_shuffle_bytes() > before);
+    }
+
+    #[test]
+    fn collect_returns_all() {
+        let ctx = ctx(2);
+        let r = small_rdd(&ctx);
+        let c = r.collect();
+        assert_eq!(c.len(), 6);
+    }
+
+    #[test]
+    fn virtual_time_advances() {
+        let mut cfg = ClusterConfig::local();
+        cfg.sched_overhead = 0.001;
+        let ctx = SparkContext::new(cfg);
+        let r = small_rdd(&ctx);
+        let t0 = ctx.virtual_now();
+        let _ = r.map_values("work", |_, v| {
+            // Busy-ish loop so measured durations are nonzero.
+            let mut acc = *v;
+            for i in 0..2000 {
+                acc += (i as f64).sqrt();
+            }
+            acc
+        });
+        assert!(ctx.virtual_now() > t0);
+    }
+
+    #[test]
+    fn persist_and_memory_limit() {
+        let mut cfg = ClusterConfig::local();
+        cfg.mem_per_node = 100; // tiny
+        let ctx = SparkContext::new(cfg);
+        let items: Vec<(BlockId, crate::linalg::Matrix)> =
+            vec![(BlockId::new(0, 0), crate::linalg::Matrix::zeros(10, 10))];
+        let r = ctx.parallelize("m", items, Rc::new(HashPartitioner::new(1)));
+        assert!(r.persist("m").is_err());
+    }
+
+    #[test]
+    fn lineage_depth_grows_and_checkpoint_resets() {
+        let ctx = ctx(1);
+        let mut r = small_rdd(&ctx);
+        for i in 0..12 {
+            r = r.map_values(&format!("it{i}"), |_, v| *v);
+        }
+        assert!(ctx.lineage_depth(r.lineage_id) >= 12);
+        r.checkpoint();
+        assert_eq!(ctx.lineage_depth(r.lineage_id), 0);
+    }
+}

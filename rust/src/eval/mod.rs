@@ -1,0 +1,350 @@
+//! Embedding quality metrics.
+//!
+//! * [`procrustes`] — the paper's headline correctness number (Fig. 4:
+//!   2.67e-5 on Swiss50): similarity-transform-invariant disparity between
+//!   the embedding and the latent ground truth.
+//! * [`residual_variance`] — Tenenbaum et al.'s Isomap fit metric.
+//! * [`connectivity`] — the k used must give a single connected component
+//!   (paper §IV: "k large enough to deliver single connected component").
+
+use crate::linalg::{jacobi, Matrix};
+
+/// Column-center a matrix and scale to unit Frobenius norm. Returns the
+/// transformed copy.
+fn standardize(m: &Matrix) -> Matrix {
+    let mu = m.col_means();
+    let mut out = m.clone();
+    for i in 0..m.nrows() {
+        for (x, &c) in out.row_mut(i).iter_mut().zip(&mu) {
+            *x -= c;
+        }
+    }
+    let norm = out.fro_norm();
+    if norm > 0.0 {
+        out.scale(1.0 / norm);
+    }
+    out
+}
+
+/// SVD of a small matrix `A = U Σ Vᵀ` via Jacobi on `AᵀA` (adequate for the
+/// d×d cross-covariances used by Procrustes; d is 2–3 here).
+fn small_svd(a: &Matrix) -> (Matrix, Vec<f64>, Matrix) {
+    let ata = a.transpose().matmul(a);
+    let (mut evals, v) = jacobi::eigh(&ata, 100, 1e-14);
+    for e in &mut evals {
+        *e = e.max(0.0);
+    }
+    let svals: Vec<f64> = evals.iter().map(|e| e.sqrt()).collect();
+    // U = A V Σ⁻¹ (columns with ~0 singular value are left as zeros; they
+    // contribute nothing to the Procrustes rotation).
+    let av = a.matmul(&v);
+    let mut u = Matrix::zeros(a.nrows(), svals.len());
+    for j in 0..svals.len() {
+        if svals[j] > 1e-300 {
+            for i in 0..a.nrows() {
+                u[(i, j)] = av[(i, j)] / svals[j];
+            }
+        }
+    }
+    (u, svals, v)
+}
+
+/// Procrustes disparity between `x` (ground truth) and `y` (embedding):
+/// both are standardized, `y` is optimally rotated/reflected and scaled
+/// onto `x`, and the sum of squared residuals is returned (scipy's
+/// `procrustes` definition; 0 = perfect).
+pub fn procrustes(x: &Matrix, y: &Matrix) -> f64 {
+    assert_eq!(x.nrows(), y.nrows(), "point counts differ");
+    assert_eq!(x.ncols(), y.ncols(), "dimensionalities differ");
+    let xs = standardize(x);
+    let ys = standardize(y);
+    // Optimal rotation R = U Vᵀ from SVD of YᵀX; optimal scale = Σσ.
+    let m = ys.transpose().matmul(&xs);
+    let (u, s, v) = small_svd(&m);
+    let r = u.matmul(&v.transpose());
+    let scale: f64 = s.iter().sum();
+    // disparity = ‖X − s·Y·R‖²_F = 1 − scale² (after standardization).
+    let mut yr = ys.matmul(&r);
+    yr.scale(scale);
+    let mut disparity = 0.0;
+    for (a, b) in xs.as_slice().iter().zip(yr.as_slice()) {
+        disparity += (a - b) * (a - b);
+    }
+    disparity
+}
+
+/// Residual variance `1 − ρ²(geodesic distances, embedding distances)`
+/// over all pairs (or a subsample cap for large n).
+pub fn residual_variance(geodesics: &Matrix, y: &Matrix, max_pairs: usize) -> f64 {
+    let n = y.nrows();
+    let mut gs = Vec::new();
+    let mut es = Vec::new();
+    let total_pairs = n * (n - 1) / 2;
+    let stride = (total_pairs / max_pairs.max(1)).max(1);
+    let mut c = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            c += 1;
+            if c % stride != 0 {
+                continue;
+            }
+            let g = geodesics[(i, j)];
+            if !g.is_finite() {
+                continue;
+            }
+            let e: f64 = y
+                .row(i)
+                .iter()
+                .zip(y.row(j))
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            gs.push(g);
+            es.push(e);
+        }
+    }
+    1.0 - correlation(&gs, &es).powi(2)
+}
+
+fn correlation(a: &[f64], b: &[f64]) -> f64 {
+    let n = a.len() as f64;
+    if n < 2.0 {
+        return 0.0;
+    }
+    let ma = a.iter().sum::<f64>() / n;
+    let mb = b.iter().sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    if va == 0.0 || vb == 0.0 {
+        return 0.0;
+    }
+    cov / (va * vb).sqrt()
+}
+
+/// Trustworthiness and continuity (Venna & Kaski): rank-based quality of a
+/// non-isometric embedding (the right metric for LLE, where Procrustes is
+/// inappropriate). Both are in [0, 1]; 1 = perfect neighborhood
+/// preservation. `max_points` caps the O(n²·log n) cost by subsampling.
+pub fn trustworthiness_continuity(
+    x: &Matrix,
+    y: &Matrix,
+    k: usize,
+    max_points: usize,
+) -> (f64, f64) {
+    assert_eq!(x.nrows(), y.nrows());
+    let n_all = x.nrows();
+    let stride = (n_all / max_points.max(1)).max(1);
+    let idx: Vec<usize> = (0..n_all).step_by(stride).collect();
+    let n = idx.len();
+    assert!(k < n, "k={k} too large for {n} sampled points");
+
+    // Rank tables in both spaces.
+    let ranks = |m: &Matrix| -> Vec<Vec<usize>> {
+        let mut out = Vec::with_capacity(n);
+        for &i in &idx {
+            let mut d: Vec<(f64, usize)> = idx
+                .iter()
+                .enumerate()
+                .filter(|&(_, &j)| j != i)
+                .map(|(pos, &j)| {
+                    let dist: f64 = m
+                        .row(i)
+                        .iter()
+                        .zip(m.row(j))
+                        .map(|(a, b)| (a - b) * (a - b))
+                        .sum();
+                    (dist, pos)
+                })
+                .collect();
+            d.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            // rank_of[pos] = rank of sampled point `pos` from i (1-based).
+            let mut rank_of = vec![0usize; n];
+            for (r, &(_, pos)) in d.iter().enumerate() {
+                rank_of[pos] = r + 1;
+            }
+            out.push(rank_of);
+        }
+        out
+    };
+    let rx = ranks(x);
+    let ry = ranks(y);
+
+    let norm = 2.0 / (n as f64 * k as f64 * (2.0 * n as f64 - 3.0 * k as f64 - 1.0));
+    let mut t_pen = 0.0;
+    let mut c_pen = 0.0;
+    for i in 0..n {
+        for pos in 0..n {
+            if rx[i][pos] == 0 && ry[i][pos] == 0 {
+                continue; // self
+            }
+            // In embedding kNN but not in data kNN -> trustworthiness.
+            if ry[i][pos] >= 1 && ry[i][pos] <= k && rx[i][pos] > k {
+                t_pen += (rx[i][pos] - k) as f64;
+            }
+            // In data kNN but not in embedding kNN -> continuity.
+            if rx[i][pos] >= 1 && rx[i][pos] <= k && ry[i][pos] > k {
+                c_pen += (ry[i][pos] - k) as f64;
+            }
+        }
+    }
+    (1.0 - norm * t_pen, 1.0 - norm * c_pen)
+}
+
+/// Number of connected components of a kNN graph given as neighbor lists.
+pub fn components(knn: &[Vec<(f64, usize)>]) -> usize {
+    let n = knn.len();
+    // Union-find over symmetrized edges.
+    let mut parent: Vec<usize> = (0..n).collect();
+    fn find(parent: &mut Vec<usize>, mut x: usize) -> usize {
+        while parent[x] != x {
+            parent[x] = parent[parent[x]];
+            x = parent[x];
+        }
+        x
+    }
+    for (i, list) in knn.iter().enumerate() {
+        for &(_, j) in list {
+            let (a, b) = (find(&mut parent, i), find(&mut parent, j));
+            if a != b {
+                parent[a] = b;
+            }
+        }
+    }
+    (0..n).filter(|&i| find(&mut parent, i) == i).count()
+}
+
+/// True when the kNN graph is a single connected component.
+pub fn connectivity(knn: &[Vec<(f64, usize)>]) -> bool {
+    components(knn) == 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed(seed);
+        let mut x = Matrix::zeros(n, d);
+        for i in 0..n {
+            for j in 0..d {
+                x[(i, j)] = rng.gaussian();
+            }
+        }
+        x
+    }
+
+    #[test]
+    fn procrustes_identity_zero() {
+        let x = random(40, 2, 1);
+        assert!(procrustes(&x, &x) < 1e-12);
+    }
+
+    #[test]
+    fn procrustes_invariant_to_similarity_transform() {
+        let x = random(50, 2, 2);
+        // Rotate by θ, scale by 3, translate.
+        let th: f64 = 0.7;
+        let mut y = Matrix::zeros(50, 2);
+        for i in 0..50 {
+            let (a, b) = (x[(i, 0)], x[(i, 1)]);
+            y[(i, 0)] = 3.0 * (a * th.cos() - b * th.sin()) + 5.0;
+            y[(i, 1)] = 3.0 * (a * th.sin() + b * th.cos()) - 2.0;
+        }
+        assert!(procrustes(&x, &y) < 1e-12);
+    }
+
+    #[test]
+    fn procrustes_invariant_to_reflection() {
+        let x = random(30, 2, 3);
+        let mut y = x.clone();
+        for i in 0..30 {
+            y[(i, 0)] = -y[(i, 0)];
+        }
+        assert!(procrustes(&x, &y) < 1e-12);
+    }
+
+    #[test]
+    fn procrustes_detects_distortion() {
+        let x = random(30, 2, 4);
+        let y = random(30, 2, 99);
+        assert!(procrustes(&x, &y) > 0.1);
+    }
+
+    #[test]
+    fn residual_variance_perfect_for_euclidean() {
+        let y = random(40, 2, 5);
+        let mut geo = Matrix::zeros(40, 40);
+        for i in 0..40 {
+            for j in 0..40 {
+                let d: f64 = y
+                    .row(i)
+                    .iter()
+                    .zip(y.row(j))
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt();
+                geo[(i, j)] = d;
+            }
+        }
+        assert!(residual_variance(&geo, &y, 10_000) < 1e-12);
+    }
+
+    #[test]
+    fn trustworthiness_perfect_for_identity() {
+        let x = random(60, 3, 11);
+        let (t, c) = trustworthiness_continuity(&x, &x, 5, 1000);
+        assert!((t - 1.0).abs() < 1e-12, "t={t}");
+        assert!((c - 1.0).abs() < 1e-12, "c={c}");
+    }
+
+    #[test]
+    fn trustworthiness_detects_scrambling() {
+        let x = random(80, 3, 12);
+        let y = random(80, 2, 999); // unrelated embedding
+        let (t, c) = trustworthiness_continuity(&x, &y, 5, 1000);
+        assert!(t < 0.8, "t={t}");
+        assert!(c < 0.8, "c={c}");
+    }
+
+    #[test]
+    fn trustworthiness_invariant_to_rigid_motion() {
+        let x = random(50, 2, 13);
+        let mut y = x.clone();
+        let th: f64 = 1.1;
+        for i in 0..50 {
+            let (a, b) = (x[(i, 0)], x[(i, 1)]);
+            y[(i, 0)] = a * th.cos() - b * th.sin() + 3.0;
+            y[(i, 1)] = a * th.sin() + b * th.cos() - 7.0;
+        }
+        let (t, c) = trustworthiness_continuity(&x, &y, 6, 1000);
+        assert!((t - 1.0).abs() < 1e-12 && (c - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn components_counts() {
+        // Two triangles, disjoint.
+        let knn = vec![
+            vec![(1.0, 1), (1.0, 2)],
+            vec![(1.0, 0)],
+            vec![(1.0, 0)],
+            vec![(1.0, 4)],
+            vec![(1.0, 3), (1.0, 5)],
+            vec![(1.0, 4)],
+        ];
+        assert_eq!(components(&knn), 2);
+        assert!(!connectivity(&knn));
+        let joined = {
+            let mut k = knn.clone();
+            k[2].push((1.0, 3));
+            k
+        };
+        assert!(connectivity(&joined));
+    }
+}

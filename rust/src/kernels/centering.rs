@@ -1,0 +1,151 @@
+//! Double-centering block kernels (paper §III-C).
+//!
+//! The feature matrix is centered directly (not via `H·A·H`): per-block
+//! column sums are reduced to global column means `μ` and the grand mean
+//! `μ̂`; each block entry is then updated as
+//! `a ← −½ (a − μ_col − μ_row + μ̂)` — including the −½ factor from
+//! classical MDS so the centered matrix is ready for eigendecomposition.
+
+use crate::linalg::Matrix;
+
+/// Column sums of a block (the paper's per-block `flatMap` step).
+pub fn col_sums(block: &Matrix) -> Vec<f64> {
+    let mut s = vec![0.0; block.ncols()];
+    for i in 0..block.nrows() {
+        for (acc, &x) in s.iter_mut().zip(block.row(i)) {
+            *acc += x;
+        }
+    }
+    s
+}
+
+/// Row sums of a block (needed for the transposed contribution of
+/// off-diagonal blocks in the upper-triangular layout).
+pub fn row_sums(block: &Matrix) -> Vec<f64> {
+    (0..block.nrows()).map(|i| block.row(i).iter().sum()).collect()
+}
+
+/// Apply double centering to one block given the broadcast means.
+///
+/// `mu_rows[i]` is the column-mean vector entry for the block's global row
+/// `i`, `mu_cols[j]` likewise for columns, `grand` is μ̂. Applies the MDS
+/// `-1/2` scaling.
+pub fn center_block(block: &mut Matrix, mu_rows: &[f64], mu_cols: &[f64], grand: f64) {
+    assert_eq!(mu_rows.len(), block.nrows());
+    assert_eq!(mu_cols.len(), block.ncols());
+    for i in 0..block.nrows() {
+        let mr = mu_rows[i];
+        for (x, &mc) in block.row_mut(i).iter_mut().zip(mu_cols) {
+            *x = -0.5 * (*x - mr - mc + grand);
+        }
+    }
+}
+
+/// Reference implementation on a full matrix: `-½ · H A H` with
+/// `H = I - (1/n)·11ᵀ`. Used by tests to validate the blocked path.
+pub fn center_full_reference(a: &Matrix) -> Matrix {
+    let n = a.nrows();
+    let mut h = Matrix::full(n, n, -1.0 / n as f64);
+    for i in 0..n {
+        h[(i, i)] += 1.0;
+    }
+    let mut c = h.matmul(a).matmul(&h);
+    c.scale(-0.5);
+    c
+}
+
+/// Direct full-matrix double centering (the algorithm the blocks implement),
+/// exposed for the single-node baseline.
+pub fn center_full_direct(a: &mut Matrix) {
+    let n = a.nrows() as f64;
+    let mut mu = vec![0.0; a.ncols()];
+    for i in 0..a.nrows() {
+        for (m, &x) in mu.iter_mut().zip(a.row(i)) {
+            *m += x;
+        }
+    }
+    for m in &mut mu {
+        *m /= n;
+    }
+    let grand = mu.iter().sum::<f64>() / mu.len() as f64;
+    for i in 0..a.nrows() {
+        let mr = mu[i];
+        for (x, &mc) in a.row_mut(i).iter_mut().zip(&mu) {
+            *x = -0.5 * (*x - mr - mc + grand);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_symmetric(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed(seed);
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let x = rng.range(0.0, 10.0);
+                a[(i, j)] = x;
+                a[(j, i)] = x;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn direct_matches_hah() {
+        for seed in 0..4 {
+            let a = random_symmetric(12, seed);
+            let want = center_full_reference(&a);
+            let mut got = a.clone();
+            center_full_direct(&mut got);
+            assert!(got.max_abs_diff(&want) < 1e-10, "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn centered_rows_cols_zero_mean() {
+        let a = random_symmetric(10, 5);
+        let mut c = a.clone();
+        center_full_direct(&mut c);
+        for i in 0..10 {
+            let rm: f64 = c.row(i).iter().sum::<f64>() / 10.0;
+            assert!(rm.abs() < 1e-10, "row {i} mean {rm}");
+            let cm: f64 = c.col(i).iter().sum::<f64>() / 10.0;
+            assert!(cm.abs() < 1e-10, "col {i} mean {cm}");
+        }
+    }
+
+    #[test]
+    fn block_path_matches_direct() {
+        let a = random_symmetric(8, 6);
+        // Global means.
+        let n = 8.0;
+        let mut mu = vec![0.0; 8];
+        for j in 0..8 {
+            mu[j] = a.col(j).iter().sum::<f64>() / n;
+        }
+        let grand = a.grand_mean();
+        // Blocked apply with b = 4 over all four blocks.
+        let mut blocked = a.clone();
+        for bi in 0..2 {
+            for bj in 0..2 {
+                let mut blk = blocked.slice(bi * 4, bi * 4 + 4, bj * 4, bj * 4 + 4);
+                center_block(&mut blk, &mu[bi * 4..bi * 4 + 4], &mu[bj * 4..bj * 4 + 4], grand);
+                blocked.paste(bi * 4, bj * 4, &blk);
+            }
+        }
+        let mut direct = a.clone();
+        center_full_direct(&mut direct);
+        assert!(blocked.max_abs_diff(&direct) < 1e-12);
+    }
+
+    #[test]
+    fn sums_helpers() {
+        let m = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(col_sums(&m), vec![4.0, 6.0]);
+        assert_eq!(row_sums(&m), vec![3.0, 7.0]);
+    }
+}

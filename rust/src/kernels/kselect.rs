@@ -1,0 +1,184 @@
+//! Heap-based k-smallest selection — the paper's per-block `L_k` lists.
+//!
+//! For each local row of a distance block, keep the `k` smallest entries
+//! (value + global column coordinate) with a bounded max-heap, then merge
+//! per-block lists into the global kNN list per point.
+
+/// One nearest-neighbor candidate: (distance, global column index).
+pub type Neighbor = (f64, usize);
+
+/// Bounded max-heap over `Neighbor`s keeping the k smallest.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    // Max-heap by distance (largest at root, evicted first).
+    heap: Vec<Neighbor>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> Self {
+        assert!(k > 0);
+        Self { k, heap: Vec::with_capacity(k + 1) }
+    }
+
+    /// Offer a candidate; keeps at most k smallest.
+    #[inline]
+    pub fn push(&mut self, d: f64, idx: usize) {
+        if self.heap.len() < self.k {
+            self.heap.push((d, idx));
+            self.sift_up(self.heap.len() - 1);
+        } else if d < self.heap[0].0 {
+            self.heap[0] = (d, idx);
+            self.sift_down(0);
+        }
+    }
+
+    /// Current worst (largest) kept distance, if full.
+    pub fn threshold(&self) -> Option<f64> {
+        if self.heap.len() == self.k {
+            Some(self.heap[0].0)
+        } else {
+            None
+        }
+    }
+
+    /// Extract the kept neighbors sorted ascending by (distance, index).
+    pub fn into_sorted(self) -> Vec<Neighbor> {
+        let mut v = self.heap;
+        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].0 > self.heap[parent].0 {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < self.heap.len() && self.heap[l].0 > self.heap[largest].0 {
+                largest = l;
+            }
+            if r < self.heap.len() && self.heap[r].0 > self.heap[largest].0 {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.heap.swap(i, largest);
+            i = largest;
+        }
+    }
+}
+
+/// Merge several per-block candidate lists into one global top-k
+/// (the paper's `combineByKey` reduction of the `L_k` lists).
+pub fn merge_topk(k: usize, lists: &[Vec<Neighbor>]) -> Vec<Neighbor> {
+    let mut top = TopK::new(k);
+    for list in lists {
+        for &(d, i) in list {
+            top.push(d, i);
+        }
+    }
+    top.into_sorted()
+}
+
+/// Top-k smallest entries of a slice, excluding index `exclude`
+/// (a point is not its own neighbor). Returns (value, index) ascending.
+pub fn row_topk(row: &[f64], k: usize, offset: usize, exclude: Option<usize>) -> Vec<Neighbor> {
+    let mut top = TopK::new(k);
+    for (j, &d) in row.iter().enumerate() {
+        let gj = offset + j;
+        if Some(gj) == exclude {
+            continue;
+        }
+        top.push(d, gj);
+    }
+    top.into_sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn keeps_k_smallest() {
+        let mut t = TopK::new(3);
+        for (i, d) in [5.0, 1.0, 4.0, 2.0, 3.0, 0.5].iter().enumerate() {
+            t.push(*d, i);
+        }
+        let got = t.into_sorted();
+        assert_eq!(got, vec![(0.5, 5), (1.0, 1), (2.0, 3)]);
+    }
+
+    #[test]
+    fn fewer_than_k() {
+        let mut t = TopK::new(10);
+        t.push(2.0, 0);
+        t.push(1.0, 1);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.threshold(), None);
+        assert_eq!(t.into_sorted(), vec![(1.0, 1), (2.0, 0)]);
+    }
+
+    #[test]
+    fn matches_full_sort_random() {
+        let mut rng = Rng::seed(1);
+        for k in [1, 3, 10, 50] {
+            let xs: Vec<f64> = (0..200).map(|_| rng.f64()).collect();
+            let got = row_topk(&xs, k, 0, None);
+            let mut all: Vec<Neighbor> = xs.iter().cloned().zip(0..).map(|(d, i)| (d, i)).collect();
+            all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            all.truncate(k);
+            assert_eq!(got, all, "k={k}");
+        }
+    }
+
+    #[test]
+    fn exclusion_works() {
+        let row = [0.0, 5.0, 1.0];
+        let got = row_topk(&row, 2, 100, Some(100));
+        assert_eq!(got, vec![(1.0, 102), (5.0, 101)]);
+    }
+
+    #[test]
+    fn merge_equals_global() {
+        let mut rng = Rng::seed(2);
+        let xs: Vec<f64> = (0..300).map(|_| rng.f64()).collect();
+        // Split into 3 chunks, top-k each, merge.
+        let k = 7;
+        let lists: Vec<Vec<Neighbor>> = xs
+            .chunks(100)
+            .enumerate()
+            .map(|(c, chunk)| row_topk(chunk, k, c * 100, None))
+            .collect();
+        let merged = merge_topk(k, &lists);
+        let global = row_topk(&xs, k, 0, None);
+        assert_eq!(merged, global);
+    }
+
+    #[test]
+    fn ties_break_by_index() {
+        let row = [1.0, 1.0, 1.0, 1.0];
+        let got = row_topk(&row, 2, 0, None);
+        assert_eq!(got, vec![(1.0, 0), (1.0, 1)]);
+    }
+}

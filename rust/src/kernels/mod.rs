@@ -1,0 +1,20 @@
+//! Native Rust block kernels.
+//!
+//! Each kernel here is the CPU-native twin of a Pallas kernel in
+//! `python/compile/kernels/`: the engine can run either through the
+//! [`crate::backend::Backend`] abstraction, and the `runtime_equivalence`
+//! integration tests assert both produce identical numerics. In the paper
+//! these are the NumPy/SciPy/Numba routines offloaded to MKL.
+
+pub mod centering;
+pub mod floyd_warshall;
+pub mod kselect;
+pub mod matvec;
+pub mod minplus;
+pub mod sqdist;
+
+/// Value used for "no edge" in the neighborhood graph and APSP blocks. A
+/// large finite value rather than `f64::INFINITY` so that AOT-compiled
+/// kernels (which may add two "infinities") cannot produce NaNs via
+/// `inf - inf`-style corner cases, matching the Python side's `BIG`.
+pub const BIG: f64 = 1.0e30;

@@ -1,0 +1,53 @@
+//! # isospark — exact Isomap on a Spark-like blocked dataflow engine
+//!
+//! Reproduction of *"Scalable Manifold Learning for Big Data with Apache
+//! Spark"* (Schoeneman & Zola, 2018) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: a blocked
+//!   dataflow engine with an upper-triangular partitioner, lineage tracking
+//!   and checkpointing, a simulated multi-node cluster with a GbE network
+//!   model, and the four Isomap stages (kNN, APSP, centering, spectral
+//!   decomposition) expressed over it ([`coordinator`], [`engine`]).
+//! * **L2/L1 (python/compile)** — JAX block ops backed by Pallas kernels,
+//!   AOT-lowered to HLO text once at build time (`make artifacts`).
+//! * **Runtime bridge** — [`runtime`] loads the HLO artifacts through the
+//!   PJRT C API (`xla` crate) so the Rust hot path executes the very
+//!   kernels authored in Pallas; [`backend`] abstracts PJRT vs. the native
+//!   Rust kernels in [`kernels`].
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use isospark::prelude::*;
+//!
+//! let roll = isospark::data::swiss_roll::euler_isometric(500, 42);
+//! let cfg = IsomapConfig { k: 10, d: 2, block: 64, ..Default::default() };
+//! let cluster = ClusterConfig::local();
+//! let out = isospark::coordinator::isomap::run(&roll.points, &cfg, &cluster).unwrap();
+//! assert_eq!(out.embedding.ncols(), 2);
+//! ```
+
+pub mod backend;
+pub mod baselines;
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod eval;
+pub mod kernels;
+pub mod linalg;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Convenience re-exports for the common entry points.
+pub mod prelude {
+    pub use crate::backend::Backend;
+    pub use crate::config::{ClusterConfig, IsomapConfig};
+    pub use crate::coordinator::isomap::{self, IsomapOutput};
+    pub use crate::engine::block::BlockId;
+    pub use crate::engine::context::SparkContext;
+    pub use crate::linalg::matrix::Matrix;
+}

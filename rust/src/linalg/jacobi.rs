@@ -1,0 +1,184 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices.
+//!
+//! Exactness baseline: the paper's spectral stage is a *simultaneous power
+//! iteration* that extracts only the top-d eigenpairs; for tests and
+//! ablations we need ground-truth eigenpairs of the (dense, small) feature
+//! matrix. Jacobi is slow but robust and has no convergence-order caveats.
+
+use super::matrix::Matrix;
+
+/// Full eigendecomposition of a symmetric matrix.
+/// Returns `(eigenvalues, eigenvectors)` sorted by eigenvalue descending;
+/// eigenvectors are the columns of the returned matrix.
+pub fn eigh(a: &Matrix, max_sweeps: usize, tol: f64) -> (Vec<f64>, Matrix) {
+    let n = a.nrows();
+    assert_eq!(n, a.ncols(), "eigh requires a square matrix");
+    debug_assert!(a.is_symmetric(1e-8), "eigh requires symmetry");
+
+    let mut m = a.clone();
+    let mut v = Matrix::eye(n, n);
+
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < tol {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                // Rotation angle that annihilates m[p][q].
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+
+                // Apply the rotation to rows/cols p and q of M.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Collect and sort descending by eigenvalue.
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[(i, i)], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let vals: Vec<f64> = pairs.iter().map(|&(x, _)| x).collect();
+    let mut vecs = Matrix::zeros(n, n);
+    for (newj, &(_, oldj)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            vecs[(i, newj)] = v[(i, oldj)];
+        }
+    }
+    (vals, vecs)
+}
+
+/// Top-d eigenpairs via [`eigh`], with the paper's sign convention
+/// (largest-magnitude entry of each eigenvector made positive).
+pub fn top_d(a: &Matrix, d: usize) -> (Vec<f64>, Matrix) {
+    let n = a.nrows();
+    let (vals, vecs) = eigh(a, 100, 1e-12);
+    let mut q = Matrix::zeros(n, d);
+    for j in 0..d {
+        // Sign fix.
+        let mut imax = 0;
+        for i in 0..n {
+            if vecs[(i, j)].abs() > vecs[(imax, j)].abs() {
+                imax = i;
+            }
+        }
+        let s = if vecs[(imax, j)] < 0.0 { -1.0 } else { 1.0 };
+        for i in 0..n {
+            q[(i, j)] = s * vecs[(i, j)];
+        }
+    }
+    (vals[..d].to_vec(), q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_symmetric(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed(seed);
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let x = rng.gaussian();
+                a[(i, j)] = x;
+                a[(j, i)] = x;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Matrix::from_rows(&[
+            vec![3.0, 0.0, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![0.0, 0.0, 2.0],
+        ]);
+        let (vals, _) = eigh(&a, 50, 1e-14);
+        assert!((vals[0] - 3.0).abs() < 1e-12);
+        assert!((vals[1] - 2.0).abs() < 1e-12);
+        assert!((vals[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction() {
+        let a = random_symmetric(12, 5);
+        let (vals, vecs) = eigh(&a, 100, 1e-14);
+        // A = V Λ Vᵀ
+        let mut lam = Matrix::zeros(12, 12);
+        for i in 0..12 {
+            lam[(i, i)] = vals[i];
+        }
+        let rec = vecs.matmul(&lam).matmul(&vecs.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_symmetric(10, 7);
+        let (_, vecs) = eigh(&a, 100, 1e-14);
+        let vtv = vecs.transpose().matmul(&vecs);
+        assert!(vtv.max_abs_diff(&Matrix::eye(10, 10)) < 1e-10);
+    }
+
+    #[test]
+    fn satisfies_eigen_equation() {
+        let a = random_symmetric(8, 9);
+        let (vals, vecs) = eigh(&a, 100, 1e-14);
+        for j in 0..8 {
+            for i in 0..8 {
+                let mut av = 0.0;
+                for k in 0..8 {
+                    av += a[(i, k)] * vecs[(k, j)];
+                }
+                assert!((av - vals[j] * vecs[(i, j)]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn top_d_signs_fixed() {
+        let a = random_symmetric(9, 11);
+        let (vals, q) = top_d(&a, 3);
+        assert_eq!(vals.len(), 3);
+        assert_eq!(q.ncols(), 3);
+        for j in 0..3 {
+            let col = q.col(j);
+            let imax = (0..9).max_by(|&x, &y| col[x].abs().partial_cmp(&col[y].abs()).unwrap()).unwrap();
+            assert!(col[imax] > 0.0);
+        }
+    }
+}

@@ -1,0 +1,10 @@
+//! Dense linear algebra substrate: row-major `f64` matrices, Householder
+//! QR (used by the driver in simultaneous power iteration), and a Jacobi
+//! eigensolver used as an exactness baseline for small problems.
+
+pub mod jacobi;
+pub mod matrix;
+pub mod qr;
+pub mod solve;
+
+pub use matrix::Matrix;

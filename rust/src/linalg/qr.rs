@@ -1,0 +1,179 @@
+//! Householder QR decomposition.
+//!
+//! The paper's driver runs NumPy's (LAPACK) QR on the tall-skinny `V` matrix
+//! (`n × d`, d small) each power-iteration step. This is the Rust
+//! equivalent: thin QR via Householder reflections, returning `Q (n×d)` with
+//! orthonormal columns and upper-triangular `R (d×d)` with a sign convention
+//! (non-negative diagonal) so successive iterates are comparable under the
+//! Frobenius-norm convergence test.
+
+use super::matrix::Matrix;
+
+/// Thin QR: `a = Q·R`, `Q` is `m×n` with orthonormal columns, `R` is `n×n`
+/// upper triangular with non-negative diagonal. Requires `m >= n`.
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let m = a.nrows();
+    let n = a.ncols();
+    assert!(m >= n, "qr_thin requires rows >= cols ({m} < {n})");
+
+    // Work on a copy; accumulate Householder vectors in-place below the
+    // diagonal, R above it (standard LAPACK-style compact form).
+    let mut r = a.clone();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+
+    for k in 0..n {
+        // Build the Householder vector for column k.
+        let mut v: Vec<f64> = (k..m).map(|i| r[(i, k)]).collect();
+        let alpha = -v[0].signum() * v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if alpha == 0.0 {
+            // Zero column below the diagonal: identity reflector.
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            vs.push(vec![0.0; m - k]);
+            continue;
+        }
+        // Apply H = I - 2 v vᵀ / (vᵀv) to the trailing submatrix.
+        for j in k..n {
+            let mut dot = 0.0;
+            for (ii, vi) in v.iter().enumerate() {
+                dot += vi * r[(k + ii, j)];
+            }
+            let c = 2.0 * dot / vnorm2;
+            for (ii, vi) in v.iter().enumerate() {
+                r[(k + ii, j)] -= c * vi;
+            }
+        }
+        vs.push(v);
+    }
+
+    // Extract the n×n R (upper triangle).
+    let mut rr = Matrix::zeros(n, n);
+    for i in 0..n {
+        for j in i..n {
+            rr[(i, j)] = r[(i, j)];
+        }
+    }
+
+    // Form thin Q by applying the reflectors to the first n columns of I.
+    let mut q = Matrix::eye(m, n);
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 == 0.0 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for (ii, vi) in v.iter().enumerate() {
+                dot += vi * q[(k + ii, j)];
+            }
+            let c = 2.0 * dot / vnorm2;
+            for (ii, vi) in v.iter().enumerate() {
+                q[(k + ii, j)] -= c * vi;
+            }
+        }
+    }
+
+    // Sign convention: make R's diagonal non-negative (flip matching Q cols).
+    for j in 0..n {
+        if rr[(j, j)] < 0.0 {
+            for jj in j..n {
+                rr[(j, jj)] = -rr[(j, jj)];
+            }
+            for i in 0..m {
+                q[(i, j)] = -q[(i, j)];
+            }
+        }
+    }
+
+    (q, rr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_matrix(m: usize, n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed(seed);
+        let mut a = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                a[(i, j)] = rng.gaussian();
+            }
+        }
+        a
+    }
+
+    fn assert_orthonormal(q: &Matrix, tol: f64) {
+        let qtq = q.transpose().matmul(q);
+        let eye = Matrix::eye(q.ncols(), q.ncols());
+        assert!(qtq.max_abs_diff(&eye) < tol, "QᵀQ != I: {:?}", qtq);
+    }
+
+    #[test]
+    fn reconstructs_a() {
+        for seed in 0..5 {
+            let a = random_matrix(20, 4, seed);
+            let (q, r) = qr_thin(&a);
+            let qr = q.matmul(&r);
+            assert!(qr.max_abs_diff(&a) < 1e-10, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let a = random_matrix(50, 6, 11);
+        let (q, _) = qr_thin(&a);
+        assert_orthonormal(&q, 1e-10);
+    }
+
+    #[test]
+    fn r_upper_triangular_nonneg_diag() {
+        let a = random_matrix(30, 5, 13);
+        let (_, r) = qr_thin(&a);
+        for i in 0..5 {
+            assert!(r[(i, i)] >= 0.0);
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn square_case() {
+        let a = random_matrix(6, 6, 17);
+        let (q, r) = qr_thin(&a);
+        assert!(q.matmul(&r).max_abs_diff(&a) < 1e-10);
+        assert_orthonormal(&q, 1e-10);
+    }
+
+    #[test]
+    fn rank_deficient_column() {
+        // Second column is a multiple of the first: R should have a ~0
+        // diagonal entry, and QR must still reconstruct A.
+        let mut a = Matrix::zeros(8, 3);
+        let mut rng = Rng::seed(3);
+        for i in 0..8 {
+            let x = rng.gaussian();
+            a[(i, 0)] = x;
+            a[(i, 1)] = 2.0 * x;
+            a[(i, 2)] = rng.gaussian();
+        }
+        let (q, r) = qr_thin(&a);
+        assert!(q.matmul(&r).max_abs_diff(&a) < 1e-10);
+        assert!(r[(1, 1)].abs() < 1e-10);
+    }
+
+    #[test]
+    fn identity_input() {
+        let a = Matrix::eye(5, 3);
+        let (q, r) = qr_thin(&a);
+        assert!(q.matmul(&r).max_abs_diff(&a) < 1e-12);
+        assert!(r.max_abs_diff(&Matrix::eye(3, 3)) < 1e-12);
+    }
+}

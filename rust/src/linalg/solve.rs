@@ -1,0 +1,158 @@
+//! Dense linear solver: LU with partial pivoting.
+//!
+//! Used by the LLE extension (per-point local Gram systems `C·w = 1`) and
+//! available as a general substrate. Small systems (k×k, k ≈ 10) are the
+//! target; no blocking needed.
+
+use super::matrix::Matrix;
+use anyhow::{bail, Result};
+
+/// Reusable LU factorization with partial pivoting (factor once, solve
+/// many right-hand sides — the shift-invert iteration's access pattern).
+pub struct Lu {
+    lu: Matrix,
+    perm: Vec<usize>,
+}
+
+impl Lu {
+    /// Factor a square matrix.
+    pub fn factor(a: &Matrix) -> Result<Lu> {
+        let n = a.nrows();
+        if a.ncols() != n {
+            bail!("Lu: matrix not square ({}x{})", a.nrows(), a.ncols());
+        }
+        let mut lu = a.clone();
+        let mut perm: Vec<usize> = (0..n).collect();
+        for col in 0..n {
+            // Pivot: largest |entry| at or below the diagonal.
+            let mut p = col;
+            for r in (col + 1)..n {
+                if lu[(r, col)].abs() > lu[(p, col)].abs() {
+                    p = r;
+                }
+            }
+            if lu[(p, col)].abs() < 1e-300 {
+                bail!("Lu: singular matrix (pivot ~0 at column {col})");
+            }
+            if p != col {
+                for c in 0..n {
+                    let tmp = lu[(col, c)];
+                    lu[(col, c)] = lu[(p, c)];
+                    lu[(p, c)] = tmp;
+                }
+                perm.swap(col, p);
+            }
+            let piv = lu[(col, col)];
+            for r in (col + 1)..n {
+                let f = lu[(r, col)] / piv;
+                lu[(r, col)] = f; // store L factor in place
+                for c in (col + 1)..n {
+                    let v = lu[(col, c)];
+                    lu[(r, c)] -= f * v;
+                }
+            }
+        }
+        Ok(Lu { lu, perm })
+    }
+
+    /// Solve `A·x = b` using the stored factors.
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>> {
+        let n = self.perm.len();
+        if b.len() != n {
+            bail!("Lu::solve: rhs length {} != {n}", b.len());
+        }
+        // Forward substitution with permuted rhs: L·y = P·b.
+        let mut y = vec![0.0; n];
+        for r in 0..n {
+            let mut acc = b[self.perm[r]];
+            for c in 0..r {
+                acc -= self.lu[(r, c)] * y[c];
+            }
+            y[r] = acc;
+        }
+        // Back substitution: U·x = y.
+        let mut x = vec![0.0; n];
+        for r in (0..n).rev() {
+            let mut acc = y[r];
+            for c in (r + 1)..n {
+                acc -= self.lu[(r, c)] * x[c];
+            }
+            x[r] = acc / self.lu[(r, r)];
+        }
+        Ok(x)
+    }
+}
+
+/// One-shot solve `A·x = b` via [`Lu`].
+pub fn solve(a: &Matrix, b: &[f64]) -> Result<Vec<f64>> {
+    if a.nrows() != a.ncols() || b.len() != a.nrows() {
+        bail!("solve: shape mismatch ({}x{} vs rhs {})", a.nrows(), a.ncols(), b.len());
+    }
+    Lu::factor(a)?.solve(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::seed(seed);
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                a[(i, j)] = rng.gaussian();
+            }
+            a[(i, i)] += 4.0; // diagonally dominant => well-conditioned
+        }
+        a
+    }
+
+    #[test]
+    fn solves_known_system() {
+        let a = Matrix::from_rows(&[vec![2.0, 1.0], vec![1.0, 3.0]]);
+        let x = solve(&a, &[5.0, 10.0]).unwrap();
+        assert!((x[0] - 1.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn residual_small_random() {
+        for seed in 0..6 {
+            let n = 12;
+            let a = random(n, seed);
+            let b: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+            let x = solve(&a, &b).unwrap();
+            for i in 0..n {
+                let mut acc = 0.0;
+                for j in 0..n {
+                    acc += a[(i, j)] * x[j];
+                }
+                assert!((acc - b[i]).abs() < 1e-9, "seed {seed} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn pivoting_handles_zero_diagonal() {
+        // Needs a row swap to solve.
+        let a = Matrix::from_rows(&[vec![0.0, 1.0], vec![1.0, 0.0]]);
+        let x = solve(&a, &[2.0, 3.0]).unwrap();
+        assert!((x[0] - 3.0).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_singular() {
+        let a = Matrix::from_rows(&[vec![1.0, 2.0], vec![2.0, 4.0]]);
+        assert!(solve(&a, &[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_shapes() {
+        let a = Matrix::zeros(3, 2);
+        assert!(solve(&a, &[1.0, 2.0, 3.0]).is_err());
+        let b = Matrix::eye(2, 2);
+        assert!(solve(&b, &[1.0]).is_err());
+    }
+}

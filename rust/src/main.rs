@@ -1,0 +1,449 @@
+//! `isospark` — launcher CLI for the Spark-Isomap reproduction.
+//!
+//! Subcommands:
+//!   run             end-to-end Isomap on a generated dataset
+//!   landmark        approximate L-Isomap variant
+//!   scale-table     regenerate Tables I–III (simulated paper testbed)
+//!   blocksize-sweep regenerate Fig. 6 (block-size sensitivity)
+//!   emnist          synthetic-EMNIST embedding + factor analysis (Fig. 5)
+//!   info            artifact inventory / environment report
+
+use anyhow::{bail, Context, Result};
+use isospark::backend::Backend;
+use isospark::config::{ClusterConfig, IsomapConfig, RawConfig};
+use isospark::coordinator::{isomap, landmark};
+use isospark::data;
+use isospark::eval;
+use isospark::sim::{self, CostModel, Workload};
+use isospark::util::cli::Args;
+use isospark::util::fmt::{human_bytes, human_duration, render_table};
+use std::path::{Path, PathBuf};
+
+const USAGE: &str = "\
+isospark — exact Isomap on a Spark-like blocked dataflow engine
+
+USAGE: isospark <COMMAND> [OPTIONS]
+
+COMMANDS:
+  run              run the pipeline: --dataset swiss|emnist|clusters|s_curve
+                   --n <pts> --k <nn> --d <dim> --block <b> --seed <s>
+                   --backend native|pjrt --artifacts <dir> --nodes <n>
+                   --cores <c> --out <csv> --config <file>
+  landmark         L-Isomap: same options plus --landmarks <m>
+  lle              Locally Linear Embedding (paper §VI extension)
+  stream           Streaming-Isomap: fit a batch, map --stream-n new points
+  scale-table      Tables I-III: --block <b> --calibrate --nodes-list 2,4,...
+  blocksize-sweep  Fig. 6: --n <pts> --dim <D> --nodes <n> --blocks 500,...
+  emnist           Fig. 5: --n <pts> --k --d --block, reports factor corrs
+  info             --artifacts <dir>: artifact + environment report
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() || argv[0] == "--help" || argv[0] == "help" {
+        print!("{USAGE}");
+        return;
+    }
+    let cmd = argv[0].clone();
+    let args = match Args::parse(argv[1..].to_vec(), &["calibrate", "lineage", "quiet"]) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    let out = match cmd.as_str() {
+        "run" => cmd_run(&args),
+        "landmark" => cmd_landmark(&args),
+        "lle" => cmd_lle(&args),
+        "stream" => cmd_stream(&args),
+        "scale-table" => cmd_scale_table(&args),
+        "blocksize-sweep" => cmd_blocksize(&args),
+        "emnist" => cmd_emnist(&args),
+        "info" => cmd_info(&args),
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = out {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_common(args: &Args) -> Result<(IsomapConfig, ClusterConfig)> {
+    let mut iso = IsomapConfig::default();
+    let mut cluster = ClusterConfig::local();
+    if let Some(path) = args.opt("config") {
+        let raw = RawConfig::load(Path::new(path))?;
+        iso = raw.isomap()?;
+        cluster = raw.cluster()?;
+    }
+    iso.k = args.get("k", iso.k).map_err(anyhow_str)?;
+    iso.d = args.get("d", iso.d).map_err(anyhow_str)?;
+    iso.block = args.get("block", iso.block).map_err(anyhow_str)?;
+    iso.tol = args.get("tol", iso.tol).map_err(anyhow_str)?;
+    iso.max_iter = args.get("max-iter", iso.max_iter).map_err(anyhow_str)?;
+    iso.checkpoint_every =
+        args.get("checkpoint-every", iso.checkpoint_every).map_err(anyhow_str)?;
+    iso.seed = args.get("seed", iso.seed).map_err(anyhow_str)?;
+    let nodes: usize = args.get("nodes", cluster.nodes).map_err(anyhow_str)?;
+    if nodes != cluster.nodes {
+        cluster = ClusterConfig::paper_testbed(nodes);
+    }
+    cluster.cores_per_node = args.get("cores", cluster.cores_per_node).map_err(anyhow_str)?;
+    Ok((iso, cluster))
+}
+
+fn anyhow_str(e: String) -> anyhow::Error {
+    anyhow::anyhow!(e)
+}
+
+fn backend_from(args: &Args) -> Result<Backend> {
+    match args.opt("backend").unwrap_or("native") {
+        "native" => Ok(Backend::Native),
+        "pjrt" => {
+            let dir = PathBuf::from(args.opt("artifacts").unwrap_or("artifacts"));
+            Backend::pjrt_from_dir(&dir).context("load PJRT artifacts")
+        }
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    }
+}
+
+fn load_dataset(args: &Args) -> Result<data::Dataset> {
+    let name = args.opt("dataset").unwrap_or("swiss");
+    let n: usize = args.get("n", 1024).map_err(anyhow_str)?;
+    let seed: u64 = args.get("seed", 42).map_err(anyhow_str)?;
+    data::by_name(name, n, seed)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {name:?} (swiss|emnist|clusters|s_curve)"))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let (cfg, cluster) = parse_common(args)?;
+    let backend = backend_from(args)?;
+    let ds = load_dataset(args)?;
+    println!(
+        "dataset={} n={} D={} | k={} d={} b={} backend={} | {} node(s) × {} core(s)",
+        ds.name,
+        ds.n(),
+        ds.dim(),
+        cfg.k,
+        cfg.d,
+        cfg.block,
+        backend.name(),
+        cluster.nodes,
+        cluster.cores_per_node
+    );
+    let sw = isospark::util::Stopwatch::start();
+    let out = isomap::run_with(&ds.points, &cfg, &cluster, &backend)?;
+    println!(
+        "\ndone in {} real | virtual cluster time {} | {} shuffled",
+        human_duration(sw.secs()),
+        human_duration(out.virtual_secs),
+        human_bytes(out.shuffle_bytes)
+    );
+    println!(
+        "q={} blocks | graph components={} | eigen iters={} converged={}",
+        out.q, out.graph_components, out.eigen_iterations, out.eigen_converged
+    );
+    println!("eigenvalues: {:?}", out.eigenvalues);
+    if let Some(truth) = &ds.ground_truth {
+        if truth.ncols() == cfg.d {
+            println!(
+                "procrustes vs ground truth: {:.6e}",
+                eval::procrustes(truth, &out.embedding)
+            );
+        }
+    }
+    println!("\n{}", out.metrics_table);
+    if let Some(path) = args.opt("out") {
+        data::io::write_csv(Path::new(path), &out.embedding, None)?;
+        println!("embedding written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_landmark(args: &Args) -> Result<()> {
+    let (cfg, cluster) = parse_common(args)?;
+    let backend = backend_from(args)?;
+    let ds = load_dataset(args)?;
+    let m: usize = args.get("landmarks", (ds.n() / 10).max(cfg.d + 1)).map_err(anyhow_str)?;
+    let sw = isospark::util::Stopwatch::start();
+    let out = landmark::run(&ds.points, &cfg, m, &cluster, &backend)?;
+    println!(
+        "L-Isomap: n={} m={} done in {} | eigenvalues {:?}",
+        ds.n(),
+        m,
+        human_duration(sw.secs()),
+        out.eigenvalues
+    );
+    if let Some(truth) = &ds.ground_truth {
+        if truth.ncols() == cfg.d {
+            println!(
+                "procrustes vs ground truth: {:.6e}",
+                eval::procrustes(truth, &out.embedding)
+            );
+        }
+    }
+    if let Some(path) = args.opt("out") {
+        data::io::write_csv(Path::new(path), &out.embedding, None)?;
+        println!("embedding written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_lle(args: &Args) -> Result<()> {
+    let (cfg, cluster) = parse_common(args)?;
+    let backend = backend_from(args)?;
+    let ds = load_dataset(args)?;
+    let sw = isospark::util::Stopwatch::start();
+    let out = isospark::coordinator::lle::run(&ds.points, &cfg, &cluster, &backend)?;
+    println!(
+        "LLE: n={} done in {} | iterations={} | bottom eigenvalues {:?}",
+        ds.n(),
+        human_duration(sw.secs()),
+        out.iterations,
+        out.eigenvalues
+    );
+    if let Some(truth) = &ds.ground_truth {
+        if truth.ncols() == cfg.d {
+            let (t, c) = eval::trustworthiness_continuity(&ds.points, &out.embedding, 10, 2000);
+            println!("trustworthiness={t:.3} continuity={c:.3}");
+        }
+    }
+    if let Some(path) = args.opt("out") {
+        data::io::write_csv(Path::new(path), &out.embedding, None)?;
+        println!("embedding written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> Result<()> {
+    use isospark::coordinator::streaming::StreamingModel;
+    let (cfg, cluster) = parse_common(args)?;
+    let backend = backend_from(args)?;
+    let ds = load_dataset(args)?;
+    let m: usize = args.get("landmarks", (ds.n() / 8).max(cfg.d + 1)).map_err(anyhow_str)?;
+    let stream_n: usize = args.get("stream-n", 256).map_err(anyhow_str)?;
+    let sw = isospark::util::Stopwatch::start();
+    let model = StreamingModel::fit(&ds.points, &cfg, m, &cluster, &backend)?;
+    println!(
+        "fitted streaming model on batch n={} with {} landmarks in {}",
+        ds.n(),
+        model.num_landmarks(),
+        human_duration(sw.secs())
+    );
+    let fresh = data::by_name(args.opt("dataset").unwrap_or("swiss"), stream_n, cfg.seed + 1)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
+    let sw = isospark::util::Stopwatch::start();
+    let mapped = model.map_points(&fresh.points)?;
+    let per = sw.secs() / stream_n as f64;
+    println!("mapped {stream_n} streamed points at {:.3} ms/point", per * 1e3);
+    if let Some(truth) = &fresh.ground_truth {
+        if truth.ncols() == cfg.d {
+            println!("streamed procrustes vs truth: {:.6e}", eval::procrustes(truth, &mapped));
+        }
+    }
+    if let Some(path) = args.opt("out") {
+        data::io::write_csv(Path::new(path), &mapped, None)?;
+        println!("streamed embedding written to {path}");
+    }
+    Ok(())
+}
+
+fn cost_model(args: &Args) -> CostModel {
+    if args.flag("calibrate") {
+        eprintln!("calibrating cost model from native kernels…");
+        CostModel::calibrate(256)
+    } else {
+        CostModel::paper_like()
+    }
+}
+
+fn parse_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|x| {
+            x.trim().parse::<usize>().map_err(|e| anyhow::anyhow!("bad list entry {x:?}: {e}"))
+        })
+        .collect()
+}
+
+fn cmd_scale_table(args: &Args) -> Result<()> {
+    let b: usize = args.get("block", 1500).map_err(anyhow_str)?;
+    let nodes_list = parse_list(args.opt("nodes-list").unwrap_or("2,4,8,12,16,20,24"))?;
+    let model = cost_model(args);
+    let suite = Workload::paper_suite(b);
+    println!("== Table I: execution time (virtual minutes), b={b} ==");
+    let mut time_rows = vec![header_row(&nodes_list)];
+    let mut results: Vec<Vec<Option<f64>>> = Vec::new();
+    for w in &suite {
+        let mut row = vec![w.name.clone()];
+        let mut per: Vec<Option<f64>> = Vec::new();
+        for &p in &nodes_list {
+            let proj = sim::project(w, &ClusterConfig::paper_testbed(p), &model);
+            per.push(proj.total_secs);
+            row.push(match proj.total_secs {
+                Some(s) => format!("{:.2}", s / 60.0),
+                None => "-".to_string(),
+            });
+        }
+        results.push(per);
+        time_rows.push(row);
+    }
+    println!("{}", render_table(&time_rows));
+
+    println!("== Table II: relative speedup S_p = T_min / T_p ==");
+    let mut sp_rows = vec![header_row(&nodes_list)];
+    for (w, per) in suite.iter().zip(&results) {
+        // T_min = time on the smallest feasible node count.
+        let t_base = per.iter().flatten().next().cloned();
+        let mut row = vec![w.name.clone()];
+        for v in per {
+            row.push(match (t_base, v) {
+                (Some(b), Some(t)) => format!("{:.2}", b / t),
+                _ => "-".to_string(),
+            });
+        }
+        sp_rows.push(row);
+    }
+    println!("{}", render_table(&sp_rows));
+
+    println!("== Table III: relative efficiency E_p = S_p·p_min/p ==");
+    let mut ef_rows = vec![header_row(&nodes_list)];
+    for (w, per) in suite.iter().zip(&results) {
+        let base = per.iter().zip(&nodes_list).find_map(|(v, &p)| v.map(|t| (t, p)));
+        let mut row = vec![w.name.clone()];
+        for (v, &p) in per.iter().zip(&nodes_list) {
+            row.push(match (base, v) {
+                (Some((tb, pb)), Some(t)) => format!("{:.2}", (tb / t) * pb as f64 / p as f64),
+                _ => "-".to_string(),
+            });
+        }
+        ef_rows.push(row);
+    }
+    println!("{}", render_table(&ef_rows));
+    Ok(())
+}
+
+fn header_row(nodes: &[usize]) -> Vec<String> {
+    let mut h = vec!["Name".to_string()];
+    h.extend(nodes.iter().map(|p| p.to_string()));
+    h
+}
+
+fn cmd_blocksize(args: &Args) -> Result<()> {
+    let n: usize = args.get("n", 75_000).map_err(anyhow_str)?;
+    let dim: usize = args.get("dim", 3).map_err(anyhow_str)?;
+    let nodes: usize = args.get("nodes", 24).map_err(anyhow_str)?;
+    let blocks =
+        parse_list(args.opt("blocks").unwrap_or("500,750,1000,1500,2000,2500,3000,4000"))?;
+    let model = cost_model(args);
+    println!("== Fig. 6: block-size sweep, n={n} D={dim} on {nodes} nodes ==");
+    let mut rows = vec![vec![
+        "b".to_string(),
+        "q".to_string(),
+        "time".to_string(),
+        "apsp".to_string(),
+        "knn".to_string(),
+    ]];
+    for b in blocks {
+        let w = Workload::new("sweep", n, dim, b);
+        let proj = sim::project(&w, &ClusterConfig::paper_testbed(nodes), &model);
+        rows.push(vec![
+            b.to_string(),
+            n.div_ceil(b).to_string(),
+            proj.total_secs.map_or("-".into(), |s| format!("{:.2} min", s / 60.0)),
+            format!("{:.2} min", proj.apsp_secs / 60.0),
+            format!("{:.2} min", proj.knn_secs / 60.0),
+        ]);
+    }
+    println!("{}", render_table(&rows));
+    Ok(())
+}
+
+fn cmd_emnist(args: &Args) -> Result<()> {
+    let (mut cfg, cluster) = parse_common(args)?;
+    let backend = backend_from(args)?;
+    let n: usize = args.get("n", 512).map_err(anyhow_str)?;
+    cfg.d = args.get("d", 2).map_err(anyhow_str)?;
+    let ds = data::emnist_synth::generate(n, cfg.seed);
+    println!("synthetic EMNIST: n={n} D={}", ds.dim());
+    let out = isomap::run_with(&ds.points, &cfg, &cluster, &backend)?;
+    let labels = ds.labels.as_ref().unwrap();
+    let truth = ds.ground_truth.as_ref().unwrap();
+
+    // Fig. 5 analysis: correlate embedding axes with latent factors.
+    let corr = |a: &[f64], b: &[f64]| -> f64 {
+        let n = a.len() as f64;
+        let (ma, mb) = (a.iter().sum::<f64>() / n, b.iter().sum::<f64>() / n);
+        let mut cov = 0.0;
+        let mut va = 0.0;
+        let mut vb = 0.0;
+        for (x, y) in a.iter().zip(b) {
+            cov += (x - ma) * (y - mb);
+            va += (x - ma) * (x - ma);
+            vb += (y - mb) * (y - mb);
+        }
+        cov / (va * vb).sqrt()
+    };
+    for axis in 0..cfg.d.min(2) {
+        let emb: Vec<f64> = (0..n).map(|i| out.embedding[(i, axis)]).collect();
+        let curv: Vec<f64> = (0..n).map(|i| truth[(i, 0)]).collect();
+        let slant: Vec<f64> = (0..n).map(|i| truth[(i, 1)]).collect();
+        println!(
+            "D{}: corr(curvature)={:+.3} corr(slant)={:+.3}",
+            axis + 1,
+            corr(&emb, &curv),
+            corr(&emb, &slant)
+        );
+    }
+    // Per-digit centroids (the clusters of Fig. 5a).
+    let mut rows =
+        vec![vec!["digit".into(), "count".into(), "centroid D1".into(), "centroid D2".into()]];
+    for digit in 0..10usize {
+        let idx: Vec<usize> = (0..n).filter(|&i| labels[i] == digit).collect();
+        if idx.is_empty() {
+            continue;
+        }
+        let c: Vec<f64> = (0..cfg.d.min(2))
+            .map(|j| idx.iter().map(|&i| out.embedding[(i, j)]).sum::<f64>() / idx.len() as f64)
+            .collect();
+        rows.push(vec![
+            digit.to_string(),
+            idx.len().to_string(),
+            format!("{:+.3}", c[0]),
+            format!("{:+.3}", c.get(1).copied().unwrap_or(0.0)),
+        ]);
+    }
+    println!("{}", render_table(&rows));
+    if let Some(path) = args.opt("out") {
+        data::io::write_csv(Path::new(path), &out.embedding, None)?;
+        println!("embedding written to {path}");
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    println!("isospark {} — three-layer Rust + JAX + Pallas Isomap", env!("CARGO_PKG_VERSION"));
+    let dir = PathBuf::from(args.opt("artifacts").unwrap_or("artifacts"));
+    match isospark::runtime::PjrtEngine::load(&dir) {
+        Ok(rt) => {
+            println!("artifacts ({}):", dir.display());
+            for line in rt.inventory() {
+                println!("  {line}");
+            }
+        }
+        Err(e) => println!("no artifacts loaded: {e:#}"),
+    }
+    let cl = ClusterConfig::paper_testbed(25);
+    println!(
+        "\npaper testbed model: {} nodes × {} cores, {}/node, GbE {:.0} MB/s, disk {:.0} MB/s",
+        cl.nodes,
+        cl.cores_per_node,
+        human_bytes(cl.mem_per_node),
+        cl.net_bandwidth / 1e6,
+        cl.disk_bandwidth / 1e6
+    );
+    Ok(())
+}

@@ -1,0 +1,138 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments; produces helpful errors and a usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options by name plus positionals in order.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    /// `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    // `--` terminates option parsing.
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("option --{rest} expects a value"))?;
+                    out.opts.insert(rest.to_string(), v);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Value of `--key`, if present.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("invalid value {s:?} for --{key}")),
+        }
+    }
+
+    /// Whether a boolean `--flag` was given.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// All provided option keys (for unknown-option validation).
+    pub fn opt_keys(&self) -> impl Iterator<Item = &str> {
+        self.opts.keys().map(|s| s.as_str())
+    }
+
+    /// Error if any provided option is not in the allowed set.
+    pub fn reject_unknown(&self, allowed: &[&str]) -> Result<(), String> {
+        for k in self.opt_keys() {
+            if !allowed.contains(&k) {
+                return Err(format!("unknown option --{k} (allowed: {})", allowed.join(", ")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(s(&["run", "--n", "100", "--verbose", "--b=64", "x"]), &["verbose"]).unwrap();
+        assert_eq!(a.positional(), &["run".to_string(), "x".to_string()]);
+        assert_eq!(a.opt("n"), Some("100"));
+        assert_eq!(a.opt("b"), Some("64"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = Args::parse(s(&["--k", "12"]), &[]).unwrap();
+        assert_eq!(a.get("k", 10usize).unwrap(), 12);
+        assert_eq!(a.get("d", 2usize).unwrap(), 2);
+        assert!(a.get::<usize>("k", 0).is_ok());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(s(&["--n"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = Args::parse(s(&["--k", "abc"]), &[]).unwrap();
+        assert!(a.get::<usize>("k", 1).is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = Args::parse(s(&["--a", "1", "--", "--b", "2"]), &[]).unwrap();
+        assert_eq!(a.opt("a"), Some("1"));
+        assert_eq!(a.positional(), &["--b".to_string(), "2".to_string()]);
+    }
+
+    #[test]
+    fn reject_unknown_works() {
+        let a = Args::parse(s(&["--zzz", "1"]), &[]).unwrap();
+        assert!(a.reject_unknown(&["n", "k"]).is_err());
+        let b = Args::parse(s(&["--n", "1"]), &[]).unwrap();
+        assert!(b.reject_unknown(&["n", "k"]).is_ok());
+    }
+}

@@ -1,0 +1,96 @@
+//! Human-readable formatting helpers for reports and tables.
+
+/// Format seconds as the paper's tables do (minutes with 2 decimals) when
+/// large, falling back to seconds/milliseconds for small quantities.
+pub fn human_duration(secs: f64) -> String {
+    if secs >= 60.0 {
+        format!("{:.2} min", secs / 60.0)
+    } else if secs >= 1.0 {
+        format!("{secs:.2} s")
+    } else {
+        format!("{:.2} ms", secs * 1e3)
+    }
+}
+
+/// Format a byte count with binary units.
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut x = bytes as f64;
+    let mut u = 0;
+    while x >= 1024.0 && u + 1 < UNITS.len() {
+        x /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{x:.2} {}", UNITS[u])
+    }
+}
+
+/// Simple monospace table renderer: pads each column to its widest cell.
+/// The first row is treated as the header and underlined.
+pub fn render_table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let ncols = rows.iter().map(|r| r.len()).max().unwrap_or(0);
+    let mut widths = vec![0usize; ncols];
+    for row in rows {
+        for (c, cell) in row.iter().enumerate() {
+            widths[c] = widths[c].max(cell.chars().count());
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in rows.iter().enumerate() {
+        let mut line = String::new();
+        for (c, cell) in row.iter().enumerate() {
+            if c > 0 {
+                line.push_str("  ");
+            }
+            let pad = widths[c] - cell.chars().count();
+            line.push_str(cell);
+            line.push_str(&" ".repeat(pad));
+        }
+        out.push_str(line.trim_end());
+        out.push('\n');
+        if i == 0 {
+            let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+            out.push_str(&"-".repeat(total));
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn durations() {
+        assert_eq!(human_duration(120.0), "2.00 min");
+        assert_eq!(human_duration(2.5), "2.50 s");
+        assert_eq!(human_duration(0.0125), "12.50 ms");
+    }
+
+    #[test]
+    fn bytes() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let t = render_table(&[
+            vec!["name".into(), "time".into()],
+            vec!["swiss50".into(), "1.0".into()],
+            vec!["emnist125".into(), "2.0".into()],
+        ]);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[2].starts_with("swiss50"));
+    }
+}

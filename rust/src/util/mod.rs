@@ -1,0 +1,58 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! The build environment is fully offline, so facilities that would normally
+//! come from crates.io (`rand`, `serde_json`, a CLI parser, a bench harness)
+//! are implemented here from scratch.
+
+pub mod cli;
+pub mod fmt;
+pub mod json;
+pub mod rng;
+
+pub use rng::Rng;
+
+/// Wall-clock stopwatch with split support, used by metrics and benches.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: std::time::Instant,
+}
+
+impl Stopwatch {
+    /// Start a new stopwatch.
+    pub fn start() -> Self {
+        Self { start: std::time::Instant::now() }
+    }
+
+    /// Seconds elapsed since start.
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Milliseconds elapsed since start.
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+
+    /// Reset and return the elapsed seconds up to the reset.
+    pub fn lap(&mut self) -> f64 {
+        let s = self.secs();
+        self.start = std::time::Instant::now();
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotone() {
+        let mut sw = Stopwatch::start();
+        let a = sw.secs();
+        let b = sw.secs();
+        assert!(b >= a);
+        let lap = sw.lap();
+        assert!(lap >= b);
+        assert!(sw.secs() < lap + 1.0);
+    }
+}

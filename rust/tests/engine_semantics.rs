@@ -1,0 +1,166 @@
+//! Engine semantics: the Spark-substitute's transformations, partitioners,
+//! virtual clock, network model, lineage and memory accounting — exercised
+//! through the public API across multi-node simulated clusters.
+
+use isospark::config::ClusterConfig;
+use isospark::engine::partitioner::{ut_count, UpperTriangularPartitioner};
+use isospark::engine::{BlockId, HashPartitioner, Partitioner, SparkContext};
+use isospark::linalg::Matrix;
+use std::rc::Rc;
+
+fn ctx(nodes: usize) -> SparkContext {
+    SparkContext::new(ClusterConfig { nodes, ..ClusterConfig::local() })
+}
+
+#[test]
+fn wordcount_style_pipeline() {
+    // flat_map -> reduce_by_key over multiple nodes gives exact results.
+    let c = ctx(4);
+    let items: Vec<(BlockId, Matrix)> =
+        (0..8).map(|i| (BlockId::new(i, i), Matrix::full(2, 2, i as f64))).collect();
+    let part: Rc<dyn Partitioner> = Rc::new(HashPartitioner::new(8));
+    let rdd = c.parallelize("data", items, part.clone());
+    let keyed = rdd.flat_map("emit", |_, m| {
+        vec![(BlockId::new(0, 0), m.grand_mean()), (BlockId::new(1, 0), 1.0f64)]
+    });
+    let reduced = keyed.reduce_by_key("sum", part, |a, b| a + b);
+    assert_eq!(*reduced.get(BlockId::new(0, 0)).unwrap(), (0..8).sum::<usize>() as f64);
+    assert_eq!(*reduced.get(BlockId::new(1, 0)).unwrap(), 8.0);
+}
+
+#[test]
+fn results_identical_across_cluster_sizes() {
+    // The virtual cluster affects *time*, never *values*.
+    let run = |nodes: usize| -> Vec<f64> {
+        let c = ctx(nodes);
+        let items: Vec<(BlockId, Matrix)> =
+            (0..6).map(|i| (BlockId::new(i, i), Matrix::full(3, 3, i as f64 + 1.0))).collect();
+        let part: Rc<dyn Partitioner> = Rc::new(HashPartitioner::new(6));
+        let rdd = c.parallelize("x", items, part.clone());
+        let mapped = rdd.map_values("scale", |_, m| {
+            let mut m = m.clone();
+            m.scale(2.0);
+            m
+        });
+        let keyed =
+            mapped.flat_map("fold", |id, m| vec![(BlockId::new(id.i % 2, 0), m.fro_norm())]);
+        let red = keyed.reduce_by_key("sum", part, |a, b| a + b);
+        red.collect().values().cloned().collect()
+    };
+    assert_eq!(run(1), run(7));
+}
+
+#[test]
+fn shuffle_free_on_single_node() {
+    let c = ctx(1);
+    let items: Vec<(BlockId, f64)> = (0..10).map(|i| (BlockId::new(i, 0), i as f64)).collect();
+    let part: Rc<dyn Partitioner> = Rc::new(HashPartitioner::new(4));
+    let rdd = c.parallelize("x", items, part.clone());
+    // (parallelize itself charges the driver->executor distribution.)
+    let after_load = c.total_shuffle_bytes();
+    let red = rdd
+        .flat_map("emit", |_, v| vec![(BlockId::new(0, 0), *v)])
+        .reduce_by_key("sum", part, |a, b| a + b);
+    assert_eq!(*red.get(BlockId::new(0, 0)).unwrap(), 45.0);
+    // One node: every shuffle record is co-located; no executor-to-executor
+    // network traffic possible.
+    assert_eq!(c.total_shuffle_bytes(), after_load);
+}
+
+#[test]
+fn more_nodes_less_virtual_time_for_parallel_work() {
+    let run = |nodes: usize| -> f64 {
+        let mut cfg = ClusterConfig::paper_testbed(nodes);
+        cfg.cores_per_node = 1;
+        let c = SparkContext::new(cfg);
+        let items: Vec<(BlockId, Matrix)> =
+            (0..32).map(|i| (BlockId::new(i, i), Matrix::full(40, 40, 1.0))).collect();
+        let part: Rc<dyn Partitioner> = Rc::new(HashPartitioner::new(32));
+        let rdd = c.parallelize("x", items, part);
+        let _ = rdd.map_values("work", |_, m| m.matmul(m));
+        c.virtual_now()
+    };
+    let t1 = run(1);
+    let t8 = run(8);
+    assert!(t8 < t1, "t1={t1} t8={t8}");
+}
+
+#[test]
+fn ut_partitioner_beats_hash_on_row_access_shuffle() {
+    // The paper's locality claim, reduced to its essence: broadcast a
+    // diagonal block to its whole block row; the UT packing keeps most of
+    // the row co-resident, the hash partitioner scatters it.
+    let q = 16;
+    let parts = ut_count(q) / 4;
+    let volume = |part: Rc<dyn Partitioner>| -> u64 {
+        let c = ctx(4);
+        let items: Vec<(BlockId, Matrix)> = (0..q)
+            .flat_map(|i| (i..q).map(move |j| (BlockId::new(i, j), Matrix::full(8, 8, 1.0))))
+            .collect();
+        let rdd = c.parallelize("g", items, part);
+        for piv in 0..q {
+            let diag = rdd.filter_blocks("diag", |id| id.i == piv && id.j == piv);
+            let msgs = diag.flat_map("bcast_row", |_, m| {
+                (piv..q).map(|j| (BlockId::new(piv, j), m.clone())).collect()
+            });
+            let _ = rdd.join_update("recv", msgs, |_, _, _| {});
+        }
+        c.total_shuffle_bytes()
+    };
+    let ut = volume(Rc::new(UpperTriangularPartitioner::new(q, parts)));
+    let hash = volume(Rc::new(HashPartitioner::new(parts)));
+    assert!(ut < hash, "ut={ut} hash={hash}");
+}
+
+#[test]
+fn memory_exhaustion_surfaces_as_error() {
+    let mut cfg = ClusterConfig::paper_testbed(2);
+    cfg.mem_per_node = 10_000; // 10 kB executors
+    let c = SparkContext::new(cfg);
+    let items: Vec<(BlockId, Matrix)> =
+        (0..4).map(|i| (BlockId::new(i, i), Matrix::zeros(64, 64))).collect();
+    let part: Rc<dyn Partitioner> = Rc::new(HashPartitioner::new(4));
+    let rdd = c.parallelize("big", items, part);
+    let err = rdd.persist("big").unwrap_err();
+    assert!(format!("{err:#}").contains("impossible"));
+}
+
+#[test]
+fn lineage_depth_drives_driver_cost() {
+    let mut cfg = ClusterConfig::local();
+    cfg.sched_overhead = 1e-3;
+    let run = |checkpoint: bool| -> f64 {
+        let c = SparkContext::new(cfg.clone());
+        let items: Vec<(BlockId, f64)> = (0..4).map(|i| (BlockId::new(i, 0), 0.0)).collect();
+        let part: Rc<dyn Partitioner> = Rc::new(HashPartitioner::new(4));
+        let mut rdd = c.parallelize("x", items, part);
+        for i in 0..50 {
+            rdd = rdd.map_values("step", |_, v| v + 1.0);
+            if checkpoint && i % 10 == 9 {
+                rdd.checkpoint();
+            }
+        }
+        c.virtual_now()
+    };
+    let with = run(true);
+    let without = run(false);
+    assert!(
+        with < without,
+        "checkpointing must bound driver overhead: with={with} without={without}"
+    );
+}
+
+#[test]
+fn broadcast_cost_scales_with_cluster() {
+    let small = {
+        let c = SparkContext::new(ClusterConfig::paper_testbed(2));
+        c.broadcast("q", 1 << 24);
+        c.virtual_now()
+    };
+    let large = {
+        let c = SparkContext::new(ClusterConfig::paper_testbed(16));
+        c.broadcast("q", 1 << 24);
+        c.virtual_now()
+    };
+    assert!(large > small);
+}

@@ -1,0 +1,121 @@
+//! Pipeline exactness: the distributed implementation must be *exact*
+//! Isomap (the paper's headline property), i.e. bit-comparable to the
+//! dense single-node textbook pipeline at every stage, for every block
+//! size, ragged or not, on every simulated cluster size.
+
+use isospark::backend::Backend;
+use isospark::baselines;
+use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::coordinator::{apsp, centering, dense_from_blocks, isomap, knn, num_blocks};
+use isospark::data::{clusters, emnist_synth, swiss_roll};
+use isospark::engine::SparkContext;
+use isospark::eval::procrustes;
+use isospark::kernels::centering::center_full_direct;
+
+fn geodesics_via_engine(
+    x: &isospark::linalg::Matrix,
+    k: usize,
+    b: usize,
+    cluster: &ClusterConfig,
+) -> isospark::linalg::Matrix {
+    let ctx = SparkContext::new(cluster.clone());
+    let cfg = IsomapConfig { k, block: b, ..Default::default() };
+    let be = Backend::Native;
+    let kg = knn::build(&ctx, x, &cfg, &be).unwrap();
+    let a = apsp::solve(kg.graph, kg.q, &cfg, &be).unwrap();
+    dense_from_blocks(&a, x.nrows(), b).map(|v| v.sqrt())
+}
+
+#[test]
+fn geodesics_exact_across_block_sizes() {
+    let ds = swiss_roll::euler_isometric(96, 1);
+    let want = {
+        let g = baselines::knn_graph_dense(&baselines::brute_knn(&ds.points, 8));
+        baselines::dijkstra_apsp(&g)
+    };
+    for b in [16usize, 24, 32, 96] {
+        let got = geodesics_via_engine(&ds.points, 8, b, &ClusterConfig::local());
+        assert!(got.max_abs_diff(&want) < 1e-9, "b={b}");
+    }
+}
+
+#[test]
+fn geodesics_exact_on_multinode_cluster() {
+    // Simulated topology must not alter numerics.
+    let ds = swiss_roll::euler_isometric(80, 2);
+    let a = geodesics_via_engine(&ds.points, 8, 16, &ClusterConfig::local());
+    let b = geodesics_via_engine(&ds.points, 8, 16, &ClusterConfig::paper_testbed(8));
+    assert_eq!(a.as_slice(), b.as_slice());
+}
+
+#[test]
+fn centered_matrix_matches_dense_formula() {
+    let ds = swiss_roll::euler_isometric(64, 3);
+    let ctx = SparkContext::new(ClusterConfig::local());
+    let cfg = IsomapConfig { k: 8, block: 16, ..Default::default() };
+    let be = Backend::Native;
+    let kg = knn::build(&ctx, &ds.points, &cfg, &be).unwrap();
+    let a = apsp::solve(kg.graph, kg.q, &cfg, &be).unwrap();
+    let dense_a = dense_from_blocks(&a, 64, 16);
+    let (centered, _) = centering::center(a, 64, 16, &be).unwrap();
+    let got = dense_from_blocks(&centered, 64, 16);
+    let mut want = dense_a;
+    center_full_direct(&mut want);
+    assert!(got.max_abs_diff(&want) < 1e-9);
+}
+
+#[test]
+fn full_pipeline_equals_dense_reference_various_datasets() {
+    for (name, x, k) in [
+        ("swiss", swiss_roll::euler_isometric(72, 4).points, 8),
+        ("scurve", swiss_roll::s_curve(72, 5).points, 8),
+        ("clusters", clusters::gaussian_clusters(72, 6, 2, 0.8, 6).points, 12),
+    ] {
+        let cfg = IsomapConfig { k, d: 2, block: 24, ..Default::default() };
+        let out = match isomap::run(&x, &cfg, &ClusterConfig::local()) {
+            Ok(o) => o,
+            Err(e) => panic!("{name}: {e:#}"),
+        };
+        if out.graph_components != 1 {
+            continue; // disconnected config not comparable
+        }
+        let reference = baselines::reference_isomap(&x, k, 2);
+        let err = procrustes(&reference.embedding, &out.embedding);
+        assert!(err < 1e-7, "{name}: procrustes vs dense reference = {err}");
+    }
+}
+
+#[test]
+fn emnist_synth_pipeline_runs_end_to_end() {
+    let ds = emnist_synth::generate(128, 8);
+    let cfg = IsomapConfig { k: 10, d: 2, block: 32, ..Default::default() };
+    let out = isomap::run(&ds.points, &cfg, &ClusterConfig::local()).unwrap();
+    assert_eq!(out.embedding.nrows(), 128);
+    assert!(out.embedding.as_slice().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn eigenvalue_scaling_matches_alg1() {
+    // Y columns must have norm sqrt(λ_i)·‖q_i‖ = sqrt(λ_i).
+    let ds = swiss_roll::euler_isometric(100, 9);
+    let cfg = IsomapConfig { k: 10, d: 2, block: 32, ..Default::default() };
+    let out = isomap::run(&ds.points, &cfg, &ClusterConfig::local()).unwrap();
+    for j in 0..2 {
+        let norm2: f64 = (0..100).map(|i| out.embedding[(i, j)].powi(2)).sum();
+        assert!(
+            (norm2 - out.eigenvalues[j]).abs() / out.eigenvalues[j] < 1e-6,
+            "column {j}: ‖y‖²={norm2} λ={}",
+            out.eigenvalues[j]
+        );
+    }
+}
+
+#[test]
+fn pipeline_deterministic() {
+    let ds = swiss_roll::euler_isometric(60, 10);
+    let cfg = IsomapConfig { k: 8, d: 2, block: 16, ..Default::default() };
+    let a = isomap::run(&ds.points, &cfg, &ClusterConfig::local()).unwrap();
+    let b = isomap::run(&ds.points, &cfg, &ClusterConfig::local()).unwrap();
+    assert_eq!(a.embedding.as_slice(), b.embedding.as_slice());
+    assert_eq!(a.eigen_iterations, b.eigen_iterations);
+}

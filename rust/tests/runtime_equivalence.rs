@@ -1,0 +1,164 @@
+//! PJRT backend ↔ native backend equivalence.
+//!
+//! Loads the AOT artifacts produced by `make artifacts` and asserts that
+//! every Pallas-kernel-backed executable agrees with the native Rust
+//! kernels to f64 precision, then runs the full pipeline on both backends
+//! and compares embeddings. Skips (with a loud message) when artifacts are
+//! missing so `cargo test` stays runnable before `make artifacts`.
+
+use isospark::backend::Backend;
+use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::coordinator::isomap;
+use isospark::data::swiss_roll;
+use isospark::kernels;
+use isospark::linalg::Matrix;
+use isospark::runtime::PjrtEngine;
+use isospark::util::Rng;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn engine() -> Option<PjrtEngine> {
+    match PjrtEngine::load(&artifacts_dir()) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("SKIP runtime_equivalence: {err:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn random(r: usize, c: usize, seed: u64, lo: f64, hi: f64) -> Matrix {
+    let mut rng = Rng::seed(seed);
+    let mut m = Matrix::zeros(r, c);
+    for i in 0..r {
+        for j in 0..c {
+            m[(i, j)] = rng.range(lo, hi);
+        }
+    }
+    m
+}
+
+/// Random graph block with infinities (the APSP no-edge marker).
+fn random_graph(b: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seed(seed);
+    let mut m = Matrix::full(b, b, f64::INFINITY);
+    for i in 0..b {
+        m[(i, i)] = 0.0;
+        for j in 0..b {
+            if i != j && rng.f64() < 0.4 {
+                m[(i, j)] = rng.range(0.1, 5.0);
+            }
+        }
+    }
+    m
+}
+
+#[test]
+fn minplus_matches_native() {
+    let Some(rt) = engine() else { return };
+    for b in [32usize, 64, 128] {
+        let a = random_graph(b, 1);
+        let c = random_graph(b, 2);
+        let got = rt.minplus(&a, &c).expect("minplus artifact");
+        let want = kernels::minplus::minplus(&a, &c);
+        for (x, y) in got.as_slice().iter().zip(want.as_slice()) {
+            if x.is_infinite() || y.is_infinite() {
+                assert!(x.is_infinite() && y.is_infinite());
+            } else {
+                assert!((x - y).abs() < 1e-12, "b={b}: {x} vs {y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn fw_matches_native() {
+    let Some(rt) = engine() else { return };
+    for b in [32usize, 64] {
+        let g = random_graph(b, 3);
+        let got = rt.floyd_warshall(&g).expect("fw artifact");
+        let want = kernels::floyd_warshall::floyd_warshall(&g);
+        for (x, y) in got.as_slice().iter().zip(want.as_slice()) {
+            if x.is_infinite() || y.is_infinite() {
+                assert!(x.is_infinite() && y.is_infinite());
+            } else {
+                assert!((x - y).abs() < 1e-10, "b={b}: {x} vs {y}");
+            }
+        }
+    }
+}
+
+#[test]
+fn dist_matches_native() {
+    let Some(rt) = engine() else { return };
+    for (b, dim) in [(32usize, 3usize), (64, 784), (128, 16)] {
+        let xi = random(b, dim, 5, -3.0, 3.0);
+        let xj = random(b, dim, 6, -3.0, 3.0);
+        let got = rt.dist_block(&xi, &xj).expect("dist artifact");
+        let want = kernels::sqdist::dist_block(&xi, &xj);
+        assert!(got.max_abs_diff(&want) < 1e-9, "b={b} dim={dim}");
+    }
+}
+
+#[test]
+fn center_matches_native() {
+    let Some(rt) = engine() else { return };
+    let b = 64;
+    let blk = random(b, b, 7, 0.0, 50.0);
+    let mu_r: Vec<f64> = (0..b).map(|i| i as f64 * 0.1).collect();
+    let mu_c: Vec<f64> = (0..b).map(|i| 3.0 - i as f64 * 0.05).collect();
+    let got = rt.center_block(&blk, &mu_r, &mu_c, 1.75).expect("center artifact");
+    let mut want = blk.clone();
+    kernels::centering::center_block(&mut want, &mu_r, &mu_c, 1.75);
+    assert!(got.max_abs_diff(&want) < 1e-12);
+}
+
+#[test]
+fn gemm_matches_native_with_padding() {
+    let Some(rt) = engine() else { return };
+    let b = 64;
+    let a = random(b, b, 8, -2.0, 2.0);
+    for d in [2usize, 3, 8] {
+        let q = random(b, d, 9, -1.0, 1.0);
+        let got = rt.gemm(&a, &q).expect("gemm artifact");
+        let mut want = Matrix::zeros(b, d);
+        kernels::matvec::gemm_acc(&a, &q, &mut want);
+        assert!(got.max_abs_diff(&want) < 1e-11, "d={d}");
+
+        let got_t = rt.gemm_t(&a, &q).expect("gemmt artifact");
+        let mut want_t = Matrix::zeros(b, d);
+        kernels::matvec::gemm_t_acc(&a, &q, &mut want_t);
+        assert!(got_t.max_abs_diff(&want_t) < 1e-11, "t d={d}");
+    }
+}
+
+#[test]
+fn unsupported_shapes_error_cleanly() {
+    let Some(rt) = engine() else { return };
+    // Ragged block: no artifact — must Err (backend falls back to native).
+    assert!(rt.minplus(&Matrix::zeros(33, 33), &Matrix::zeros(33, 33)).is_err());
+    assert!(rt.dist_block(&Matrix::zeros(32, 5), &Matrix::zeros(32, 5)).is_err());
+}
+
+#[test]
+fn full_pipeline_pjrt_equals_native() {
+    if engine().is_none() {
+        return;
+    }
+    let backend = Backend::pjrt_from_dir(&artifacts_dir()).expect("pjrt backend");
+    // n divisible by b so the hot path stays on PJRT end-to-end.
+    let ds = swiss_roll::euler_isometric(256, 41);
+    let cfg = IsomapConfig { k: 10, d: 2, block: 64, ..Default::default() };
+    let cl = ClusterConfig::local();
+    let native = isomap::run_with(&ds.points, &cfg, &cl, &Backend::Native).unwrap();
+    let pjrt = isomap::run_with(&ds.points, &cfg, &cl, &backend).unwrap();
+    assert_eq!(native.embedding.nrows(), pjrt.embedding.nrows());
+    let diff = native.embedding.max_abs_diff(&pjrt.embedding);
+    assert!(diff < 1e-6, "pjrt vs native embedding max diff = {diff}");
+    for (a, b) in native.eigenvalues.iter().zip(&pjrt.eigenvalues) {
+        assert!((a - b).abs() / a.abs().max(1.0) < 1e-9);
+    }
+}
