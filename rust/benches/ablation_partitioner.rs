@@ -13,7 +13,7 @@ use isospark::engine::partitioner::{GridPartitioner, HashPartitioner, UpperTrian
 use isospark::engine::{Partitioner, SparkContext};
 use isospark::linalg::Matrix;
 use isospark::util::Rng;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn random_graph(n: usize, seed: u64) -> Matrix {
     let mut rng = Rng::seed(seed);
@@ -45,16 +45,16 @@ fn main() {
     // default (hash).
     let parts = q * (q + 1) / 2 / 4;
 
-    let cases: Vec<(&str, Rc<dyn Partitioner>)> = vec![
-        ("upper-triangular", Rc::new(UpperTriangularPartitioner::new(q, parts))),
-        ("grid", Rc::new(GridPartitioner::new(q, parts))),
-        ("hash", Rc::new(HashPartitioner::new(parts))),
+    let cases: Vec<(&str, Arc<dyn Partitioner>)> = vec![
+        ("upper-triangular", Arc::new(UpperTriangularPartitioner::new(q, parts))),
+        ("grid", Arc::new(GridPartitioner::new(q, parts))),
+        ("hash", Arc::new(HashPartitioner::new(parts))),
     ];
 
     println!("== APSP shuffle volume & virtual time by partitioner (n={n}, b={b}, 4 nodes) ==");
     for (name, part) in cases {
         let ctx = SparkContext::new(cluster.clone());
-        let rdd = ctx.parallelize("g", blocks_from_dense(&g, b), Rc::clone(&part));
+        let rdd = ctx.parallelize("g", blocks_from_dense(&g, b), Arc::clone(&part));
         let sw = isospark::util::Stopwatch::start();
         let out = apsp::solve(rdd, q, &cfg, &Backend::Native).unwrap();
         let wall = sw.secs();

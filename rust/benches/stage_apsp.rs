@@ -14,8 +14,9 @@ use isospark::engine::partitioner::UpperTriangularPartitioner;
 use isospark::engine::SparkContext;
 use isospark::kernels::minplus;
 use isospark::linalg::Matrix;
+use isospark::util::json::Json;
 use isospark::util::Rng;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn random_graph(n: usize, seed: u64) -> Matrix {
     let mut rng = Rng::seed(seed);
@@ -73,13 +74,62 @@ fn main() {
         let cfg = IsomapConfig { block: b, ..Default::default() };
         bench.case(&format!("apsp:engine:n{n}:b{b}"), || {
             let ctx = SparkContext::new(ClusterConfig::local());
-            let part = Rc::new(UpperTriangularPartitioner::new(q, q))
-                as Rc<dyn isospark::engine::Partitioner>;
+            let part = Arc::new(UpperTriangularPartitioner::new(q, q))
+                as Arc<dyn isospark::engine::Partitioner>;
             let rdd = ctx.parallelize("g", blocks_from_dense(&g, b), part);
             let out = apsp::solve(rdd, q, &cfg, &Backend::Native).unwrap();
             assert_eq!(out.len(), q * (q + 1) / 2);
         });
     }
+
+    // Multi-core block executor: sequential (parallelism = 1) vs one
+    // worker per core on the same APSP workload. Numerics are bit-identical
+    // (see tests/determinism_parallel.rs); only wall-clock moves. Stage
+    // wall-times land in BENCH_apsp.json so future PRs have a perf
+    // trajectory to compare against.
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    println!("\n== multi-core block executor (APSP wall-clock, {cores} cores) ==");
+    let mut scaling_cases: Vec<Json> = Vec::new();
+    for n in [512usize, 1024, 2048] {
+        let b = 256usize;
+        let g = random_graph(n, 7);
+        let q = num_blocks(n, b);
+        let cfg = IsomapConfig { block: b, ..Default::default() };
+        let mut wall = [0.0f64; 2];
+        for (slot, threads) in [(0usize, 1usize), (1, cores)] {
+            // warmup = 1 so the first-touch page-fault/allocator cost does
+            // not land on the sequential case and bias the speedup record.
+            let mut run = Bencher::with(12.0, 2, 1);
+            wall[slot] = run.case(&format!("apsp:engine:n{n}:b{b}:threads{threads}"), || {
+                let ctx = SparkContext::new(ClusterConfig {
+                    parallelism: threads,
+                    ..ClusterConfig::local()
+                });
+                let part = Arc::new(UpperTriangularPartitioner::new(q, q))
+                    as Arc<dyn isospark::engine::Partitioner>;
+                let rdd = ctx.parallelize("g", blocks_from_dense(&g, b), part);
+                let out = apsp::solve(rdd, q, &cfg, &Backend::Native).unwrap();
+                assert_eq!(out.len(), q * (q + 1) / 2);
+            });
+        }
+        let speedup = wall[0] / wall[1];
+        bench.report_value(&format!("apsp:speedup:n{n}:b{b}:x{cores}threads"), speedup, "x");
+        scaling_cases.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("b", Json::num(b as f64)),
+            ("seq_secs", Json::num(wall[0])),
+            ("par_secs", Json::num(wall[1])),
+            ("threads", Json::num(cores as f64)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+    let bench_json = Json::obj(vec![
+        ("bench", Json::str("stage_apsp".to_string())),
+        ("cores", Json::num(cores as f64)),
+        ("cases", Json::arr(scaling_cases)),
+    ]);
+    std::fs::write("BENCH_apsp.json", bench_json.to_string()).ok();
+    println!("(stage wall-times written to BENCH_apsp.json)");
 
     // Checkpoint-cadence ablation on a simulated 4-node cluster: virtual
     // time as a function of cadence (0 = never). The paper found 10 best.

@@ -11,7 +11,7 @@ use isospark::engine::partitioner::UpperTriangularPartitioner;
 use isospark::engine::SparkContext;
 use isospark::linalg::{qr::qr_thin, Matrix};
 use isospark::util::Rng;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn random_symmetric(n: usize, seed: u64) -> Matrix {
     let mut rng = Rng::seed(seed);
@@ -51,8 +51,8 @@ fn main() {
         let q = num_blocks(n, b);
         bench.case(&format!("eigen:power:n{n}:b{b}:d{d}"), || {
             let ctx = SparkContext::new(ClusterConfig::local());
-            let part = Rc::new(UpperTriangularPartitioner::new(q, q))
-                as Rc<dyn isospark::engine::Partitioner>;
+            let part = Arc::new(UpperTriangularPartitioner::new(q, q))
+                as Arc<dyn isospark::engine::Partitioner>;
             let rdd = ctx.parallelize("a", blocks_from_dense(&m, b), part);
             let out = eigen::simultaneous_power_iteration(
                 &rdd,

@@ -7,12 +7,15 @@
 //! asserts the two agree to tight tolerances; benches compare their
 //! throughput (ablation d: BLAS-offload vs interpreter, mirroring the
 //! paper's NumPy→MKL offload argument).
+//!
+//! Backends are `Send + Sync`: the multi-core stage executor invokes the
+//! same backend concurrently from every worker thread.
 
 use crate::kernels;
 use crate::linalg::Matrix;
 use crate::runtime::PjrtEngine;
 use anyhow::Result;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Which engine executes block math.
 #[derive(Clone)]
@@ -20,13 +23,13 @@ pub enum Backend {
     /// Pure-Rust kernels (always available; also the perf baseline).
     Native,
     /// AOT Pallas/JAX artifacts via the PJRT CPU client.
-    Pjrt(Rc<PjrtEngine>),
+    Pjrt(Arc<PjrtEngine>),
 }
 
 impl Backend {
     /// Load the PJRT backend from an artifact directory (`make artifacts`).
     pub fn pjrt_from_dir(dir: &std::path::Path) -> Result<Backend> {
-        Ok(Backend::Pjrt(Rc::new(PjrtEngine::load(dir)?)))
+        Ok(Backend::Pjrt(Arc::new(PjrtEngine::load(dir)?)))
     }
 
     /// Human-readable name.
@@ -56,6 +59,37 @@ impl Backend {
                     kernels::minplus::elementwise_min_into(dst, &c);
                 } else {
                     kernels::minplus::minplus_into(a, b, dst);
+                }
+            }
+        }
+    }
+
+    /// `dst = dst ⊕ (a ⊗ dst)` — the APSP Phase-2 *row* update
+    /// `A_{IJ} ← A_{IJ} ⊕ (D ⊗ A_{IJ})` without allocating a copy of the
+    /// old block (the native kernel stages it in per-thread scratch).
+    pub fn minplus_left_inplace(&self, a: &Matrix, dst: &mut Matrix) {
+        match self {
+            Backend::Native => kernels::minplus::minplus_left_inplace(a, dst),
+            Backend::Pjrt(rt) => {
+                if let Ok(c) = rt.minplus(a, dst) {
+                    kernels::minplus::elementwise_min_into(dst, &c);
+                } else {
+                    kernels::minplus::minplus_left_inplace(a, dst);
+                }
+            }
+        }
+    }
+
+    /// `dst = dst ⊕ (dst ⊗ b)` — the APSP Phase-2 *column* update
+    /// `A_{ÎI} ← A_{ÎI} ⊕ (A_{ÎI} ⊗ D)`, same scratch-reuse strategy.
+    pub fn minplus_right_inplace(&self, b: &Matrix, dst: &mut Matrix) {
+        match self {
+            Backend::Native => kernels::minplus::minplus_right_inplace(b, dst),
+            Backend::Pjrt(rt) => {
+                if let Ok(c) = rt.minplus(dst, b) {
+                    kernels::minplus::elementwise_min_into(dst, &c);
+                } else {
+                    kernels::minplus::minplus_right_inplace(b, dst);
                 }
             }
         }
@@ -137,6 +171,12 @@ mod tests {
     }
 
     #[test]
+    fn backend_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Backend>();
+    }
+
+    #[test]
     fn native_backend_smoke() {
         let be = Backend::Native;
         assert_eq!(be.name(), "native");
@@ -151,5 +191,27 @@ mod tests {
         let mut out = Matrix::zeros(4, 2);
         be.gemm_acc(&a, &random(4, 2, 4), &mut out);
         assert!(out.fro_norm() > 0.0);
+    }
+
+    #[test]
+    fn inplace_updates_match_two_step_form() {
+        let be = Backend::Native;
+        let d = random(6, 6, 10);
+        let a0 = random(6, 6, 11);
+
+        // Left: A ← A ⊕ (D ⊗ A) vs explicit old-copy formulation.
+        let mut left = a0.clone();
+        be.minplus_left_inplace(&d, &mut left);
+        let mut want = a0.clone();
+        let old = a0.clone();
+        be.minplus_into(&d, &old, &mut want);
+        assert_eq!(left.as_slice(), want.as_slice());
+
+        // Right: A ← A ⊕ (A ⊗ D).
+        let mut right = a0.clone();
+        be.minplus_right_inplace(&d, &mut right);
+        let mut want = a0.clone();
+        be.minplus_into(&old, &d, &mut want);
+        assert_eq!(right.as_slice(), want.as_slice());
     }
 }

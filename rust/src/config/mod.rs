@@ -82,6 +82,16 @@ pub struct ClusterConfig {
     /// Multiplier from measured single-core seconds on *this* machine to
     /// virtual seconds on one simulated core (calibration knob).
     pub compute_scale: f64,
+    /// OS worker threads executing real block tasks — the *physical*
+    /// executor pool, independent of the simulated `nodes × cores_per_node`
+    /// topology. `0` = use all available cores. Numerical results, record
+    /// order, lineage/metrics structure and shuffle bytes are bit-identical
+    /// for any value (enforced by the determinism test suite). Virtual-time
+    /// figures are replayed from *measured* task durations, so they vary
+    /// run to run as they always have — and core contention under a large
+    /// pool can inflate them; use `parallelism = 1` (or `compute_scale`
+    /// recalibration) when reproducing calibrated Table-I-style numbers.
+    pub parallelism: usize,
 }
 
 impl ClusterConfig {
@@ -97,6 +107,7 @@ impl ClusterConfig {
             mem_per_node: u64::MAX,
             disk_bandwidth: f64::INFINITY,
             compute_scale: 1.0,
+            parallelism: 1,
         }
     }
 
@@ -112,6 +123,7 @@ impl ClusterConfig {
             mem_per_node: 56 * (1u64 << 30),
             disk_bandwidth: 100.0e6, // SATA HDD sequential
             compute_scale: 1.0,
+            parallelism: 0, // physical pool: all available cores
         }
     }
 
@@ -200,6 +212,7 @@ impl RawConfig {
             mem_per_node: self.typed("cluster", "mem_per_node", d.mem_per_node)?,
             disk_bandwidth: self.typed("cluster", "disk_bandwidth", d.disk_bandwidth)?,
             compute_scale: self.typed("cluster", "compute_scale", d.compute_scale)?,
+            parallelism: self.typed("cluster", "parallelism", d.parallelism)?,
         })
     }
 }
@@ -260,6 +273,14 @@ mod tests {
         let c = ClusterConfig::local();
         assert_eq!(c.nodes, 1);
         assert_eq!(c.net_latency, 0.0);
+        assert_eq!(c.parallelism, 1); // local correctness runs stay sequential
         assert_eq!(ClusterConfig::paper_testbed(25).total_cores(), 500);
+        assert_eq!(ClusterConfig::paper_testbed(25).parallelism, 0); // auto
+    }
+
+    #[test]
+    fn parallelism_key_parses() {
+        let raw = RawConfig::parse("[cluster]\nnodes = 2\nparallelism = 6\n").unwrap();
+        assert_eq!(raw.cluster().unwrap().parallelism, 6);
     }
 }

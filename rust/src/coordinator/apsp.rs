@@ -13,7 +13,13 @@
 //!
 //! Every data movement is a keyed shuffle (`flat_map` + `join_update`),
 //! never a collect/broadcast through the driver — the paper found that
-//! decisive on Spark. Lineage is checkpointed every
+//! decisive on Spark. Replication payloads are `Arc<Matrix>`: fanning the
+//! pivot out to `O(q)` destinations bumps a refcount per destination
+//! instead of deep-copying a `b×b` block each time (the simulated network
+//! still charges full payload bytes per message), and the `join_update`
+//! phases mutate blocks copy-on-write — Phase 2/3 update blocks in place
+//! with the scratch-reusing in-place min-plus kernels, and blocks a phase
+//! leaves untouched are never cloned at all. Lineage is checkpointed every
 //! `checkpoint_every` iterations (paper: 10) to keep the driver model's
 //! scheduling overhead bounded.
 
@@ -22,6 +28,7 @@ use crate::config::IsomapConfig;
 use crate::engine::{BlockId, BlockRdd};
 use crate::linalg::Matrix;
 use anyhow::Result;
+use std::sync::Arc;
 
 /// Left operand marker (`A_RI`) in Phase-3 messages.
 const LEFT: usize = 0;
@@ -48,30 +55,28 @@ pub fn solve(
                 backend.fw_inplace(&mut d);
                 d
             });
-        let diag_msgs = diag.flat_map(&format!("apsp:p1_emit[{piv}]"), |_, d| {
-            let mut out = vec![(BlockId::new(piv, piv), d.clone())];
+        let diag_msgs = diag.flat_map_arc(&format!("apsp:p1_emit[{piv}]"), |_, d| {
+            let mut out = vec![(BlockId::new(piv, piv), Arc::clone(d))];
             for j in (piv + 1)..q {
-                out.push((BlockId::new(piv, j), d.clone()));
+                out.push((BlockId::new(piv, j), Arc::clone(d)));
             }
             for i in 0..piv {
-                out.push((BlockId::new(i, piv), d.clone()));
+                out.push((BlockId::new(i, piv), Arc::clone(d)));
             }
             out
         });
 
         // ---- Phase 2: pivot-row/column update (and diagonal swap). ----
         g = g.join_update(&format!("apsp:p2[{piv}]"), diag_msgs, |id, blk, ds| {
-            let Some(d) = ds.first() else { return }; // not in row/col piv
+            let Some(d) = ds.into_iter().next() else { return }; // not in row/col piv
             if id.i == piv && id.j == piv {
-                *blk = d.clone();
+                blk.set_shared(d); // zero-copy: adopt the solved pivot
             } else if id.i == piv {
                 // Row segment A_{piv,J}: left-multiply by the pivot.
-                let old = blk.clone();
-                backend.minplus_into(d, &old, blk);
+                backend.minplus_left_inplace(&d, blk.make_mut());
             } else {
                 // Column segment A_{Î,piv}: right-multiply by the pivot.
-                let old = blk.clone();
-                backend.minplus_into(&old, d, blk);
+                backend.minplus_right_inplace(&d, blk.make_mut());
             }
         });
 
@@ -83,32 +88,32 @@ pub fn solve(
         let p2 = g.filter_blocks(&format!("apsp:p2_filter[{piv}]"), |id| {
             (id.i == piv) ^ (id.j == piv)
         });
-        let p3_msgs = p2.flat_map(&format!("apsp:p2_emit[{piv}]"), |id, m| {
+        let p3_msgs = p2.flat_map_arc(&format!("apsp:p2_emit[{piv}]"), |id, m| {
             let mut out = Vec::new();
             if id.i == piv {
                 let jj = id.j; // row segment A_{piv,jj}
                 for r in 0..=jj {
                     if r != piv {
-                        out.push((BlockId::new(r, jj), (RIGHT, m.clone())));
+                        out.push((BlockId::new(r, jj), (RIGHT, Arc::clone(m))));
                     }
                 }
-                let t = m.transpose(); // A_{jj,piv}
+                let t = Arc::new(m.transpose()); // A_{jj,piv}
                 for c in jj..q {
                     if c != piv {
-                        out.push((BlockId::new(jj, c), (LEFT, t.clone())));
+                        out.push((BlockId::new(jj, c), (LEFT, Arc::clone(&t))));
                     }
                 }
             } else {
                 let ii = id.i; // column segment A_{ii,piv}
                 for c in ii..q {
                     if c != piv {
-                        out.push((BlockId::new(ii, c), (LEFT, m.clone())));
+                        out.push((BlockId::new(ii, c), (LEFT, Arc::clone(m))));
                     }
                 }
-                let t = m.transpose(); // A_{piv,ii}
+                let t = Arc::new(m.transpose()); // A_{piv,ii}
                 for r in 0..=ii {
                     if r != piv {
-                        out.push((BlockId::new(r, ii), (RIGHT, t.clone())));
+                        out.push((BlockId::new(r, ii), (RIGHT, Arc::clone(&t))));
                     }
                 }
             }
@@ -124,7 +129,7 @@ pub fn solve(
             let left = msgs.iter().find(|(role, _)| *role == LEFT);
             let right = msgs.iter().find(|(role, _)| *role == RIGHT);
             if let (Some((_, l)), Some((_, r))) = (left, right) {
-                backend.minplus_into(l, r, blk);
+                backend.minplus_into(l, r, blk.make_mut());
             }
         });
 

@@ -122,7 +122,7 @@ mod tests {
     use crate::engine::SparkContext;
     use crate::linalg::jacobi;
     use crate::util::Rng;
-    use std::rc::Rc;
+    use std::sync::Arc;
 
     /// Symmetric matrix with a known, well-separated spectrum
     /// (λ_i = 100/1.5^i), split into UT blocks on a local context.
@@ -141,7 +141,7 @@ mod tests {
         }
         let m = qq.matmul(&lam).matmul(&qq.transpose());
         let q = n.div_ceil(b);
-        let part = Rc::new(UpperTriangularPartitioner::new(q, q));
+        let part = Arc::new(UpperTriangularPartitioner::new(q, q));
         let ctx = SparkContext::new(ClusterConfig::local());
         let mut blocks = Vec::new();
         for i in 0..q {

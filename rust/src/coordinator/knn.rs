@@ -16,7 +16,7 @@ use crate::engine::{BlockId, BlockRdd, SparkContext};
 use crate::kernels::kselect::{merge_topk, row_topk, Neighbor};
 use crate::linalg::Matrix;
 use anyhow::Result;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Output of the kNN stage.
 pub struct KnnGraph {
@@ -36,8 +36,8 @@ pub fn build(ctx: &SparkContext, x: &Matrix, cfg: &IsomapConfig, backend: &Backe
     let b = cfg.block;
     let q = num_blocks(n, b);
     let parts = default_partitions(q, ctx.cluster().total_cores());
-    let part: Rc<dyn crate::engine::Partitioner> =
-        Rc::new(UpperTriangularPartitioner::new(q, parts));
+    let part: Arc<dyn crate::engine::Partitioner> =
+        Arc::new(UpperTriangularPartitioner::new(q, parts));
 
     // 1-D decomposition: block I holds rows [I·b, min((I+1)b, n)).
     let point_blocks: Vec<(BlockId, Matrix)> = (0..q)
@@ -46,24 +46,26 @@ pub fn build(ctx: &SparkContext, x: &Matrix, cfg: &IsomapConfig, backend: &Backe
             (BlockId::new(i, i), x.slice(s, e, 0, x.ncols()))
         })
         .collect();
-    let points = ctx.parallelize("knn:points", point_blocks, Rc::clone(&part));
+    let points = ctx.parallelize("knn:points", point_blocks, Arc::clone(&part));
 
     // Pair enumeration: block I is the left member of (I,J) for J ≥ I and
-    // the right member of (K,I) for K < I. Data replication (q copies of
-    // each block) deliberately exposes the parallelism of the distance
-    // computation, as in the paper.
-    let pairs = points.flat_map("knn:pairs", |id, xi| {
+    // the right member of (K,I) for K < I. Logical replication (q copies
+    // of each block) deliberately exposes the parallelism of the distance
+    // computation, as in the paper — but the q copies are `Arc` handles to
+    // one buffer, so the fan-out is a refcount bump per destination while
+    // the simulated shuffle still pays full per-copy bytes.
+    let pairs = points.flat_map_arc("knn:pairs", |id, xi| {
         let i = id.i;
         let mut out = Vec::with_capacity(q);
         for j in i..q {
-            out.push((BlockId::new(i, j), (i, xi.clone())));
+            out.push((BlockId::new(i, j), (i, Arc::clone(xi))));
         }
         for k in 0..i {
-            out.push((BlockId::new(k, i), (i, xi.clone())));
+            out.push((BlockId::new(k, i), (i, Arc::clone(xi))));
         }
         out
     });
-    let grouped = pairs.group_by_key("knn:pairgroup", Rc::clone(&part));
+    let grouped = pairs.group_by_key("knn:pairgroup", Arc::clone(&part));
 
     // Distance blocks M^{(I,J)} = ‖x_i − x_j‖₂ (BLAS-offloaded in the
     // paper; Pallas/native kernel here).
@@ -103,7 +105,7 @@ pub fn build(ctx: &SparkContext, x: &Matrix, cfg: &IsomapConfig, backend: &Backe
         out
     });
     let knn_lists =
-        local.reduce_by_key("knn:topk_merge", Rc::clone(&part), |a, c| merge_topk(k, &[a, c]));
+        local.reduce_by_key("knn:topk_merge", Arc::clone(&part), |a, c| merge_topk(k, &[a, c]));
 
     // Collect the (small) global lists for connectivity/eval use.
     let collected = knn_lists.collect();
@@ -131,6 +133,9 @@ pub fn build(ctx: &SparkContext, x: &Matrix, cfg: &IsomapConfig, backend: &Backe
         out
     });
     let graph = m.join_update("knn:graph_fill", edges, |id, blk, es| {
+        // Every block is rewritten wholesale; M's buffers are uniquely
+        // held here, so make_mut recycles them in place without a copy.
+        let blk = blk.make_mut();
         for v in blk.as_mut_slice() {
             *v = f64::INFINITY;
         }

@@ -78,6 +78,16 @@ impl<T: HasBytes> HasBytes for Option<T> {
     }
 }
 
+/// A shared payload still *serializes* at full size: zero-copy is a local
+/// execution optimization, so shuffle/collect/broadcast accounting (and
+/// therefore every simulated cluster number) is identical whether a block
+/// is sent by value or by `Arc`.
+impl<T: HasBytes> HasBytes for std::sync::Arc<T> {
+    fn nbytes(&self) -> u64 {
+        self.as_ref().nbytes()
+    }
+}
+
 impl<A: HasBytes, B: HasBytes> HasBytes for (A, B) {
     fn nbytes(&self) -> u64 {
         self.0.nbytes() + self.1.nbytes()
@@ -112,5 +122,8 @@ mod tests {
         assert_eq!(v.nbytes(), 16 + 80);
         assert_eq!(Some(3.0f64).nbytes(), 8);
         assert_eq!(None::<f64>.nbytes(), 0);
+        // Arc looks through to the payload: wire size, not pointer size.
+        let m2 = std::sync::Arc::new(Matrix::zeros(4, 8));
+        assert_eq!(m2.nbytes(), 16 + 8 * 32);
     }
 }

@@ -3,8 +3,11 @@
 //! Owns the simulated cluster (virtual clock + network model), the metrics
 //! sink, the lineage DAG, and the per-node resident-memory model. All
 //! transformations on [`super::rdd::BlockRdd`] report back through this
-//! context. Execution is eager and single-process (every task really runs,
-//! bit-exactly); *time* is simulated — see DESIGN.md §3.
+//! context. Execution is eager and in-process (every task really runs,
+//! bit-exactly, on the worker-thread pool); *time* is simulated — see
+//! DESIGN.md §3. The handle is `Send + Sync` (`Arc<Mutex<…>>`) so stage
+//! workers can share it, though the driver-side bookkeeping itself is
+//! always performed between stages, never inside task closures.
 
 use super::clock::VirtualClock;
 use super::lineage::LineageGraph;
@@ -12,9 +15,8 @@ use super::metrics::{Metrics, StageMetrics};
 use super::network::{NetworkModel, Traffic};
 use crate::config::ClusterConfig;
 use anyhow::{bail, Result};
-use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 /// Extra driver scheduling cost per unit of lineage depth (fraction of the
 /// base per-task overhead). Models the paper's observation that unbounded
@@ -31,10 +33,10 @@ pub(crate) struct CtxState {
     resident: BTreeMap<String, Vec<u64>>,
 }
 
-/// Cheaply cloneable handle to the driver state.
+/// Cheaply cloneable, thread-safe handle to the driver state.
 #[derive(Clone)]
 pub struct SparkContext {
-    pub(crate) st: Rc<RefCell<CtxState>>,
+    pub(crate) st: Arc<Mutex<CtxState>>,
 }
 
 impl SparkContext {
@@ -43,7 +45,7 @@ impl SparkContext {
         let clock = VirtualClock::new(cluster.nodes, cluster.cores_per_node);
         let net = NetworkModel::new(&cluster);
         Self {
-            st: Rc::new(RefCell::new(CtxState {
+            st: Arc::new(Mutex::new(CtxState {
                 cluster,
                 clock,
                 net,
@@ -54,84 +56,112 @@ impl SparkContext {
         }
     }
 
+    fn lock(&self) -> MutexGuard<'_, CtxState> {
+        self.st.lock().expect("engine state poisoned (a task panicked)")
+    }
+
     /// Executor node hosting a partition. Contiguous *ranges* of partition
     /// ids map to the same executor — Spark's locality-aware scheduling
     /// keeps consecutively-created partitions together, and this is the
     /// placement the paper's upper-triangular packing (Fig. 2) relies on:
     /// neighboring blocks → neighboring partitions → same executor.
     pub fn node_of(&self, partition: usize, num_partitions: usize) -> usize {
-        let nodes = self.st.borrow().cluster.nodes;
+        let nodes = self.lock().cluster.nodes;
         (partition * nodes / num_partitions.max(1)).min(nodes - 1)
     }
 
     /// Number of executor nodes.
     pub fn nodes(&self) -> usize {
-        self.st.borrow().cluster.nodes
+        self.lock().cluster.nodes
+    }
+
+    /// Resolved worker-thread count for real block-task execution:
+    /// [`ClusterConfig::parallelism`], with 0 meaning "all available
+    /// cores". Never affects results; virtual time stays measurement-based
+    /// (see the `parallelism` field docs for the contention caveat).
+    pub fn parallelism(&self) -> usize {
+        let p = self.lock().cluster.parallelism;
+        if p == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            p
+        }
     }
 
     /// Cluster configuration snapshot.
     pub fn cluster(&self) -> ClusterConfig {
-        self.st.borrow().cluster.clone()
+        self.lock().cluster.clone()
     }
 
     /// Current virtual time (seconds since run start).
     pub fn virtual_now(&self) -> f64 {
-        self.st.borrow().clock.now()
+        self.lock().clock.now()
     }
 
     /// Borrow the metrics (cloned snapshot report).
     pub fn metrics_report(&self, prefixes: &[&str]) -> String {
-        self.st.borrow().metrics.report(prefixes)
+        self.lock().metrics.report(prefixes)
     }
 
     /// Total bytes shuffled so far.
     pub fn total_shuffle_bytes(&self) -> u64 {
-        self.st.borrow().metrics.total_shuffle_bytes()
+        self.lock().metrics.total_shuffle_bytes()
     }
 
-    /// Total measured single-core compute seconds so far.
+    /// Total measured compute seconds so far (sum over tasks).
     pub fn total_compute_real(&self) -> f64 {
-        self.st.borrow().metrics.total_compute_real()
+        self.lock().metrics.total_compute_real()
     }
 
     /// Stage-level metrics aggregated by prefix.
     pub fn stage_aggregate(&self, prefix: &str) -> StageMetrics {
-        self.st.borrow().metrics.by_prefix(prefix)
+        self.lock().metrics.by_prefix(prefix)
+    }
+
+    /// Number of stages recorded so far (determinism suite: must not
+    /// depend on the worker pool size).
+    pub fn stage_count(&self) -> usize {
+        self.lock().metrics.stages.len()
     }
 
     /// Lineage DAG dump for diagnostics.
     pub fn lineage_dump(&self) -> String {
-        self.st.borrow().lineage.dump()
+        self.lock().lineage.dump()
     }
 
     /// Lineage depth of an RDD.
     pub fn lineage_depth(&self, id: usize) -> usize {
-        self.st.borrow().lineage.depth(id)
+        self.lock().lineage.depth(id)
+    }
+
+    /// Number of lineage nodes recorded so far.
+    pub fn lineage_len(&self) -> usize {
+        self.lock().lineage.len()
     }
 
     /// Size of an RDD's ancestry (transformations replayed on recovery).
     pub fn lineage_ancestry(&self, id: usize) -> usize {
-        self.st.borrow().lineage.ancestry_size(id)
+        self.lock().lineage.ancestry_size(id)
     }
 
     /// Total tasks executed so far.
     pub fn total_tasks(&self) -> usize {
-        self.st.borrow().metrics.total_tasks()
+        self.lock().metrics.total_tasks()
     }
 
     /// Advance the virtual clock by a serial charge (fault recovery).
     pub(crate) fn advance_clock(&self, dt: f64) {
-        self.st.borrow_mut().clock.advance(dt);
+        self.lock().clock.advance(dt);
     }
 
     pub(crate) fn lineage_add(&self, op: &str, parents: &[usize]) -> usize {
-        self.st.borrow_mut().lineage.add(op, parents)
+        self.lock().lineage.add(op, parents)
     }
 
     /// Charge the driver for scheduling `ntasks` tasks of an RDD at the
     /// given lineage depth. Serial on the critical path.
     pub(crate) fn charge_driver(&self, name: &str, ntasks: usize, depth: usize) -> f64 {
-        let mut st = self.st.borrow_mut();
+        let mut st = self.lock();
         let per_task = st.cluster.sched_overhead * (1.0 + LINEAGE_OVERHEAD_FACTOR * depth as f64);
         let dt = per_task * ntasks as f64;
         st.clock.advance(dt);
@@ -141,7 +171,7 @@ impl SparkContext {
 
     /// Charge a shuffle's network time; returns (bytes, seconds).
     pub(crate) fn charge_shuffle(&self, traffic: &Traffic) -> (u64, f64) {
-        let mut st = self.st.borrow_mut();
+        let mut st = self.lock();
         let dt = st.net.shuffle_time(traffic);
         st.clock.advance(dt);
         (traffic.total(), dt)
@@ -149,7 +179,7 @@ impl SparkContext {
 
     /// Charge a collect-to-driver of `bytes` in `messages` messages.
     pub(crate) fn charge_collect(&self, bytes: u64, messages: u64) -> f64 {
-        let mut st = self.st.borrow_mut();
+        let mut st = self.lock();
         let dt = st.net.collect_time(bytes, messages);
         st.clock.advance(dt);
         dt
@@ -158,7 +188,7 @@ impl SparkContext {
     /// Broadcast `bytes` from the driver to all executors (public: the
     /// coordinator broadcasts means and Q matrices).
     pub fn broadcast(&self, name: &str, bytes: u64) {
-        let mut st = self.st.borrow_mut();
+        let mut st = self.lock();
         let dt = st.net.broadcast_time(bytes);
         st.clock.advance(dt);
         let stage = StageMetrics {
@@ -176,7 +206,7 @@ impl SparkContext {
     /// Run a barrier stage of `(node, duration)` tasks; durations are real
     /// measured seconds, scaled by the calibration factor.
     pub(crate) fn run_stage(&self, tasks: &[super::clock::Task]) -> f64 {
-        let mut st = self.st.borrow_mut();
+        let mut st = self.lock();
         let scale = st.cluster.compute_scale;
         let scaled: Vec<super::clock::Task> = tasks
             .iter()
@@ -186,7 +216,7 @@ impl SparkContext {
     }
 
     pub(crate) fn push_metrics(&self, s: StageMetrics) {
-        self.st.borrow_mut().metrics.push(s);
+        self.lock().metrics.push(s);
     }
 
     /// Register the resident footprint of a persisted RDD under `tag`,
@@ -194,7 +224,7 @@ impl SparkContext {
     /// node would exceed executor memory — the paper's "impossible to
     /// process on given resources" (Table I `-`).
     pub fn set_resident(&self, tag: &str, per_node: Vec<u64>) -> Result<()> {
-        let mut st = self.st.borrow_mut();
+        let mut st = self.lock();
         st.resident.insert(tag.to_string(), per_node);
         let nodes = st.cluster.nodes;
         for v in 0..nodes {
@@ -213,13 +243,13 @@ impl SparkContext {
 
     /// Drop a resident tag (unpersist).
     pub fn clear_resident(&self, tag: &str) {
-        self.st.borrow_mut().resident.remove(tag);
+        self.lock().resident.remove(tag);
     }
 
     /// Charge a checkpoint of `per_node` bytes to local disk (max node is
     /// the straggler) and prune the RDD's lineage.
     pub fn charge_checkpoint(&self, lineage_id: usize, per_node: &[u64]) {
-        let mut st = self.st.borrow_mut();
+        let mut st = self.lock();
         let worst = per_node.iter().copied().max().unwrap_or(0) as f64;
         let dt = if st.cluster.disk_bandwidth.is_finite() {
             worst / st.cluster.disk_bandwidth
@@ -256,6 +286,22 @@ mod tests {
         // Out-of-range partition ids clamp to the last node.
         assert_eq!(ctx.node_of(100, 9), 2);
         assert_eq!(ctx.nodes(), 3);
+    }
+
+    #[test]
+    fn context_handle_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<SparkContext>();
+    }
+
+    #[test]
+    fn parallelism_resolution() {
+        let one = SparkContext::new(ClusterConfig::local());
+        assert_eq!(one.parallelism(), 1);
+        let auto = SparkContext::new(ClusterConfig { parallelism: 0, ..ClusterConfig::local() });
+        assert!(auto.parallelism() >= 1);
+        let four = SparkContext::new(ClusterConfig { parallelism: 4, ..ClusterConfig::local() });
+        assert_eq!(four.parallelism(), 4);
     }
 
     #[test]

@@ -35,7 +35,10 @@ pub struct FailureReport {
 /// compute of the run so far), and its input data is re-shuffled once
 /// across the network. The virtual clock advances; metrics record a
 /// `recovery` stage. Returns what happened.
-pub fn simulate_executor_loss<T: HasBytes>(rdd: &BlockRdd<T>, node: usize) -> FailureReport {
+pub fn simulate_executor_loss<T: HasBytes + Send + Sync>(
+    rdd: &BlockRdd<T>,
+    node: usize,
+) -> FailureReport {
     let ctx = rdd.context();
     let per_node = rdd.per_node_bytes();
     let lost_bytes = per_node.get(node).copied().unwrap_or(0);
@@ -90,12 +93,12 @@ mod tests {
     use crate::config::ClusterConfig;
     use crate::engine::{BlockId, HashPartitioner, SparkContext};
     use crate::linalg::Matrix;
-    use std::rc::Rc;
+    use std::sync::Arc;
 
     fn deep_rdd(ctx: &SparkContext, depth: usize, checkpoint: bool) -> BlockRdd<Matrix> {
         let items: Vec<(BlockId, Matrix)> =
             (0..8).map(|i| (BlockId::new(i, i), Matrix::full(16, 16, 1.0))).collect();
-        let part: Rc<dyn crate::engine::Partitioner> = Rc::new(HashPartitioner::new(8));
+        let part: Arc<dyn crate::engine::Partitioner> = Arc::new(HashPartitioner::new(8));
         let mut rdd = ctx.parallelize("x", items, part);
         for i in 0..depth {
             rdd = rdd.map_values("step", |_, m| {
@@ -141,7 +144,7 @@ mod tests {
     fn losing_empty_node_is_cheap() {
         let ctx = SparkContext::new(ClusterConfig::paper_testbed(8));
         let items = vec![(BlockId::new(0, 0), Matrix::zeros(4, 4))];
-        let part: Rc<dyn crate::engine::Partitioner> = Rc::new(HashPartitioner::new(1));
+        let part: Arc<dyn crate::engine::Partitioner> = Arc::new(HashPartitioner::new(1));
         let rdd = ctx.parallelize("tiny", items, part);
         // Node 7 hosts nothing (single partition on node 0).
         let report = simulate_executor_loss(&rdd, 7);

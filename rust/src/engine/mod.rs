@@ -8,6 +8,16 @@
 //! driver-overhead model, and an executor [`context::SparkContext`] memory
 //! model that rejects runs exceeding node memory (Table I's `-` entries).
 //!
+//! Real execution is multi-core: each stage's per-partition tasks run
+//! concurrently on an OS worker-thread pool ([`executor`], sized by
+//! [`crate::config::ClusterConfig::parallelism`]), and shuffle payloads
+//! move as `Arc`-shared blocks with copy-on-write updates — replicating a
+//! pivot block to a whole row costs one refcount per destination, not one
+//! deep copy. Worker count and sharing never change results: values, record
+//! order, lineage shape, task counts and shuffle bytes are bit-identical
+//! to sequential execution. Virtual time is still replayed from measured
+//! durations, so it varies run to run exactly as it did sequentially.
+//!
 //! The op vocabulary ([`rdd::BlockRdd`]) mirrors the PySpark subset the
 //! paper uses: `parallelize`, `mapValues`, `flatMap`, `filter`,
 //! `reduceByKey`, `groupByKey`, `union+combineByKey` (as `join_update`),
@@ -16,6 +26,7 @@
 pub mod block;
 pub mod clock;
 pub mod context;
+mod executor;
 pub mod fault;
 pub mod lineage;
 pub mod metrics;
@@ -26,4 +37,4 @@ pub mod rdd;
 pub use block::{BlockId, HasBytes};
 pub use context::SparkContext;
 pub use partitioner::{GridPartitioner, HashPartitioner, Partitioner, UpperTriangularPartitioner};
-pub use rdd::{BlockRdd, Keyed};
+pub use rdd::{BlockRdd, BlockRef, Keyed};

@@ -12,7 +12,11 @@
 use super::block::BlockId;
 
 /// Maps block keys to partitions `0..num_partitions`.
-pub trait Partitioner {
+///
+/// `Send + Sync` because partitioners are shared (`Arc<dyn Partitioner>`)
+/// between the driver and the stage worker threads; implementations are
+/// immutable routing tables, so this costs nothing.
+pub trait Partitioner: Send + Sync {
     /// Partition index for a key.
     fn partition(&self, id: BlockId) -> usize;
     /// Total number of partitions.

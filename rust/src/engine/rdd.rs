@@ -2,26 +2,41 @@
 //! transformations.
 //!
 //! Every transformation (a) really executes its closure over each block on
-//! this machine, (b) measures per-partition compute time and replays it on
-//! the virtual cluster, (c) charges shuffles/collects/broadcasts to the
-//! network model, and (d) records a lineage node whose depth drives the
-//! driver-overhead model. The op names mirror PySpark's.
+//! this machine — concurrently, one worker thread per claimed partition,
+//! up to the [`crate::config::ClusterConfig::parallelism`] pool size —
+//! (b) measures per-partition compute time and replays it on the virtual
+//! cluster, (c) charges shuffles/collects/broadcasts to the network model,
+//! and (d) records a lineage node whose depth drives the driver-overhead
+//! model. The op names mirror PySpark's.
+//!
+//! Payloads are held behind `Arc`: replicating a block to many shuffle
+//! destinations (the APSP pivot broadcast) is a refcount bump, not a deep
+//! copy, and [`BlockRdd::join_update`] mutates blocks copy-on-write — a
+//! block nobody else references is updated in place, a shared one is
+//! cloned lazily on first write. The simulated network still charges the
+//! full payload size per message ([`HasBytes`] looks through the `Arc`),
+//! so zero-copy execution never changes the modeled cluster numbers.
+//!
+//! Determinism contract: worker count affects wall-clock only. Results,
+//! record order, lineage shape and task counts are bit-identical for any
+//! `parallelism` — the determinism test suite enforces this.
 
 use super::block::{BlockId, HasBytes};
 use super::clock::Task;
 use super::context::SparkContext;
+use super::executor;
 use super::metrics::StageMetrics;
 use super::network::Traffic;
 use super::partitioner::Partitioner;
 use crate::util::Stopwatch;
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// A partitioned, keyed collection of blocks.
 pub struct BlockRdd<T> {
     ctx: SparkContext,
-    items: BTreeMap<BlockId, T>,
-    part: Rc<dyn Partitioner>,
+    items: BTreeMap<BlockId, Arc<T>>,
+    part: Arc<dyn Partitioner>,
     /// Lineage node of this RDD.
     pub lineage_id: usize,
 }
@@ -35,6 +50,47 @@ impl<T> std::fmt::Debug for BlockRdd<T> {
             self.part.num_partitions(),
             self.lineage_id
         )
+    }
+}
+
+/// Copy-on-write view of one block during [`BlockRdd::join_update`].
+///
+/// Reads are free ([`BlockRef::get`] / `Deref`). The first
+/// [`BlockRef::make_mut`] clones the payload *only if* another RDD still
+/// shares it (a filtered view, a persisted ancestor); a uniquely-held
+/// block is mutated in place. [`BlockRef::set_shared`] installs an
+/// incoming `Arc` payload wholesale without any copy — the APSP diagonal
+/// swap.
+pub struct BlockRef<'a, T: Clone> {
+    slot: &'a mut Arc<T>,
+}
+
+impl<'a, T: Clone> BlockRef<'a, T> {
+    /// Borrow the block read-only.
+    pub fn get(&self) -> &T {
+        &**self.slot
+    }
+
+    /// Mutable access; clones the block only when it is shared.
+    pub fn make_mut(&mut self) -> &mut T {
+        Arc::make_mut(self.slot)
+    }
+
+    /// Replace the block with a freshly built value.
+    pub fn set(&mut self, value: T) {
+        *self.slot = Arc::new(value);
+    }
+
+    /// Replace the block with an already-shared payload (zero-copy).
+    pub fn set_shared(&mut self, value: Arc<T>) {
+        *self.slot = value;
+    }
+}
+
+impl<'a, T: Clone> std::ops::Deref for BlockRef<'a, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &**self.slot
     }
 }
 
@@ -55,7 +111,7 @@ impl SparkContext {
         &self,
         name: &str,
         items: Vec<(BlockId, T)>,
-        part: Rc<dyn Partitioner>,
+        part: Arc<dyn Partitioner>,
     ) -> BlockRdd<T> {
         let lineage_id = self.lineage_add(name, &[]);
         let bytes: u64 = items.iter().map(|(_, v)| v.nbytes()).sum();
@@ -69,11 +125,63 @@ impl SparkContext {
             network_time: dt,
             driver_time: 0.0,
         });
-        BlockRdd { ctx: self.clone(), items: items.into_iter().collect(), part, lineage_id }
+        BlockRdd {
+            ctx: self.clone(),
+            items: items.into_iter().map(|(k, v)| (k, Arc::new(v))).collect(),
+            part,
+            lineage_id,
+        }
     }
 }
 
-impl<T: HasBytes> BlockRdd<T> {
+/// Drain worker results — `(partition, blocks, measured secs)` triples in
+/// submission order — into the stage's item map and per-partition timings.
+fn collect_results<U>(
+    results: Vec<(usize, Vec<(BlockId, Arc<U>)>, f64)>,
+) -> (BTreeMap<BlockId, Arc<U>>, BTreeMap<usize, f64>) {
+    let mut items = BTreeMap::new();
+    let mut per_part = BTreeMap::new();
+    for (p, outs, secs) in results {
+        per_part.insert(p, secs);
+        items.extend(outs);
+    }
+    (items, per_part)
+}
+
+/// Close out a stage: lineage node, driver charge, virtual-cluster replay,
+/// metrics — shared by narrow and wide transformations.
+fn finish_stage<U: HasBytes>(
+    ctx: &SparkContext,
+    name: &str,
+    parents: &[usize],
+    items: BTreeMap<BlockId, Arc<U>>,
+    per_part: BTreeMap<usize, f64>,
+    part: Arc<dyn Partitioner>,
+    shuffle_bytes: u64,
+    network_time: f64,
+) -> BlockRdd<U> {
+    let lineage_id = ctx.lineage_add(name, parents);
+    let depth = ctx.lineage_depth(lineage_id);
+    let nparts = part.num_partitions();
+    let tasks: Vec<Task> = per_part
+        .iter()
+        .map(|(&p, &dur)| Task { node: ctx.node_of(p, nparts), duration: dur })
+        .collect();
+    let driver_time = ctx.charge_driver(name, tasks.len(), depth);
+    let span = ctx.run_stage(&tasks);
+    ctx.push_metrics(StageMetrics {
+        name: name.to_string(),
+        tasks: tasks.len(),
+        compute_real: per_part.values().sum(),
+        virtual_span: span,
+        shuffle_bytes,
+        network_time,
+        driver_time,
+    });
+    BlockRdd { ctx: ctx.clone(), items, part, lineage_id }
+}
+
+impl<T: HasBytes + Send + Sync> BlockRdd<T> {
     /// Number of blocks.
     pub fn len(&self) -> usize {
         self.items.len()
@@ -85,17 +193,17 @@ impl<T: HasBytes> BlockRdd<T> {
 
     /// Borrow one block.
     pub fn get(&self, id: BlockId) -> Option<&T> {
-        self.items.get(&id)
+        self.items.get(&id).map(|a| a.as_ref())
     }
 
     /// Iterate blocks in key order.
     pub fn iter(&self) -> impl Iterator<Item = (&BlockId, &T)> {
-        self.items.iter()
+        self.items.iter().map(|(k, v)| (k, v.as_ref()))
     }
 
     /// The partitioner in force.
-    pub fn partitioner(&self) -> Rc<dyn Partitioner> {
-        Rc::clone(&self.part)
+    pub fn partitioner(&self) -> Arc<dyn Partitioner> {
+        Arc::clone(&self.part)
     }
 
     /// The owning context.
@@ -124,60 +232,52 @@ impl<T: HasBytes> BlockRdd<T> {
         self.ctx.charge_checkpoint(self.lineage_id, &per_node);
     }
 
-    fn finish_stage<U: HasBytes>(
-        &self,
-        name: &str,
-        parents: &[usize],
-        items: BTreeMap<BlockId, U>,
-        per_part: BTreeMap<usize, f64>,
-        part: Rc<dyn Partitioner>,
-        shuffle_bytes: u64,
-        network_time: f64,
-    ) -> BlockRdd<U> {
-        let lineage_id = self.ctx.lineage_add(name, parents);
-        let depth = self.ctx.lineage_depth(lineage_id);
-        let tasks: Vec<Task> = per_part
-            .iter()
-            .map(|(&p, &dur)| Task { node: self.ctx.node_of(p, self.part.num_partitions()), duration: dur })
-            .collect();
-        let driver_time = self.ctx.charge_driver(name, tasks.len(), depth);
-        let span = self.ctx.run_stage(&tasks);
-        self.ctx.push_metrics(StageMetrics {
-            name: name.to_string(),
-            tasks: tasks.len(),
-            compute_real: per_part.values().sum(),
-            virtual_span: span,
-            shuffle_bytes,
-            network_time,
-            driver_time,
-        });
-        BlockRdd { ctx: self.ctx.clone(), items, part, lineage_id }
+    /// Group block references by partition, in partition order. Each entry
+    /// is one schedulable task of the stage; blocks within a partition
+    /// stay in key order.
+    fn partition_tasks(&self) -> Vec<(usize, Vec<(BlockId, &Arc<T>)>)> {
+        let mut per: BTreeMap<usize, Vec<(BlockId, &Arc<T>)>> = BTreeMap::new();
+        for (&id, v) in &self.items {
+            per.entry(self.part.partition(id)).or_default().push((id, v));
+        }
+        per.into_iter().collect()
     }
 
     /// Narrow transformation: apply `f` to every block, preserving keys and
-    /// partitioning (PySpark `mapValues`).
-    pub fn map_values<U: HasBytes>(
+    /// partitioning (PySpark `mapValues`). Partitions execute concurrently
+    /// on the worker pool.
+    pub fn map_values<U: HasBytes + Send + Sync>(
         &self,
         name: &str,
-        mut f: impl FnMut(BlockId, &T) -> U,
+        f: impl Fn(BlockId, &T) -> U + Sync,
     ) -> BlockRdd<U> {
-        let mut out = BTreeMap::new();
-        let mut per_part: BTreeMap<usize, f64> = BTreeMap::new();
-        for (&id, v) in &self.items {
-            let sw = Stopwatch::start();
-            let u = f(id, v);
-            *per_part.entry(self.part.partition(id)).or_default() += sw.secs();
-            out.insert(id, u);
-        }
-        self.finish_stage(name, &[self.lineage_id], out, per_part, Rc::clone(&self.part), 0, 0.0)
+        let f = &f;
+        let results = executor::run_tasks(
+            self.ctx.parallelism(),
+            self.partition_tasks(),
+            move |(p, blocks)| {
+                let sw = Stopwatch::start();
+                let outs: Vec<(BlockId, Arc<U>)> =
+                    blocks.into_iter().map(|(id, v)| (id, Arc::new(f(id, v.as_ref())))).collect();
+                (p, outs, sw.secs())
+            },
+        );
+        let (out, per_part) = collect_results(results);
+        finish_stage(
+            &self.ctx,
+            name,
+            &[self.lineage_id],
+            out,
+            per_part,
+            Arc::clone(&self.part),
+            0,
+            0.0,
+        )
     }
 
     /// Narrow transformation keeping only blocks satisfying `pred`
-    /// (PySpark `filter` over keys).
-    pub fn filter_blocks(&self, name: &str, mut pred: impl FnMut(BlockId) -> bool) -> BlockRdd<T>
-    where
-        T: Clone,
-    {
+    /// (PySpark `filter` over keys). Kept blocks are shared, not copied.
+    pub fn filter_blocks(&self, name: &str, pred: impl Fn(BlockId) -> bool + Sync) -> BlockRdd<T> {
         let mut out = BTreeMap::new();
         let mut per_part: BTreeMap<usize, f64> = BTreeMap::new();
         for (&id, v) in &self.items {
@@ -185,29 +285,76 @@ impl<T: HasBytes> BlockRdd<T> {
             let keep = pred(id);
             *per_part.entry(self.part.partition(id)).or_default() += sw.secs();
             if keep {
-                out.insert(id, v.clone());
+                out.insert(id, Arc::clone(v));
             }
         }
-        self.finish_stage(name, &[self.lineage_id], out, per_part, Rc::clone(&self.part), 0, 0.0)
+        finish_stage(
+            &self.ctx,
+            name,
+            &[self.lineage_id],
+            out,
+            per_part,
+            Arc::clone(&self.part),
+            0,
+            0.0,
+        )
     }
 
     /// Emit keyed records from every block (PySpark `flatMap`). The records
     /// remain unshuffled until a wide op consumes them.
-    pub fn flat_map<U: HasBytes>(
+    pub fn flat_map<U: HasBytes + Send>(
         &self,
         name: &str,
-        mut f: impl FnMut(BlockId, &T) -> Vec<(BlockId, U)>,
+        f: impl Fn(BlockId, &T) -> Vec<(BlockId, U)> + Sync,
     ) -> Keyed<U> {
-        let mut records = Vec::new();
+        self.flat_map_impl(name, move |id, v| f(id, v.as_ref()))
+    }
+
+    /// `flat_map` variant exposing the block's shared handle, so emitting
+    /// the same block to many destinations is a refcount bump instead of a
+    /// deep copy per destination (the APSP pivot replication, the kNN pair
+    /// broadcast). The simulated shuffle still charges full payload bytes
+    /// per emitted record.
+    pub fn flat_map_arc<U: HasBytes + Send>(
+        &self,
+        name: &str,
+        f: impl Fn(BlockId, &Arc<T>) -> Vec<(BlockId, U)> + Sync,
+    ) -> Keyed<U> {
+        self.flat_map_impl(name, f)
+    }
+
+    fn flat_map_impl<U: HasBytes + Send>(
+        &self,
+        name: &str,
+        f: impl Fn(BlockId, &Arc<T>) -> Vec<(BlockId, U)> + Sync,
+    ) -> Keyed<U> {
+        let f = &f;
+        let results = executor::run_tasks(
+            self.ctx.parallelism(),
+            self.partition_tasks(),
+            move |(p, blocks)| {
+                let sw = Stopwatch::start();
+                let emitted: Vec<(BlockId, Vec<(BlockId, U)>)> =
+                    blocks.into_iter().map(|(id, v)| (id, f(id, v))).collect();
+                (p, emitted, sw.secs())
+            },
+        );
+        // Reassemble records in source-block key order — exactly the
+        // sequential emission order, independent of worker scheduling.
         let mut per_part: BTreeMap<usize, f64> = BTreeMap::new();
-        for (&id, v) in &self.items {
-            let sw = Stopwatch::start();
-            let emitted = f(id, v);
-            let p = self.part.partition(id);
-            *per_part.entry(p).or_default() += sw.secs();
-            let src = self.ctx.node_of(p, self.part.num_partitions());
-            records.extend(emitted.into_iter().map(|(k, u)| (k, u, src)));
+        let mut by_src: BTreeMap<BlockId, (usize, Vec<(BlockId, U)>)> = BTreeMap::new();
+        for (p, emitted, secs) in results {
+            per_part.insert(p, secs);
+            let src_node = self.ctx.node_of(p, self.part.num_partitions());
+            for (src, recs) in emitted {
+                by_src.insert(src, (src_node, recs));
+            }
         }
+        let mut records = Vec::new();
+        for (_, (node, recs)) in by_src {
+            records.extend(recs.into_iter().map(|(k, u)| (k, u, node)));
+        }
+
         let lineage_id = self.ctx.lineage_add(name, &[self.lineage_id]);
         let depth = self.ctx.lineage_depth(lineage_id);
         let tasks: Vec<Task> = per_part
@@ -230,41 +377,42 @@ impl<T: HasBytes> BlockRdd<T> {
 
     /// The paper's `union` + `partitionBy` + `combineByKey` pattern: route
     /// `incoming` records to this RDD's partitioning and fold them into the
-    /// matching blocks in place (via clone-on-write). `f` is invoked for
-    /// *every* block — with an empty record vector when nothing was routed
-    /// to it — matching Spark's combineByKey-over-union semantics where the
-    /// combiner sees each original block exactly once.
-    pub fn join_update<U: HasBytes>(
-        &self,
+    /// matching blocks copy-on-write. `f` is invoked for *every* block —
+    /// with an empty record vector when nothing was routed to it — matching
+    /// Spark's combineByKey-over-union semantics where the combiner sees
+    /// each original block exactly once. Consumes the RDD so that blocks
+    /// nobody else shares are updated in place without any clone; a block
+    /// `f` never writes to ([`BlockRef::make_mut`]) is never copied at all.
+    pub fn join_update<U: HasBytes + Send + Sync>(
+        self,
         name: &str,
         incoming: Keyed<U>,
-        mut f: impl FnMut(BlockId, &mut T, Vec<U>),
+        f: impl Fn(BlockId, &mut BlockRef<T>, Vec<U>) + Sync,
     ) -> BlockRdd<T>
     where
         T: Clone,
     {
+        let BlockRdd { ctx, items, part, lineage_id } = self;
+
         // Shuffle accounting: records that land on a different node pay.
-        let mut traffic = Traffic::new(self.ctx.nodes());
+        let mut traffic = Traffic::new(ctx.nodes());
         for (k, u, src) in &incoming.records {
-            let dst = self.ctx.node_of(self.part.partition(*k), self.part.num_partitions());
+            let dst = ctx.node_of(part.partition(*k), part.num_partitions());
             traffic.record(*src, dst, u.nbytes());
         }
-        let (shuffle_bytes, network_time) = self.ctx.charge_shuffle(&traffic);
+        let (shuffle_bytes, network_time) = ctx.charge_shuffle(&traffic);
 
-        // Group records by destination key.
+        // Group records by destination key, preserving arrival order.
         let mut grouped: BTreeMap<BlockId, Vec<U>> = BTreeMap::new();
         for (k, u, _) in incoming.records {
             grouped.entry(k).or_default().push(u);
         }
 
-        let mut out = BTreeMap::new();
-        let mut per_part: BTreeMap<usize, f64> = BTreeMap::new();
-        for (&id, v) in &self.items {
-            let sw = Stopwatch::start();
-            let mut nv = v.clone();
-            f(id, &mut nv, grouped.remove(&id).unwrap_or_default());
-            *per_part.entry(self.part.partition(id)).or_default() += sw.secs();
-            out.insert(id, nv);
+        // One task per partition; each owns its blocks plus routed records.
+        let mut per: BTreeMap<usize, Vec<(BlockId, Arc<T>, Vec<U>)>> = BTreeMap::new();
+        for (id, arc) in items {
+            let recs = grouped.remove(&id).unwrap_or_default();
+            per.entry(part.partition(id)).or_default().push((id, arc, recs));
         }
         debug_assert!(
             grouped.is_empty(),
@@ -272,12 +420,32 @@ impl<T: HasBytes> BlockRdd<T> {
             grouped.len(),
             grouped.keys().next()
         );
-        self.finish_stage(
+
+        let f = &f;
+        let results = executor::run_tasks(
+            ctx.parallelism(),
+            per.into_iter().collect::<Vec<_>>(),
+            move |(p, blocks)| {
+                let sw = Stopwatch::start();
+                let outs: Vec<(BlockId, Arc<T>)> = blocks
+                    .into_iter()
+                    .map(|(id, mut arc, recs)| {
+                        let mut slot = BlockRef { slot: &mut arc };
+                        f(id, &mut slot, recs);
+                        (id, arc)
+                    })
+                    .collect();
+                (p, outs, sw.secs())
+            },
+        );
+        let (out, per_part) = collect_results(results);
+        finish_stage(
+            &ctx,
             name,
-            &[self.lineage_id, incoming.lineage_id],
+            &[lineage_id, incoming.lineage_id],
             out,
             per_part,
-            Rc::clone(&self.part),
+            part,
             shuffle_bytes,
             network_time,
         )
@@ -288,7 +456,7 @@ impl<T: HasBytes> BlockRdd<T> {
     where
         T: Clone,
     {
-        let bytes: u64 = self.items.values().map(HasBytes::nbytes).sum();
+        let bytes: u64 = self.items.values().map(|v| v.nbytes()).sum();
         let dt = self.ctx.charge_collect(bytes, self.items.len() as u64);
         self.ctx.push_metrics(StageMetrics {
             name: "collect".to_string(),
@@ -299,11 +467,11 @@ impl<T: HasBytes> BlockRdd<T> {
             network_time: dt,
             driver_time: 0.0,
         });
-        self.items.clone()
+        self.items.iter().map(|(&k, v)| (k, v.as_ref().clone())).collect()
     }
 }
 
-impl<U: HasBytes> Keyed<U> {
+impl<U: HasBytes + Send + Sync> Keyed<U> {
     /// Number of pending records.
     pub fn len(&self) -> usize {
         self.records.len()
@@ -313,94 +481,84 @@ impl<U: HasBytes> Keyed<U> {
         self.records.is_empty()
     }
 
+    /// Route records to partitions of `part`, preserving record order
+    /// within each partition, and account the shuffle.
+    fn shuffle_to(
+        self,
+        part: &Arc<dyn Partitioner>,
+    ) -> (SparkContext, usize, BTreeMap<usize, Vec<(BlockId, U)>>, u64, f64) {
+        let ctx = self.ctx.clone();
+        let mut traffic = Traffic::new(ctx.nodes());
+        for (k, u, src) in &self.records {
+            let dst = ctx.node_of(part.partition(*k), part.num_partitions());
+            traffic.record(*src, dst, u.nbytes());
+        }
+        let (shuffle_bytes, network_time) = ctx.charge_shuffle(&traffic);
+        let mut per: BTreeMap<usize, Vec<(BlockId, U)>> = BTreeMap::new();
+        for (k, u, _) in self.records {
+            per.entry(part.partition(k)).or_default().push((k, u));
+        }
+        (ctx, self.lineage_id, per, shuffle_bytes, network_time)
+    }
+
     /// Wide op: shuffle records to `part` and fold values sharing a key
-    /// with `f` (PySpark `reduceByKey`/`combineByKey`).
+    /// with `f` (PySpark `reduceByKey`/`combineByKey`). Partitions fold
+    /// concurrently; within a key the fold order is record-arrival order,
+    /// identical to sequential execution.
     pub fn reduce_by_key(
         self,
         name: &str,
-        part: Rc<dyn Partitioner>,
-        mut f: impl FnMut(U, U) -> U,
+        part: Arc<dyn Partitioner>,
+        f: impl Fn(U, U) -> U + Sync,
     ) -> BlockRdd<U> {
-        let ctx = self.ctx.clone();
-        let mut traffic = Traffic::new(ctx.nodes());
-        for (k, u, src) in &self.records {
-            let dst = ctx.node_of(part.partition(*k), part.num_partitions());
-            traffic.record(*src, dst, u.nbytes());
-        }
-        let (shuffle_bytes, network_time) = ctx.charge_shuffle(&traffic);
-
-        let mut acc: BTreeMap<BlockId, U> = BTreeMap::new();
-        let mut per_part: BTreeMap<usize, f64> = BTreeMap::new();
-        for (k, u, _) in self.records {
-            let sw = Stopwatch::start();
-            match acc.remove(&k) {
-                None => {
-                    acc.insert(k, u);
+        let (ctx, parent, per, shuffle_bytes, network_time) = self.shuffle_to(&part);
+        let f = &f;
+        let results = executor::run_tasks(
+            ctx.parallelism(),
+            per.into_iter().collect::<Vec<_>>(),
+            move |(p, recs)| {
+                let sw = Stopwatch::start();
+                let mut acc: BTreeMap<BlockId, U> = BTreeMap::new();
+                for (k, u) in recs {
+                    match acc.remove(&k) {
+                        None => {
+                            acc.insert(k, u);
+                        }
+                        Some(prev) => {
+                            acc.insert(k, f(prev, u));
+                        }
+                    }
                 }
-                Some(prev) => {
-                    acc.insert(k, f(prev, u));
-                }
-            }
-            *per_part.entry(part.partition(k)).or_default() += sw.secs();
-        }
-
-        let lineage_id = ctx.lineage_add(name, &[self.lineage_id]);
-        let depth = ctx.lineage_depth(lineage_id);
-        let tasks: Vec<Task> = per_part
-            .iter()
-            .map(|(&p, &dur)| Task { node: ctx.node_of(p, part.num_partitions()), duration: dur })
-            .collect();
-        let driver_time = ctx.charge_driver(name, tasks.len(), depth);
-        let span = ctx.run_stage(&tasks);
-        ctx.push_metrics(StageMetrics {
-            name: name.to_string(),
-            tasks: tasks.len(),
-            compute_real: per_part.values().sum(),
-            virtual_span: span,
-            shuffle_bytes,
-            network_time,
-            driver_time,
-        });
-        BlockRdd { ctx, items: acc, part, lineage_id }
+                let outs: Vec<(BlockId, Arc<U>)> =
+                    acc.into_iter().map(|(k, u)| (k, Arc::new(u))).collect();
+                (p, outs, sw.secs())
+            },
+        );
+        let (items, per_part) = collect_results(results);
+        finish_stage(&ctx, name, &[parent], items, per_part, part, shuffle_bytes, network_time)
     }
 
     /// Wide op: shuffle and gather all values per key (PySpark
-    /// `groupByKey`).
-    pub fn group_by_key(self, name: &str, part: Rc<dyn Partitioner>) -> BlockRdd<Vec<U>> {
-        let ctx = self.ctx.clone();
-        let mut traffic = Traffic::new(ctx.nodes());
-        for (k, u, src) in &self.records {
-            let dst = ctx.node_of(part.partition(*k), part.num_partitions());
-            traffic.record(*src, dst, u.nbytes());
-        }
-        let (shuffle_bytes, network_time) = ctx.charge_shuffle(&traffic);
-
-        let mut acc: BTreeMap<BlockId, Vec<U>> = BTreeMap::new();
-        for (k, u, _) in self.records {
-            acc.entry(k).or_default().push(u);
-        }
-
-        let lineage_id = ctx.lineage_add(name, &[self.lineage_id]);
-        let depth = ctx.lineage_depth(lineage_id);
-        let tasks: Vec<Task> = acc
-            .keys()
-            .map(|&k| part.partition(k))
-            .collect::<std::collections::BTreeSet<_>>()
-            .into_iter()
-            .map(|p| Task { node: ctx.node_of(p, part.num_partitions()), duration: 0.0 })
-            .collect();
-        let driver_time = ctx.charge_driver(name, tasks.len(), depth);
-        let span = ctx.run_stage(&tasks);
-        ctx.push_metrics(StageMetrics {
-            name: name.to_string(),
-            tasks: tasks.len(),
-            compute_real: 0.0,
-            virtual_span: span,
-            shuffle_bytes,
-            network_time,
-            driver_time,
-        });
-        BlockRdd { ctx, items: acc, part, lineage_id }
+    /// `groupByKey`). The gather is real work and is timed per partition
+    /// like every other stage.
+    pub fn group_by_key(self, name: &str, part: Arc<dyn Partitioner>) -> BlockRdd<Vec<U>> {
+        let (ctx, parent, per, shuffle_bytes, network_time) = self.shuffle_to(&part);
+        let results = executor::run_tasks(
+            ctx.parallelism(),
+            per.into_iter().collect::<Vec<_>>(),
+            move |(p, recs)| {
+                let sw = Stopwatch::start();
+                let mut acc: BTreeMap<BlockId, Vec<U>> = BTreeMap::new();
+                for (k, u) in recs {
+                    acc.entry(k).or_default().push(u);
+                }
+                let outs: Vec<(BlockId, Arc<Vec<U>>)> =
+                    acc.into_iter().map(|(k, v)| (k, Arc::new(v))).collect();
+                (p, outs, sw.secs())
+            },
+        );
+        let (items, per_part) = collect_results(results);
+        finish_stage(&ctx, name, &[parent], items, per_part, part, shuffle_bytes, network_time)
     }
 }
 
@@ -417,7 +575,7 @@ mod tests {
     fn small_rdd(ctx: &SparkContext) -> BlockRdd<f64> {
         let items: Vec<(BlockId, f64)> =
             (0..6).map(|i| (BlockId::new(i, i), i as f64)).collect();
-        ctx.parallelize("x", items, Rc::new(HashPartitioner::new(3)))
+        ctx.parallelize("x", items, Arc::new(HashPartitioner::new(3)))
     }
 
     #[test]
@@ -445,7 +603,7 @@ mod tests {
         // Emit every value to key (0,0) and sum.
         let k = r.flat_map("emit", |_, v| vec![(BlockId::new(0, 0), *v)]);
         assert_eq!(k.len(), 6);
-        let red = k.reduce_by_key("sum", Rc::new(HashPartitioner::new(2)), |a, b| a + b);
+        let red = k.reduce_by_key("sum", Arc::new(HashPartitioner::new(2)), |a, b| a + b);
         assert_eq!(red.len(), 1);
         assert_eq!(*red.get(BlockId::new(0, 0)).unwrap(), 15.0);
     }
@@ -455,10 +613,28 @@ mod tests {
         let ctx = ctx(2);
         let r = small_rdd(&ctx);
         let k = r.flat_map("emit", |id, v| vec![(BlockId::new(id.i % 2, 0), *v)]);
-        let g = k.group_by_key("group", Rc::new(HashPartitioner::new(2)));
+        let g = k.group_by_key("group", Arc::new(HashPartitioner::new(2)));
         assert_eq!(g.len(), 2);
         let evens = g.get(BlockId::new(0, 0)).unwrap();
         assert_eq!(evens.iter().sum::<f64>(), 0.0 + 2.0 + 4.0);
+    }
+
+    #[test]
+    fn group_by_key_times_the_gather() {
+        // Regression: grouping does real work, so its stage must report
+        // real tasks with measured durations (was hard-coded to zero).
+        let ctx = ctx(2);
+        let items: Vec<(BlockId, f64)> =
+            (0..64).map(|i| (BlockId::new(i, 0), i as f64)).collect();
+        let r = ctx.parallelize("x", items, Arc::new(HashPartitioner::new(4)));
+        let k = r.flat_map("emit", |id, v| {
+            (0..200).map(|j| (BlockId::new(id.i % 8, j % 4), *v)).collect()
+        });
+        let g = k.group_by_key("group", Arc::new(HashPartitioner::new(4)));
+        assert!(g.len() > 1);
+        let agg = ctx.stage_aggregate("group");
+        assert!(agg.tasks > 0, "group stage must have tasks");
+        assert!(agg.compute_real > 0.0, "gather work must be timed");
     }
 
     #[test]
@@ -473,6 +649,7 @@ mod tests {
             }
         });
         let j = r.join_update("apply", inc, |_, v, us| {
+            let v = v.make_mut();
             for u in us {
                 *v += u;
             }
@@ -483,12 +660,26 @@ mod tests {
     }
 
     #[test]
+    fn join_update_copy_on_write_swaps_shared_payload() {
+        let ctx = ctx(1);
+        let r = small_rdd(&ctx);
+        let shared = Arc::new(42.0f64);
+        let inc = r.flat_map("emit", |id, _| vec![(id, 0.0f64)]);
+        let j = r.join_update("swap", inc, |_, v, _| {
+            v.set_shared(Arc::clone(&shared));
+        });
+        for (_, v) in j.iter() {
+            assert_eq!(*v, 42.0);
+        }
+    }
+
+    #[test]
     fn shuffle_bytes_counted_multi_node() {
         let ctx = ctx(4);
         let r = small_rdd(&ctx);
         let before = ctx.total_shuffle_bytes();
         let k = r.flat_map("emit", |_, v| vec![(BlockId::new(0, 0), *v)]);
-        let _ = k.reduce_by_key("sum", Rc::new(HashPartitioner::new(4)), |a, b| a + b);
+        let _ = k.reduce_by_key("sum", Arc::new(HashPartitioner::new(4)), |a, b| a + b);
         // With 4 nodes at least some records cross nodes.
         assert!(ctx.total_shuffle_bytes() > before);
     }
@@ -520,13 +711,44 @@ mod tests {
     }
 
     #[test]
+    fn parallel_results_bit_identical_to_sequential() {
+        // The worker pool must never change values, record order, lineage
+        // shape or task counts — only wall-clock.
+        let run = |threads: usize| -> (Vec<(BlockId, u64)>, usize, usize, usize) {
+            let cfg = ClusterConfig { parallelism: threads, ..ClusterConfig::local() };
+            let c = SparkContext::new(cfg);
+            let items: Vec<(BlockId, f64)> =
+                (0..32).map(|i| (BlockId::new(i, i), (i as f64).sin())).collect();
+            let r = c.parallelize("x", items, Arc::new(HashPartitioner::new(8)));
+            let m = r.map_values("sqrtsum", |_, v| {
+                let mut acc = *v;
+                for k in 0..100 {
+                    acc += (k as f64 + acc.abs()).sqrt();
+                }
+                acc
+            });
+            let keyed = m.flat_map("emit", |id, v| {
+                vec![(BlockId::new(id.i % 4, 0), *v), (BlockId::new(id.i % 3, 1), -*v)]
+            });
+            let red =
+                keyed.reduce_by_key("sum", Arc::new(HashPartitioner::new(4)), |a, b| a + b);
+            let vals: Vec<(BlockId, u64)> =
+                red.iter().map(|(&k, v)| (k, v.to_bits())).collect();
+            (vals, c.total_tasks(), c.stage_count(), c.lineage_len())
+        };
+        let seq = run(1);
+        let par = run(4);
+        assert_eq!(seq, par);
+    }
+
+    #[test]
     fn persist_and_memory_limit() {
         let mut cfg = ClusterConfig::local();
         cfg.mem_per_node = 100; // tiny
         let ctx = SparkContext::new(cfg);
         let items: Vec<(BlockId, crate::linalg::Matrix)> =
             vec![(BlockId::new(0, 0), crate::linalg::Matrix::zeros(10, 10))];
-        let r = ctx.parallelize("m", items, Rc::new(HashPartitioner::new(1)));
+        let r = ctx.parallelize("m", items, Arc::new(HashPartitioner::new(1)));
         assert!(r.persist("m").is_err());
     }
 

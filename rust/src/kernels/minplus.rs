@@ -4,11 +4,23 @@
 //! The paper implements this in Numba-JIT'd Python; here it is the native
 //! twin of the Pallas kernel in `python/compile/kernels/minplus.py`.
 //!
-//! `minplus_into` also fuses the element-wise `min` with the destination
+//! `minplus_into` fuses the element-wise `min` with the destination
 //! (the Phase-2/3 in-place update of the blocked Floyd–Warshall), which
 //! halves memory traffic versus computing `C` then `min`-ing it in.
+//! `minplus_left_inplace` / `minplus_right_inplace` additionally remove
+//! the per-call clone of the destination's old value that the Phase-2
+//! pivot updates `A ← A ⊕ (D ⊗ A)` / `A ← A ⊕ (A ⊗ D)` would otherwise
+//! need: the pre-update copy is staged in a per-thread scratch buffer that
+//! is reused across calls — no allocation on the hot path, and safe under
+//! the multi-core stage executor because each worker owns its own scratch.
 
 use crate::linalg::Matrix;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Per-thread staging buffer for the in-place pivot updates.
+    static SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
 
 /// `C = A ⊗ B` (min-plus product).
 pub fn minplus(a: &Matrix, b: &Matrix) -> Matrix {
@@ -49,14 +61,73 @@ pub fn minplus_into(a: &Matrix, b: &Matrix, dst: &mut Matrix) {
     }
 }
 
+/// `dst = dst ⊕ (A ⊗ dst₀)` where `dst₀` is `dst`'s value on entry — the
+/// APSP Phase-2 row update with a square pivot `A`. The old value is
+/// staged in per-thread scratch, so the caller needs no clone.
+pub fn minplus_left_inplace(a: &Matrix, dst: &mut Matrix) {
+    let b = a.nrows();
+    assert_eq!(a.ncols(), b, "pivot block must be square");
+    assert_eq!(dst.nrows(), b, "minplus_left_inplace shape mismatch");
+    let n = dst.ncols();
+    SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        scratch.clear();
+        scratch.extend_from_slice(dst.as_slice());
+        for i in 0..b {
+            let arow = a.row(i);
+            for k in 0..b {
+                let aik = arow[k];
+                if !aik.is_finite() {
+                    continue;
+                }
+                let srow = &scratch[k * n..(k + 1) * n];
+                let drow = dst.row_mut(i);
+                for (d, &sv) in drow.iter_mut().zip(srow) {
+                    let cand = aik + sv;
+                    *d = if cand < *d { cand } else { *d };
+                }
+            }
+        }
+    });
+}
+
+/// `dst = dst ⊕ (dst₀ ⊗ B)` with a square pivot `B` — the APSP Phase-2
+/// column update, same scratch-staging strategy.
+pub fn minplus_right_inplace(b: &Matrix, dst: &mut Matrix) {
+    let bs = b.nrows();
+    assert_eq!(b.ncols(), bs, "pivot block must be square");
+    assert_eq!(dst.ncols(), bs, "minplus_right_inplace shape mismatch");
+    let m = dst.nrows();
+    SCRATCH.with(|cell| {
+        let mut scratch = cell.borrow_mut();
+        scratch.clear();
+        scratch.extend_from_slice(dst.as_slice());
+        for i in 0..m {
+            let srow = &scratch[i * bs..(i + 1) * bs];
+            for k in 0..bs {
+                let sik = srow[k];
+                if !sik.is_finite() {
+                    continue;
+                }
+                let brow = b.row(k);
+                let drow = dst.row_mut(i);
+                for (d, &bv) in drow.iter_mut().zip(brow) {
+                    let cand = sik + bv;
+                    *d = if cand < *d { cand } else { *d };
+                }
+            }
+        }
+    });
+}
+
 /// Element-wise `dst = min(dst, src)` (Phase-3 combine when the product is
-/// computed separately, and the final symmetrization step).
+/// computed separately, and the final symmetrization step). Branch-free
+/// select, same as the fused inner loop — the old compare-and-store
+/// defeated autovectorization on the PJRT combine path.
 pub fn elementwise_min_into(dst: &mut Matrix, src: &Matrix) {
     assert_eq!((dst.nrows(), dst.ncols()), (src.nrows(), src.ncols()));
     for (d, &s) in dst.as_mut_slice().iter_mut().zip(src.as_slice()) {
-        if s < *d {
-            *d = s;
-        }
+        *d = if s < *d { s } else { *d };
     }
 }
 
@@ -123,6 +194,56 @@ mod tests {
         elementwise_min_into(&mut expect, &c);
         minplus_into(&a, &b, &mut dst);
         assert_eq!(dst.as_slice(), expect.as_slice());
+    }
+
+    #[test]
+    fn left_inplace_matches_cloned_form() {
+        for (b, n, seed) in [(5usize, 5usize, 1u64), (8, 3, 2), (7, 12, 3), (1, 4, 4)] {
+            let d = random(b, b, seed);
+            let a0 = random(b, n, seed + 30);
+            let mut got = a0.clone();
+            minplus_left_inplace(&d, &mut got);
+            let mut want = a0.clone();
+            minplus_into(&d, &a0, &mut want);
+            assert_eq!(got.as_slice(), want.as_slice(), "b={b} n={n}");
+        }
+    }
+
+    #[test]
+    fn right_inplace_matches_cloned_form() {
+        for (m, b, seed) in [(5usize, 5usize, 5u64), (3, 8, 6), (12, 7, 7), (4, 1, 8)] {
+            let d = random(b, b, seed);
+            let a0 = random(m, b, seed + 60);
+            let mut got = a0.clone();
+            minplus_right_inplace(&d, &mut got);
+            let mut want = a0.clone();
+            minplus_into(&a0, &d, &mut want);
+            assert_eq!(got.as_slice(), want.as_slice(), "m={m} b={b}");
+        }
+    }
+
+    #[test]
+    fn inplace_kernels_reuse_scratch_across_sizes() {
+        // Consecutive calls with different shapes must not bleed state.
+        let d1 = random(6, 6, 20);
+        let mut a1 = random(6, 9, 21);
+        let r1 = {
+            let mut w = a1.clone();
+            minplus_into(&d1, &a1.clone(), &mut w);
+            w
+        };
+        minplus_left_inplace(&d1, &mut a1);
+        assert_eq!(a1.as_slice(), r1.as_slice());
+
+        let d2 = random(3, 3, 22);
+        let mut a2 = random(3, 4, 23);
+        let r2 = {
+            let mut w = a2.clone();
+            minplus_into(&d2, &a2.clone(), &mut w);
+            w
+        };
+        minplus_left_inplace(&d2, &mut a2);
+        assert_eq!(a2.as_slice(), r2.as_slice());
     }
 
     #[test]

@@ -28,7 +28,9 @@ COMMANDS:
   run              run the pipeline: --dataset swiss|emnist|clusters|s_curve
                    --n <pts> --k <nn> --d <dim> --block <b> --seed <s>
                    --backend native|pjrt --artifacts <dir> --nodes <n>
-                   --cores <c> --out <csv> --config <file>
+                   --cores <c> --threads <t> --out <csv> --config <file>
+                   (--threads: OS worker threads for real block tasks;
+                    0 = all cores. Results are identical for any value.)
   landmark         L-Isomap: same options plus --landmarks <m>
   lle              Locally Linear Embedding (paper §VI extension)
   stream           Streaming-Isomap: fit a batch, map --stream-n new points
@@ -93,6 +95,7 @@ fn parse_common(args: &Args) -> Result<(IsomapConfig, ClusterConfig)> {
         cluster = ClusterConfig::paper_testbed(nodes);
     }
     cluster.cores_per_node = args.get("cores", cluster.cores_per_node).map_err(anyhow_str)?;
+    cluster.parallelism = args.get("threads", cluster.parallelism).map_err(anyhow_str)?;
     Ok((iso, cluster))
 }
 

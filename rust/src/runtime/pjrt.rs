@@ -1,0 +1,264 @@
+//! The real PJRT executor (enabled by the `pjrt` cargo feature): loads
+//! `manifest.json`, compiles HLO-text artifacts once per (op, shape), and
+//! executes them through the `xla` crate's PJRT CPU client. See the parent
+//! module docs for the artifact pipeline and the offline stub.
+
+use crate::linalg::Matrix;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+/// One artifact from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub op: String,
+    /// Shape parameters, op-specific: `minplus`/`fw`/`center` use `b`;
+    /// `dist` uses `b` and `dim`; `gemm`/`gemmt` use `b` and `d`.
+    pub b: usize,
+    pub dim: usize,
+    pub d: usize,
+    pub file: PathBuf,
+}
+
+/// Lazily-compiling PJRT executor over an artifact directory.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    entries: Vec<ArtifactEntry>,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// Serializes every compile/execute against the PJRT client: the
+    /// multi-core stage executor calls the backend from many worker
+    /// threads, and the `xla_extension` bindings make no documented
+    /// thread-safety promise, so we take the conservative route — one
+    /// in-flight PJRT call at a time. Block ops still overlap with the
+    /// native-kernel work of other workers.
+    exec: Mutex<()>,
+    dir: PathBuf,
+}
+
+// SAFETY: all uses of the non-Sync xla handles after construction happen
+// with `exec` (or `cache`) held, so at most one thread touches the PJRT
+// client / executables at any moment; the remaining fields are plain data.
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+
+impl PjrtEngine {
+    /// Load `dir/manifest.json` and create the PJRT CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {manifest_path:?} — run `make artifacts` first"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("manifest parse error: {e}"))?;
+        let ops = json
+            .get("ops")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing `ops` array"))?;
+        let mut entries = Vec::new();
+        for o in ops {
+            let get = |k: &str| o.get(k).and_then(Json::as_usize).unwrap_or(0);
+            entries.push(ArtifactEntry {
+                op: o
+                    .get("op")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("op entry missing name"))?
+                    .to_string(),
+                b: get("b"),
+                dim: get("dim"),
+                d: get("d"),
+                file: dir.join(
+                    o.get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("op entry missing file"))?,
+                ),
+            });
+        }
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Self {
+            client,
+            entries,
+            cache: Mutex::new(HashMap::new()),
+            exec: Mutex::new(()),
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    /// Artifact directory this engine serves.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Available (op, b, dim, d) tuples — for `isospark info`.
+    pub fn inventory(&self) -> Vec<String> {
+        self.entries
+            .iter()
+            .map(|e| format!("{} b={} dim={} d={} ({})", e.op, e.b, e.dim, e.d, e.file.display()))
+            .collect()
+    }
+
+    fn find(&self, op: &str, b: usize, dim: usize, d: usize) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.op == op && e.b == b && e.dim == dim && e.d == d)
+            .ok_or_else(|| anyhow!("no artifact for {op} b={b} dim={dim} d={d}"))
+    }
+
+    fn executable(&self, e: &ArtifactEntry) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{}:{}:{}:{}", e.op, e.b, e.dim, e.d);
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(exe));
+        }
+        let proto = xla::HloModuleProto::from_text_file(&e.file)
+            .with_context(|| format!("parse HLO text {:?}", e.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp).with_context(|| format!("compile {key}"))?);
+        self.cache.lock().unwrap().insert(key, Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    fn lit(m: &Matrix) -> Result<xla::Literal> {
+        Ok(xla::Literal::vec1(m.as_slice()).reshape(&[m.nrows() as i64, m.ncols() as i64])?)
+    }
+
+    fn lit_vec(v: &[f64]) -> xla::Literal {
+        xla::Literal::vec1(v)
+    }
+
+    fn run1(&self, e: &ArtifactEntry, args: &[xla::Literal], rows: usize, cols: usize) -> Result<Matrix> {
+        let _serialized = self.exec.lock().unwrap();
+        let exe = self.executable(e)?;
+        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f64>()?;
+        if data.len() != rows * cols {
+            bail!("artifact {} returned {} elements, expected {}", e.op, data.len(), rows * cols);
+        }
+        Ok(Matrix::from_vec(rows, cols, data))
+    }
+
+    /// Pairwise-distance block via the Pallas sqdist kernel.
+    pub fn dist_block(&self, xi: &Matrix, xj: &Matrix) -> Result<Matrix> {
+        if xi.nrows() != xj.nrows() || xi.ncols() != xj.ncols() {
+            bail!("dist artifacts require equal square point blocks");
+        }
+        let e = self.find("dist", xi.nrows(), xi.ncols(), 0)?;
+        self.run1(e, &[Self::lit(xi)?, Self::lit(xj)?], xi.nrows(), xj.nrows())
+    }
+
+    /// Min-plus product `a ⊗ b` via the Pallas kernel.
+    pub fn minplus(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
+        let bsz = a.nrows();
+        if a.ncols() != bsz || b.nrows() != bsz || b.ncols() != bsz {
+            bail!("minplus artifacts are square-only");
+        }
+        let e = self.find("minplus", bsz, 0, 0)?;
+        self.run1(e, &[Self::lit(a)?, Self::lit(b)?], bsz, bsz)
+    }
+
+    /// In-block Floyd–Warshall via the Pallas kernel.
+    pub fn floyd_warshall(&self, g: &Matrix) -> Result<Matrix> {
+        let bsz = g.nrows();
+        if g.ncols() != bsz {
+            bail!("fw requires square block");
+        }
+        let e = self.find("fw", bsz, 0, 0)?;
+        self.run1(e, &[Self::lit(g)?], bsz, bsz)
+    }
+
+    /// Double-centering application on one block.
+    pub fn center_block(&self, block: &Matrix, mu_r: &[f64], mu_c: &[f64], grand: f64) -> Result<Matrix> {
+        let bsz = block.nrows();
+        if block.ncols() != bsz || mu_r.len() != bsz || mu_c.len() != bsz {
+            bail!("center requires square block with matching mean vectors");
+        }
+        let e = self.find("center", bsz, 0, 0)?;
+        let args = vec![
+            Self::lit(block)?,
+            Self::lit_vec(mu_r),
+            Self::lit_vec(mu_c),
+            xla::Literal::scalar(grand),
+        ];
+        self.run1(e, &args, bsz, bsz)
+    }
+
+    /// Find the gemm artifact column width for block size `b` (smallest
+    /// `d_pad >= d`).
+    fn gemm_entry(&self, op: &str, b: usize, d: usize) -> Result<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .filter(|e| e.op == op && e.b == b && e.d >= d)
+            .min_by_key(|e| e.d)
+            .ok_or_else(|| anyhow!("no {op} artifact for b={b} d>={d}"))
+    }
+
+    fn pad_cols(q: &Matrix, d_pad: usize) -> Matrix {
+        if q.ncols() == d_pad {
+            return q.clone();
+        }
+        let mut p = Matrix::zeros(q.nrows(), d_pad);
+        for i in 0..q.nrows() {
+            p.row_mut(i)[..q.ncols()].copy_from_slice(q.row(i));
+        }
+        p
+    }
+
+    /// `a · q` (power-iteration block product). `q`'s column count may be
+    /// smaller than the artifact width; zero-padding is exact.
+    pub fn gemm(&self, a: &Matrix, q: &Matrix) -> Result<Matrix> {
+        let bsz = a.nrows();
+        if a.ncols() != bsz || q.nrows() != bsz {
+            bail!("gemm artifacts are (b,b)x(b,d)");
+        }
+        let e = self.gemm_entry("gemm", bsz, q.ncols())?;
+        let qp = Self::pad_cols(q, e.d);
+        let full = self.run1(e, &[Self::lit(a)?, Self::lit(&qp)?], bsz, e.d)?;
+        Ok(full.slice(0, bsz, 0, q.ncols()))
+    }
+
+    /// `aᵀ · q`.
+    pub fn gemm_t(&self, a: &Matrix, q: &Matrix) -> Result<Matrix> {
+        let bsz = a.nrows();
+        if a.ncols() != bsz || q.nrows() != bsz {
+            bail!("gemmt artifacts are (b,b)x(b,d)");
+        }
+        let e = self.gemm_entry("gemmt", bsz, q.ncols())?;
+        let qp = Self::pad_cols(q, e.d);
+        let full = self.run1(e, &[Self::lit(a)?, Self::lit(&qp)?], bsz, e.d)?;
+        Ok(full.slice(0, bsz, 0, q.ncols()))
+    }
+}
+
+impl std::fmt::Debug for PjrtEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PjrtEngine({} artifacts from {:?})", self.entries.len(), self.dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_missing_dir_errors() {
+        let err = PjrtEngine::load(Path::new("/nonexistent/artifacts")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+
+    #[test]
+    fn manifest_parse_rejects_bad_json() {
+        let dir = std::env::temp_dir().join("isospark_rt_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        assert!(PjrtEngine::load(&dir).is_err());
+    }
+
+    #[test]
+    fn pad_cols_zero_extends() {
+        let q = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let p = PjrtEngine::pad_cols(&q, 4);
+        assert_eq!(p.ncols(), 4);
+        assert_eq!(p[(0, 0)], 1.0);
+        assert_eq!(p[(1, 3)], 0.0);
+    }
+}

@@ -1,0 +1,89 @@
+//! Stub runtime used when the crate is built without the `pjrt` feature.
+//!
+//! Mirrors the public surface of the real [`super`] PJRT engine so that
+//! callers (the CLI `info` command, benches, the equivalence test suite)
+//! compile unchanged; every entry point reports that artifacts are
+//! unavailable, and [`crate::backend::Backend`] falls back to the native
+//! kernels. This keeps `cargo build && cargo test` fully offline — the
+//! `xla` crate is only required when the feature is enabled.
+
+use crate::linalg::Matrix;
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+const DISABLED: &str =
+    "isospark was built without the `pjrt` feature — AOT artifacts are unavailable \
+     (rebuild with `--features pjrt` after running `make artifacts`)";
+
+/// Placeholder for the PJRT executor; `load` always fails.
+#[derive(Debug)]
+pub struct PjrtEngine {
+    dir: PathBuf,
+}
+
+impl PjrtEngine {
+    /// Always errors: the PJRT bridge is compiled out.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let _ = dir;
+        bail!(DISABLED)
+    }
+
+    /// Artifact directory this engine would serve.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Available artifacts (none).
+    pub fn inventory(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// Pairwise-distance block — unavailable.
+    pub fn dist_block(&self, _xi: &Matrix, _xj: &Matrix) -> Result<Matrix> {
+        bail!(DISABLED)
+    }
+
+    /// Min-plus product — unavailable.
+    pub fn minplus(&self, _a: &Matrix, _b: &Matrix) -> Result<Matrix> {
+        bail!(DISABLED)
+    }
+
+    /// In-block Floyd–Warshall — unavailable.
+    pub fn floyd_warshall(&self, _g: &Matrix) -> Result<Matrix> {
+        bail!(DISABLED)
+    }
+
+    /// Double-centering application — unavailable.
+    pub fn center_block(
+        &self,
+        _block: &Matrix,
+        _mu_r: &[f64],
+        _mu_c: &[f64],
+        _grand: f64,
+    ) -> Result<Matrix> {
+        bail!(DISABLED)
+    }
+
+    /// Power-iteration block product — unavailable.
+    pub fn gemm(&self, _a: &Matrix, _q: &Matrix) -> Result<Matrix> {
+        bail!(DISABLED)
+    }
+
+    /// Transposed block product — unavailable.
+    pub fn gemm_t(&self, _a: &Matrix, _q: &Matrix) -> Result<Matrix> {
+        bail!(DISABLED)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_always_errors_with_feature_hint() {
+        let err = PjrtEngine::load(Path::new("artifacts")).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("pjrt"), "{msg}");
+        assert!(msg.contains("make artifacts"), "{msg}");
+    }
+}

@@ -1,0 +1,119 @@
+//! Parallel-executor determinism: the multi-core stage executor and the
+//! zero-copy/copy-on-write shuffle payloads are pure wall-clock
+//! optimizations. For any worker-pool size, every pipeline must produce
+//! **bit-identical** numerical output and an **identical** lineage/metrics
+//! structure (stage count, task count, lineage DAG size) versus
+//! `parallelism = 1` sequential execution — across ragged-block and
+//! checkpointed APSP configurations.
+
+use isospark::backend::Backend;
+use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::coordinator::{apsp, centering, dense_from_blocks, isomap, knn};
+use isospark::data::swiss_roll;
+use isospark::engine::SparkContext;
+use isospark::linalg::Matrix;
+
+/// Bit-exact matrix comparison (handles ∞ exactly; NaN never appears).
+fn assert_bits_equal(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!((a.nrows(), a.ncols()), (b.nrows(), b.ncols()), "{what}: shape");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i} differs: {x} vs {y}");
+    }
+}
+
+/// Local-mode cluster with `threads` physical workers. `cores_per_node`
+/// is raised to 4 so `default_partitions` yields multiple partitions per
+/// stage — otherwise every stage would be a single task and the pool
+/// would trivially degenerate to sequential execution. The partition
+/// count depends on the *simulated* cores only, so both sides of every
+/// comparison see the identical dataflow.
+fn cluster(threads: usize) -> ClusterConfig {
+    ClusterConfig { parallelism: threads, cores_per_node: 4, ..ClusterConfig::local() }
+}
+
+/// Run kNN → APSP → centering and return the densified centered feature
+/// matrix plus the engine's structural counters.
+fn pipeline_fingerprint(
+    n: usize,
+    b: usize,
+    k: usize,
+    checkpoint_every: usize,
+    threads: usize,
+) -> (Matrix, usize, usize, usize) {
+    let ds = swiss_roll::euler_isometric(n, 21);
+    let ctx = SparkContext::new(cluster(threads));
+    let cfg = IsomapConfig { k, block: b, checkpoint_every, ..Default::default() };
+    let be = Backend::Native;
+    let kg = knn::build(&ctx, &ds.points, &cfg, &be).unwrap();
+    let a = apsp::solve(kg.graph, kg.q, &cfg, &be).unwrap();
+    let (centered, _mu) = centering::center(a, n, b, &be).unwrap();
+    let dense = dense_from_blocks(&centered, n, b);
+    (dense, ctx.total_tasks(), ctx.stage_count(), ctx.lineage_len())
+}
+
+#[test]
+fn apsp_pipeline_bit_identical_ragged_blocks() {
+    // n = 50, b = 16 leaves a ragged last block (q = 4, tail of 2 rows).
+    let (seq, seq_tasks, seq_stages, seq_lineage) = pipeline_fingerprint(50, 16, 6, 10, 1);
+    let (par, par_tasks, par_stages, par_lineage) = pipeline_fingerprint(50, 16, 6, 10, 4);
+    assert_bits_equal(&seq, &par, "centered features (ragged)");
+    assert_eq!(seq_tasks, par_tasks, "task count");
+    assert_eq!(seq_stages, par_stages, "stage count");
+    assert_eq!(seq_lineage, par_lineage, "lineage size");
+}
+
+#[test]
+fn apsp_pipeline_bit_identical_checkpointed() {
+    // Aggressive checkpoint cadence exercises persist + lineage pruning
+    // interleaved with the copy-on-write join_update phases.
+    let (seq, seq_tasks, seq_stages, seq_lineage) = pipeline_fingerprint(48, 8, 5, 2, 1);
+    let (par, par_tasks, par_stages, par_lineage) = pipeline_fingerprint(48, 8, 5, 2, 8);
+    assert_bits_equal(&seq, &par, "centered features (checkpointed)");
+    assert_eq!(seq_tasks, par_tasks, "task count");
+    assert_eq!(seq_stages, par_stages, "stage count");
+    assert_eq!(seq_lineage, par_lineage, "lineage size");
+}
+
+#[test]
+fn full_embedding_bit_identical() {
+    // End-to-end Isomap (kNN + APSP + centering + power iteration): the
+    // embedding and spectrum must match bit-for-bit across pool sizes.
+    let ds = swiss_roll::euler_isometric(96, 31);
+    let cfg = IsomapConfig { k: 8, d: 2, block: 32, ..Default::default() };
+    let seq = isomap::run(&ds.points, &cfg, &cluster(1)).unwrap();
+    let par = isomap::run(&ds.points, &cfg, &cluster(4)).unwrap();
+    assert_bits_equal(&seq.embedding, &par.embedding, "embedding");
+    assert_eq!(seq.eigen_iterations, par.eigen_iterations);
+    for (a, b) in seq.eigenvalues.iter().zip(&par.eigenvalues) {
+        assert_eq!(a.to_bits(), b.to_bits(), "eigenvalue differs: {a} vs {b}");
+    }
+}
+
+#[test]
+fn auto_parallelism_matches_sequential() {
+    // parallelism = 0 (auto-detect all cores) is the paper_testbed default;
+    // it must be just as deterministic.
+    let ds = swiss_roll::euler_isometric(64, 5);
+    let cfg = IsomapConfig { k: 7, d: 2, block: 16, ..Default::default() };
+    let seq = isomap::run(&ds.points, &cfg, &cluster(1)).unwrap();
+    let auto = isomap::run(&ds.points, &cfg, &cluster(0)).unwrap();
+    assert_bits_equal(&seq.embedding, &auto.embedding, "embedding (auto pool)");
+}
+
+#[test]
+fn shuffle_accounting_independent_of_pool_size() {
+    // Zero-copy payloads must not change the simulated network model:
+    // total shuffled bytes are a function of the dataflow alone.
+    let bytes = |threads: usize| -> u64 {
+        let ds = swiss_roll::euler_isometric(60, 9);
+        let mut cl = ClusterConfig::paper_testbed(4);
+        cl.parallelism = threads;
+        let ctx = SparkContext::new(cl);
+        let cfg = IsomapConfig { k: 6, block: 16, ..Default::default() };
+        let be = Backend::Native;
+        let kg = knn::build(&ctx, &ds.points, &cfg, &be).unwrap();
+        let _ = apsp::solve(kg.graph, kg.q, &cfg, &be).unwrap();
+        ctx.total_shuffle_bytes()
+    };
+    assert_eq!(bytes(1), bytes(4));
+}

@@ -6,7 +6,7 @@ use isospark::config::ClusterConfig;
 use isospark::engine::partitioner::{ut_count, UpperTriangularPartitioner};
 use isospark::engine::{BlockId, HashPartitioner, Partitioner, SparkContext};
 use isospark::linalg::Matrix;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn ctx(nodes: usize) -> SparkContext {
     SparkContext::new(ClusterConfig { nodes, ..ClusterConfig::local() })
@@ -18,7 +18,7 @@ fn wordcount_style_pipeline() {
     let c = ctx(4);
     let items: Vec<(BlockId, Matrix)> =
         (0..8).map(|i| (BlockId::new(i, i), Matrix::full(2, 2, i as f64))).collect();
-    let part: Rc<dyn Partitioner> = Rc::new(HashPartitioner::new(8));
+    let part: Arc<dyn Partitioner> = Arc::new(HashPartitioner::new(8));
     let rdd = c.parallelize("data", items, part.clone());
     let keyed = rdd.flat_map("emit", |_, m| {
         vec![(BlockId::new(0, 0), m.grand_mean()), (BlockId::new(1, 0), 1.0f64)]
@@ -35,7 +35,7 @@ fn results_identical_across_cluster_sizes() {
         let c = ctx(nodes);
         let items: Vec<(BlockId, Matrix)> =
             (0..6).map(|i| (BlockId::new(i, i), Matrix::full(3, 3, i as f64 + 1.0))).collect();
-        let part: Rc<dyn Partitioner> = Rc::new(HashPartitioner::new(6));
+        let part: Arc<dyn Partitioner> = Arc::new(HashPartitioner::new(6));
         let rdd = c.parallelize("x", items, part.clone());
         let mapped = rdd.map_values("scale", |_, m| {
             let mut m = m.clone();
@@ -54,7 +54,7 @@ fn results_identical_across_cluster_sizes() {
 fn shuffle_free_on_single_node() {
     let c = ctx(1);
     let items: Vec<(BlockId, f64)> = (0..10).map(|i| (BlockId::new(i, 0), i as f64)).collect();
-    let part: Rc<dyn Partitioner> = Rc::new(HashPartitioner::new(4));
+    let part: Arc<dyn Partitioner> = Arc::new(HashPartitioner::new(4));
     let rdd = c.parallelize("x", items, part.clone());
     // (parallelize itself charges the driver->executor distribution.)
     let after_load = c.total_shuffle_bytes();
@@ -75,7 +75,7 @@ fn more_nodes_less_virtual_time_for_parallel_work() {
         let c = SparkContext::new(cfg);
         let items: Vec<(BlockId, Matrix)> =
             (0..32).map(|i| (BlockId::new(i, i), Matrix::full(40, 40, 1.0))).collect();
-        let part: Rc<dyn Partitioner> = Rc::new(HashPartitioner::new(32));
+        let part: Arc<dyn Partitioner> = Arc::new(HashPartitioner::new(32));
         let rdd = c.parallelize("x", items, part);
         let _ = rdd.map_values("work", |_, m| m.matmul(m));
         c.virtual_now()
@@ -92,23 +92,23 @@ fn ut_partitioner_beats_hash_on_row_access_shuffle() {
     // the row co-resident, the hash partitioner scatters it.
     let q = 16;
     let parts = ut_count(q) / 4;
-    let volume = |part: Rc<dyn Partitioner>| -> u64 {
+    let volume = |part: Arc<dyn Partitioner>| -> u64 {
         let c = ctx(4);
         let items: Vec<(BlockId, Matrix)> = (0..q)
             .flat_map(|i| (i..q).map(move |j| (BlockId::new(i, j), Matrix::full(8, 8, 1.0))))
             .collect();
-        let rdd = c.parallelize("g", items, part);
+        let mut rdd = c.parallelize("g", items, part);
         for piv in 0..q {
             let diag = rdd.filter_blocks("diag", |id| id.i == piv && id.j == piv);
             let msgs = diag.flat_map("bcast_row", |_, m| {
                 (piv..q).map(|j| (BlockId::new(piv, j), m.clone())).collect()
             });
-            let _ = rdd.join_update("recv", msgs, |_, _, _| {});
+            rdd = rdd.join_update("recv", msgs, |_, _, _| {});
         }
         c.total_shuffle_bytes()
     };
-    let ut = volume(Rc::new(UpperTriangularPartitioner::new(q, parts)));
-    let hash = volume(Rc::new(HashPartitioner::new(parts)));
+    let ut = volume(Arc::new(UpperTriangularPartitioner::new(q, parts)));
+    let hash = volume(Arc::new(HashPartitioner::new(parts)));
     assert!(ut < hash, "ut={ut} hash={hash}");
 }
 
@@ -119,7 +119,7 @@ fn memory_exhaustion_surfaces_as_error() {
     let c = SparkContext::new(cfg);
     let items: Vec<(BlockId, Matrix)> =
         (0..4).map(|i| (BlockId::new(i, i), Matrix::zeros(64, 64))).collect();
-    let part: Rc<dyn Partitioner> = Rc::new(HashPartitioner::new(4));
+    let part: Arc<dyn Partitioner> = Arc::new(HashPartitioner::new(4));
     let rdd = c.parallelize("big", items, part);
     let err = rdd.persist("big").unwrap_err();
     assert!(format!("{err:#}").contains("impossible"));
@@ -132,7 +132,7 @@ fn lineage_depth_drives_driver_cost() {
     let run = |checkpoint: bool| -> f64 {
         let c = SparkContext::new(cfg.clone());
         let items: Vec<(BlockId, f64)> = (0..4).map(|i| (BlockId::new(i, 0), 0.0)).collect();
-        let part: Rc<dyn Partitioner> = Rc::new(HashPartitioner::new(4));
+        let part: Arc<dyn Partitioner> = Arc::new(HashPartitioner::new(4));
         let mut rdd = c.parallelize("x", items, part);
         for i in 0..50 {
             rdd = rdd.map_values("step", |_, v| v + 1.0);

@@ -11,7 +11,7 @@ use isospark::engine::{Partitioner, SparkContext};
 use isospark::linalg::Matrix;
 use isospark::sim::{self, CostModel, Workload};
 use isospark::util::Rng;
-use std::rc::Rc;
+use std::sync::Arc;
 
 #[test]
 fn config_file_roundtrip() {
@@ -79,15 +79,15 @@ fn partitioner_regimes_ut_beats_hash() {
     let parts = q * (q + 1) / 2 / 4;
     let g = ring(n, 1);
     let cfg = IsomapConfig { block: b, ..Default::default() };
-    let shuffle = |part: Rc<dyn Partitioner>| -> u64 {
+    let shuffle = |part: Arc<dyn Partitioner>| -> u64 {
         let ctx = SparkContext::new(ClusterConfig::paper_testbed(4));
         let rdd = ctx.parallelize("g", blocks_from_dense(&g, b), part);
         let _ = apsp::solve(rdd, q, &cfg, &Backend::Native).unwrap();
         ctx.total_shuffle_bytes()
     };
-    let ut = shuffle(Rc::new(UpperTriangularPartitioner::new(q, parts)));
-    let hash = shuffle(Rc::new(HashPartitioner::new(parts)));
-    let grid = shuffle(Rc::new(GridPartitioner::new(q, parts)));
+    let ut = shuffle(Arc::new(UpperTriangularPartitioner::new(q, parts)));
+    let hash = shuffle(Arc::new(HashPartitioner::new(parts)));
+    let grid = shuffle(Arc::new(GridPartitioner::new(q, parts)));
     assert!(ut < hash, "ut={ut} hash={hash}");
     // All three complete with identical numerics (checked elsewhere); here
     // just sanity that grid is in the same order of magnitude.

@@ -9,7 +9,7 @@ use isospark::engine::partitioner::UpperTriangularPartitioner;
 use isospark::engine::{Partitioner, SparkContext};
 use isospark::linalg::Matrix;
 use isospark::util::Rng;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn random_points(n: usize, d: usize, rng: &mut Rng) -> Matrix {
     let mut x = Matrix::zeros(n, d);
@@ -45,7 +45,7 @@ fn engine_apsp(g: &Matrix, b: usize) -> Matrix {
     let n = g.nrows();
     let q = num_blocks(n, b);
     let ctx = SparkContext::new(ClusterConfig::local());
-    let part: Rc<dyn Partitioner> = Rc::new(UpperTriangularPartitioner::new(q, q));
+    let part: Arc<dyn Partitioner> = Arc::new(UpperTriangularPartitioner::new(q, q));
     let rdd = ctx.parallelize("g", blocks_from_dense(g, b), part);
     let cfg = IsomapConfig { block: b, ..Default::default() };
     let out = apsp::solve(rdd, q, &cfg, &Backend::Native).unwrap();
@@ -194,7 +194,7 @@ fn eigen_orthonormal_and_sorted() {
         let m = m0.matmul(&m0.transpose()); // PSD
         let ctx = SparkContext::new(ClusterConfig::local());
         let q = num_blocks(n, b);
-        let part: Rc<dyn Partitioner> = Rc::new(UpperTriangularPartitioner::new(q, q));
+        let part: Arc<dyn Partitioner> = Arc::new(UpperTriangularPartitioner::new(q, q));
         let rdd = ctx.parallelize("a", blocks_from_dense(&m, b), part);
         let out =
             simultaneous_power_iteration(&rdd, n, b, 2, 1e-8, 200, &Backend::Native).unwrap();
