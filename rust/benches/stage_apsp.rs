@@ -12,11 +12,62 @@ use isospark::coordinator::{apsp, blocks_from_dense, knn, num_blocks};
 use isospark::data::swiss_roll;
 use isospark::engine::partitioner::UpperTriangularPartitioner;
 use isospark::engine::SparkContext;
-use isospark::kernels::minplus;
+use isospark::kernels::{matvec, minplus};
 use isospark::linalg::Matrix;
 use isospark::util::json::Json;
 use isospark::util::Rng;
 use std::sync::Arc;
+
+/// Pre-tiling `minplus_into` (the PR-1 i-k-j loop nest that re-streams
+/// `dst`'s row for every `k`) — kept bench-local as the reference baseline
+/// the register-blocked kernel is measured against.
+fn minplus_into_ref(a: &Matrix, b: &Matrix, dst: &mut Matrix) {
+    let (m, kk) = (a.nrows(), a.ncols());
+    for i in 0..m {
+        let arow = a.row(i);
+        for k in 0..kk {
+            let aik = arow[k];
+            if !aik.is_finite() {
+                continue;
+            }
+            let brow = b.row(k);
+            let drow = dst.row_mut(i);
+            for (d, &bv) in drow.iter_mut().zip(brow) {
+                let cand = aik + bv;
+                *d = if cand < *d { cand } else { *d };
+            }
+        }
+    }
+}
+
+/// Pre-tiling wide-`d` `gemm_acc` (accumulates straight into `out`'s row
+/// per `k`), bench-local baseline for the tiled eigen-stage product.
+fn gemm_acc_ref(a: &Matrix, q: &Matrix, out: &mut Matrix) {
+    for i in 0..a.nrows() {
+        let arow = a.row(i);
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let qrow = q.row(k);
+            let orow = out.row_mut(i);
+            for (o, &x) in orow.iter_mut().zip(qrow) {
+                *o += aik * x;
+            }
+        }
+    }
+}
+
+fn dense_block(b: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seed(seed);
+    let mut m = Matrix::zeros(b, b);
+    for i in 0..b {
+        for j in 0..b {
+            m[(i, j)] = rng.range(0.1, 10.0);
+        }
+    }
+    m
+}
 
 fn random_graph(n: usize, seed: u64) -> Matrix {
     let mut rng = Rng::seed(seed);
@@ -65,6 +116,64 @@ fn main() {
         });
         bench.report_value(&format!("minplus:native:b{b}:gflops"), ops / secs / 1e9, "Gop/s");
     }
+
+    // Kernel throughput: register-blocked suite vs the bench-local
+    // pre-tiling references, in Gop/s, written to BENCH_kernels.json so
+    // every landed PR leaves a comparable kernel-level perf record.
+    println!("\n== kernel throughput: tiled vs pre-tiling reference ==");
+    let mut kernel_cases: Vec<Json> = Vec::new();
+    for b in [64usize, 128, 256] {
+        let a = dense_block(b, b as u64 + 1);
+        let c = dense_block(b, b as u64 + 2);
+        let mut dst = Matrix::full(b, b, f64::INFINITY);
+        let mut dst_ref = Matrix::full(b, b, f64::INFINITY);
+        let ops = 2.0 * (b as f64).powi(3);
+        let tiled = bench.case(&format!("minplus:tiled:b{b}"), || {
+            minplus::minplus_into(&a, &c, &mut dst);
+        });
+        let base = bench.case(&format!("minplus:ref:b{b}"), || {
+            minplus_into_ref(&a, &c, &mut dst_ref);
+        });
+        assert_eq!(dst.as_slice(), dst_ref.as_slice(), "tiled min-plus must be bit-identical");
+        bench.report_value(&format!("minplus:tiled_speedup:b{b}"), base / tiled, "x");
+        kernel_cases.push(Json::obj(vec![
+            ("kernel", Json::str("minplus_into")),
+            ("b", Json::num(b as f64)),
+            ("tiled_secs", Json::num(tiled)),
+            ("ref_secs", Json::num(base)),
+            ("tiled_gops", Json::num(ops / tiled / 1e9)),
+            ("ref_gops", Json::num(ops / base / 1e9)),
+            ("speedup", Json::num(base / tiled)),
+        ]));
+    }
+    {
+        // Eigen-stage product at a wide d (exercises the tiled gemm path).
+        let (b, d) = (256usize, 16usize);
+        let a = dense_block(b, 11);
+        let q = dense_block(b, 12).slice(0, b, 0, d);
+        let mut out = Matrix::zeros(b, d);
+        let mut out_ref = Matrix::zeros(b, d);
+        let ops = 2.0 * (b as f64) * (b as f64) * (d as f64);
+        let tiled = bench.case(&format!("gemm_acc:tiled:b{b}:d{d}"), || {
+            matvec::gemm_acc(&a, &q, &mut out);
+        });
+        let base = bench.case(&format!("gemm_acc:ref:b{b}:d{d}"), || {
+            gemm_acc_ref(&a, &q, &mut out_ref);
+        });
+        bench.report_value(&format!("gemm_acc:tiled_speedup:b{b}:d{d}"), base / tiled, "x");
+        kernel_cases.push(Json::obj(vec![
+            ("kernel", Json::str("gemm_acc")),
+            ("b", Json::num(b as f64)),
+            ("d", Json::num(d as f64)),
+            ("tiled_secs", Json::num(tiled)),
+            ("ref_secs", Json::num(base)),
+            ("tiled_gops", Json::num(ops / tiled / 1e9)),
+            ("ref_gops", Json::num(ops / base / 1e9)),
+            ("speedup", Json::num(base / tiled)),
+        ]));
+    }
+    isospark::bench::write_kernel_section("BENCH_kernels.json", "stage_apsp", kernel_cases);
+    println!("(kernel throughput written to BENCH_kernels.json)");
 
     // Full APSP through the engine.
     let n = 1024;

@@ -11,9 +11,108 @@ use isospark::config::{ClusterConfig, IsomapConfig};
 use isospark::coordinator::knn;
 use isospark::data::{emnist_synth, swiss_roll};
 use isospark::engine::SparkContext;
+use isospark::kernels::sqdist;
+use isospark::linalg::Matrix;
+use isospark::util::json::Json;
+use isospark::util::Rng;
+
+/// Pre-tiling `dist_block` (per-(i,j) scalar dot with 4 accumulators) —
+/// kept bench-local as the baseline the packed Gram kernel is measured
+/// against.
+fn dist_block_ref(xi: &Matrix, xj: &Matrix) -> Matrix {
+    let bi = xi.nrows();
+    let bj = xj.nrows();
+    let ni = sqdist::row_sqnorms(xi);
+    let nj = sqdist::row_sqnorms(xj);
+    let mut out = Matrix::zeros(bi, bj);
+    for i in 0..bi {
+        let xr = xi.row(i);
+        let orow = out.row_mut(i);
+        for j in 0..bj {
+            let yr = xj.row(j);
+            let mut acc = [0.0f64; 4];
+            let chunks = xr.len() / 4;
+            for c in 0..chunks {
+                let base = 4 * c;
+                acc[0] += xr[base] * yr[base];
+                acc[1] += xr[base + 1] * yr[base + 1];
+                acc[2] += xr[base + 2] * yr[base + 2];
+                acc[3] += xr[base + 3] * yr[base + 3];
+            }
+            let mut dot = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+            for t in 4 * chunks..xr.len() {
+                dot += xr[t] * yr[t];
+            }
+            let d2 = ni[i] + nj[j] - 2.0 * dot;
+            orow[j] = if d2 > 0.0 { d2.sqrt() } else { 0.0 };
+        }
+    }
+    out
+}
+
+fn random_points(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seed(seed);
+    let mut x = Matrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            x[(i, j)] = rng.gaussian();
+        }
+    }
+    x
+}
 
 fn main() {
     let mut bench = Bencher::with(6.0, 5, 1);
+
+    // Kernel throughput: packed Gram distance kernel vs the bench-local
+    // pre-tiling scalar-dot reference, merged into BENCH_kernels.json
+    // alongside stage_apsp's min-plus/gemm section.
+    println!("== kernel throughput: tiled vs pre-tiling reference ==");
+    let mut kernel_cases: Vec<Json> = Vec::new();
+    for (b, dim) in [(256usize, 16usize), (256, 784), (128, 784)] {
+        let xi = random_points(b, dim, 1);
+        let xj = random_points(b, dim, 2);
+        let ops = 2.0 * (b as f64) * (b as f64) * (dim as f64);
+        let tiled = bench.case(&format!("dist:tiled:b{b}:D{dim}"), || {
+            std::hint::black_box(sqdist::dist_block(&xi, &xj));
+        });
+        let base = bench.case(&format!("dist:ref:b{b}:D{dim}"), || {
+            std::hint::black_box(dist_block_ref(&xi, &xj));
+        });
+        bench.report_value(&format!("dist:tiled_speedup:b{b}:D{dim}"), base / tiled, "x");
+        kernel_cases.push(Json::obj(vec![
+            ("kernel", Json::str("dist_block")),
+            ("b", Json::num(b as f64)),
+            ("dim", Json::num(dim as f64)),
+            ("tiled_secs", Json::num(tiled)),
+            ("ref_secs", Json::num(base)),
+            ("tiled_gops", Json::num(ops / tiled / 1e9)),
+            ("ref_gops", Json::num(ops / base / 1e9)),
+            ("speedup", Json::num(base / tiled)),
+        ]));
+    }
+    {
+        // Symmetric diagonal block: upper triangle + mirror vs full block.
+        let (b, dim) = (256usize, 64usize);
+        let x = random_points(b, dim, 3);
+        let full = bench.case(&format!("dist:full_diag:b{b}:D{dim}"), || {
+            std::hint::black_box(sqdist::dist_block(&x, &x));
+        });
+        let sym = bench.case(&format!("dist:sym_diag:b{b}:D{dim}"), || {
+            std::hint::black_box(sqdist::dist_block_sym(&x));
+        });
+        bench.report_value(&format!("dist:sym_speedup:b{b}:D{dim}"), full / sym, "x");
+        kernel_cases.push(Json::obj(vec![
+            ("kernel", Json::str("dist_block_sym")),
+            ("b", Json::num(b as f64)),
+            ("dim", Json::num(dim as f64)),
+            ("tiled_secs", Json::num(sym)),
+            ("ref_secs", Json::num(full)),
+            ("speedup", Json::num(full / sym)),
+        ]));
+    }
+    isospark::bench::write_kernel_section("BENCH_kernels.json", "stage_knn", kernel_cases);
+    println!("(kernel throughput written to BENCH_kernels.json)\n");
 
     let n = 1024;
     let swiss = swiss_roll::euler_isometric(n, 5);

@@ -124,6 +124,34 @@ impl Bencher {
     }
 }
 
+/// Merge one bench's kernel-throughput cases into a shared JSON report
+/// (`BENCH_kernels.json`). Each bench owns a named section and re-runs
+/// replace only their own section, so `stage_apsp` and `stage_knn` can
+/// both contribute to a single file regardless of which ran last; sections
+/// are kept sorted by name so the file is deterministic.
+pub fn write_kernel_section(path: &str, section: &str, cases: Vec<Json>) {
+    let mut sections: Vec<Json> = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .and_then(|j| j.get("sections").and_then(|a| a.as_arr().map(|x| x.to_vec())))
+        .unwrap_or_default();
+    sections.retain(|s| s.get("bench").and_then(Json::as_str) != Some(section));
+    sections.push(Json::obj(vec![
+        ("bench", Json::str(section)),
+        ("cases", Json::arr(cases)),
+    ]));
+    sections.sort_by(|a, b| {
+        let ka = a.get("bench").and_then(Json::as_str).unwrap_or("");
+        let kb = b.get("bench").and_then(Json::as_str).unwrap_or("");
+        ka.cmp(kb)
+    });
+    let out = Json::obj(vec![("sections", Json::arr(sections))]);
+    if let Err(e) = std::fs::write(path, out.to_string()) {
+        // The kernel report is acceptance evidence — never fail silently.
+        eprintln!("warning: could not write {path}: {e}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +166,27 @@ mod tests {
         let r = &b.results()[0];
         assert!(r.iters >= 1 && r.iters <= 5);
         assert!(r.min_secs <= r.mean_secs && r.mean_secs <= r.max_secs + 1e-12);
+    }
+
+    #[test]
+    fn kernel_sections_merge_and_replace() {
+        let path = std::env::temp_dir()
+            .join(format!("bench_kernels_test_{}.json", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        let case = |v: f64| Json::obj(vec![("speedup", Json::num(v))]);
+        write_kernel_section(&path, "stage_knn", vec![case(2.0)]);
+        write_kernel_section(&path, "stage_apsp", vec![case(3.0)]);
+        // Re-running a section replaces it without touching the other.
+        write_kernel_section(&path, "stage_apsp", vec![case(4.0)]);
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let sections = parsed.get("sections").unwrap().as_arr().unwrap();
+        assert_eq!(sections.len(), 2);
+        assert_eq!(sections[0].get("bench").unwrap().as_str(), Some("stage_apsp"));
+        let apsp_cases = sections[0].get("cases").unwrap().as_arr().unwrap();
+        assert_eq!(apsp_cases[0].get("speedup").unwrap().as_f64(), Some(4.0));
+        assert_eq!(sections[1].get("bench").unwrap().as_str(), Some("stage_knn"));
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -10,10 +10,16 @@
 
 use super::block_range;
 use crate::backend::Backend;
+use crate::engine::executor::run_tasks;
 use crate::engine::{BlockId, BlockRdd};
 use crate::linalg::qr::qr_thin;
 use crate::linalg::Matrix;
 use anyhow::{bail, Result};
+
+/// Elements of `V` below which the per-iteration collect+paste stays on
+/// the driver thread: a scoped pool spawn costs tens of µs, so the copy
+/// must be ≥ ~1 MiB (2¹⁷ f64) before fanning it out pays.
+const PARALLEL_PASTE_MIN: usize = 1 << 17;
 
 /// Result of the spectral stage.
 #[derive(Debug)]
@@ -77,12 +83,35 @@ pub fn simultaneous_power_iteration(
             x
         });
 
-        // Driver: collect V, QR-decompose, test convergence.
+        // Driver: collect V, QR-decompose, test convergence. The V blocks
+        // tile the rows exactly (one per block-row, BTreeMap-sorted by
+        // index). Above the copy-size threshold, V's row-major buffer is
+        // carved into disjoint spans and the paste runs on the worker pool
+        // instead of a serial driver loop; tiny V (the practical d ≤ 4
+        // embeddings) stays serial — a scoped thread spawn per iteration
+        // would dwarf the memcpy it parallelizes.
         let collected = v_blocks.collect();
         let mut v = Matrix::zeros(n, d);
-        for (id, blk) in collected {
-            let (rs, _) = block_range(n, b, id.i);
-            v.paste(rs, 0, &blk);
+        let workers = ctx.parallelism().max(1);
+        if workers == 1 || n * d < PARALLEL_PASTE_MIN {
+            for (id, blk) in &collected {
+                let (rs, _) = block_range(n, b, id.i);
+                v.paste(rs, 0, blk);
+            }
+        } else {
+            let mut tasks = Vec::with_capacity(collected.len());
+            let mut rest: &mut [f64] = v.as_mut_slice();
+            let mut next_row = 0usize;
+            for (id, blk) in &collected {
+                let (rs, re) = block_range(n, b, id.i);
+                debug_assert_eq!(rs, next_row, "eigen: V blocks must tile the rows");
+                let (span, tail) = std::mem::take(&mut rest).split_at_mut((re - rs) * d);
+                tasks.push((span, blk));
+                rest = tail;
+                next_row = re;
+            }
+            debug_assert_eq!(next_row, n, "eigen: V blocks must cover all rows");
+            run_tasks(workers, tasks, |(span, blk)| span.copy_from_slice(blk.as_slice()));
         }
         let (qn, rn) = qr_thin(&v);
         let delta = qn.fro_dist(&q);

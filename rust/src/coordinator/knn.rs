@@ -11,12 +11,19 @@
 use super::{block_range, default_partitions, num_blocks};
 use crate::backend::Backend;
 use crate::config::IsomapConfig;
+use crate::engine::executor::run_tasks;
 use crate::engine::partitioner::UpperTriangularPartitioner;
 use crate::engine::{BlockId, BlockRdd, SparkContext};
-use crate::kernels::kselect::{merge_topk, row_topk, Neighbor};
+use crate::kernels::kselect::{cols_topk, merge_topk, row_topk, Neighbor};
 use crate::linalg::Matrix;
 use anyhow::Result;
 use std::sync::Arc;
+
+/// Points below which the driver-side lists scatter stays serial: the
+/// parallel path re-moves every list once (bucketing) plus a scoped pool
+/// spawn, which only amortizes once tens of thousands of `Vec` handles
+/// are being placed.
+const PARALLEL_SCATTER_MIN: usize = 1 << 16;
 
 /// Output of the kNN stage.
 pub struct KnnGraph {
@@ -70,16 +77,23 @@ pub fn build(ctx: &SparkContext, x: &Matrix, cfg: &IsomapConfig, backend: &Backe
     // Distance blocks M^{(I,J)} = ‖x_i − x_j‖₂ (BLAS-offloaded in the
     // paper; Pallas/native kernel here).
     let m = grouped.map_values("knn:dist", |id, members| {
-        let xi = &members.iter().find(|(o, _)| *o == id.i).expect("left member").1;
-        if id.i == id.j {
-            let mut d = backend.dist_block(xi, xi);
-            for r in 0..d.nrows() {
-                d[(r, r)] = 0.0;
+        // Index both members by origin in one pass (was: two linear
+        // `find()` scans over the grouped members per block).
+        let mut xi = None;
+        let mut xj = None;
+        for (origin, pts) in members {
+            if *origin == id.i {
+                xi = Some(pts);
             }
-            d
+            if *origin == id.j {
+                xj = Some(pts);
+            }
+        }
+        let xi = xi.expect("left member");
+        if id.i == id.j {
+            backend.dist_block_sym(xi)
         } else {
-            let xj = &members.iter().find(|(o, _)| *o == id.j).expect("right member").1;
-            backend.dist_block(xi, xj)
+            backend.dist_block(xi, xj.expect("right member"))
         }
     });
     m.persist("M")?;
@@ -97,9 +111,12 @@ pub fn build(ctx: &SparkContext, x: &Matrix, cfg: &IsomapConfig, backend: &Backe
             out.push((BlockId::new(id.i, r), row_topk(blk.row(r), k, cj, exclude)));
         }
         if id.i != id.j {
-            for c in 0..blk.ncols() {
-                let col: Vec<f64> = (0..blk.nrows()).map(|r| blk[(r, c)]).collect();
-                out.push((BlockId::new(id.j, c), row_topk(&col, k, ri, None)));
+            // Column side (the never-materialized under-diagonal
+            // transposes): one cache-blocked transpose into per-thread
+            // scratch, then contiguous-row selection — replaces the
+            // per-column strided gather + `Vec` allocation.
+            for (c, list) in cols_topk(blk, k, ri).into_iter().enumerate() {
+                out.push((BlockId::new(id.j, c), list));
             }
         }
         out
@@ -107,12 +124,36 @@ pub fn build(ctx: &SparkContext, x: &Matrix, cfg: &IsomapConfig, backend: &Backe
     let knn_lists =
         local.reduce_by_key("knn:topk_merge", Arc::clone(&part), |a, c| merge_topk(k, &[a, c]));
 
-    // Collect the (small) global lists for connectivity/eval use.
+    // Collect the (small) global lists for connectivity/eval use. Above
+    // the size threshold the driver-side scatter runs on the worker pool:
+    // entries are bucketed by destination chunk so each worker owns a
+    // disjoint slice of `lists` (deterministic for any pool size —
+    // ownership, not arrival order, decides placement). Small n keeps the
+    // old one-pass serial scatter: a pool spawn costs more than moving a
+    // few thousand `Vec` handles.
     let collected = knn_lists.collect();
+    let workers = ctx.parallelism().max(1);
     let mut lists: Vec<Vec<Neighbor>> = vec![Vec::new(); n];
-    for (id, list) in collected {
-        let (s, _) = block_range(n, b, id.i);
-        lists[s + id.j] = list;
+    if workers == 1 || n < PARALLEL_SCATTER_MIN {
+        for (id, list) in collected {
+            let (s, _) = block_range(n, b, id.i);
+            lists[s + id.j] = list;
+        }
+    } else {
+        let chunk = n.div_ceil(workers).max(1);
+        let mut buckets: Vec<Vec<(usize, Vec<Neighbor>)>> = Vec::new();
+        buckets.resize_with(n.div_ceil(chunk), Vec::new);
+        for (id, list) in collected {
+            let (s, _) = block_range(n, b, id.i);
+            let g = s + id.j;
+            buckets[g / chunk].push((g % chunk, list));
+        }
+        let tasks: Vec<_> = lists.chunks_mut(chunk).zip(buckets).collect();
+        run_tasks(workers, tasks, |(slice, items)| {
+            for (off, list) in items {
+                slice[off] = list;
+            }
+        });
     }
 
     // Neighborhood-graph fill: reuse M's blocks, overwrite with ∞, set kNN

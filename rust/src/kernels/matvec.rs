@@ -1,22 +1,27 @@
 //! Block mat-vec kernels for the power-iteration stage:
 //! `V_I += A^{(I,J)} · Q_J` and the transposed contribution
 //! `V_J += (A^{(I,J)})ᵀ · Q_I` for upper-triangular block storage.
+//!
+//! For the practical visualization widths (d ≤ 4) a specialized path keeps
+//! the accumulators in registers across the whole `k` sweep (§Perf: ~3× on
+//! the power-iteration stage at d = 2). Wider `d` (ablations, spectral
+//! baselines) runs the shared register tiling from [`super::tiling`]: the
+//! output row tile lives in a `[f64; J_TILE]` stack array across the whole
+//! `k` sweep, so `out` is read and written once per tile instead of once
+//! per `k`. Each output element is still one accumulator chain over `k`
+//! (respectively `i`) ascending — deterministic per input.
 
+use super::tiling::{self, J_TILE, MR};
 use crate::linalg::Matrix;
 
 /// `out += a · q` where `a` is `bi×bj` and `q` is `bj×d`.
-///
-/// For the practical visualization widths (d ≤ 4) a specialized path keeps
-/// the accumulators in registers across the whole `k` sweep instead of
-/// re-walking `out`'s row per `k` (§Perf: ~3× on the power-iteration
-/// stage at d = 2).
 pub fn gemm_acc(a: &Matrix, q: &Matrix, out: &mut Matrix) {
     assert_eq!(a.ncols(), q.nrows());
     assert_eq!(out.nrows(), a.nrows());
     assert_eq!(out.ncols(), q.ncols());
     let d = q.ncols();
+    let qs = q.as_slice();
     if d <= 4 {
-        let qs = q.as_slice();
         for i in 0..a.nrows() {
             let arow = a.row(i);
             let mut acc = [0.0f64; 4];
@@ -32,16 +37,41 @@ pub fn gemm_acc(a: &Matrix, q: &Matrix, out: &mut Matrix) {
         }
         return;
     }
-    for i in 0..a.nrows() {
-        let arow = a.row(i);
-        for (k, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
+    for (j0, w) in tiling::tiles(d, J_TILE) {
+        if w == J_TILE {
+            for i in 0..a.nrows() {
+                let arow = a.row(i);
+                let mut regs = [0.0f64; J_TILE];
+                for (k, &aik) in arow.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let qrow: &[f64; J_TILE] =
+                        qs[k * d + j0..k * d + j0 + J_TILE].try_into().unwrap();
+                    for (r, &x) in regs.iter_mut().zip(qrow) {
+                        *r += aik * x;
+                    }
+                }
+                for (o, &v) in out.row_mut(i)[j0..j0 + J_TILE].iter_mut().zip(&regs) {
+                    *o += v;
+                }
             }
-            let qrow = q.row(k);
-            let orow = out.row_mut(i);
-            for (o, &x) in orow.iter_mut().zip(qrow) {
-                *o += aik * x;
+        } else {
+            for i in 0..a.nrows() {
+                let arow = a.row(i);
+                let mut regs = [0.0f64; J_TILE];
+                for (k, &aik) in arow.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let qrow = &qs[k * d + j0..k * d + j0 + w];
+                    for (r, &x) in regs[..w].iter_mut().zip(qrow) {
+                        *r += aik * x;
+                    }
+                }
+                for (o, &v) in out.row_mut(i)[j0..j0 + w].iter_mut().zip(&regs[..w]) {
+                    *o += v;
+                }
             }
         }
     }
@@ -50,7 +80,9 @@ pub fn gemm_acc(a: &Matrix, q: &Matrix, out: &mut Matrix) {
 /// `out += aᵀ · q` where `a` is `bi×bj`, `q` is `bi×d`, `out` is `bj×d` —
 /// walks `a` row-wise so no explicit transpose is materialized. Small-d
 /// path caches `q`'s row in registers per `i` sweep (§Perf, as
-/// [`gemm_acc`]).
+/// [`gemm_acc`]). The wide-d path register-blocks [`MR`] output rows ×
+/// [`J_TILE`] columns and accumulates over the `i` sweep, reading `a`'s
+/// row fragments contiguously.
 pub fn gemm_t_acc(a: &Matrix, q: &Matrix, out: &mut Matrix) {
     assert_eq!(a.nrows(), q.nrows());
     assert_eq!(out.nrows(), a.ncols());
@@ -71,16 +103,30 @@ pub fn gemm_t_acc(a: &Matrix, q: &Matrix, out: &mut Matrix) {
         }
         return;
     }
-    for i in 0..a.nrows() {
-        let arow = a.row(i);
-        let qrow = q.row(i);
-        for (k, &aik) in arow.iter().enumerate() {
-            if aik == 0.0 {
-                continue;
+    let (bi, bj) = (a.nrows(), a.ncols());
+    for (j0, w) in tiling::tiles(d, J_TILE) {
+        for (k0, kh) in tiling::tiles(bj, MR) {
+            // MR output rows × one column tile accumulated over the whole
+            // `i` sweep; `a`'s per-row fragment a[i][k0..k0+kh] is
+            // contiguous, so no strided gathers despite the transpose.
+            let mut regs = [[0.0f64; J_TILE]; MR];
+            for i in 0..bi {
+                let afrag = &a.row(i)[k0..k0 + kh];
+                let qrow = &q.row(i)[j0..j0 + w];
+                for (km, &aik) in afrag.iter().enumerate() {
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    for (r, &x) in regs[km][..w].iter_mut().zip(qrow) {
+                        *r += aik * x;
+                    }
+                }
             }
-            let orow = out.row_mut(k);
-            for (o, &x) in orow.iter_mut().zip(qrow) {
-                *o += aik * x;
+            for (km, reg) in regs.iter().enumerate().take(kh) {
+                let orow = &mut out.row_mut(k0 + km)[j0..j0 + w];
+                for (o, &v) in orow.iter_mut().zip(&reg[..w]) {
+                    *o += v;
+                }
             }
         }
     }
@@ -112,6 +158,18 @@ mod tests {
     }
 
     #[test]
+    fn acc_matches_matmul_wide() {
+        // Exercises the tiled d > 4 path across tile boundaries.
+        for d in [5usize, J_TILE - 1, J_TILE, J_TILE + 1, 2 * J_TILE + 3] {
+            let a = random(9, 11, d as u64);
+            let q = random(11, d, d as u64 + 7);
+            let mut out = Matrix::zeros(9, d);
+            gemm_acc(&a, &q, &mut out);
+            assert!(out.max_abs_diff(&a.matmul(&q)) < 1e-10, "d={d}");
+        }
+    }
+
+    #[test]
     fn accumulates() {
         let a = random(4, 4, 3);
         let q = random(4, 2, 4);
@@ -131,5 +189,21 @@ mod tests {
         let mut out = Matrix::zeros(4, 3);
         gemm_t_acc(&a, &q, &mut out);
         assert!(out.max_abs_diff(&a.transpose().matmul(&q)) < 1e-12);
+    }
+
+    #[test]
+    fn transposed_matches_explicit_wide() {
+        for d in [5usize, J_TILE, J_TILE + 1] {
+            for bj in [MR - 1, MR, MR + 1, 2 * MR + 1] {
+                let a = random(7, bj, (d + bj) as u64);
+                let q = random(7, d, (d + bj) as u64 + 9);
+                let mut out = Matrix::zeros(bj, d);
+                gemm_t_acc(&a, &q, &mut out);
+                assert!(
+                    out.max_abs_diff(&a.transpose().matmul(&q)) < 1e-10,
+                    "d={d} bj={bj}"
+                );
+            }
+        }
     }
 }

@@ -4,22 +4,39 @@
 //! The paper implements this in Numba-JIT'd Python; here it is the native
 //! twin of the Pallas kernel in `python/compile/kernels/minplus.py`.
 //!
-//! `minplus_into` fuses the element-wise `min` with the destination
-//! (the Phase-2/3 in-place update of the blocked Floyd–Warshall), which
-//! halves memory traffic versus computing `C` then `min`-ing it in.
-//! `minplus_left_inplace` / `minplus_right_inplace` additionally remove
-//! the per-call clone of the destination's old value that the Phase-2
-//! pivot updates `A ← A ⊕ (D ⊗ A)` / `A ← A ⊕ (A ⊗ D)` would otherwise
-//! need: the pre-update copy is staged in a per-thread scratch buffer that
-//! is reused across calls — no allocation on the hot path, and safe under
-//! the multi-core stage executor because each worker owns its own scratch.
+//! All three entry points run one register-blocked micro-kernel
+//! ([`mp_tile`]): the destination is processed in [`J_TILE`]-wide column
+//! tiles held in a stack array across the whole `k` sweep, and the right
+//! operand's column panel is packed k-major into per-thread scratch so the
+//! inner loop is unit-stride. Versus the PR-1 loop nest (which re-streamed
+//! `dst`'s whole row from L1/L2 for every `k`) the tile is loaded and
+//! stored exactly once per `(row, tile)` pair.
+//!
+//! Bit-exactness: tiling changes only the *order in which output elements
+//! are finished*, never the candidate set or the per-candidate arithmetic.
+//! Each `dst[i][j]` still takes `min` over `a[i][k] + b[k][j]` for `k`
+//! ascending; `+` on two finite f64s is a single correctly-rounded op and
+//! `min` is associative/commutative, so the result is identical to the
+//! untiled kernel bit for bit (the `kernel_tiling` property tests assert
+//! equality, not closeness).
+//!
+//! `minplus_left_inplace` / `minplus_right_inplace` additionally avoid the
+//! per-call clone of the destination's old value that the Phase-2 pivot
+//! updates `A ← A ⊕ (D ⊗ A)` / `A ← A ⊕ (A ⊗ D)` would otherwise need:
+//! the pre-update values are staged in per-thread scratch that is reused
+//! across calls — no allocation on the hot path, and safe under the
+//! multi-core stage executor because each worker owns its own scratch.
 
+use super::tiling::{self, J_TILE};
 use crate::linalg::Matrix;
 use std::cell::RefCell;
 
 thread_local! {
-    /// Per-thread staging buffer for the in-place pivot updates.
+    /// Per-thread staging buffer for the in-place pivot updates
+    /// (`minplus_right_inplace` stages the full pre-update block).
     static SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread packed k-major column panel of the right operand.
+    static PANEL: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
 }
 
 /// `C = A ⊗ B` (min-plus product).
@@ -29,94 +46,108 @@ pub fn minplus(a: &Matrix, b: &Matrix) -> Matrix {
     c
 }
 
-/// `dst = min(dst, A ⊗ B)` — fused product + update.
-///
-/// Loop order is i-k-j so the inner loop walks `B`'s row `k` and `dst`'s
-/// row `i` contiguously (the cache layout the paper enforces by choosing C
-/// vs Fortran order before calling Numba).
-pub fn minplus_into(a: &Matrix, b: &Matrix, dst: &mut Matrix) {
-    let (m, kk) = (a.nrows(), a.ncols());
-    let n = b.ncols();
-    assert_eq!(kk, b.nrows(), "minplus shape mismatch");
-    assert_eq!((dst.nrows(), dst.ncols()), (m, n), "dst shape mismatch");
-    for i in 0..m {
-        let arow = a.row(i);
-        for k in 0..kk {
-            let aik = arow[k];
-            if !aik.is_finite() {
-                // ∞ row entries contribute nothing; skipping them is also
-                // the sparse fast path for barely-connected graphs.
-                continue;
+/// Register-blocked tile update shared by every min-plus entry point:
+/// `dst[i][j0..j0+w] ⊕= min_k a[i][k] + panel[k][·]` for `i in 0..m`,
+/// where `a` is a row-major `m×kk` buffer and `panel` a k-major `kk×w`
+/// packed panel. The destination tile lives in a `[f64; J_TILE]` stack
+/// array across the whole `k` sweep; the branch-free select compiles to
+/// `vminpd` and the fixed-width path gives LLVM exact trip counts.
+fn mp_tile(a: &[f64], kk: usize, panel: &[f64], dst: &mut Matrix, j0: usize, w: usize, m: usize) {
+    if w == J_TILE {
+        for i in 0..m {
+            let arow = &a[i * kk..(i + 1) * kk];
+            let drow = &mut dst.row_mut(i)[j0..j0 + J_TILE];
+            let mut regs = [0.0f64; J_TILE];
+            regs.copy_from_slice(drow);
+            for (k, &aik) in arow.iter().enumerate() {
+                if !aik.is_finite() {
+                    // ∞ entries contribute nothing; skipping them is also
+                    // the sparse fast path for barely-connected graphs.
+                    continue;
+                }
+                let prow: &[f64; J_TILE] =
+                    panel[k * J_TILE..(k + 1) * J_TILE].try_into().unwrap();
+                for (r, &pv) in regs.iter_mut().zip(prow) {
+                    let cand = aik + pv;
+                    *r = if cand < *r { cand } else { *r };
+                }
             }
-            let brow = b.row(k);
-            let drow = dst.row_mut(i);
-            // Branch-free min lets LLVM vectorize this inner loop
-            // (vminpd); the old `if cand < drow[j]` compare-and-store was
-            // the APSP hot spot (§Perf: 4.0 -> ~8 Gop/s at b=256).
-            for (d, &bv) in drow.iter_mut().zip(brow) {
-                let cand = aik + bv;
-                *d = if cand < *d { cand } else { *d };
+            drow.copy_from_slice(&regs);
+        }
+    } else {
+        // Ragged last tile: same candidate order, dynamic width.
+        for i in 0..m {
+            let arow = &a[i * kk..(i + 1) * kk];
+            let drow = &mut dst.row_mut(i)[j0..j0 + w];
+            for (k, &aik) in arow.iter().enumerate() {
+                if !aik.is_finite() {
+                    continue;
+                }
+                let prow = &panel[k * w..(k + 1) * w];
+                for (d, &pv) in drow.iter_mut().zip(prow) {
+                    let cand = aik + pv;
+                    *d = if cand < *d { cand } else { *d };
+                }
             }
         }
     }
 }
 
+/// `dst = min(dst, A ⊗ B)` — fused product + update.
+pub fn minplus_into(a: &Matrix, b: &Matrix, dst: &mut Matrix) {
+    let (m, kk) = (a.nrows(), a.ncols());
+    let n = b.ncols();
+    assert_eq!(kk, b.nrows(), "minplus shape mismatch");
+    assert_eq!((dst.nrows(), dst.ncols()), (m, n), "dst shape mismatch");
+    PANEL.with(|cell| {
+        let mut panel = cell.borrow_mut();
+        for (j0, w) in tiling::tiles(n, J_TILE) {
+            tiling::pack_col_panel(b.as_slice(), n, kk, j0, w, &mut panel);
+            mp_tile(a.as_slice(), kk, &panel, dst, j0, w, m);
+        }
+    });
+}
+
 /// `dst = dst ⊕ (A ⊗ dst₀)` where `dst₀` is `dst`'s value on entry — the
-/// APSP Phase-2 row update with a square pivot `A`. The old value is
-/// staged in per-thread scratch, so the caller needs no clone.
+/// APSP Phase-2 row update with a square pivot `A`. Only the current
+/// column panel of the old value needs staging: writes to tile `j` never
+/// touch the columns a later tile reads, so the scratch is `b×J_TILE`
+/// instead of the full-block copy the pre-tiling kernel kept.
 pub fn minplus_left_inplace(a: &Matrix, dst: &mut Matrix) {
     let b = a.nrows();
     assert_eq!(a.ncols(), b, "pivot block must be square");
     assert_eq!(dst.nrows(), b, "minplus_left_inplace shape mismatch");
     let n = dst.ncols();
-    SCRATCH.with(|cell| {
-        let mut scratch = cell.borrow_mut();
-        scratch.clear();
-        scratch.extend_from_slice(dst.as_slice());
-        for i in 0..b {
-            let arow = a.row(i);
-            for k in 0..b {
-                let aik = arow[k];
-                if !aik.is_finite() {
-                    continue;
-                }
-                let srow = &scratch[k * n..(k + 1) * n];
-                let drow = dst.row_mut(i);
-                for (d, &sv) in drow.iter_mut().zip(srow) {
-                    let cand = aik + sv;
-                    *d = if cand < *d { cand } else { *d };
-                }
-            }
+    PANEL.with(|cell| {
+        let mut panel = cell.borrow_mut();
+        for (j0, w) in tiling::tiles(n, J_TILE) {
+            // Stage dst₀'s column panel *before* updating the tile.
+            tiling::pack_col_panel(dst.as_slice(), n, b, j0, w, &mut panel);
+            mp_tile(a.as_slice(), b, &panel, dst, j0, w, b);
         }
     });
 }
 
 /// `dst = dst ⊕ (dst₀ ⊗ B)` with a square pivot `B` — the APSP Phase-2
-/// column update, same scratch-staging strategy.
+/// column update. Here every output column reads *all* of `dst₀`, so the
+/// whole pre-update block is staged in per-thread scratch (as before) and
+/// the tiled product runs scratch ⊗ packed-B-panel.
 pub fn minplus_right_inplace(b: &Matrix, dst: &mut Matrix) {
     let bs = b.nrows();
     assert_eq!(b.ncols(), bs, "pivot block must be square");
     assert_eq!(dst.ncols(), bs, "minplus_right_inplace shape mismatch");
     let m = dst.nrows();
-    SCRATCH.with(|cell| {
-        let mut scratch = cell.borrow_mut();
+    SCRATCH.with(|s| {
+        let mut scratch = s.borrow_mut();
         scratch.clear();
         scratch.extend_from_slice(dst.as_slice());
-        for i in 0..m {
-            let srow = &scratch[i * bs..(i + 1) * bs];
-            for k in 0..bs {
-                let sik = srow[k];
-                if !sik.is_finite() {
-                    continue;
-                }
-                let brow = b.row(k);
-                let drow = dst.row_mut(i);
-                for (d, &bv) in drow.iter_mut().zip(brow) {
-                    let cand = sik + bv;
-                    *d = if cand < *d { cand } else { *d };
-                }
+        PANEL.with(|p| {
+            let mut panel = p.borrow_mut();
+            for (j0, w) in tiling::tiles(bs, J_TILE) {
+                tiling::pack_col_panel(b.as_slice(), bs, bs, j0, w, &mut panel);
+                mp_tile(&scratch, bs, &panel, dst, j0, w, m);
             }
-        }
+        });
     });
 }
 
@@ -173,6 +204,18 @@ mod tests {
     }
 
     #[test]
+    fn matches_naive_across_tile_boundaries() {
+        // Widths straddling J_TILE exercise the full and ragged tile paths.
+        for n in [J_TILE - 1, J_TILE, J_TILE + 1, 2 * J_TILE + 3] {
+            let a = random(5, 7, n as u64);
+            let b = random(7, n, n as u64 + 9);
+            let got = minplus(&a, &b);
+            let want = naive(&a, &b);
+            assert_eq!(got.as_slice(), want.as_slice(), "n={n}");
+        }
+    }
+
+    #[test]
     fn identity_semiring() {
         // Min-plus identity: 0 on diagonal, ∞ elsewhere.
         let mut id = Matrix::full(5, 5, f64::INFINITY);
@@ -198,7 +241,8 @@ mod tests {
 
     #[test]
     fn left_inplace_matches_cloned_form() {
-        for (b, n, seed) in [(5usize, 5usize, 1u64), (8, 3, 2), (7, 12, 3), (1, 4, 4)] {
+        for (b, n, seed) in [(5usize, 5usize, 1u64), (8, 3, 2), (7, 12, 3), (1, 4, 4), (17, 33, 5)]
+        {
             let d = random(b, b, seed);
             let a0 = random(b, n, seed + 30);
             let mut got = a0.clone();
@@ -211,7 +255,8 @@ mod tests {
 
     #[test]
     fn right_inplace_matches_cloned_form() {
-        for (m, b, seed) in [(5usize, 5usize, 5u64), (3, 8, 6), (12, 7, 7), (4, 1, 8)] {
+        for (m, b, seed) in [(5usize, 5usize, 5u64), (3, 8, 6), (12, 7, 7), (4, 1, 8), (33, 17, 9)]
+        {
             let d = random(b, b, seed);
             let a0 = random(m, b, seed + 60);
             let mut got = a0.clone();

@@ -5,6 +5,11 @@
 //! [`crate::backend::Backend`] abstraction, and the `runtime_equivalence`
 //! integration tests assert both produce identical numerics. In the paper
 //! these are the NumPy/SciPy/Numba routines offloaded to MKL.
+//!
+//! The compute-intensive kernels (min-plus, distance blocks, gemm, the
+//! kNN column selection) are cache- and register-blocked through the
+//! shared [`tiling`] module — see its docs for the tile geometry and the
+//! determinism contract.
 
 pub mod centering;
 pub mod floyd_warshall;
@@ -12,6 +17,7 @@ pub mod kselect;
 pub mod matvec;
 pub mod minplus;
 pub mod sqdist;
+pub mod tiling;
 
 /// Value used for "no edge" in the neighborhood graph and APSP blocks. A
 /// large finite value rather than `f64::INFINITY` so that AOT-compiled

@@ -1,0 +1,162 @@
+//! Shared tile geometry for the register-blocked kernel suite.
+//!
+//! Every numeric hot path (min-plus APSP updates, the Gram-product
+//! distance blocks, the power-iteration `A·Q` products, the kNN
+//! column-side selection) blocks its loops with the constants defined
+//! here, so the cache/register story is tuned in exactly one place:
+//!
+//! * [`J_TILE`] destination columns are held in a stack array across the
+//!   whole `k` sweep — the micro-kernels read/write `dst` once per tile
+//!   instead of re-streaming the row from L2 for every `k` (the BLAS-2 →
+//!   BLAS-3 step the paper gets for free from MKL).
+//! * Operand panels are *packed* into small contiguous per-thread scratch
+//!   buffers (k-major, tile-width rows) so the inner loop walks memory
+//!   unit-stride regardless of the source matrix's leading dimension.
+//! * The packed Gram micro-kernel computes an [`MR`]`×`[`NR`] accumulator
+//!   tile per `k` sweep (MR·NR = 32 f64 = 8 AVX2 vectors, leaving
+//!   registers for the broadcast operand and panel loads).
+//!
+//! Determinism contract: tiling only changes *which* output elements are
+//! produced together, never the reduction order *within* an element.
+//! Every kernel built on this module accumulates each output element over
+//! `k` ascending with a single chain, so results are a pure function of
+//! the input — independent of tile sizes, block decomposition and worker
+//! count (see `tests/determinism_parallel.rs` and `tests/kernel_tiling.rs`).
+
+/// f64 lanes in one vector register on the widest ISA we tune for
+/// (AVX2 `ymm`; on NEON/SSE2 the compiler simply uses two 2-lane ops).
+pub const SIMD_WIDTH: usize = 4;
+
+/// Unroll factor of the j-register tile: enough independent accumulator
+/// vectors to hide FP latency without spilling.
+pub const J_UNROLL: usize = 4;
+
+/// Destination columns held in registers by the min-plus / gemm
+/// micro-kernels (`SIMD_WIDTH × J_UNROLL` = 16 f64 = 4 `ymm`).
+pub const J_TILE: usize = SIMD_WIDTH * J_UNROLL;
+
+/// Rows per micro-tile of the packed Gram product.
+pub const MR: usize = 4;
+
+/// Columns per micro-tile of the packed Gram product (2 `ymm` per row;
+/// `MR×NR` accumulators = 8 `ymm`).
+pub const NR: usize = 8;
+
+/// Edge of the square tiles used by the blocked transpose (32×32 f64 =
+/// 8 KiB: two tiles — read side + write side — fit in L1 together).
+pub const TRANSPOSE_TILE: usize = 32;
+
+/// Iterate `(start, width)` tiles covering `0..n` in `tile`-wide steps;
+/// the last tile is ragged when `tile ∤ n`.
+pub fn tiles(n: usize, tile: usize) -> impl Iterator<Item = (usize, usize)> {
+    let tile = tile.max(1);
+    (0..n).step_by(tile).map(move |s| (s, tile.min(n - s)))
+}
+
+/// Cache-blocked transpose of a row-major `r×c` buffer into a row-major
+/// `c×r` buffer. Walking both sides in [`TRANSPOSE_TILE`]-square tiles
+/// keeps the strided side's working set inside L1 instead of taking a
+/// cache miss per element (the failure mode of the naive loop once
+/// `r·8 B` exceeds a page).
+pub fn transpose_into(src: &[f64], r: usize, c: usize, dst: &mut [f64]) {
+    assert_eq!(src.len(), r * c, "transpose: src shape mismatch");
+    assert_eq!(dst.len(), r * c, "transpose: dst shape mismatch");
+    for (i0, ih) in tiles(r, TRANSPOSE_TILE) {
+        for (j0, jw) in tiles(c, TRANSPOSE_TILE) {
+            for i in i0..i0 + ih {
+                let row = &src[i * c + j0..i * c + j0 + jw];
+                for (jj, &v) in row.iter().enumerate() {
+                    dst[(j0 + jj) * r + i] = v;
+                }
+            }
+        }
+    }
+}
+
+/// Pack the `w`-wide column panel `[j0, j0+w)` of a row-major `rows×c`
+/// buffer into `dst` as a k-major `rows×w` panel:
+/// `dst[k·w + jj] = src[k][j0+jj]`. Row fragments are contiguous, so this
+/// is one `memcpy` per source row.
+pub fn pack_col_panel(src: &[f64], c: usize, rows: usize, j0: usize, w: usize, dst: &mut Vec<f64>) {
+    assert!(j0 + w <= c, "pack_col_panel: panel out of range");
+    dst.clear();
+    dst.reserve(rows * w);
+    for k in 0..rows {
+        dst.extend_from_slice(&src[k * c + j0..k * c + j0 + w]);
+    }
+}
+
+/// Pack rows `[r0, r0+w)` of a row-major `·×c` buffer *transposed* into
+/// `dst` as a k-major `c×w` panel: `dst[k·w + jj] = src[r0+jj][k]`. This
+/// is the B-panel layout of the packed Gram product: the micro-kernel
+/// reads one contiguous `w`-wide row per `k`.
+pub fn pack_rows_transposed(src: &[f64], c: usize, r0: usize, w: usize, dst: &mut Vec<f64>) {
+    assert!((r0 + w) * c <= src.len(), "pack_rows_transposed: rows out of range");
+    dst.clear();
+    dst.resize(c * w, 0.0);
+    for jj in 0..w {
+        let row = &src[(r0 + jj) * c..(r0 + jj + 1) * c];
+        for (k, &v) in row.iter().enumerate() {
+            dst[k * w + jj] = v;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiles_cover_exactly() {
+        for (n, t) in [(0usize, 16usize), (1, 16), (15, 16), (16, 16), (17, 16), (45, 16)] {
+            let spans: Vec<(usize, usize)> = tiles(n, t).collect();
+            let total: usize = spans.iter().map(|&(_, w)| w).sum();
+            assert_eq!(total, n, "n={n} t={t}");
+            let mut next = 0;
+            for (s, w) in spans {
+                assert_eq!(s, next);
+                assert!(w >= 1 && w <= t);
+                next = s + w;
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_matches_naive() {
+        for (r, c) in [(1usize, 1usize), (3, 5), (31, 33), (32, 32), (40, 7), (65, 64)] {
+            let src: Vec<f64> = (0..r * c).map(|x| x as f64).collect();
+            let mut dst = vec![0.0; r * c];
+            transpose_into(&src, r, c, &mut dst);
+            for i in 0..r {
+                for j in 0..c {
+                    assert_eq!(dst[j * r + i], src[i * c + j], "r={r} c={c} ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn col_panel_packs_kmajor() {
+        // 3×4 source, panel cols [1,3).
+        let src: Vec<f64> = (0..12).map(|x| x as f64).collect();
+        let mut p = Vec::new();
+        pack_col_panel(&src, 4, 3, 1, 2, &mut p);
+        assert_eq!(p, vec![1.0, 2.0, 5.0, 6.0, 9.0, 10.0]);
+    }
+
+    #[test]
+    fn rows_transposed_packs_kmajor() {
+        // 4×3 source, rows [1,3) transposed: panel[k][jj] = src[1+jj][k].
+        let src: Vec<f64> = (0..12).map(|x| x as f64).collect();
+        let mut p = Vec::new();
+        pack_rows_transposed(&src, 3, 1, 2, &mut p);
+        assert_eq!(p, vec![3.0, 6.0, 4.0, 7.0, 5.0, 8.0]);
+    }
+
+    #[test]
+    fn geometry_is_simd_multiple() {
+        assert_eq!(J_TILE % SIMD_WIDTH, 0);
+        assert_eq!(NR % SIMD_WIDTH, 0);
+        assert!(MR * NR <= 4 * J_TILE, "accumulator tile must fit registers");
+    }
+}

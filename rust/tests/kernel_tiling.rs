@@ -1,0 +1,289 @@
+//! Property tests for the register-blocked kernel suite: every tiled
+//! kernel is checked against a naive reference on tile-boundary shapes —
+//! size 1, tile−1, tile, tile+1, multi-tile ragged — plus ∞-dense and
+//! `BIG`-valued inputs. The min-plus comparisons assert *bit* equality
+//! (min is associative/commutative and each `+` is a single correctly-
+//! rounded op, so tiling must not move a single ulp); the Gram/gemm
+//! comparisons are tolerance-based against mathematically different
+//! formulations, plus exact decomposition-invariance checks for the
+//! properties the coordinator relies on.
+
+use isospark::kernels::kselect::{cols_topk, row_topk};
+use isospark::kernels::tiling::{J_TILE, MR, NR};
+use isospark::kernels::{matvec, minplus, sqdist, BIG};
+use isospark::linalg::Matrix;
+use isospark::util::Rng;
+
+/// Shapes straddling a tile boundary: 1, tile−1, tile, tile+1, and a
+/// multi-tile ragged size.
+fn boundary_sizes(tile: usize) -> [usize; 5] {
+    [1, tile - 1, tile, tile + 1, 2 * tile + 3]
+}
+
+fn random_weights(m: usize, n: usize, inf_density: f64, seed: u64) -> Matrix {
+    let mut rng = Rng::seed(seed);
+    let mut a = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            a[(i, j)] =
+                if rng.f64() < inf_density { f64::INFINITY } else { rng.range(0.0, 10.0) };
+        }
+    }
+    a
+}
+
+fn random_points(n: usize, d: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seed(seed);
+    let mut x = Matrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            x[(i, j)] = rng.gaussian();
+        }
+    }
+    x
+}
+
+fn naive_minplus(a: &Matrix, b: &Matrix) -> Matrix {
+    let mut c = Matrix::zeros(a.nrows(), b.ncols());
+    for i in 0..a.nrows() {
+        for j in 0..b.ncols() {
+            let mut best = f64::INFINITY;
+            for k in 0..a.ncols() {
+                best = best.min(a[(i, k)] + b[(k, j)]);
+            }
+            c[(i, j)] = best;
+        }
+    }
+    c
+}
+
+fn naive_dist(xi: &Matrix, xj: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(xi.nrows(), xj.nrows());
+    for i in 0..xi.nrows() {
+        for j in 0..xj.nrows() {
+            let d: f64 =
+                xi.row(i).iter().zip(xj.row(j)).map(|(a, b)| (a - b) * (a - b)).sum();
+            out[(i, j)] = d.sqrt();
+        }
+    }
+    out
+}
+
+fn assert_bits(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!((a.nrows(), a.ncols()), (b.nrows(), b.ncols()), "{what}: shape");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn minplus_bit_equals_naive_on_boundary_shapes() {
+    let mut seed = 0;
+    for m in boundary_sizes(J_TILE) {
+        for n in boundary_sizes(J_TILE) {
+            for kk in [1usize, 5, J_TILE + 1] {
+                seed += 1;
+                let a = random_weights(m, kk, 0.2, seed);
+                let b = random_weights(kk, n, 0.2, seed + 1000);
+                let got = minplus::minplus(&a, &b);
+                let want = naive_minplus(&a, &b);
+                assert_bits(&got, &want, &format!("minplus m={m} k={kk} n={n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn minplus_fused_update_bit_equals_naive() {
+    // Nontrivial dst: the fused min with the existing value must survive
+    // tiling bit-for-bit, including ragged widths.
+    for n in boundary_sizes(J_TILE) {
+        let a = random_weights(9, 7, 0.3, n as u64);
+        let b = random_weights(7, n, 0.3, n as u64 + 50);
+        let mut dst = random_weights(9, n, 0.3, n as u64 + 99);
+        let mut want = dst.clone();
+        let prod = naive_minplus(&a, &b);
+        for (w, &p) in want.as_mut_slice().iter_mut().zip(prod.as_slice()) {
+            *w = w.min(p);
+        }
+        minplus::minplus_into(&a, &b, &mut dst);
+        assert_bits(&dst, &want, &format!("minplus_into n={n}"));
+    }
+}
+
+#[test]
+fn minplus_inf_dense_inputs() {
+    // Fully-∞ and mostly-∞ operands: the finite-skip fast path must agree
+    // with the naive kernel and never produce NaN.
+    for density in [1.0, 0.95] {
+        let a = random_weights(J_TILE + 1, J_TILE, density, 7);
+        let b = random_weights(J_TILE, 2 * J_TILE + 3, density, 8);
+        let got = minplus::minplus(&a, &b);
+        assert!(got.as_slice().iter().all(|v| !v.is_nan()), "density={density}");
+        assert_bits(&got, &naive_minplus(&a, &b), &format!("∞-dense {density}"));
+    }
+}
+
+#[test]
+fn minplus_big_sentinel_values() {
+    // BIG (the AOT no-edge sentinel) is finite, so it takes the normal
+    // path: BIG + BIG must not overflow to ∞ surprises in the tiled path.
+    let mut a = Matrix::full(J_TILE + 2, J_TILE + 2, BIG);
+    a[(0, 1)] = 1.5;
+    let got = minplus::minplus(&a, &a);
+    assert_bits(&got, &naive_minplus(&a, &a), "BIG-dense");
+    assert!(got.as_slice().iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn inplace_pivots_bit_equal_cloned_form_on_boundary_shapes() {
+    for b in [1usize, J_TILE - 1, J_TILE, J_TILE + 1] {
+        for n in [1usize, J_TILE - 1, J_TILE + 1, 2 * J_TILE + 3] {
+            let d = random_weights(b, b, 0.2, (b * n) as u64);
+            let a0 = random_weights(b, n, 0.2, (b * n) as u64 + 31);
+            // Left: A ← A ⊕ (D ⊗ A₀).
+            let mut left = a0.clone();
+            minplus::minplus_left_inplace(&d, &mut left);
+            let mut want = a0.clone();
+            minplus::minplus_into(&d, &a0, &mut want);
+            assert_bits(&left, &want, &format!("left b={b} n={n}"));
+            // Right: A ← A ⊕ (A₀ ⊗ D), transposed extents.
+            let a0t = random_weights(n, b, 0.2, (b * n) as u64 + 67);
+            let mut right = a0t.clone();
+            minplus::minplus_right_inplace(&d, &mut right);
+            let mut want = a0t.clone();
+            minplus::minplus_into(&a0t, &d, &mut want);
+            assert_bits(&right, &want, &format!("right b={b} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn dist_matches_naive_on_boundary_shapes() {
+    let mut seed = 500;
+    for bi in boundary_sizes(MR) {
+        for bj in boundary_sizes(NR) {
+            for d in [1usize, NR - 1, NR, NR + 1] {
+                seed += 1;
+                let xi = random_points(bi, d, seed);
+                let xj = random_points(bj, d, seed + 1000);
+                let got = sqdist::dist_block(&xi, &xj);
+                let want = naive_dist(&xi, &xj);
+                assert!(
+                    got.max_abs_diff(&want) < 1e-9,
+                    "dist bi={bi} bj={bj} d={d}: {}",
+                    got.max_abs_diff(&want)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dist_is_decomposition_invariant() {
+    // The engine computes pair distances from *block* slices while the
+    // dense references use the whole matrix; the kernel must give
+    // bit-identical values for a pair regardless of which block its rows
+    // sit in (each dot is one k-ascending chain per pair).
+    let x = random_points(3 * MR + 1, 9, 77);
+    let n = x.nrows();
+    let full = sqdist::dist_block(&x, &x);
+    let split = MR + 1; // ragged split
+    let (top, bot) = (x.slice(0, split, 0, 9), x.slice(split, n, 0, 9));
+    let cross = sqdist::dist_block(&top, &bot);
+    for i in 0..split {
+        for j in split..n {
+            assert_eq!(
+                cross[(i, j - split)].to_bits(),
+                full[(i, j)].to_bits(),
+                "pair ({i},{j})"
+            );
+        }
+    }
+}
+
+#[test]
+fn dist_sym_upper_mirror_properties() {
+    for n in [1usize, MR, NR + 1, 2 * NR + 3, 21] {
+        let x = random_points(n, 5, n as u64 + 300);
+        let sym = sqdist::dist_block_sym(&x);
+        let full = sqdist::dist_block(&x, &x);
+        for i in 0..n {
+            assert_eq!(sym[(i, i)], 0.0, "n={n} diag {i}");
+            for j in 0..n {
+                assert_eq!(sym[(i, j)].to_bits(), sym[(j, i)].to_bits(), "n={n} sym ({i},{j})");
+                if i != j {
+                    assert_eq!(
+                        sym[(i, j)].to_bits(),
+                        full[(i, j)].to_bits(),
+                        "n={n} vs general ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn dist_far_from_origin_stays_nonnegative() {
+    // Catastrophic cancellation in ‖x‖²+‖y‖²−2·x·y on clustered
+    // far-from-origin points must be clamped, not NaN/negative.
+    let mut rng = Rng::seed(9);
+    let mut x = Matrix::full(NR + 3, 4, 1e8);
+    for v in x.as_mut_slice() {
+        *v += rng.f64() * 1e-4;
+    }
+    for m in [sqdist::dist_block(&x, &x), sqdist::dist_block_sym(&x)] {
+        assert!(m.as_slice().iter().all(|&v| v >= 0.0 && v.is_finite()));
+    }
+}
+
+#[test]
+fn gemm_matches_matmul_on_boundary_shapes() {
+    for d in [1usize, 4, 5, J_TILE - 1, J_TILE, J_TILE + 1, 2 * J_TILE + 3] {
+        for bj in [1usize, MR, MR + 1] {
+            let a = random_points(7, bj, (d * 10 + bj) as u64);
+            let q = random_points(bj, d, (d * 10 + bj) as u64 + 5);
+            let mut out = random_points(7, d, (d * 10 + bj) as u64 + 9);
+            let mut want = out.clone();
+            matvec::gemm_acc(&a, &q, &mut out);
+            let prod = a.matmul(&q);
+            for (w, &p) in want.as_mut_slice().iter_mut().zip(prod.as_slice()) {
+                *w += p;
+            }
+            assert!(out.max_abs_diff(&want) < 1e-10, "gemm d={d} bj={bj}");
+
+            let qt = random_points(7, d, (d * 10 + bj) as u64 + 13);
+            let mut out_t = random_points(bj, d, (d * 10 + bj) as u64 + 17);
+            let mut want_t = out_t.clone();
+            matvec::gemm_t_acc(&a, &qt, &mut out_t);
+            let prod_t = a.transpose().matmul(&qt);
+            for (w, &p) in want_t.as_mut_slice().iter_mut().zip(prod_t.as_slice()) {
+                *w += p;
+            }
+            assert!(out_t.max_abs_diff(&want_t) < 1e-10, "gemm_t d={d} bj={bj}");
+        }
+    }
+}
+
+#[test]
+fn cols_topk_bit_equals_scalar_gather() {
+    let mut rng = Rng::seed(42);
+    for (r, c) in [(1usize, 1usize), (MR, NR), (31, 33), (33, 31), (70, 40)] {
+        let mut m = Matrix::zeros(r, c);
+        for i in 0..r {
+            for j in 0..c {
+                // Duplicated values exercise tie-breaking by index.
+                m[(i, j)] = (rng.f64() * 8.0).floor();
+            }
+        }
+        for k in [1usize, 3, r + 2] {
+            let got = cols_topk(&m, k, 5);
+            assert_eq!(got.len(), c);
+            for (j, list) in got.iter().enumerate() {
+                let col: Vec<f64> = (0..r).map(|i| m[(i, j)]).collect();
+                assert_eq!(list, &row_topk(&col, k, 5, None), "r={r} c={c} k={k} col {j}");
+            }
+        }
+    }
+}
