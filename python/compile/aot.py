@@ -6,8 +6,16 @@ ids which the Rust side's xla_extension 0.5.1 rejects; the text parser
 reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
 
 Shapes are static in HLO, so every (op, shape) pair in the artifact matrix
-below becomes one file; the Rust runtime picks by shape and falls back to
-the native kernel for anything else (ragged tail blocks).
+below becomes one file. The Rust runtime is shape-polymorphic over these
+static artifacts: a ragged call is padded up to the nearest artifact with
+the op's neutral element and the result sliced back (see
+``rust/src/runtime/mod.rs``). Each manifest entry therefore declares its
+``pad`` policy — the fill value whose padding leaves the real corner of
+the result exact — and the runtime refuses to load a manifest whose
+declared policy disagrees with its own neutral-element table. Only shapes
+beyond every artifact (block size above ``max(BLOCK_SIZES)``, point
+dimensionality above ``max(DIST_DIMS)``) fall back to the native kernel,
+and those fallbacks are counted, not silent.
 """
 
 import argparse
@@ -75,6 +83,20 @@ FNS = {
     "dist": model.dist,
 }
 
+# Neutral-element padding each op's artifacts tolerate (mirrored by the
+# Rust runtime, which cross-checks at load time):
+#   "+inf" — min-plus semiring annihilator: padded terms never win a min.
+#   "zero" — additive identity: padded rows/cols/dims contribute nothing
+#            to dots (gemm/gemmt/dist) or are sliced away (center).
+PAD_POLICY = {
+    "minplus": "+inf",
+    "fw": "+inf",
+    "center": "zero",
+    "dist": "zero",
+    "gemm": "zero",
+    "gemmt": "zero",
+}
+
 
 def build(out_dir: pathlib.Path) -> dict:
     out_dir.mkdir(parents=True, exist_ok=True)
@@ -85,11 +107,17 @@ def build(out_dir: pathlib.Path) -> dict:
         lowered = jax.jit(FNS[op]).lower(*args)
         text = to_hlo_text(lowered)
         (out_dir / fname).write_text(text)
-        entry = {"op": op, "file": fname}
+        entry = {"op": op, "file": fname, "pad": PAD_POLICY[op]}
         entry.update(params)
         ops.append(entry)
         print(f"  {fname:<28} {len(text):>9} chars")
-    manifest = {"version": 1, "dmax": DMAX, "ops": ops}
+    manifest = {
+        "version": 2,
+        "dmax": DMAX,
+        "max_b": max(BLOCK_SIZES),
+        "pad_policy": PAD_POLICY,
+        "ops": ops,
+    }
     (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
     return manifest
 

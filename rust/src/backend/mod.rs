@@ -8,14 +8,36 @@
 //! throughput (ablation d: BLAS-offload vs interpreter, mirroring the
 //! paper's NumPy→MKL offload argument).
 //!
+//! **Fallback policy** (see `runtime` module docs): a PJRT call that fails
+//! with [`crate::runtime::RtError::ShapeMiss`] — the runtime has no
+//! artifact, even via padding, for the shape — falls back to the native
+//! kernel; the runtime has already counted the miss in its
+//! [`OffloadStats`], so the coverage
+//! report stays honest. Any other runtime error is a *hard* failure
+//! (corrupt artifact, compile error, wrong element count) and panics with
+//! context instead of silently degrading to native execution; the stage
+//! executor forwards the panic to the driver with the task index.
+//!
 //! Backends are `Send + Sync`: the multi-core stage executor invokes the
 //! same backend concurrently from every worker thread.
 
+use crate::engine::metrics::{OffloadOpSnapshot, OffloadStats};
 use crate::kernels;
 use crate::linalg::Matrix;
-use crate::runtime::PjrtEngine;
+use crate::runtime::{PjrtEngine, RtResult};
 use anyhow::Result;
 use std::sync::Arc;
+
+/// Unwrap a PJRT result under the fallback policy: `Ok` passes through,
+/// a shape miss (already counted by the runtime) yields `None` so the
+/// caller runs the native kernel, and a hard error panics with context.
+fn pjrt_or_native<T>(what: &str, res: RtResult<T>) -> Option<T> {
+    match res {
+        Ok(v) => Some(v),
+        Err(e) if e.is_shape_miss() => None,
+        Err(e) => panic!("PJRT backend hard failure in {what} (not a shape miss): {e}"),
+    }
+}
 
 /// Which engine executes block math.
 #[derive(Clone)]
@@ -40,13 +62,31 @@ impl Backend {
         }
     }
 
+    /// Offload counters of the PJRT runtime (`None` for the native
+    /// backend, which has nothing to offload).
+    pub fn offload_stats(&self) -> Option<&OffloadStats> {
+        match self {
+            Backend::Native => None,
+            Backend::Pjrt(rt) => Some(rt.stats()),
+        }
+    }
+
+    /// Snapshot of the per-op offload counters, when PJRT is in use.
+    pub fn offload_snapshot(&self) -> Option<Vec<OffloadOpSnapshot>> {
+        self.offload_stats().map(OffloadStats::snapshot)
+    }
+
+    /// Rendered offload-coverage table, when PJRT is in use.
+    pub fn offload_report(&self) -> Option<String> {
+        self.offload_stats().map(OffloadStats::report)
+    }
+
     /// Pairwise-distance block `‖x_i − y_j‖₂`.
     pub fn dist_block(&self, xi: &Matrix, xj: &Matrix) -> Matrix {
         match self {
             Backend::Native => kernels::sqdist::dist_block(xi, xj),
-            Backend::Pjrt(rt) => rt
-                .dist_block(xi, xj)
-                .unwrap_or_else(|_| kernels::sqdist::dist_block(xi, xj)),
+            Backend::Pjrt(rt) => pjrt_or_native("dist_block", rt.dist_block(xi, xj))
+                .unwrap_or_else(|| kernels::sqdist::dist_block(xi, xj)),
         }
     }
 
@@ -58,14 +98,14 @@ impl Backend {
     pub fn dist_block_sym(&self, x: &Matrix) -> Matrix {
         match self {
             Backend::Native => kernels::sqdist::dist_block_sym(x),
-            Backend::Pjrt(rt) => match rt.dist_block(x, x) {
-                Ok(mut d) => {
+            Backend::Pjrt(rt) => match pjrt_or_native("dist_block_sym", rt.dist_block(x, x)) {
+                Some(mut d) => {
                     for r in 0..d.nrows() {
                         d[(r, r)] = 0.0;
                     }
                     d
                 }
-                Err(_) => kernels::sqdist::dist_block_sym(x),
+                None => kernels::sqdist::dist_block_sym(x),
             },
         }
     }
@@ -74,13 +114,10 @@ impl Backend {
     pub fn minplus_into(&self, a: &Matrix, b: &Matrix, dst: &mut Matrix) {
         match self {
             Backend::Native => kernels::minplus::minplus_into(a, b, dst),
-            Backend::Pjrt(rt) => {
-                if let Ok(c) = rt.minplus(a, b) {
-                    kernels::minplus::elementwise_min_into(dst, &c);
-                } else {
-                    kernels::minplus::minplus_into(a, b, dst);
-                }
-            }
+            Backend::Pjrt(rt) => match pjrt_or_native("minplus_into", rt.minplus(a, b)) {
+                Some(c) => kernels::minplus::elementwise_min_into(dst, &c),
+                None => kernels::minplus::minplus_into(a, b, dst),
+            },
         }
     }
 
@@ -90,13 +127,10 @@ impl Backend {
     pub fn minplus_left_inplace(&self, a: &Matrix, dst: &mut Matrix) {
         match self {
             Backend::Native => kernels::minplus::minplus_left_inplace(a, dst),
-            Backend::Pjrt(rt) => {
-                if let Ok(c) = rt.minplus(a, dst) {
-                    kernels::minplus::elementwise_min_into(dst, &c);
-                } else {
-                    kernels::minplus::minplus_left_inplace(a, dst);
-                }
-            }
+            Backend::Pjrt(rt) => match pjrt_or_native("minplus_left_inplace", rt.minplus(a, dst)) {
+                Some(c) => kernels::minplus::elementwise_min_into(dst, &c),
+                None => kernels::minplus::minplus_left_inplace(a, dst),
+            },
         }
     }
 
@@ -105,13 +139,11 @@ impl Backend {
     pub fn minplus_right_inplace(&self, b: &Matrix, dst: &mut Matrix) {
         match self {
             Backend::Native => kernels::minplus::minplus_right_inplace(b, dst),
-            Backend::Pjrt(rt) => {
-                if let Ok(c) = rt.minplus(dst, b) {
-                    kernels::minplus::elementwise_min_into(dst, &c);
-                } else {
-                    kernels::minplus::minplus_right_inplace(b, dst);
-                }
-            }
+            Backend::Pjrt(rt) => match pjrt_or_native("minplus_right_inplace", rt.minplus(dst, b))
+            {
+                Some(c) => kernels::minplus::elementwise_min_into(dst, &c),
+                None => kernels::minplus::minplus_right_inplace(b, dst),
+            },
         }
     }
 
@@ -119,9 +151,9 @@ impl Backend {
     pub fn fw_inplace(&self, g: &mut Matrix) {
         match self {
             Backend::Native => kernels::floyd_warshall::floyd_warshall_inplace(g),
-            Backend::Pjrt(rt) => match rt.floyd_warshall(g) {
-                Ok(out) => *g = out,
-                Err(_) => kernels::floyd_warshall::floyd_warshall_inplace(g),
+            Backend::Pjrt(rt) => match pjrt_or_native("fw_inplace", rt.floyd_warshall(g)) {
+                Some(out) => *g = out,
+                None => kernels::floyd_warshall::floyd_warshall_inplace(g),
             },
         }
     }
@@ -130,10 +162,12 @@ impl Backend {
     pub fn center_block(&self, block: &mut Matrix, mu_r: &[f64], mu_c: &[f64], grand: f64) {
         match self {
             Backend::Native => kernels::centering::center_block(block, mu_r, mu_c, grand),
-            Backend::Pjrt(rt) => match rt.center_block(block, mu_r, mu_c, grand) {
-                Ok(out) => *block = out,
-                Err(_) => kernels::centering::center_block(block, mu_r, mu_c, grand),
-            },
+            Backend::Pjrt(rt) => {
+                match pjrt_or_native("center_block", rt.center_block(block, mu_r, mu_c, grand)) {
+                    Some(out) => *block = out,
+                    None => kernels::centering::center_block(block, mu_r, mu_c, grand),
+                }
+            }
         }
     }
 
@@ -141,13 +175,13 @@ impl Backend {
     pub fn gemm_acc(&self, a: &Matrix, q: &Matrix, out: &mut Matrix) {
         match self {
             Backend::Native => kernels::matvec::gemm_acc(a, q, out),
-            Backend::Pjrt(rt) => match rt.gemm(a, q) {
-                Ok(c) => {
+            Backend::Pjrt(rt) => match pjrt_or_native("gemm_acc", rt.gemm(a, q)) {
+                Some(c) => {
                     for (o, &x) in out.as_mut_slice().iter_mut().zip(c.as_slice()) {
                         *o += x;
                     }
                 }
-                Err(_) => kernels::matvec::gemm_acc(a, q, out),
+                None => kernels::matvec::gemm_acc(a, q, out),
             },
         }
     }
@@ -156,13 +190,13 @@ impl Backend {
     pub fn gemm_t_acc(&self, a: &Matrix, q: &Matrix, out: &mut Matrix) {
         match self {
             Backend::Native => kernels::matvec::gemm_t_acc(a, q, out),
-            Backend::Pjrt(rt) => match rt.gemm_t(a, q) {
-                Ok(c) => {
+            Backend::Pjrt(rt) => match pjrt_or_native("gemm_t_acc", rt.gemm_t(a, q)) {
+                Some(c) => {
                     for (o, &x) in out.as_mut_slice().iter_mut().zip(c.as_slice()) {
                         *o += x;
                     }
                 }
-                Err(_) => kernels::matvec::gemm_t_acc(a, q, out),
+                None => kernels::matvec::gemm_t_acc(a, q, out),
             },
         }
     }
@@ -194,6 +228,44 @@ mod tests {
     fn backend_is_send_sync() {
         fn assert_send_sync<T: Send + Sync>() {}
         assert_send_sync::<Backend>();
+    }
+
+    #[test]
+    fn native_backend_has_no_offload_stats() {
+        assert!(Backend::Native.offload_stats().is_none());
+        assert!(Backend::Native.offload_snapshot().is_none());
+        assert!(Backend::Native.offload_report().is_none());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_pjrt_backend_falls_back_and_counts_misses() {
+        use crate::engine::metrics::OffloadOp;
+        // A disconnected stub engine serves nothing: every call must fall
+        // back to the native kernel (identical results) and record exactly
+        // one miss — the honest-accounting half of the fallback policy.
+        let be = Backend::Pjrt(Arc::new(PjrtEngine::disconnected(std::path::Path::new(
+            "artifacts",
+        ))));
+        let x = random(5, 3, 1);
+        assert_eq!(
+            be.dist_block(&x, &x).as_slice(),
+            Backend::Native.dist_block(&x, &x).as_slice()
+        );
+        let a = random(4, 4, 2);
+        let b = random(4, 4, 3);
+        let mut dst = Matrix::full(4, 4, f64::INFINITY);
+        let mut dst_native = dst.clone();
+        be.minplus_into(&a, &b, &mut dst);
+        Backend::Native.minplus_into(&a, &b, &mut dst_native);
+        assert_eq!(dst.as_slice(), dst_native.as_slice());
+        let snap = be.offload_stats().unwrap();
+        assert_eq!(snap.op_snapshot(OffloadOp::Dist).missed, 1);
+        assert_eq!(snap.op_snapshot(OffloadOp::Minplus).missed, 1);
+        assert_eq!(snap.op_snapshot(OffloadOp::Dist).offloaded(), 0);
+        let report = be.offload_report().unwrap();
+        assert!(report.contains("dist"), "{report}");
+        assert!(report.contains("0.0%"), "{report}");
     }
 
     #[test]

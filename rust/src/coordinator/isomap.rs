@@ -9,6 +9,7 @@
 use super::{centering, eigen, knn, num_blocks};
 use crate::backend::Backend;
 use crate::config::{ClusterConfig, IsomapConfig};
+use crate::engine::metrics::OffloadOpSnapshot;
 use crate::engine::SparkContext;
 use crate::linalg::Matrix;
 use anyhow::{Context, Result};
@@ -35,6 +36,11 @@ pub struct IsomapOutput {
     pub compute_secs: f64,
     /// Per-stage metrics table (text).
     pub metrics_table: String,
+    /// Per-op PJRT offload counters at pipeline end (`None` for the
+    /// native backend). With artifacts present for block size `b`, every
+    /// ragged block op is served through the padded path and `missed`
+    /// stays 0 — the offload-coverage acceptance criterion.
+    pub offload: Option<Vec<OffloadOpSnapshot>>,
 }
 
 /// Run the full pipeline on a fresh context. Convenience wrapper over
@@ -90,6 +96,7 @@ pub fn run_with(
         shuffle_bytes: ctx.total_shuffle_bytes(),
         compute_secs: ctx.total_compute_real(),
         metrics_table: ctx.metrics_report(&["knn", "apsp", "center", "eigen", "checkpoint"]),
+        offload: backend.offload_snapshot(),
     })
 }
 
@@ -138,6 +145,7 @@ mod tests {
         assert!(out.eigenvalues[1] >= out.eigenvalues[2]);
         assert!(out.virtual_secs >= 0.0);
         assert!(out.metrics_table.contains("apsp"));
+        assert!(out.offload.is_none(), "native backend has no offload counters");
     }
 
     #[test]

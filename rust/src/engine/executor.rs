@@ -13,14 +13,23 @@
 //! `workers == 1` short-circuits to a plain inline loop with zero thread
 //! or locking overhead, which is also the reference execution the
 //! determinism suite compares against.
+//!
+//! A panicking task does not tear down the pool with a poisoned-mutex
+//! double panic: the first panic's payload is captured with its task
+//! index, the remaining workers stop claiming work, and the payload is
+//! re-raised on the driver thread — callers observe the *original* panic
+//! (message and all), exactly as they would under sequential execution.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::any::Any;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
 /// Run `tasks` on up to `workers` OS threads, returning each task's output
 /// in input order. `f` must be a pure function of its input for the
 /// parallel execution to be observationally identical to the sequential
-/// one (every closure the engine passes is).
+/// one (every closure the engine passes is). If a task panics, the first
+/// panic is propagated to the caller with its original payload.
 pub(crate) fn run_tasks<I, O, F>(workers: usize, tasks: Vec<I>, f: F) -> Vec<O>
 where
     I: Send,
@@ -42,22 +51,47 @@ where
     let slots: Vec<Mutex<(Option<I>, Option<O>)>> =
         tasks.into_iter().map(|t| Mutex::new((Some(t), None))).collect();
     let cursor = AtomicUsize::new(0);
+    // First panic wins: (task index, original payload). Later panics (rare
+    // — workers stop claiming once `abort` is set) are dropped.
+    let panicked: Mutex<Option<(usize, Box<dyn Any + Send>)>> = Mutex::new(None);
+    let abort = AtomicBool::new(false);
     let f = &f;
     let slots_ref = &slots;
     let cursor_ref = &cursor;
+    let panicked_ref = &panicked;
+    let abort_ref = &abort;
     std::thread::scope(|scope| {
         for _ in 0..workers {
             scope.spawn(move || loop {
+                if abort_ref.load(Ordering::Relaxed) {
+                    break;
+                }
                 let i = cursor_ref.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
                     break;
                 }
                 let input = slots_ref[i].lock().unwrap().0.take().expect("task claimed twice");
-                let out = f(input);
-                slots_ref[i].lock().unwrap().1 = Some(out);
+                // AssertUnwindSafe: on panic the run is abandoned wholesale
+                // (payload re-raised below), so no partially-updated state
+                // is ever observed.
+                match catch_unwind(AssertUnwindSafe(|| f(input))) {
+                    Ok(out) => slots_ref[i].lock().unwrap().1 = Some(out),
+                    Err(payload) => {
+                        abort_ref.store(true, Ordering::Relaxed);
+                        let mut first = panicked_ref.lock().unwrap();
+                        if first.is_none() {
+                            *first = Some((i, payload));
+                        }
+                        break;
+                    }
+                }
             });
         }
     });
+    if let Some((i, payload)) = panicked.into_inner().unwrap() {
+        eprintln!("engine executor: task {i} of {n} panicked; re-raising on the driver");
+        resume_unwind(payload);
+    }
     slots
         .into_iter()
         .map(|m| m.into_inner().unwrap().1.expect("worker died before finishing task"))
@@ -102,5 +136,52 @@ mod tests {
     fn more_workers_than_tasks() {
         let out = run_tasks(64, vec![1usize, 2, 3], |i| i);
         assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn panicking_task_reraises_original_payload() {
+        // Regression: a worker panic used to surface as a poisoned-mutex
+        // "worker died before finishing task" double panic, hiding the
+        // actual failure. The original message must reach the caller.
+        let result = std::panic::catch_unwind(|| {
+            run_tasks(4, (0..16).collect::<Vec<usize>>(), |i| {
+                if i == 7 {
+                    panic!("task 7 exploded with context");
+                }
+                i * 2
+            })
+        });
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("task 7 exploded with context"), "payload lost: {msg:?}");
+    }
+
+    #[test]
+    fn sequential_panic_also_propagates() {
+        let result = std::panic::catch_unwind(|| {
+            run_tasks(1, vec![0usize], |_| -> usize { panic!("seq boom") })
+        });
+        assert!(result.is_err());
+    }
+
+    #[test]
+    fn remaining_tasks_not_spuriously_poisoned_after_panic() {
+        // Many tasks, early panic: the pool must shut down cleanly (no
+        // secondary panics from poisoned slots) and still re-raise.
+        for _ in 0..8 {
+            let result = std::panic::catch_unwind(|| {
+                run_tasks(8, (0..256).collect::<Vec<usize>>(), |i| {
+                    if i == 0 {
+                        panic!("early");
+                    }
+                    i
+                })
+            });
+            assert!(result.is_err());
+        }
     }
 }

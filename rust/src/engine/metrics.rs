@@ -1,8 +1,16 @@
 //! Per-stage execution metrics: real compute time, virtual cluster time,
 //! shuffle volumes, task counts. The scalability tables are produced from
 //! the virtual clock; the §Perf work reads the real timings.
+//!
+//! Also home of the **offload accounting** ([`OffloadStats`]): per-op
+//! atomic counters of how every PJRT-eligible block operation was served —
+//! exact-shape artifact, padded artifact, or counted fallback to the
+//! native kernel. The runtime records into these from every worker thread;
+//! [`crate::backend::Backend`] and `isospark info`/`run` surface them as
+//! offload-coverage fractions.
 
 use crate::util::fmt::{human_bytes, human_duration, render_table};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Record of one executed stage.
 #[derive(Clone, Debug)]
@@ -105,6 +113,181 @@ impl Metrics {
     }
 }
 
+/// The PJRT-eligible block operations, in display order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OffloadOp {
+    Dist,
+    Minplus,
+    Fw,
+    Center,
+    Gemm,
+    Gemmt,
+}
+
+impl OffloadOp {
+    /// Every op, in the order counters and reports are laid out.
+    pub const ALL: [OffloadOp; 6] = [
+        OffloadOp::Dist,
+        OffloadOp::Minplus,
+        OffloadOp::Fw,
+        OffloadOp::Center,
+        OffloadOp::Gemm,
+        OffloadOp::Gemmt,
+    ];
+
+    /// Manifest / report name of the op.
+    pub fn name(self) -> &'static str {
+        match self {
+            OffloadOp::Dist => "dist",
+            OffloadOp::Minplus => "minplus",
+            OffloadOp::Fw => "fw",
+            OffloadOp::Center => "center",
+            OffloadOp::Gemm => "gemm",
+            OffloadOp::Gemmt => "gemmt",
+        }
+    }
+
+    fn idx(self) -> usize {
+        self as usize
+    }
+}
+
+#[derive(Debug, Default)]
+struct OffloadCounter {
+    exact: AtomicU64,
+    padded: AtomicU64,
+    missed: AtomicU64,
+}
+
+/// Thread-safe per-op offload counters. One instance lives inside each
+/// `PjrtEngine` (real or stub) and accumulates over the engine's lifetime:
+/// `exact` = served by an exact-shape artifact, `padded` = served by a
+/// larger artifact through neutral-element padding, `missed` = no artifact
+/// (even padded) could serve the shape and the caller fell back to the
+/// native kernel. Hard failures (compile/execution errors) are *not*
+/// counted — they propagate instead of masquerading as shape misses.
+#[derive(Debug, Default)]
+pub struct OffloadStats {
+    counters: [OffloadCounter; 6],
+}
+
+/// Snapshot of one op's counters at a point in time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OffloadOpSnapshot {
+    pub op: OffloadOp,
+    pub exact: u64,
+    pub padded: u64,
+    pub missed: u64,
+}
+
+impl OffloadOpSnapshot {
+    /// Calls served by PJRT (exact or padded artifact).
+    pub fn offloaded(&self) -> u64 {
+        self.exact + self.padded
+    }
+
+    /// All calls recorded for this op.
+    pub fn total(&self) -> u64 {
+        self.exact + self.padded + self.missed
+    }
+
+    /// Fraction of calls served by PJRT (1.0 when no calls were made —
+    /// nothing was forced off the offload path).
+    pub fn coverage(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            1.0
+        } else {
+            self.offloaded() as f64 / t as f64
+        }
+    }
+}
+
+impl OffloadStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An exact-shape artifact served the call.
+    pub fn record_exact(&self, op: OffloadOp) {
+        self.counters[op.idx()].exact.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A larger artifact served the call through neutral-element padding.
+    pub fn record_padded(&self, op: OffloadOp) {
+        self.counters[op.idx()].padded.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// No artifact (even padded) covers the shape; the caller falls back
+    /// to the native kernel and the miss is recorded here.
+    pub fn record_miss(&self, op: OffloadOp) {
+        self.counters[op.idx()].missed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Counters for one op.
+    pub fn op_snapshot(&self, op: OffloadOp) -> OffloadOpSnapshot {
+        let c = &self.counters[op.idx()];
+        OffloadOpSnapshot {
+            op,
+            exact: c.exact.load(Ordering::Relaxed),
+            padded: c.padded.load(Ordering::Relaxed),
+            missed: c.missed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Counters for every op, in [`OffloadOp::ALL`] order.
+    pub fn snapshot(&self) -> Vec<OffloadOpSnapshot> {
+        OffloadOp::ALL.iter().map(|&op| self.op_snapshot(op)).collect()
+    }
+
+    /// Total calls recorded across all ops.
+    pub fn total_calls(&self) -> u64 {
+        self.snapshot().iter().map(OffloadOpSnapshot::total).sum()
+    }
+
+    /// Total counted fallbacks across all ops.
+    pub fn total_missed(&self) -> u64 {
+        self.snapshot().iter().map(|s| s.missed).sum()
+    }
+
+    /// Render the per-op coverage table (ops with zero calls are omitted;
+    /// a footer row aggregates the whole engine).
+    pub fn report(&self) -> String {
+        let snap = self.snapshot();
+        let mut rows = vec![vec![
+            "op".to_string(),
+            "exact".to_string(),
+            "padded".to_string(),
+            "fallback".to_string(),
+            "coverage".to_string(),
+        ]];
+        let mut agg = OffloadOpSnapshot { op: OffloadOp::Dist, exact: 0, padded: 0, missed: 0 };
+        for s in snap.iter().filter(|s| s.total() > 0) {
+            agg.exact += s.exact;
+            agg.padded += s.padded;
+            agg.missed += s.missed;
+            rows.push(vec![
+                s.op.name().to_string(),
+                s.exact.to_string(),
+                s.padded.to_string(),
+                s.missed.to_string(),
+                format!("{:.1}%", s.coverage() * 100.0),
+            ]);
+        }
+        if agg.total() == 0 {
+            return "offload: no block ops executed".to_string();
+        }
+        rows.push(vec![
+            "total".to_string(),
+            agg.exact.to_string(),
+            agg.padded.to_string(),
+            agg.missed.to_string(),
+            format!("{:.1}%", agg.coverage() * 100.0),
+        ]);
+        render_table(&rows)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -143,5 +326,59 @@ mod tests {
         let r = m.report(&["knn"]);
         assert!(r.contains("knn"));
         assert!(r.contains("tasks"));
+    }
+
+    #[test]
+    fn offload_counters_accumulate_per_op() {
+        let s = OffloadStats::new();
+        s.record_exact(OffloadOp::Minplus);
+        s.record_exact(OffloadOp::Minplus);
+        s.record_padded(OffloadOp::Minplus);
+        s.record_miss(OffloadOp::Dist);
+        let mp = s.op_snapshot(OffloadOp::Minplus);
+        assert_eq!((mp.exact, mp.padded, mp.missed), (2, 1, 0));
+        assert_eq!(mp.offloaded(), 3);
+        assert!((mp.coverage() - 1.0).abs() < 1e-12);
+        let dist = s.op_snapshot(OffloadOp::Dist);
+        assert_eq!((dist.exact, dist.padded, dist.missed), (0, 0, 1));
+        assert_eq!(dist.coverage(), 0.0);
+        assert_eq!(s.total_calls(), 4);
+        assert_eq!(s.total_missed(), 1);
+    }
+
+    #[test]
+    fn untouched_op_counts_as_full_coverage() {
+        let s = OffloadStats::new();
+        assert_eq!(s.op_snapshot(OffloadOp::Fw).coverage(), 1.0);
+        assert_eq!(s.report(), "offload: no block ops executed");
+    }
+
+    #[test]
+    fn offload_report_renders_only_active_ops() {
+        let s = OffloadStats::new();
+        s.record_padded(OffloadOp::Fw);
+        s.record_miss(OffloadOp::Fw);
+        let r = s.report();
+        assert!(r.contains("fw"), "{r}");
+        assert!(r.contains("50.0%"), "{r}");
+        assert!(r.contains("total"), "{r}");
+        assert!(!r.contains("gemmt"), "{r}");
+        assert!(r.contains("coverage"), "{r}");
+    }
+
+    #[test]
+    fn offload_stats_shared_across_threads() {
+        let s = std::sync::Arc::new(OffloadStats::new());
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let s = std::sync::Arc::clone(&s);
+                scope.spawn(move || {
+                    for _ in 0..100 {
+                        s.record_exact(OffloadOp::Gemm);
+                    }
+                });
+            }
+        });
+        assert_eq!(s.op_snapshot(OffloadOp::Gemm).exact, 400);
     }
 }

@@ -37,7 +37,10 @@ COMMANDS:
   scale-table      Tables I-III: --block <b> --calibrate --nodes-list 2,4,...
   blocksize-sweep  Fig. 6: --n <pts> --dim <D> --nodes <n> --blocks 500,...
   emnist           Fig. 5: --n <pts> --k --d --block, reports factor corrs
-  info             --artifacts <dir>: artifact + environment report
+  info             --artifacts <dir>: artifact + environment report;
+                   --smoke additionally runs one ragged (b=5) call of
+                   every block op through the backend and prints the
+                   offload-coverage counters (compiles artifacts)
 ";
 
 fn main() {
@@ -47,7 +50,7 @@ fn main() {
         return;
     }
     let cmd = argv[0].clone();
-    let args = match Args::parse(argv[1..].to_vec(), &["calibrate", "lineage", "quiet"]) {
+    let args = match Args::parse(argv[1..].to_vec(), &["calibrate", "lineage", "quiet", "smoke"]) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{USAGE}");
@@ -160,6 +163,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
     }
     println!("\n{}", out.metrics_table);
+    if let Some(report) = backend.offload_report() {
+        println!("\noffload coverage (exact/padded artifact vs counted native fallback):");
+        println!("{report}");
+    }
     if let Some(path) = args.opt("out") {
         data::io::write_csv(Path::new(path), &out.embedding, None)?;
         println!("embedding written to {path}");
@@ -427,6 +434,37 @@ fn cmd_emnist(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Push one ragged (`b ∤ n`) call of every block op through the backend so
+/// `info` can demonstrate the padded-execution path and render live
+/// offload counters: each op lands as an exact hit, a padded hit, or a
+/// counted native fallback.
+fn offload_smoke(backend: &Backend) {
+    use isospark::linalg::Matrix;
+    let fill = |r: usize, c: usize, s: f64| {
+        let mut m = Matrix::zeros(r, c);
+        for i in 0..r {
+            for j in 0..c {
+                m[(i, j)] = ((i * c + j) as f64 * 0.37 + s).sin().abs() + 0.1;
+            }
+        }
+        m
+    };
+    let x = fill(5, 3, 0.0);
+    let _ = backend.dist_block(&x, &fill(7, 3, 1.0));
+    let a = fill(5, 5, 2.0);
+    let mut dst = Matrix::full(5, 5, f64::INFINITY);
+    backend.minplus_into(&a, &fill(5, 5, 3.0), &mut dst);
+    let mut g = fill(5, 5, 4.0);
+    backend.fw_inplace(&mut g);
+    let mut blk = fill(5, 5, 5.0);
+    let mu: Vec<f64> = (0..5).map(|i| i as f64 * 0.2).collect();
+    backend.center_block(&mut blk, &mu, &mu, 0.5);
+    let mut out = Matrix::zeros(5, 2);
+    backend.gemm_acc(&a, &fill(5, 2, 6.0), &mut out);
+    let mut out_t = Matrix::zeros(5, 2);
+    backend.gemm_t_acc(&a, &fill(5, 2, 7.0), &mut out_t);
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     println!("isospark {} — three-layer Rust + JAX + Pallas Isomap", env!("CARGO_PKG_VERSION"));
     let dir = PathBuf::from(args.opt("artifacts").unwrap_or("artifacts"));
@@ -435,6 +473,28 @@ fn cmd_info(args: &Args) -> Result<()> {
             println!("artifacts ({}):", dir.display());
             for line in rt.inventory() {
                 println!("  {line}");
+            }
+            // Ragged-shape smoke (opt-in: it compiles one executable per
+            // op, which costs seconds): exercises the shape-polymorphic
+            // padded path on every op and shows the coverage counters.
+            // Hard artifact errors (the fallback policy panics on them so
+            // pipelines never silently degrade) are *reported* here —
+            // `info` is the command for inspecting a broken artifact set,
+            // so it must survive one.
+            if args.flag("smoke") {
+                let backend = Backend::Pjrt(std::sync::Arc::new(rt));
+                let smoke = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    offload_smoke(&backend)
+                }));
+                println!("\nragged-block (b=5) offload smoke:");
+                if smoke.is_err() {
+                    println!("  artifact set is broken — a block op failed hard (see above)");
+                }
+                if let Some(report) = backend.offload_report() {
+                    println!("{report}");
+                }
+            } else {
+                println!("(run `isospark info --smoke` for a ragged-block offload check)");
             }
         }
         Err(e) => println!("no artifacts loaded: {e:#}"),

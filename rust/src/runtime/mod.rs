@@ -25,11 +25,52 @@
 //! 0.5.1 rejects; the text parser reassigns ids (see
 //! /opt/xla-example/README.md).
 //!
+//! # Shape-polymorphic padded execution
+//!
 //! Shapes are static in HLO, so the artifact set is generated for the
-//! block sizes listed in `aot.py`. Calls with other shapes (e.g. the
-//! ragged last block when `b ∤ n`) return `Err`, and [`crate::backend`]
-//! transparently falls back to the native kernel — the hot path (full
-//! blocks) stays on PJRT.
+//! block sizes listed in `aot.py`. The runtime is nevertheless
+//! **shape-polymorphic**: a ragged `r×c` call (the last row/column of
+//! blocks whenever `b ∤ n`) is served by padding the operands up to the
+//! nearest manifest artifact with the op's *neutral element*, executing
+//! the full-shape executable, and slicing the `r×c` result back out. The
+//! artifact choice for a call is a `ShapePlan`, cached by
+//! `(op, rows, cols, extra-dim)` so the planning cost is paid once per
+//! distinct shape; each op derives its per-operand padding from the
+//! chosen artifact.
+//!
+//! Neutral elements per op (exactness argument in parentheses):
+//!
+//! | op            | padding                                  | why exact                                  |
+//! |---------------|------------------------------------------|--------------------------------------------|
+//! | `minplus`     | `+∞` rows/cols on both operands          | `min(x, ∞ + y) = x`; padded k contribute ∞ |
+//! | `fw`          | `+∞` rows/cols                           | padded pivots relax nothing (`∞ + w = ∞`)  |
+//! | `center`      | zero rows/cols, zero-extended mean vecs  | element-wise op; padded entries sliced off |
+//! | `dist`        | zero rows (points) *and* zero dims       | `(0−0)² = 0` adds nothing to any distance  |
+//! | `gemm`/`gemmt`| zero rows/cols (as `pad_cols` always did)| `0·x` contributes nothing to any dot       |
+//!
+//! # Fallback policy: counted miss vs propagated error
+//!
+//! Runtime entry points return [`RtError`] on failure, and the two
+//! variants are handled very differently by [`crate::backend::Backend`]:
+//!
+//! * [`RtError::ShapeMiss`] — no artifact (even padded) covers the shape,
+//!   e.g. a block larger than the largest lowered `b`, or a point
+//!   dimensionality above every `dist` artifact. The backend falls back to
+//!   the native kernel **and the miss is counted** in the engine's
+//!   [`crate::engine::metrics::OffloadStats`], surfaced as offload-coverage
+//!   fractions by `isospark info` and after `isospark run`.
+//! * [`RtError::Hard`] — a real failure (manifest/HLO parse error, compile
+//!   failure, element-count mismatch in a result). These **propagate** (the
+//!   backend panics with context, which the stage executor forwards to the
+//!   driver with the task index) instead of masquerading as ragged-shape
+//!   fallbacks — a corrupted artifact must never silently degrade the run
+//!   to the native kernels.
+//!
+//! The offline [`stub`] mirrors the same surface: every call records a
+//! counted miss, so fallback accounting is testable without the `xla`
+//! dependency.
+
+use std::fmt;
 
 #[cfg(feature = "pjrt")]
 mod pjrt;
@@ -40,3 +81,79 @@ pub use pjrt::{ArtifactEntry, PjrtEngine};
 mod stub;
 #[cfg(not(feature = "pjrt"))]
 pub use stub::PjrtEngine;
+
+/// Why a runtime call could not be served. See the module docs for the
+/// fallback policy attached to each variant.
+#[derive(Debug)]
+pub enum RtError {
+    /// No artifact — not even a larger one reachable by neutral-element
+    /// padding — covers the requested shape. Callers fall back to the
+    /// native kernel; the engine records the miss in its offload counters.
+    ShapeMiss {
+        /// Op name (`minplus`, `dist`, …).
+        op: &'static str,
+        /// Human-readable description of the unserved shape.
+        detail: String,
+    },
+    /// Real failure: I/O, HLO parse, compile, execution, or a result that
+    /// does not match the planned shape. Must propagate, never be
+    /// swallowed into a native-kernel fallback.
+    Hard(anyhow::Error),
+}
+
+impl RtError {
+    /// Build a shape-miss for `op`.
+    pub fn shape_miss(op: &'static str, detail: impl Into<String>) -> Self {
+        RtError::ShapeMiss { op, detail: detail.into() }
+    }
+
+    /// Wrap a real failure.
+    pub fn hard(err: impl Into<anyhow::Error>) -> Self {
+        RtError::Hard(err.into())
+    }
+
+    /// True when the error is a fallback-eligible shape miss.
+    pub fn is_shape_miss(&self) -> bool {
+        matches!(self, RtError::ShapeMiss { .. })
+    }
+}
+
+impl fmt::Display for RtError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RtError::ShapeMiss { op, detail } => {
+                write!(f, "no artifact serves {op}: {detail}")
+            }
+            RtError::Hard(e) => write!(f, "runtime failure: {e:#}"),
+        }
+    }
+}
+
+impl std::error::Error for RtError {}
+
+/// Result alias for runtime entry points.
+pub type RtResult<T> = Result<T, RtError>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_miss_classified_and_displayed() {
+        let e = RtError::shape_miss("minplus", "b=200 exceeds largest artifact b=128");
+        assert!(e.is_shape_miss());
+        let msg = e.to_string();
+        assert!(msg.contains("minplus"), "{msg}");
+        assert!(msg.contains("b=200"), "{msg}");
+    }
+
+    #[test]
+    fn hard_error_not_a_miss() {
+        let e = RtError::hard(anyhow::anyhow!("compile exploded"));
+        assert!(!e.is_shape_miss());
+        assert!(e.to_string().contains("compile exploded"));
+        // Converts into anyhow for callers that bubble it further.
+        let any: anyhow::Error = e.into();
+        assert!(format!("{any:#}").contains("compile exploded"));
+    }
+}

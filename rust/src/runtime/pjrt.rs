@@ -1,8 +1,11 @@
 //! The real PJRT executor (enabled by the `pjrt` cargo feature): loads
 //! `manifest.json`, compiles HLO-text artifacts once per (op, shape), and
 //! executes them through the `xla` crate's PJRT CPU client. See the parent
-//! module docs for the artifact pipeline and the offline stub.
+//! module docs for the artifact pipeline, the padded-execution scheme and
+//! the offline stub.
 
+use super::{RtError, RtResult};
+use crate::engine::metrics::{OffloadOp, OffloadStats};
 use crate::linalg::Matrix;
 use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
@@ -22,24 +25,75 @@ pub struct ArtifactEntry {
     pub file: PathBuf,
 }
 
+/// Padding fill each op's artifacts tolerate — the neutral element of the
+/// op (see the parent module's table). The manifest may carry the same
+/// policy (`pad` field, manifest version ≥ 2); when it does, the two must
+/// agree or [`PjrtEngine::load`] refuses the artifact set.
+fn pad_fill(op: OffloadOp) -> f64 {
+    match op {
+        OffloadOp::Minplus | OffloadOp::Fw => f64::INFINITY,
+        OffloadOp::Dist | OffloadOp::Center | OffloadOp::Gemm | OffloadOp::Gemmt => 0.0,
+    }
+}
+
+/// Manifest spelling of a fill value.
+fn fill_name(fill: f64) -> &'static str {
+    if fill.is_infinite() {
+        "+inf"
+    } else {
+        "zero"
+    }
+}
+
+fn op_by_name(name: &str) -> Option<OffloadOp> {
+    OffloadOp::ALL.iter().copied().find(|op| op.name() == name)
+}
+
+/// Resolved execution plan for one `(op, shape)` call: the index of the
+/// artifact that serves it (operands pad up to that artifact's shape and
+/// the result slices back — each op computes its own per-operand padding
+/// from the entry, since e.g. a `5×7` dist call needs row padding even
+/// when an exact `b = 7` artifact exists). Cached by the requested shape
+/// so the manifest scan happens once per distinct shape.
+#[derive(Clone, Copy, Debug)]
+struct ShapePlan {
+    /// Index into [`PjrtEngine::entries`].
+    entry: usize,
+}
+
+/// Executable slot for one artifact: per-key locking so two workers
+/// first-touching the *same* artifact compile it exactly once, while
+/// different artifacts (and executions of already-compiled ones) proceed
+/// without queueing behind the compile.
+type ExeCell = Arc<Mutex<Option<Arc<xla::PjRtLoadedExecutable>>>>;
+
 /// Lazily-compiling PJRT executor over an artifact directory.
 pub struct PjrtEngine {
     client: xla::PjRtClient,
     entries: Vec<ArtifactEntry>,
-    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
-    /// Serializes every compile/execute against the PJRT client: the
-    /// multi-core stage executor calls the backend from many worker
-    /// threads, and the `xla_extension` bindings make no documented
-    /// thread-safety promise, so we take the conservative route — one
-    /// in-flight PJRT call at a time. Block ops still overlap with the
-    /// native-kernel work of other workers.
+    cache: Mutex<HashMap<String, ExeCell>>,
+    plans: Mutex<HashMap<(&'static str, usize, usize, usize), Option<ShapePlan>>>,
+    /// Serializes every `xla_extension` FFI call (HLO parse, computation
+    /// construction, compile, execute): the multi-core stage executor
+    /// calls the backend from many worker threads, and the bindings make
+    /// no documented thread-safety promise, so we take the conservative
+    /// route — one in-flight xla call at a time. Held only around the FFI
+    /// calls themselves, never across cache/plan bookkeeping or operand
+    /// padding, so block ops still overlap with the native-kernel work of
+    /// other workers; the per-artifact cell in `cache` additionally makes
+    /// racing first touches of one artifact compile it exactly once.
     exec: Mutex<()>,
+    stats: OffloadStats,
     dir: PathBuf,
 }
 
-// SAFETY: all uses of the non-Sync xla handles after construction happen
-// with `exec` (or `cache`) held, so at most one thread touches the PJRT
-// client / executables at any moment; the remaining fields are plain data.
+// SAFETY: every use of shared xla state after construction — the client
+// and the loaded executables (HLO parse, computation construction,
+// compile, execute, result fetch) — happens with `exec` held, so at most
+// one thread touches them at any moment. `Literal` values are standalone
+// host buffers built per call (as before this module was made
+// shape-polymorphic); the remaining fields are plain data behind their
+// own locks or atomics.
 unsafe impl Send for PjrtEngine {}
 unsafe impl Sync for PjrtEngine {}
 
@@ -57,12 +111,28 @@ impl PjrtEngine {
         let mut entries = Vec::new();
         for o in ops {
             let get = |k: &str| o.get(k).and_then(Json::as_usize).unwrap_or(0);
+            let op = o
+                .get("op")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("op entry missing name"))?
+                .to_string();
+            // Manifest pad metadata (version ≥ 2): the AOT side declares
+            // which fill each artifact tolerates; a disagreement with the
+            // runtime's neutral-element table is a hard config error, not
+            // something to paper over with native fallbacks.
+            if let (Some(declared), Some(known)) =
+                (o.get("pad").and_then(Json::as_str), op_by_name(&op))
+            {
+                let expected = fill_name(pad_fill(known));
+                if declared != expected {
+                    bail!(
+                        "manifest pad policy mismatch for {op}: artifact declares \
+                         {declared:?}, runtime pads with {expected:?}"
+                    );
+                }
+            }
             entries.push(ArtifactEntry {
-                op: o
-                    .get("op")
-                    .and_then(Json::as_str)
-                    .ok_or_else(|| anyhow!("op entry missing name"))?
-                    .to_string(),
+                op,
                 b: get("b"),
                 dim: get("dim"),
                 d: get("d"),
@@ -78,7 +148,9 @@ impl PjrtEngine {
             client,
             entries,
             cache: Mutex::new(HashMap::new()),
+            plans: Mutex::new(HashMap::new()),
             exec: Mutex::new(()),
+            stats: OffloadStats::new(),
             dir: dir.to_path_buf(),
         })
     }
@@ -86,6 +158,11 @@ impl PjrtEngine {
     /// Artifact directory this engine serves.
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Offload counters accumulated over this engine's lifetime.
+    pub fn stats(&self) -> &OffloadStats {
+        &self.stats
     }
 
     /// Available (op, b, dim, d) tuples — for `isospark info`.
@@ -96,136 +173,312 @@ impl PjrtEngine {
             .collect()
     }
 
-    fn find(&self, op: &str, b: usize, dim: usize, d: usize) -> Result<&ArtifactEntry> {
-        self.entries
-            .iter()
-            .find(|e| e.op == op && e.b == b && e.dim == dim && e.d == d)
-            .ok_or_else(|| anyhow!("no artifact for {op} b={b} dim={dim} d={d}"))
+    /// Pick the smallest artifact of `op` whose every static dimension
+    /// covers the requested one, caching the decision per requested shape.
+    /// A `None` in the cache is a remembered miss: re-planning the same
+    /// unserved shape still records one fallback per call, but never
+    /// re-scans the manifest.
+    fn plan(
+        &self,
+        op: OffloadOp,
+        need_b: usize,
+        need_dim: usize,
+        need_d: usize,
+    ) -> RtResult<&ArtifactEntry> {
+        let key = (op.name(), need_b, need_dim, need_d);
+        let cached = self.plans.lock().unwrap().get(&key).copied();
+        let plan = match cached {
+            Some(p) => p,
+            None => {
+                let found = self
+                    .entries
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, e)| {
+                        e.op == op.name() && e.b >= need_b && e.dim >= need_dim && e.d >= need_d
+                    })
+                    .min_by_key(|(_, e)| (e.b, e.dim, e.d))
+                    .map(|(i, _)| ShapePlan { entry: i });
+                self.plans.lock().unwrap().insert(key, found);
+                found
+            }
+        };
+        match plan {
+            Some(p) => Ok(&self.entries[p.entry]),
+            None => {
+                self.stats.record_miss(op);
+                Err(RtError::shape_miss(
+                    op.name(),
+                    format!("no artifact covers b>={need_b} dim>={need_dim} d>={need_d}"),
+                ))
+            }
+        }
     }
 
-    fn executable(&self, e: &ArtifactEntry) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+    /// Compile-once executable lookup. The per-artifact cell lock makes
+    /// concurrent first touches of one artifact compile it exactly once
+    /// (the old check-drop-insert pattern compiled per racing worker);
+    /// every xla FFI call (parse + compile) runs under `exec`, and a
+    /// cache hit touches no xla state at all.
+    fn executable(&self, e: &ArtifactEntry) -> RtResult<Arc<xla::PjRtLoadedExecutable>> {
         let key = format!("{}:{}:{}:{}", e.op, e.b, e.dim, e.d);
-        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+        let cell = Arc::clone(self.cache.lock().unwrap().entry(key).or_default());
+        let mut slot = cell.lock().unwrap();
+        if let Some(exe) = slot.as_ref() {
             return Ok(Arc::clone(exe));
         }
-        let proto = xla::HloModuleProto::from_text_file(&e.file)
-            .with_context(|| format!("parse HLO text {:?}", e.file))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Arc::new(self.client.compile(&comp).with_context(|| format!("compile {key}"))?);
-        self.cache.lock().unwrap().insert(key, Arc::clone(&exe));
+        let exe = {
+            let _xla = self.exec.lock().unwrap();
+            let proto = xla::HloModuleProto::from_text_file(&e.file)
+                .map_err(|err| RtError::hard(anyhow!("parse HLO text {:?}: {err}", e.file)))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Arc::new(
+                self.client
+                    .compile(&comp)
+                    .map_err(|err| RtError::hard(anyhow!("compile {}: {err}", e.op)))?,
+            )
+        };
+        *slot = Some(Arc::clone(&exe));
         Ok(exe)
     }
 
-    fn lit(m: &Matrix) -> Result<xla::Literal> {
-        Ok(xla::Literal::vec1(m.as_slice()).reshape(&[m.nrows() as i64, m.ncols() as i64])?)
+    fn lit(m: &Matrix) -> RtResult<xla::Literal> {
+        xla::Literal::vec1(m.as_slice())
+            .reshape(&[m.nrows() as i64, m.ncols() as i64])
+            .map_err(|err| RtError::hard(anyhow!("literal reshape: {err}")))
     }
 
     fn lit_vec(v: &[f64]) -> xla::Literal {
         xla::Literal::vec1(v)
     }
 
-    fn run1(&self, e: &ArtifactEntry, args: &[xla::Literal], rows: usize, cols: usize) -> Result<Matrix> {
-        let _serialized = self.exec.lock().unwrap();
+    /// Pad `m` to `rows × cols` with `fill` (no-op copy at exact shape).
+    fn pad_matrix(m: &Matrix, rows: usize, cols: usize, fill: f64) -> Matrix {
+        if m.nrows() == rows && m.ncols() == cols {
+            return m.clone();
+        }
+        let mut p = Matrix::full(rows, cols, fill);
+        p.paste(0, 0, m);
+        p
+    }
+
+    /// Zero-extend a mean vector to the artifact length.
+    fn pad_vec(v: &[f64], len: usize) -> Vec<f64> {
+        let mut out = vec![0.0; len];
+        out[..v.len()].copy_from_slice(v);
+        out
+    }
+
+    /// Execute one artifact; `rows × cols` is the artifact's full output
+    /// shape. Execution errors and result-shape mismatches are hard.
+    fn run1(
+        &self,
+        e: &ArtifactEntry,
+        args: &[xla::Literal],
+        rows: usize,
+        cols: usize,
+    ) -> RtResult<Matrix> {
         let exe = self.executable(e)?;
-        let result = exe.execute::<xla::Literal>(args)?[0][0].to_literal_sync()?;
+        let result = {
+            let _serialized = self.exec.lock().unwrap();
+            exe.execute::<xla::Literal>(args)
+                .map_err(|err| RtError::hard(anyhow!("execute {}: {err}", e.op)))?[0][0]
+                .to_literal_sync()
+                .map_err(|err| RtError::hard(anyhow!("fetch {} result: {err}", e.op)))?
+        };
         // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        let data = out.to_vec::<f64>()?;
+        let out = result
+            .to_tuple1()
+            .map_err(|err| RtError::hard(anyhow!("untuple {} result: {err}", e.op)))?;
+        let data = out
+            .to_vec::<f64>()
+            .map_err(|err| RtError::hard(anyhow!("read {} result: {err}", e.op)))?;
         if data.len() != rows * cols {
-            bail!("artifact {} returned {} elements, expected {}", e.op, data.len(), rows * cols);
+            return Err(RtError::hard(anyhow!(
+                "artifact {} returned {} elements, expected {}",
+                e.op,
+                data.len(),
+                rows * cols
+            )));
         }
         Ok(Matrix::from_vec(rows, cols, data))
     }
 
-    /// Pairwise-distance block via the Pallas sqdist kernel.
-    pub fn dist_block(&self, xi: &Matrix, xj: &Matrix) -> Result<Matrix> {
-        if xi.nrows() != xj.nrows() || xi.ncols() != xj.ncols() {
-            bail!("dist artifacts require equal square point blocks");
+    fn record(&self, op: OffloadOp, padded: bool) {
+        if padded {
+            self.stats.record_padded(op);
+        } else {
+            self.stats.record_exact(op);
         }
-        let e = self.find("dist", xi.nrows(), xi.ncols(), 0)?;
-        self.run1(e, &[Self::lit(xi)?, Self::lit(xj)?], xi.nrows(), xj.nrows())
     }
 
-    /// Min-plus product `a ⊗ b` via the Pallas kernel.
-    pub fn minplus(&self, a: &Matrix, b: &Matrix) -> Result<Matrix> {
-        let bsz = a.nrows();
-        if a.ncols() != bsz || b.nrows() != bsz || b.ncols() != bsz {
-            bail!("minplus artifacts are square-only");
+    /// Pairwise-distance block via the Pallas sqdist kernel. Ragged point
+    /// blocks are padded with zero points, and a dimensionality below the
+    /// artifact's is zero-extended — both exact for Euclidean distance —
+    /// then the `r×c` corner is sliced out.
+    pub fn dist_block(&self, xi: &Matrix, xj: &Matrix) -> RtResult<Matrix> {
+        let (r, c, dim) = (xi.nrows(), xj.nrows(), xi.ncols());
+        if xj.ncols() != dim {
+            return Err(RtError::hard(anyhow!(
+                "dist operands disagree on dimensionality: {dim} vs {}",
+                xj.ncols()
+            )));
         }
-        let e = self.find("minplus", bsz, 0, 0)?;
-        self.run1(e, &[Self::lit(a)?, Self::lit(b)?], bsz, bsz)
+        let e = self.plan(OffloadOp::Dist, r.max(c), dim, 0)?;
+        let (eb, edim) = (e.b, e.dim);
+        let padded = r != eb || c != eb || dim != edim;
+        let out = if padded {
+            let xip = Self::pad_matrix(xi, eb, edim, 0.0);
+            let xjp = Self::pad_matrix(xj, eb, edim, 0.0);
+            self.run1(e, &[Self::lit(&xip)?, Self::lit(&xjp)?], eb, eb)?.slice(0, r, 0, c)
+        } else {
+            self.run1(e, &[Self::lit(xi)?, Self::lit(xj)?], r, c)?
+        };
+        self.record(OffloadOp::Dist, padded);
+        Ok(out)
     }
 
-    /// In-block Floyd–Warshall via the Pallas kernel.
-    pub fn floyd_warshall(&self, g: &Matrix) -> Result<Matrix> {
-        let bsz = g.nrows();
-        if g.ncols() != bsz {
-            bail!("fw requires square block");
+    /// Min-plus product `a ⊗ b` via the Pallas kernel. Ragged operands are
+    /// padded with `+∞` (the semiring's annihilator: padded terms never win
+    /// the min) up to the artifact block size.
+    pub fn minplus(&self, a: &Matrix, b: &Matrix) -> RtResult<Matrix> {
+        let (m, k, n) = (a.nrows(), a.ncols(), b.ncols());
+        if b.nrows() != k {
+            return Err(RtError::hard(anyhow!(
+                "minplus inner dimensions disagree: {k} vs {}",
+                b.nrows()
+            )));
         }
-        let e = self.find("fw", bsz, 0, 0)?;
-        self.run1(e, &[Self::lit(g)?], bsz, bsz)
+        let need = m.max(k).max(n);
+        let e = self.plan(OffloadOp::Minplus, need, 0, 0)?;
+        let eb = e.b;
+        let padded = m != eb || k != eb || n != eb;
+        let out = if padded {
+            let ap = Self::pad_matrix(a, eb, eb, f64::INFINITY);
+            let bp = Self::pad_matrix(b, eb, eb, f64::INFINITY);
+            self.run1(e, &[Self::lit(&ap)?, Self::lit(&bp)?], eb, eb)?.slice(0, m, 0, n)
+        } else {
+            self.run1(e, &[Self::lit(a)?, Self::lit(b)?], eb, eb)?
+        };
+        self.record(OffloadOp::Minplus, padded);
+        Ok(out)
     }
 
-    /// Double-centering application on one block.
-    pub fn center_block(&self, block: &Matrix, mu_r: &[f64], mu_c: &[f64], grand: f64) -> Result<Matrix> {
-        let bsz = block.nrows();
-        if block.ncols() != bsz || mu_r.len() != bsz || mu_c.len() != bsz {
-            bail!("center requires square block with matching mean vectors");
+    /// In-block Floyd–Warshall via the Pallas kernel. A ragged diagonal
+    /// block is padded with `+∞` rows/cols: padded pivots relax nothing
+    /// (`∞ + w = ∞`), so the real corner is untouched.
+    pub fn floyd_warshall(&self, g: &Matrix) -> RtResult<Matrix> {
+        let r = g.nrows();
+        if g.ncols() != r {
+            return Err(RtError::hard(anyhow!(
+                "fw requires a square block, got {r}×{}",
+                g.ncols()
+            )));
         }
-        let e = self.find("center", bsz, 0, 0)?;
-        let args = vec![
-            Self::lit(block)?,
-            Self::lit_vec(mu_r),
-            Self::lit_vec(mu_c),
-            xla::Literal::scalar(grand),
-        ];
-        self.run1(e, &args, bsz, bsz)
+        let e = self.plan(OffloadOp::Fw, r, 0, 0)?;
+        let eb = e.b;
+        let padded = r != eb;
+        let out = if padded {
+            let gp = Self::pad_matrix(g, eb, eb, f64::INFINITY);
+            self.run1(e, &[Self::lit(&gp)?], eb, eb)?.slice(0, r, 0, r)
+        } else {
+            self.run1(e, &[Self::lit(g)?], r, r)?
+        };
+        self.record(OffloadOp::Fw, padded);
+        Ok(out)
     }
 
-    /// Find the gemm artifact column width for block size `b` (smallest
-    /// `d_pad >= d`).
-    fn gemm_entry(&self, op: &str, b: usize, d: usize) -> Result<&ArtifactEntry> {
-        self.entries
-            .iter()
-            .filter(|e| e.op == op && e.b == b && e.d >= d)
-            .min_by_key(|e| e.d)
-            .ok_or_else(|| anyhow!("no {op} artifact for b={b} d>={d}"))
+    /// Double-centering application on one block. The op is element-wise,
+    /// so ragged blocks pad with zeros and the mean vectors zero-extend
+    /// (masked means: padded entries never reach the sliced result).
+    pub fn center_block(
+        &self,
+        block: &Matrix,
+        mu_r: &[f64],
+        mu_c: &[f64],
+        grand: f64,
+    ) -> RtResult<Matrix> {
+        let (r, c) = (block.nrows(), block.ncols());
+        if mu_r.len() != r || mu_c.len() != c {
+            return Err(RtError::hard(anyhow!(
+                "center mean vectors ({}, {}) do not match block {r}×{c}",
+                mu_r.len(),
+                mu_c.len()
+            )));
+        }
+        let e = self.plan(OffloadOp::Center, r.max(c), 0, 0)?;
+        let eb = e.b;
+        let padded = r != eb || c != eb;
+        let out = if padded {
+            let bp = Self::pad_matrix(block, eb, eb, 0.0);
+            let args = vec![
+                Self::lit(&bp)?,
+                Self::lit_vec(&Self::pad_vec(mu_r, eb)),
+                Self::lit_vec(&Self::pad_vec(mu_c, eb)),
+                xla::Literal::scalar(grand),
+            ];
+            self.run1(e, &args, eb, eb)?.slice(0, r, 0, c)
+        } else {
+            let args = vec![
+                Self::lit(block)?,
+                Self::lit_vec(mu_r),
+                Self::lit_vec(mu_c),
+                xla::Literal::scalar(grand),
+            ];
+            self.run1(e, &args, r, c)?
+        };
+        self.record(OffloadOp::Center, padded);
+        Ok(out)
     }
 
-    fn pad_cols(q: &Matrix, d_pad: usize) -> Matrix {
-        if q.ncols() == d_pad {
-            return q.clone();
+    /// `a · q` (power-iteration block product). Ragged blocks zero-pad to
+    /// the artifact's `b`, and `q`'s column count zero-pads to the
+    /// artifact width — both exact for matmul — then the `r×d` corner is
+    /// sliced out.
+    pub fn gemm(&self, a: &Matrix, q: &Matrix) -> RtResult<Matrix> {
+        let (r, k, d) = (a.nrows(), a.ncols(), q.ncols());
+        if q.nrows() != k {
+            return Err(RtError::hard(anyhow!(
+                "gemm inner dimensions disagree: {k} vs {}",
+                q.nrows()
+            )));
         }
-        let mut p = Matrix::zeros(q.nrows(), d_pad);
-        for i in 0..q.nrows() {
-            p.row_mut(i)[..q.ncols()].copy_from_slice(q.row(i));
-        }
-        p
+        let e = self.plan(OffloadOp::Gemm, r.max(k), 0, d)?;
+        let (eb, ed) = (e.b, e.d);
+        let padded = r != eb || k != eb || d != ed;
+        let out = if padded {
+            let ap = Self::pad_matrix(a, eb, eb, 0.0);
+            let qp = Self::pad_matrix(q, eb, ed, 0.0);
+            self.run1(e, &[Self::lit(&ap)?, Self::lit(&qp)?], eb, ed)?.slice(0, r, 0, d)
+        } else {
+            self.run1(e, &[Self::lit(a)?, Self::lit(q)?], eb, ed)?
+        };
+        self.record(OffloadOp::Gemm, padded);
+        Ok(out)
     }
 
-    /// `a · q` (power-iteration block product). `q`'s column count may be
-    /// smaller than the artifact width; zero-padding is exact.
-    pub fn gemm(&self, a: &Matrix, q: &Matrix) -> Result<Matrix> {
-        let bsz = a.nrows();
-        if a.ncols() != bsz || q.nrows() != bsz {
-            bail!("gemm artifacts are (b,b)x(b,d)");
+    /// `aᵀ · q` — same padding scheme as [`Self::gemm`]; the result is the
+    /// `c×d` corner (`c` = `a`'s column count).
+    pub fn gemm_t(&self, a: &Matrix, q: &Matrix) -> RtResult<Matrix> {
+        let (r, c, d) = (a.nrows(), a.ncols(), q.ncols());
+        if q.nrows() != r {
+            return Err(RtError::hard(anyhow!(
+                "gemmt row counts disagree: {r} vs {}",
+                q.nrows()
+            )));
         }
-        let e = self.gemm_entry("gemm", bsz, q.ncols())?;
-        let qp = Self::pad_cols(q, e.d);
-        let full = self.run1(e, &[Self::lit(a)?, Self::lit(&qp)?], bsz, e.d)?;
-        Ok(full.slice(0, bsz, 0, q.ncols()))
-    }
-
-    /// `aᵀ · q`.
-    pub fn gemm_t(&self, a: &Matrix, q: &Matrix) -> Result<Matrix> {
-        let bsz = a.nrows();
-        if a.ncols() != bsz || q.nrows() != bsz {
-            bail!("gemmt artifacts are (b,b)x(b,d)");
-        }
-        let e = self.gemm_entry("gemmt", bsz, q.ncols())?;
-        let qp = Self::pad_cols(q, e.d);
-        let full = self.run1(e, &[Self::lit(a)?, Self::lit(&qp)?], bsz, e.d)?;
-        Ok(full.slice(0, bsz, 0, q.ncols()))
+        let e = self.plan(OffloadOp::Gemmt, r.max(c), 0, d)?;
+        let (eb, ed) = (e.b, e.d);
+        let padded = r != eb || c != eb || d != ed;
+        let out = if padded {
+            let ap = Self::pad_matrix(a, eb, eb, 0.0);
+            let qp = Self::pad_matrix(q, eb, ed, 0.0);
+            self.run1(e, &[Self::lit(&ap)?, Self::lit(&qp)?], eb, ed)?.slice(0, c, 0, d)
+        } else {
+            self.run1(e, &[Self::lit(a)?, Self::lit(q)?], eb, ed)?
+        };
+        self.record(OffloadOp::Gemmt, padded);
+        Ok(out)
     }
 }
 
@@ -245,20 +498,51 @@ mod tests {
         assert!(format!("{err:#}").contains("make artifacts"));
     }
 
-    #[test]
-    fn manifest_parse_rejects_bad_json() {
-        let dir = std::env::temp_dir().join("isospark_rt_bad");
+    /// Per-process-unique scratch dir so concurrent test runs sharing the
+    /// system temp dir cannot race on manifest.json.
+    fn scratch_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("isospark_{tag}_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
-        assert!(PjrtEngine::load(&dir).is_err());
+        dir
     }
 
     #[test]
-    fn pad_cols_zero_extends() {
+    fn manifest_parse_rejects_bad_json() {
+        let dir = scratch_dir("rt_bad");
+        std::fs::write(dir.join("manifest.json"), "{not json").unwrap();
+        assert!(PjrtEngine::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_pad_policy_mismatch_is_a_hard_load_error() {
+        let dir = scratch_dir("rt_badpad");
+        // minplus pads with +inf; a manifest claiming "zero" must refuse
+        // to load rather than silently produce wrong padded results.
+        let manifest = r#"{"version": 2, "ops":
+            [{"op": "minplus", "b": 32, "pad": "zero", "file": "x.hlo.txt"}]}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let err = PjrtEngine::load(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("pad policy mismatch"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn pad_matrix_fills_and_preserves_corner() {
         let q = Matrix::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
-        let p = PjrtEngine::pad_cols(&q, 4);
-        assert_eq!(p.ncols(), 4);
+        let p = PjrtEngine::pad_matrix(&q, 4, 3, f64::INFINITY);
+        assert_eq!((p.nrows(), p.ncols()), (4, 3));
         assert_eq!(p[(0, 0)], 1.0);
-        assert_eq!(p[(1, 3)], 0.0);
+        assert_eq!(p[(1, 1)], 4.0);
+        assert!(p[(0, 2)].is_infinite());
+        assert!(p[(3, 0)].is_infinite());
+        // Exact shape: untouched copy.
+        let same = PjrtEngine::pad_matrix(&q, 2, 2, 0.0);
+        assert_eq!(same.as_slice(), q.as_slice());
+    }
+
+    #[test]
+    fn pad_vec_zero_extends() {
+        assert_eq!(PjrtEngine::pad_vec(&[1.0, 2.0], 4), vec![1.0, 2.0, 0.0, 0.0]);
     }
 }

@@ -1,12 +1,19 @@
 //! Stub runtime used when the crate is built without the `pjrt` feature.
 //!
-//! Mirrors the public surface of the real [`super`] PJRT engine so that
-//! callers (the CLI `info` command, benches, the equivalence test suite)
-//! compile unchanged; every entry point reports that artifacts are
-//! unavailable, and [`crate::backend::Backend`] falls back to the native
-//! kernels. This keeps `cargo build && cargo test` fully offline — the
-//! `xla` crate is only required when the feature is enabled.
+//! Mirrors the public surface of the real [`super`] PJRT engine — including
+//! the shape-plan/fallback accounting contract — so that callers (the CLI
+//! `info` command, benches, the equivalence test suite) compile unchanged.
+//! `load` always errors (there are no executables to run); the
+//! [`PjrtEngine::disconnected`] constructor builds an artifact-less engine
+//! whose every entry point records a counted **shape miss** in its
+//! [`OffloadStats`] and returns [`RtError::ShapeMiss`], so
+//! [`crate::backend::Backend`] falls back to the native kernels exactly as
+//! it would for an unserved shape — and the fallback counters are testable
+//! fully offline. This keeps `cargo build && cargo test` free of the `xla`
+//! dependency.
 
+use super::{RtError, RtResult};
+use crate::engine::metrics::{OffloadOp, OffloadStats};
 use crate::linalg::Matrix;
 use anyhow::{bail, Result};
 use std::path::{Path, PathBuf};
@@ -19,6 +26,7 @@ const DISABLED: &str =
 #[derive(Debug)]
 pub struct PjrtEngine {
     dir: PathBuf,
+    stats: OffloadStats,
 }
 
 impl PjrtEngine {
@@ -28,9 +36,21 @@ impl PjrtEngine {
         bail!(DISABLED)
     }
 
+    /// An engine with no artifacts at all: every call is a counted shape
+    /// miss. Lets the fallback-accounting path be exercised (and tested)
+    /// without the `xla` dependency.
+    pub fn disconnected(dir: &Path) -> Self {
+        Self { dir: dir.to_path_buf(), stats: OffloadStats::new() }
+    }
+
     /// Artifact directory this engine would serve.
     pub fn dir(&self) -> &Path {
         &self.dir
+    }
+
+    /// Offload counters (all recorded calls are misses here).
+    pub fn stats(&self) -> &OffloadStats {
+        &self.stats
     }
 
     /// Available artifacts (none).
@@ -38,40 +58,46 @@ impl PjrtEngine {
         Vec::new()
     }
 
-    /// Pairwise-distance block — unavailable.
-    pub fn dist_block(&self, _xi: &Matrix, _xj: &Matrix) -> Result<Matrix> {
-        bail!(DISABLED)
+    /// Every stub shape plan resolves to a counted miss.
+    fn miss(&self, op: OffloadOp) -> RtError {
+        self.stats.record_miss(op);
+        RtError::shape_miss(op.name(), DISABLED)
     }
 
-    /// Min-plus product — unavailable.
-    pub fn minplus(&self, _a: &Matrix, _b: &Matrix) -> Result<Matrix> {
-        bail!(DISABLED)
+    /// Pairwise-distance block — unavailable (counted miss).
+    pub fn dist_block(&self, _xi: &Matrix, _xj: &Matrix) -> RtResult<Matrix> {
+        Err(self.miss(OffloadOp::Dist))
     }
 
-    /// In-block Floyd–Warshall — unavailable.
-    pub fn floyd_warshall(&self, _g: &Matrix) -> Result<Matrix> {
-        bail!(DISABLED)
+    /// Min-plus product — unavailable (counted miss).
+    pub fn minplus(&self, _a: &Matrix, _b: &Matrix) -> RtResult<Matrix> {
+        Err(self.miss(OffloadOp::Minplus))
     }
 
-    /// Double-centering application — unavailable.
+    /// In-block Floyd–Warshall — unavailable (counted miss).
+    pub fn floyd_warshall(&self, _g: &Matrix) -> RtResult<Matrix> {
+        Err(self.miss(OffloadOp::Fw))
+    }
+
+    /// Double-centering application — unavailable (counted miss).
     pub fn center_block(
         &self,
         _block: &Matrix,
         _mu_r: &[f64],
         _mu_c: &[f64],
         _grand: f64,
-    ) -> Result<Matrix> {
-        bail!(DISABLED)
+    ) -> RtResult<Matrix> {
+        Err(self.miss(OffloadOp::Center))
     }
 
-    /// Power-iteration block product — unavailable.
-    pub fn gemm(&self, _a: &Matrix, _q: &Matrix) -> Result<Matrix> {
-        bail!(DISABLED)
+    /// Power-iteration block product — unavailable (counted miss).
+    pub fn gemm(&self, _a: &Matrix, _q: &Matrix) -> RtResult<Matrix> {
+        Err(self.miss(OffloadOp::Gemm))
     }
 
-    /// Transposed block product — unavailable.
-    pub fn gemm_t(&self, _a: &Matrix, _q: &Matrix) -> Result<Matrix> {
-        bail!(DISABLED)
+    /// Transposed block product — unavailable (counted miss).
+    pub fn gemm_t(&self, _a: &Matrix, _q: &Matrix) -> RtResult<Matrix> {
+        Err(self.miss(OffloadOp::Gemmt))
     }
 }
 
@@ -85,5 +111,20 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("pjrt"), "{msg}");
         assert!(msg.contains("make artifacts"), "{msg}");
+    }
+
+    #[test]
+    fn disconnected_records_a_miss_per_call() {
+        let rt = PjrtEngine::disconnected(Path::new("artifacts"));
+        let m = Matrix::zeros(3, 3);
+        assert!(rt.minplus(&m, &m).unwrap_err().is_shape_miss());
+        assert!(rt.minplus(&m, &m).unwrap_err().is_shape_miss());
+        assert!(rt.floyd_warshall(&m).unwrap_err().is_shape_miss());
+        let snap = rt.stats().op_snapshot(OffloadOp::Minplus);
+        assert_eq!((snap.exact, snap.padded, snap.missed), (0, 0, 2));
+        assert_eq!(rt.stats().op_snapshot(OffloadOp::Fw).missed, 1);
+        assert_eq!(rt.stats().total_missed(), 3);
+        assert!(rt.inventory().is_empty());
+        assert_eq!(rt.dir(), Path::new("artifacts"));
     }
 }

@@ -2,14 +2,24 @@
 //!
 //! Loads the AOT artifacts produced by `make artifacts` and asserts that
 //! every Pallas-kernel-backed executable agrees with the native Rust
-//! kernels to f64 precision, then runs the full pipeline on both backends
-//! and compares embeddings. Skips (with a loud message) when artifacts are
-//! missing so `cargo test` stays runnable before `make artifacts`.
+//! kernels to f64 precision — on exact artifact shapes *and* on ragged
+//! (`b ∤ n`) shapes served through the shape-polymorphic padded path —
+//! then runs the full pipeline on both backends and compares embeddings,
+//! checking that offload coverage stays at 100% (zero counted fallbacks)
+//! whenever artifacts exist for the block size. Skips (with a loud
+//! message) when artifacts are missing so `cargo test` stays runnable
+//! before `make artifacts`.
+//!
+//! The `stub_fallback` module runs in the default (no `pjrt` feature)
+//! build and pins the other half of the fallback policy: an engine that
+//! can serve nothing falls back to bit-identical native execution while
+//! counting every miss.
 
 use isospark::backend::Backend;
 use isospark::config::{ClusterConfig, IsomapConfig};
 use isospark::coordinator::isomap;
 use isospark::data::swiss_roll;
+use isospark::engine::metrics::OffloadOp;
 use isospark::kernels;
 use isospark::linalg::Matrix;
 use isospark::runtime::PjrtEngine;
@@ -56,6 +66,29 @@ fn random_graph(b: usize, seed: u64) -> Matrix {
     m
 }
 
+/// Rectangular min-plus operand with infinities.
+fn random_weights(r: usize, c: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::seed(seed);
+    let mut m = Matrix::zeros(r, c);
+    for i in 0..r {
+        for j in 0..c {
+            m[(i, j)] = if rng.f64() < 0.25 { f64::INFINITY } else { rng.range(0.1, 5.0) };
+        }
+    }
+    m
+}
+
+fn assert_close_inf(got: &Matrix, want: &Matrix, tol: f64, what: &str) {
+    assert_eq!((got.nrows(), got.ncols()), (want.nrows(), want.ncols()), "{what}: shape");
+    for (i, (x, y)) in got.as_slice().iter().zip(want.as_slice()).enumerate() {
+        if x.is_infinite() || y.is_infinite() {
+            assert!(x.is_infinite() && y.is_infinite(), "{what}: entry {i}: {x} vs {y}");
+        } else {
+            assert!((x - y).abs() < tol, "{what}: entry {i}: {x} vs {y}");
+        }
+    }
+}
+
 #[test]
 fn minplus_matches_native() {
     let Some(rt) = engine() else { return };
@@ -64,13 +97,7 @@ fn minplus_matches_native() {
         let c = random_graph(b, 2);
         let got = rt.minplus(&a, &c).expect("minplus artifact");
         let want = kernels::minplus::minplus(&a, &c);
-        for (x, y) in got.as_slice().iter().zip(want.as_slice()) {
-            if x.is_infinite() || y.is_infinite() {
-                assert!(x.is_infinite() && y.is_infinite());
-            } else {
-                assert!((x - y).abs() < 1e-12, "b={b}: {x} vs {y}");
-            }
-        }
+        assert_close_inf(&got, &want, 1e-12, &format!("minplus b={b}"));
     }
 }
 
@@ -81,13 +108,7 @@ fn fw_matches_native() {
         let g = random_graph(b, 3);
         let got = rt.floyd_warshall(&g).expect("fw artifact");
         let want = kernels::floyd_warshall::floyd_warshall(&g);
-        for (x, y) in got.as_slice().iter().zip(want.as_slice()) {
-            if x.is_infinite() || y.is_infinite() {
-                assert!(x.is_infinite() && y.is_infinite());
-            } else {
-                assert!((x - y).abs() < 1e-10, "b={b}: {x} vs {y}");
-            }
-        }
+        assert_close_inf(&got, &want, 1e-10, &format!("fw b={b}"));
     }
 }
 
@@ -135,12 +156,106 @@ fn gemm_matches_native_with_padding() {
     }
 }
 
+// ---- Ragged (`b ∤ n`) shapes: the shape-polymorphic padded path. ----
+
 #[test]
-fn unsupported_shapes_error_cleanly() {
+fn ragged_minplus_padded_matches_native() {
     let Some(rt) = engine() else { return };
-    // Ragged block: no artifact — must Err (backend falls back to native).
-    assert!(rt.minplus(&Matrix::zeros(33, 33), &Matrix::zeros(33, 33)).is_err());
-    assert!(rt.dist_block(&Matrix::zeros(32, 5), &Matrix::zeros(32, 5)).is_err());
+    // Square ragged, and the rectangular Phase-2/3 operand mixes the APSP
+    // coordinator issues against a ragged tail (pivot p×p with p < b,
+    // row/column segments p×c and r×p).
+    for (m, k, n) in [(33usize, 33usize, 33usize), (17, 33, 9), (33, 17, 64), (64, 33, 64)] {
+        let a = random_weights(m, k, (m * k + n) as u64);
+        let b = random_weights(k, n, (m * k + n) as u64 + 7);
+        let got = rt.minplus(&a, &b).unwrap_or_else(|e| panic!("m={m} k={k} n={n}: {e}"));
+        let want = kernels::minplus::minplus(&a, &b);
+        assert_close_inf(&got, &want, 1e-12, &format!("ragged minplus {m}x{k}x{n}"));
+    }
+    // Padded executions must be recorded as padded hits, not misses.
+    let snap = rt.stats().op_snapshot(OffloadOp::Minplus);
+    assert!(snap.padded >= 4, "expected padded hits, got {snap:?}");
+    assert_eq!(snap.missed, 0, "ragged shapes must not fall off the PJRT path: {snap:?}");
+}
+
+#[test]
+fn ragged_fw_padded_matches_native() {
+    let Some(rt) = engine() else { return };
+    for b in [5usize, 33, 100] {
+        let g = random_graph(b, b as u64);
+        let got = rt.floyd_warshall(&g).unwrap_or_else(|e| panic!("b={b}: {e}"));
+        let want = kernels::floyd_warshall::floyd_warshall(&g);
+        assert_close_inf(&got, &want, 1e-10, &format!("ragged fw b={b}"));
+    }
+    assert_eq!(rt.stats().op_snapshot(OffloadOp::Fw).missed, 0);
+}
+
+#[test]
+fn ragged_dist_padded_matches_native() {
+    let Some(rt) = engine() else { return };
+    // Ragged point counts, rectangular pairs, and a dimensionality (5)
+    // that only exists via zero-padding up to the dim=16 artifact.
+    for (r, c, dim) in [(33usize, 33usize, 3usize), (10, 27, 3), (20, 20, 5), (70, 33, 16)] {
+        let xi = random(r, dim, (r + c) as u64, -3.0, 3.0);
+        let xj = random(c, dim, (r + c) as u64 + 3, -3.0, 3.0);
+        let got = rt.dist_block(&xi, &xj).unwrap_or_else(|e| panic!("r={r} c={c} dim={dim}: {e}"));
+        let want = kernels::sqdist::dist_block(&xi, &xj);
+        assert!(got.max_abs_diff(&want) < 1e-9, "r={r} c={c} dim={dim}");
+    }
+    assert_eq!(rt.stats().op_snapshot(OffloadOp::Dist).missed, 0);
+}
+
+#[test]
+fn ragged_center_padded_matches_native() {
+    let Some(rt) = engine() else { return };
+    // Non-square blocks: the UT layout's (I, q-1) blocks are b×r ragged.
+    for (r, c) in [(33usize, 33usize), (64, 17), (5, 40)] {
+        let blk = random(r, c, (r * c) as u64, 0.0, 50.0);
+        let mu_r: Vec<f64> = (0..r).map(|i| i as f64 * 0.1).collect();
+        let mu_c: Vec<f64> = (0..c).map(|i| 2.0 - i as f64 * 0.03).collect();
+        let got =
+            rt.center_block(&blk, &mu_r, &mu_c, 1.25).unwrap_or_else(|e| panic!("{r}x{c}: {e}"));
+        let mut want = blk.clone();
+        kernels::centering::center_block(&mut want, &mu_r, &mu_c, 1.25);
+        assert!(got.max_abs_diff(&want) < 1e-12, "r={r} c={c}");
+    }
+    assert_eq!(rt.stats().op_snapshot(OffloadOp::Center).missed, 0);
+}
+
+#[test]
+fn ragged_gemm_padded_matches_native() {
+    let Some(rt) = engine() else { return };
+    for (r, k, d) in [(33usize, 33usize, 2usize), (58, 58, 3), (17, 33, 8)] {
+        let a = random(r, k, (r + k + d) as u64, -2.0, 2.0);
+        let q = random(k, d, (r + k + d) as u64 + 5, -1.0, 1.0);
+        let got = rt.gemm(&a, &q).unwrap_or_else(|e| panic!("gemm {r}x{k} d={d}: {e}"));
+        let mut want = Matrix::zeros(r, d);
+        kernels::matvec::gemm_acc(&a, &q, &mut want);
+        assert!(got.max_abs_diff(&want) < 1e-11, "gemm r={r} k={k} d={d}");
+
+        let qt = random(r, d, (r + k + d) as u64 + 9, -1.0, 1.0);
+        let got_t = rt.gemm_t(&a, &qt).unwrap_or_else(|e| panic!("gemmt {r}x{k} d={d}: {e}"));
+        let mut want_t = Matrix::zeros(k, d);
+        kernels::matvec::gemm_t_acc(&a, &qt, &mut want_t);
+        assert!(got_t.max_abs_diff(&want_t) < 1e-11, "gemmt r={r} k={k} d={d}");
+    }
+    assert_eq!(rt.stats().op_snapshot(OffloadOp::Gemm).missed, 0);
+    assert_eq!(rt.stats().op_snapshot(OffloadOp::Gemmt).missed, 0);
+}
+
+#[test]
+fn shapes_beyond_every_artifact_miss_cleanly() {
+    let Some(rt) = engine() else { return };
+    // Padding covers anything up to the largest artifact; beyond that the
+    // call must be a *classified* shape miss (counted fallback), never a
+    // hard error — and never a silent wrong answer.
+    let big = Matrix::zeros(200, 200);
+    let err = rt.minplus(&big, &big).unwrap_err();
+    assert!(err.is_shape_miss(), "{err}");
+    let wide = Matrix::zeros(32, 2000);
+    let err = rt.dist_block(&wide, &wide).unwrap_err();
+    assert!(err.is_shape_miss(), "{err}");
+    assert!(rt.stats().op_snapshot(OffloadOp::Minplus).missed >= 1);
+    assert!(rt.stats().op_snapshot(OffloadOp::Dist).missed >= 1);
 }
 
 #[test]
@@ -160,5 +275,138 @@ fn full_pipeline_pjrt_equals_native() {
     assert!(diff < 1e-6, "pjrt vs native embedding max diff = {diff}");
     for (a, b) in native.eigenvalues.iter().zip(&pjrt.eigenvalues) {
         assert!((a - b).abs() / a.abs().max(1.0) < 1e-9);
+    }
+}
+
+#[test]
+fn ragged_pipeline_fully_offloaded() {
+    if engine().is_none() {
+        return;
+    }
+    let backend = Backend::pjrt_from_dir(&artifacts_dir()).expect("pjrt backend");
+    // b ∤ n: q = 4 blocks with a ragged 58-row tail. Every block op on the
+    // ragged row/column must execute through the padded artifact path —
+    // offload coverage 100%, zero counted fallbacks.
+    let ds = swiss_roll::euler_isometric(250, 43);
+    let cfg = IsomapConfig { k: 10, d: 2, block: 64, ..Default::default() };
+    let cl = ClusterConfig::local();
+    let native = isomap::run_with(&ds.points, &cfg, &cl, &Backend::Native).unwrap();
+    let pjrt = isomap::run_with(&ds.points, &cfg, &cl, &backend).unwrap();
+    let diff = native.embedding.max_abs_diff(&pjrt.embedding);
+    assert!(diff < 1e-6, "ragged pjrt vs native embedding max diff = {diff}");
+    let offload = pjrt.offload.expect("pjrt run records offload counters");
+    for s in &offload {
+        assert_eq!(s.missed, 0, "op {} fell off the PJRT path: {s:?}", s.op.name());
+    }
+    let padded: u64 = offload.iter().map(|s| s.padded).sum();
+    assert!(padded > 0, "ragged run must exercise the padded path: {offload:?}");
+}
+
+/// Offline (default-build) half of the fallback policy: a stub engine
+/// serves nothing, so every backend call falls back to the native kernel
+/// with identical results while the miss counters record each call.
+#[cfg(not(feature = "pjrt"))]
+mod stub_fallback {
+    use super::*;
+    use std::path::Path;
+    use std::sync::Arc;
+
+    fn stub_backend() -> Backend {
+        Backend::Pjrt(Arc::new(PjrtEngine::disconnected(Path::new("artifacts"))))
+    }
+
+    #[test]
+    fn every_op_counts_one_miss_and_matches_native() {
+        let be = stub_backend();
+        let native = Backend::Native;
+
+        let xi = random(5, 3, 1, -2.0, 2.0);
+        let xj = random(7, 3, 2, -2.0, 2.0);
+        assert_eq!(be.dist_block(&xi, &xj).as_slice(), native.dist_block(&xi, &xj).as_slice());
+        assert_eq!(be.dist_block_sym(&xi).as_slice(), native.dist_block_sym(&xi).as_slice());
+
+        let a = random_weights(5, 5, 3);
+        let b = random_weights(5, 5, 4);
+        let mut dst = Matrix::full(5, 5, f64::INFINITY);
+        let mut dst_n = dst.clone();
+        be.minplus_into(&a, &b, &mut dst);
+        native.minplus_into(&a, &b, &mut dst_n);
+        assert_eq!(dst.as_slice(), dst_n.as_slice());
+
+        let mut left = b.clone();
+        let mut left_n = b.clone();
+        be.minplus_left_inplace(&a, &mut left);
+        native.minplus_left_inplace(&a, &mut left_n);
+        assert_eq!(left.as_slice(), left_n.as_slice());
+
+        let mut right = b.clone();
+        let mut right_n = b.clone();
+        be.minplus_right_inplace(&a, &mut right);
+        native.minplus_right_inplace(&a, &mut right_n);
+        assert_eq!(right.as_slice(), right_n.as_slice());
+
+        let mut g = random_graph(6, 5);
+        let mut g_n = g.clone();
+        be.fw_inplace(&mut g);
+        native.fw_inplace(&mut g_n);
+        assert_eq!(g.as_slice(), g_n.as_slice());
+
+        let mut blk = random(4, 6, 6, 0.0, 10.0);
+        let mut blk_n = blk.clone();
+        let mu_r: Vec<f64> = (0..4).map(|i| i as f64).collect();
+        let mu_c: Vec<f64> = (0..6).map(|i| i as f64 * 0.5).collect();
+        be.center_block(&mut blk, &mu_r, &mu_c, 0.25);
+        native.center_block(&mut blk_n, &mu_r, &mu_c, 0.25);
+        assert_eq!(blk.as_slice(), blk_n.as_slice());
+
+        let q = random(5, 2, 7, -1.0, 1.0);
+        let mut out = Matrix::zeros(5, 2);
+        let mut out_n = Matrix::zeros(5, 2);
+        be.gemm_acc(&a, &q, &mut out);
+        native.gemm_acc(&a, &q, &mut out_n);
+        assert_eq!(out.as_slice(), out_n.as_slice());
+
+        let mut out_t = Matrix::zeros(5, 2);
+        let mut out_t_n = Matrix::zeros(5, 2);
+        be.gemm_t_acc(&a, &q, &mut out_t);
+        native.gemm_t_acc(&a, &q, &mut out_t_n);
+        assert_eq!(out_t.as_slice(), out_t_n.as_slice());
+
+        // Every call above must be accounted as exactly one miss on its op
+        // (dist gets two: dist_block + dist_block_sym route through it).
+        let stats = be.offload_stats().unwrap();
+        assert_eq!(stats.op_snapshot(OffloadOp::Dist).missed, 2);
+        assert_eq!(stats.op_snapshot(OffloadOp::Minplus).missed, 3);
+        assert_eq!(stats.op_snapshot(OffloadOp::Fw).missed, 1);
+        assert_eq!(stats.op_snapshot(OffloadOp::Center).missed, 1);
+        assert_eq!(stats.op_snapshot(OffloadOp::Gemm).missed, 1);
+        assert_eq!(stats.op_snapshot(OffloadOp::Gemmt).missed, 1);
+        assert_eq!(stats.total_calls(), stats.total_missed(), "stub never offloads");
+    }
+
+    #[test]
+    fn stub_pipeline_matches_native_and_counts_fallbacks() {
+        // Ragged n through the stub-PJRT backend: numerics identical to
+        // native, and the run's offload snapshot shows honest zero
+        // coverage instead of pretending the offload happened.
+        let ds = swiss_roll::euler_isometric(50, 17);
+        let cfg = IsomapConfig { k: 6, d: 2, block: 16, ..Default::default() };
+        let cl = ClusterConfig::local();
+        let be = stub_backend();
+        let native = isomap::run_with(&ds.points, &cfg, &cl, &Backend::Native).unwrap();
+        let stubbed = isomap::run_with(&ds.points, &cfg, &cl, &be).unwrap();
+        for (a, b) in native.embedding.as_slice().iter().zip(stubbed.embedding.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "stub fallback must be bit-identical");
+        }
+        let offload = stubbed.offload.expect("pjrt-backend run records counters");
+        let total: u64 = offload.iter().map(|s| s.total()).sum();
+        let missed: u64 = offload.iter().map(|s| s.missed).sum();
+        assert!(total > 0, "pipeline must have issued block ops");
+        assert_eq!(total, missed, "every stub call is a counted miss");
+        for op in [OffloadOp::Dist, OffloadOp::Minplus, OffloadOp::Fw, OffloadOp::Center] {
+            let s = offload.iter().find(|s| s.op == op).unwrap();
+            assert!(s.missed > 0, "pipeline never exercised {}", op.name());
+        }
+        assert!(native.offload.is_none());
     }
 }
