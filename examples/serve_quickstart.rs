@@ -1,0 +1,59 @@
+//! Fit once, serve forever: fit a streaming model on a swiss roll, save
+//! the artifact, load it back, stand up the embedding server on an
+//! ephemeral loopback port, and query it through the bundled client.
+//!
+//! Run with: `cargo run --release --example serve_quickstart`
+
+use isospark::backend::Backend;
+use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::coordinator::streaming::StreamingModel;
+use isospark::data::swiss_roll;
+use isospark::model::{FittedModel, ModelInfo};
+use isospark::serve::{self, client, ServeConfig};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Fit: the expensive part — distributed kNN, landmark geodesics,
+    //    landmark MDS. Runs once.
+    let ds = swiss_roll::euler_isometric(500, 42);
+    let cfg = IsomapConfig { k: 10, d: 2, block: 64, ..Default::default() };
+    let model =
+        StreamingModel::fit(&ds.points, &cfg, 80, &ClusterConfig::local(), &Backend::Native)?
+            .into_model();
+    println!("fitted: n={} D={} landmarks={}", model.n(), model.dim(), model.num_landmarks());
+
+    // 2. Save the versioned artifact and inspect it (what `isospark fit
+    //    --save` / `isospark info --model` do).
+    let dir = std::env::temp_dir().join("isospark_serve_quickstart");
+    model.save(&dir)?;
+    println!("{}", ModelInfo::inspect(&dir)?.render());
+
+    // 3. Serve: load the artifact in a "different process" and put the
+    //    HTTP front on it (what `isospark serve --model` does).
+    let loaded = FittedModel::load(&dir)?;
+    let handle = serve::start(
+        loaded,
+        Some(dir.clone()),
+        None,
+        &ServeConfig { threads: 2, ..Default::default() },
+    )?;
+    let addr = handle.addr();
+    println!("serving on http://{addr}");
+
+    // 4. Query: out-of-sample points from the same manifold, projected in
+    //    O(k·m) each — no O(n³) pipeline rerun.
+    let fresh = swiss_roll::euler_isometric(8, 97);
+    let emb = client::embed(&addr, &fresh.points)?;
+    for i in 0..emb.nrows() {
+        println!("point {i}: ({:+.4}, {:+.4})", emb[(i, 0)], emb[(i, 1)]);
+    }
+
+    let (code, health) = client::get_json(&addr, "/healthz")?;
+    println!("healthz {code}: {health}");
+    let (_, metrics) = client::get_json(&addr, "/metrics")?;
+    if let Some(lat) = metrics.get("embed_latency_us") {
+        println!("served embeds: {}", lat.get("count").map(|c| c.to_string()).unwrap_or_default());
+    }
+
+    handle.shutdown();
+    Ok(())
+}

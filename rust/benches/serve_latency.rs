@@ -1,0 +1,93 @@
+//! Serving-path latency bench: fit a small streaming model, stand up the
+//! HTTP server on an ephemeral loopback port, and drive it with the
+//! keep-alive load generator under several concurrency/batch shapes.
+//! Reports exact client-side p50/p95/p99 latency and QPS per case, plus an
+//! in-process `map_points` baseline so the HTTP + micro-batching overhead
+//! is visible, and merges everything into `BENCH_serve.json` (same
+//! section-merging format as `BENCH_kernels.json`; CI uploads it as the
+//! `BENCH_serve` artifact).
+//!
+//! Run with: `cargo bench --bench serve_latency`
+
+use isospark::backend::Backend;
+use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::coordinator::streaming::StreamingModel;
+use isospark::data::swiss_roll;
+use isospark::serve::{self, client, ServeConfig};
+use isospark::util::json::Json;
+use isospark::util::Stopwatch;
+
+fn main() {
+    let n = 400;
+    let m = 64;
+    let cfg = IsomapConfig { k: 10, d: 2, block: 64, ..Default::default() };
+    let ds = swiss_roll::euler_isometric(n, 42);
+    println!("fitting serve-bench model: n={n} m={m} k={} d={}", cfg.k, cfg.d);
+    let model = StreamingModel::fit(&ds.points, &cfg, m, &ClusterConfig::local(), &Backend::Native)
+        .expect("fit")
+        .into_model();
+    let pool = swiss_roll::euler_isometric(256, 97).points;
+
+    // In-process baseline: the projection itself, no HTTP, no batching.
+    let mut cases: Vec<Json> = Vec::new();
+    {
+        let iters = 2000;
+        let sw = Stopwatch::start();
+        for i in 0..iters {
+            let row = pool.slice(i % pool.nrows(), i % pool.nrows() + 1, 0, pool.ncols());
+            std::hint::black_box(model.map_points_with(&row, 1).expect("map"));
+        }
+        let mean_us = sw.secs() / iters as f64 * 1e6;
+        println!("{:<44} {:>10.1} µs/point (in-process)", "inproc:map_points:1pt", mean_us);
+        cases.push(Json::obj(vec![
+            ("name", Json::str("inproc_map_points_1pt")),
+            ("requests", Json::num(iters as f64)),
+            ("mean_us", Json::num(mean_us)),
+        ]));
+    }
+
+    let handle = serve::start(model, None, None, &ServeConfig { threads: 4, ..Default::default() })
+        .expect("start server");
+    let addr = handle.addr();
+    println!("loopback server on {addr}");
+
+    // (name, client connections, requests per client, points per request)
+    let shapes = [
+        ("serve_1pt_1conn", 1, 400, 1),
+        ("serve_1pt_8conn", 8, 100, 1),
+        ("serve_16pt_4conn", 4, 100, 16),
+    ];
+    for (name, clients, reqs, ppr) in shapes {
+        let rep = client::loopback_load(&addr, clients, reqs, ppr, &pool).expect("load run");
+        println!(
+            "{name:<44} p50 {:>8.1} µs | p95 {:>8.1} µs | p99 {:>8.1} µs | {:>8.1} req/s",
+            rep.p50_us, rep.p95_us, rep.p99_us, rep.qps
+        );
+        cases.push(rep.to_json(name, clients, ppr));
+    }
+
+    // Server-side batching view for the record.
+    if let Ok((_, metrics)) = client::get_json(&addr, "/metrics") {
+        if let Some(b) = metrics.get("batching") {
+            cases.push(Json::obj(vec![
+                ("name", Json::str("server_batching")),
+                (
+                    "batches",
+                    Json::num(b.get("batches").and_then(Json::as_f64).unwrap_or(0.0)),
+                ),
+                (
+                    "points",
+                    Json::num(b.get("points").and_then(Json::as_f64).unwrap_or(0.0)),
+                ),
+                (
+                    "max_points_in_batch",
+                    Json::num(b.get("max_points_in_batch").and_then(Json::as_f64).unwrap_or(0.0)),
+                ),
+            ]));
+        }
+    }
+    handle.shutdown();
+
+    isospark::bench::write_kernel_section("BENCH_serve.json", "serve_latency", cases);
+    println!("wrote BENCH_serve.json");
+}

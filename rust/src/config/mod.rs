@@ -46,7 +46,7 @@ impl IsomapConfig {
         if self.block == 0 {
             bail!("block size must be positive");
         }
-        if !(self.tol > 0.0) {
+        if self.tol <= 0.0 || self.tol.is_nan() {
             bail!("tol must be positive");
         }
         if self.max_iter == 0 {

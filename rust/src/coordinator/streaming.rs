@@ -4,33 +4,33 @@
 //! without re-running the O(n³) pipeline. "Both methods could be combined
 //! in case when the initial batch is large" — this module is that
 //! combination: the batch model comes from the distributed exact pipeline.
+//!
+//! The fit-state itself lives in [`crate::model::FittedModel`] — a
+//! serializable struct with `save`/`load` so a fit survives the process
+//! (and can be served over HTTP by [`crate::serve`]). This module owns the
+//! *fitting*: the distributed kNN stage, landmark selection, landmark
+//! geodesics, and landmark MDS. [`StreamingModel`] derefs to the fitted
+//! model, so `map_point` / `map_points` / `batch_embedding` read exactly
+//! as before.
 
 use crate::backend::Backend;
 use crate::config::{ClusterConfig, IsomapConfig};
-use crate::kernels::kselect::row_topk;
 use crate::linalg::{jacobi, Matrix};
+use crate::model::FittedModel;
 use crate::util::Rng;
 use anyhow::{bail, Context, Result};
 
-/// A fitted streaming model: batch data + landmark geodesic tables.
+/// A fitted streaming model: batch data + landmark geodesic tables,
+/// wrapped around the serializable [`FittedModel`].
 pub struct StreamingModel {
-    /// Batch points (n × D), kept for kNN of incoming points.
-    batch: Matrix,
-    /// Landmark indices into the batch.
-    landmarks: Vec<usize>,
-    /// Squared geodesic distances landmark → every batch point (m × n).
-    delta: Matrix,
-    /// Mean squared landmark-landmark distance per landmark (δ̄).
-    mean_delta: Vec<f64>,
-    /// Landmark MDS eigenpairs used for triangulation.
-    eigvals: Vec<f64>,
-    eigvecs: Matrix,
-    /// Output dimensionality.
-    d: usize,
-    /// Neighborhood size used for incoming points.
-    k: usize,
-    /// Batch embedding (n × d) — triangulated, same frame as new points.
-    pub batch_embedding: Matrix,
+    model: FittedModel,
+}
+
+impl std::ops::Deref for StreamingModel {
+    type Target = FittedModel;
+    fn deref(&self) -> &FittedModel {
+        &self.model
+    }
 }
 
 impl StreamingModel {
@@ -93,7 +93,7 @@ impl StreamingModel {
             bail!("landmark MDS spectrum not positive: {vals:?}");
         }
 
-        let mut model = StreamingModel {
+        let mut model = FittedModel {
             batch: x.clone(),
             landmarks,
             delta,
@@ -110,70 +110,17 @@ impl StreamingModel {
             let y = model.triangulate(&di);
             model.batch_embedding.row_mut(i).copy_from_slice(&y);
         }
-        Ok(model)
+        Ok(StreamingModel { model })
     }
 
-    /// Number of landmarks.
-    pub fn num_landmarks(&self) -> usize {
-        self.landmarks.len()
+    /// Borrow the serializable fit-state.
+    pub fn model(&self) -> &FittedModel {
+        &self.model
     }
 
-    /// Map one new point from the stream: kNN against the batch, geodesics
-    /// to landmarks through those neighbors, distance-based triangulation.
-    pub fn map_point(&self, p: &[f64]) -> Result<Vec<f64>> {
-        if p.len() != self.batch.ncols() {
-            bail!("point dimensionality {} != batch D {}", p.len(), self.batch.ncols());
-        }
-        let n = self.batch.nrows();
-        // Distances to every batch point (O(n·D) — the stream fast path).
-        let dists: Vec<f64> = (0..n)
-            .map(|i| {
-                self.batch
-                    .row(i)
-                    .iter()
-                    .zip(p)
-                    .map(|(a, b)| (a - b) * (a - b))
-                    .sum::<f64>()
-                    .sqrt()
-            })
-            .collect();
-        let nbrs = row_topk(&dists, self.k, 0, None);
-        // Geodesic to each landmark ≈ min over neighbors of (edge + geo).
-        let m = self.landmarks.len();
-        let mut dsq = vec![0.0; m];
-        for (a, ds) in dsq.iter_mut().enumerate() {
-            let mut best = f64::INFINITY;
-            for &(edge, j) in &nbrs {
-                let geo = self.delta[(a, j)].sqrt();
-                best = best.min(edge + geo);
-            }
-            *ds = best * best;
-        }
-        Ok(self.triangulate(&dsq))
-    }
-
-    /// Map a batch of streaming points.
-    pub fn map_points(&self, pts: &Matrix) -> Result<Matrix> {
-        let mut out = Matrix::zeros(pts.nrows(), self.d);
-        for i in 0..pts.nrows() {
-            let y = self.map_point(pts.row(i))?;
-            out.row_mut(i).copy_from_slice(&y);
-        }
-        Ok(out)
-    }
-
-    /// L-Isomap triangulation: y = ½·Λ^{-½}·Qᵀ·(δ̄ − δ).
-    fn triangulate(&self, dsq: &[f64]) -> Vec<f64> {
-        let m = self.landmarks.len();
-        (0..self.d)
-            .map(|j| {
-                let mut acc = 0.0;
-                for a in 0..m {
-                    acc += self.eigvecs[(a, j)] * (self.mean_delta[a] - dsq[a]);
-                }
-                0.5 * acc / self.eigvals[j].sqrt()
-            })
-            .collect()
+    /// Extract the serializable fit-state (e.g. to [`FittedModel::save`]).
+    pub fn into_model(self) -> FittedModel {
+        self.model
     }
 }
 
@@ -269,6 +216,21 @@ mod tests {
             y.iter().zip(want).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
         // Scale-aware tolerance: small fraction of the embedding diameter.
         assert!(dist < 0.5, "self-mapping error {dist}");
+    }
+
+    #[test]
+    fn map_points_parallel_pool_is_bit_identical() {
+        // The pooled path must agree with the serial path bit-for-bit for
+        // any worker count (this is what makes batched serving safe).
+        let (model, _) = fitted(600, 80, 13);
+        let fresh = swiss_roll::euler_isometric(300, 99);
+        let seq = model.map_points_with(&fresh.points, 1).unwrap();
+        for workers in [2, 5, 8] {
+            let par = model.map_points_with(&fresh.points, workers).unwrap();
+            for (a, b) in seq.as_slice().iter().zip(par.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
+            }
+        }
     }
 
     #[test]

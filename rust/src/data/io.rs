@@ -51,6 +51,19 @@ pub fn read_csv(path: &Path, skip_header: bool) -> Result<Matrix> {
 /// Binary format: magic, u64 rows, u64 cols, then rows*cols little-endian f64.
 const MAGIC: &[u8; 8] = b"ISOSPK01";
 
+/// Exact on-disk size of the binary format for a `rows × cols` matrix
+/// (magic + two u64 dims + payload). Kept next to the format so other
+/// modules (e.g. the model-artifact inspector) never hardcode the layout.
+/// `None` when the dims are so large the size overflows u64 — dims read
+/// from untrusted headers must not panic the checked-arithmetic debug
+/// build (or silently wrap in release).
+pub fn bin_file_size(rows: usize, cols: usize) -> Option<u64> {
+    (rows as u64)
+        .checked_mul(cols as u64)?
+        .checked_mul(8)?
+        .checked_add(MAGIC.len() as u64 + 16)
+}
+
 /// Write the raw binary matrix format.
 pub fn write_bin(path: &Path, m: &Matrix) -> Result<()> {
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
@@ -74,8 +87,9 @@ pub fn read_bin(path: &Path) -> Result<Matrix> {
     }
     let rows = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
     let cols = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
-    let need = 24 + rows * cols * 8;
-    if buf.len() != need {
+    let need = bin_file_size(rows, cols)
+        .ok_or_else(|| anyhow::anyhow!("{path:?}: insane dims {rows}×{cols} in header"))?;
+    if buf.len() as u64 != need {
         bail!("{path:?}: truncated ({} != {need})", buf.len());
     }
     let data: Vec<f64> = buf[24..]
@@ -120,6 +134,27 @@ mod tests {
         write_bin(&p, &m).unwrap();
         let r = read_bin(&p).unwrap();
         assert_eq!(r.as_slice(), m.as_slice());
+    }
+
+    #[test]
+    fn bin_file_size_matches_writer() {
+        let m = Matrix::zeros(3, 5);
+        let p = tmp("size.bin");
+        write_bin(&p, &m).unwrap();
+        assert_eq!(std::fs::metadata(&p).unwrap().len(), bin_file_size(3, 5).unwrap());
+        assert_eq!(bin_file_size(usize::MAX, usize::MAX), None);
+    }
+
+    #[test]
+    fn bin_rejects_overflowing_header_dims() {
+        let p = tmp("overflow.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(u64::MAX / 2).to_le_bytes());
+        bytes.extend_from_slice(&(u64::MAX / 2).to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", read_bin(&p).unwrap_err());
+        assert!(err.contains("insane dims"), "{err}");
     }
 
     #[test]

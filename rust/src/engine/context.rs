@@ -80,12 +80,7 @@ impl SparkContext {
     /// cores". Never affects results; virtual time stays measurement-based
     /// (see the `parallelism` field docs for the contention caveat).
     pub fn parallelism(&self) -> usize {
-        let p = self.lock().cluster.parallelism;
-        if p == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            p
-        }
+        super::executor::resolve_workers(self.lock().cluster.parallelism)
     }
 
     /// Cluster configuration snapshot.

@@ -25,6 +25,18 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 
+/// Resolve a requested pool size: 0 means "all available cores", anything
+/// else is taken literally; never returns 0. The single source of truth
+/// for every pool in the crate (stage executor, `map_points`, the serve
+/// worker pool).
+pub(crate) fn resolve_workers(requested: usize) -> usize {
+    if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    }
+}
+
 /// Run `tasks` on up to `workers` OS threads, returning each task's output
 /// in input order. `f` must be a pure function of its input for the
 /// parallel execution to be observationally identical to the sequential

@@ -15,6 +15,10 @@
 //!   PJRT C API (`xla` crate) so the Rust hot path executes the very
 //!   kernels authored in Pallas; [`backend`] abstracts PJRT vs. the native
 //!   Rust kernels in [`kernels`].
+//! * **Serving** — [`model`] persists a fitted streaming model as a
+//!   versioned on-disk artifact, and [`serve`] exposes it over HTTP with
+//!   micro-batched out-of-sample projection (`isospark fit --save` /
+//!   `isospark serve`).
 //!
 //! ## Quickstart
 //!
@@ -38,7 +42,9 @@ pub mod engine;
 pub mod eval;
 pub mod kernels;
 pub mod linalg;
+pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod util;
 
@@ -50,4 +56,5 @@ pub mod prelude {
     pub use crate::engine::block::BlockId;
     pub use crate::engine::context::SparkContext;
     pub use crate::linalg::matrix::Matrix;
+    pub use crate::model::FittedModel;
 }

@@ -6,6 +6,9 @@
 //!   scale-table     regenerate Tables I–III (simulated paper testbed)
 //!   blocksize-sweep regenerate Fig. 6 (block-size sensitivity)
 //!   emnist          synthetic-EMNIST embedding + factor analysis (Fig. 5)
+//!   fit             fit a streaming model and save the artifact to disk
+//!   serve           serve a saved model over HTTP (out-of-sample embedding)
+//!   bench-serve     loopback load generator against an in-process server
 //!   info            artifact inventory / environment report
 
 use anyhow::{bail, Context, Result};
@@ -37,7 +40,20 @@ COMMANDS:
   scale-table      Tables I-III: --block <b> --calibrate --nodes-list 2,4,...
   blocksize-sweep  Fig. 6: --n <pts> --dim <D> --nodes <n> --blocks 500,...
   emnist           Fig. 5: --n <pts> --k --d --block, reports factor corrs
+  fit              fit a streaming model and save it: dataset options as
+                   `run` plus --landmarks <m> --save <dir>
+  serve            serve a saved model over HTTP: --model <dir> --port <p>
+                   (0 = ephemeral) --threads <t> --max-batch <pts>
+                   --host <ip> --port-file <file>. Endpoints:
+                   POST /v1/embed {\"points\":[[..],..]}, GET /healthz,
+                   GET /metrics, POST /v1/reload {\"path\":\"<dir>\"}
+  bench-serve      loopback load generator against an in-process server:
+                   [--model <dir>] --requests <n> --concurrency <c>
+                   --points <per-request> [--json <file>]; reports
+                   p50/p95/p99 latency + QPS
   info             --artifacts <dir>: artifact + environment report;
+                   --model <dir>: inspect a saved model artifact manifest
+                   (dims, landmark count, format version, file health);
                    --smoke additionally runs one ragged (b=5) call of
                    every block op through the backend and prints the
                    offload-coverage counters (compiles artifacts)
@@ -62,6 +78,9 @@ fn main() {
         "landmark" => cmd_landmark(&args),
         "lle" => cmd_lle(&args),
         "stream" => cmd_stream(&args),
+        "fit" => cmd_fit(&args),
+        "serve" => cmd_serve(&args),
+        "bench-serve" => cmd_bench_serve(&args),
         "scale-table" => cmd_scale_table(&args),
         "blocksize-sweep" => cmd_blocksize(&args),
         "emnist" => cmd_emnist(&args),
@@ -259,6 +278,149 @@ fn cmd_stream(args: &Args) -> Result<()> {
         data::io::write_csv(Path::new(path), &mapped, None)?;
         println!("streamed embedding written to {path}");
     }
+    Ok(())
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    use isospark::coordinator::streaming::StreamingModel;
+    let (cfg, cluster) = parse_common(args)?;
+    let backend = backend_from(args)?;
+    let ds = load_dataset(args)?;
+    let m: usize = args.get("landmarks", (ds.n() / 8).max(cfg.d + 1)).map_err(anyhow_str)?;
+    let save = args
+        .opt("save")
+        .ok_or_else(|| anyhow::anyhow!("fit requires --save <dir> (the artifact directory)"))?;
+    let sw = isospark::util::Stopwatch::start();
+    let model = StreamingModel::fit(&ds.points, &cfg, m, &cluster, &backend)?.into_model();
+    println!(
+        "fitted streaming model on batch n={} D={} with {} landmarks in {}",
+        ds.n(),
+        ds.dim(),
+        model.num_landmarks(),
+        human_duration(sw.secs())
+    );
+    let dir = Path::new(save);
+    model.save(dir).with_context(|| format!("save model artifact to {save}"))?;
+    println!("{}", isospark::model::ModelInfo::inspect(dir)?.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use isospark::serve::{self, ServeConfig};
+    let model_path = args
+        .opt("model")
+        .ok_or_else(|| {
+            anyhow::anyhow!("serve requires --model <dir> (from `isospark fit --save`)")
+        })?;
+    let model = isospark::model::FittedModel::load(Path::new(model_path))
+        .with_context(|| format!("load model artifact {model_path}"))?;
+    let backend = backend_from(args)?;
+    let cfg = ServeConfig {
+        host: args.opt("host").unwrap_or("127.0.0.1").to_string(),
+        port: args.get("port", 8080u16).map_err(anyhow_str)?,
+        threads: args.get("threads", 0usize).map_err(anyhow_str)?,
+        max_batch: args.get("max-batch", 1024usize).map_err(anyhow_str)?,
+    };
+    let handle = serve::start(model, Some(PathBuf::from(model_path)), Some(backend), &cfg)?;
+    println!(
+        "serving model {model_path} (n={} D={} m={} d={} k={}) on http://{}",
+        handle.model().n(),
+        handle.model().dim(),
+        handle.model().num_landmarks(),
+        handle.model().out_dim(),
+        handle.model().k(),
+        handle.addr()
+    );
+    println!("  POST /v1/embed   {{\"points\": [[..], ..]}} -> {{\"embedding\": [[..], ..]}}");
+    println!("  GET  /healthz    liveness + model summary");
+    println!("  GET  /metrics    counters, latency histogram, batching, offload");
+    println!("  POST /v1/reload  {{\"path\": \"<dir>\"}} (default: the --model path)");
+    if let Some(pf) = args.opt("port-file") {
+        std::fs::write(pf, format!("{}\n", handle.port()))
+            .with_context(|| format!("write port file {pf}"))?;
+    }
+    handle.wait();
+    Ok(())
+}
+
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    use isospark::coordinator::streaming::StreamingModel;
+    use isospark::serve::{self, client, ServeConfig};
+    use isospark::util::json::Json;
+    let (cfg, cluster) = parse_common(args)?;
+    let dataset = args.opt("dataset").unwrap_or("swiss");
+    let model = match args.opt("model") {
+        Some(p) => isospark::model::FittedModel::load(Path::new(p))
+            .with_context(|| format!("load model artifact {p}"))?,
+        None => {
+            let n: usize = args.get("n", 400).map_err(anyhow_str)?;
+            let seed: u64 = args.get("seed", cfg.seed).map_err(anyhow_str)?;
+            let ds = data::by_name(dataset, n, seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset:?}"))?;
+            let m: usize = args.get("landmarks", (n / 8).max(cfg.d + 1)).map_err(anyhow_str)?;
+            let fit_cfg = IsomapConfig { block: cfg.block.min(n.max(1)), ..cfg.clone() };
+            println!("no --model given: fitting an ephemeral {n}-point model (m={m})…");
+            StreamingModel::fit(&ds.points, &fit_cfg, m, &cluster, &Backend::Native)?.into_model()
+        }
+    };
+    let requests: usize = args.get("requests", 200).map_err(anyhow_str)?;
+    let concurrency: usize = args.get("concurrency", 4).map_err(anyhow_str)?.max(1);
+    let points: usize = args.get("points", 1).map_err(anyhow_str)?.max(1);
+    let model_dim = model.dim();
+    let srv_cfg = ServeConfig {
+        threads: args.get("threads", 0usize).map_err(anyhow_str)?,
+        max_batch: args.get("max-batch", 1024usize).map_err(anyhow_str)?,
+        ..ServeConfig::default()
+    };
+    let handle = serve::start(model, None, None, &srv_cfg)?;
+    let addr = handle.addr();
+    println!(
+        "loopback server on {addr} | {concurrency} client(s) × {} request(s) × {points} point(s)",
+        requests.div_ceil(concurrency)
+    );
+    let pool_n = (points * 4).max(256);
+    let pool = data::by_name(dataset, pool_n, cfg.seed + 1)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset:?}"))?
+        .points;
+    anyhow::ensure!(
+        pool.ncols() == model_dim,
+        "query dataset D={} != model D={model_dim}; pass a matching --dataset",
+        pool.ncols()
+    );
+    let report =
+        client::loopback_load(&addr, concurrency, requests.div_ceil(concurrency), points, &pool)?;
+    let rows = vec![
+        vec!["requests".to_string(), report.requests.to_string()],
+        vec!["wall".to_string(), human_duration(report.wall_secs)],
+        vec!["QPS".to_string(), format!("{:.1}", report.qps)],
+        vec!["p50".to_string(), human_duration(report.p50_us / 1e6)],
+        vec!["p95".to_string(), human_duration(report.p95_us / 1e6)],
+        vec!["p99".to_string(), human_duration(report.p99_us / 1e6)],
+        vec!["mean".to_string(), human_duration(report.mean_us / 1e6)],
+        vec!["max".to_string(), human_duration(report.max_us / 1e6)],
+    ];
+    println!("{}", render_table(&rows));
+    // Server-side view: how well did micro-batching coalesce the load?
+    let (_, metrics) = client::get_json(&addr, "/metrics")?;
+    if let Some(b) = metrics.get("batching") {
+        let g = |k: &str| b.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        println!(
+            "micro-batching: {} batches over {} points (mean {:.1}, max {} pts/batch)",
+            g("batches"),
+            g("points"),
+            g("mean_points_per_batch"),
+            g("max_points_in_batch")
+        );
+    }
+    if let Some(path) = args.opt("json") {
+        let out = Json::obj(vec![(
+            "cases",
+            Json::arr(vec![report.to_json("bench-serve", concurrency, points)]),
+        )]);
+        std::fs::write(path, out.to_string()).with_context(|| format!("write {path}"))?;
+        println!("report written to {path}");
+    }
+    handle.shutdown();
     Ok(())
 }
 
@@ -467,6 +629,15 @@ fn offload_smoke(backend: &Backend) {
 
 fn cmd_info(args: &Args) -> Result<()> {
     println!("isospark {} — three-layer Rust + JAX + Pallas Isomap", env!("CARGO_PKG_VERSION"));
+    if let Some(mp) = args.opt("model") {
+        // Manifest-only inspection: dims, landmark count, format version,
+        // and per-file size health — works on artifacts too broken to
+        // load, which is the whole point of inspecting one.
+        let info = isospark::model::ModelInfo::inspect(Path::new(mp))
+            .with_context(|| format!("inspect model artifact {mp}"))?;
+        println!("{}", info.render());
+        return Ok(());
+    }
     let dir = PathBuf::from(args.opt("artifacts").unwrap_or("artifacts"));
     match isospark::runtime::PjrtEngine::load(&dir) {
         Ok(rt) => {

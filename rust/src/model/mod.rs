@@ -1,0 +1,801 @@
+//! Persistent fitted-model artifacts — the serving side of the paper's
+//! streaming companion method (§V, Schoeneman et al.): the expensive exact
+//! batch fit is saved once and then amortized over any number of O(k·m)
+//! out-of-sample projections, possibly in a different process, on a
+//! different day ([`crate::serve`] puts an HTTP front on exactly this).
+//!
+//! [`FittedModel`] is the fit-state of
+//! [`crate::coordinator::streaming::StreamingModel`] split into a
+//! serializable struct: the batch points, landmark indices, landmark
+//! geodesic table δ, per-landmark means δ̄, the landmark-MDS eigenpairs,
+//! and the triangulated batch embedding. On disk a model is a *directory*:
+//!
+//! ```text
+//! model/
+//!   model.json      # manifest: format version, dims, per-file checksums
+//!   batch.bin       # n×D  batch points                  (data::io format)
+//!   delta.bin       # m×n  squared geodesics landmark → batch point
+//!   eigvecs.bin     # m×d  landmark-MDS eigenvectors
+//!   embedding.bin   # n×d  triangulated batch embedding
+//! ```
+//!
+//! Small vectors (landmark indices, δ̄, eigenvalues) live in the manifest
+//! itself. [`FittedModel::load`] cross-checks the manifest against the
+//! binary files — format version, matrix shapes, FNV-1a-64 checksums, and
+//! cross-file consistency — and rejects any mismatch with context instead
+//! of panicking later, mirroring the AOT artifact manifest cross-check in
+//! [`crate::runtime`]. `save → load → map_points` is bit-identical to the
+//! in-memory model: matrices round-trip through the exact little-endian
+//! f64 binary format and manifest floats through Rust's shortest-roundtrip
+//! float formatting.
+//!
+//! [`ModelInfo::inspect`] reads the manifest *only* (no matrix loads, no
+//! checksum passes), so `isospark info --model <dir>` can describe a
+//! broken artifact without tripping over the breakage.
+
+use crate::data::io::{read_bin, write_bin};
+use crate::engine::executor::{resolve_workers, run_tasks};
+use crate::kernels::kselect::row_topk;
+use crate::linalg::Matrix;
+use crate::util::fmt::render_table;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// On-disk format version this build writes and reads.
+pub const FORMAT_VERSION: usize = 1;
+/// Manifest file name inside a model directory.
+pub const MANIFEST_FILE: &str = "model.json";
+/// Manifest `kind` tag (a cheap defence against pointing the loader at an
+/// unrelated JSON file, e.g. the AOT artifact manifest).
+const KIND: &str = "isospark-fitted-model";
+
+/// The four matrix files of an artifact, with their manifest names.
+const FILE_BATCH: &str = "batch.bin";
+const FILE_DELTA: &str = "delta.bin";
+const FILE_EIGVECS: &str = "eigvecs.bin";
+const FILE_EMBEDDING: &str = "embedding.bin";
+
+/// Below this many flops-worth of projection work, `map_points` stays on
+/// the serial path: a pool spawn costs more than the mapping itself (same
+/// reasoning as the driver-side assembly thresholds in `coordinator`).
+const PAR_MIN_WORK: usize = 1 << 17;
+
+/// A fitted streaming-Isomap model: everything needed to project new
+/// points into the batch embedding frame, detached from the engine that
+/// produced it.
+#[derive(Clone)]
+pub struct FittedModel {
+    /// Batch points (n × D), kept for kNN of incoming points.
+    pub(crate) batch: Matrix,
+    /// Landmark indices into the batch.
+    pub(crate) landmarks: Vec<usize>,
+    /// Squared geodesic distances landmark → every batch point (m × n).
+    pub(crate) delta: Matrix,
+    /// Mean squared landmark-landmark distance per landmark (δ̄).
+    pub(crate) mean_delta: Vec<f64>,
+    /// Landmark MDS eigenpairs used for triangulation.
+    pub(crate) eigvals: Vec<f64>,
+    pub(crate) eigvecs: Matrix,
+    /// Output dimensionality.
+    pub(crate) d: usize,
+    /// Neighborhood size used for incoming points.
+    pub(crate) k: usize,
+    /// Batch embedding (n × d) — triangulated, same frame as new points.
+    pub batch_embedding: Matrix,
+}
+
+impl FittedModel {
+    /// Number of batch points.
+    pub fn n(&self) -> usize {
+        self.batch.nrows()
+    }
+
+    /// Input dimensionality D.
+    pub fn dim(&self) -> usize {
+        self.batch.ncols()
+    }
+
+    /// Number of landmarks.
+    pub fn num_landmarks(&self) -> usize {
+        self.landmarks.len()
+    }
+
+    /// Output (embedding) dimensionality d.
+    pub fn out_dim(&self) -> usize {
+        self.d
+    }
+
+    /// Neighborhood size k used for incoming points.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Map one new point from the stream: kNN against the batch, geodesics
+    /// to landmarks through those neighbors, distance-based triangulation.
+    pub fn map_point(&self, p: &[f64]) -> Result<Vec<f64>> {
+        if p.len() != self.batch.ncols() {
+            bail!("point dimensionality {} != batch D {}", p.len(), self.batch.ncols());
+        }
+        let n = self.batch.nrows();
+        // Distances to every batch point (O(n·D) — the stream fast path).
+        let dists: Vec<f64> = (0..n)
+            .map(|i| {
+                self.batch
+                    .row(i)
+                    .iter()
+                    .zip(p)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt()
+            })
+            .collect();
+        let nbrs = row_topk(&dists, self.k, 0, None);
+        // Geodesic to each landmark ≈ min over neighbors of (edge + geo).
+        let m = self.landmarks.len();
+        let mut dsq = vec![0.0; m];
+        for (a, ds) in dsq.iter_mut().enumerate() {
+            let mut best = f64::INFINITY;
+            for &(edge, j) in &nbrs {
+                let geo = self.delta[(a, j)].sqrt();
+                best = best.min(edge + geo);
+            }
+            *ds = best * best;
+        }
+        Ok(self.triangulate(&dsq))
+    }
+
+    /// Map a batch of streaming points, using all available cores for
+    /// large batches (see [`FittedModel::map_points_with`]).
+    pub fn map_points(&self, pts: &Matrix) -> Result<Matrix> {
+        self.map_points_with(pts, 0)
+    }
+
+    /// Map a batch of streaming points on a worker pool of `workers`
+    /// threads (0 = all cores). Per-point kNN + triangulation is
+    /// embarrassingly parallel and each row is computed by the exact same
+    /// serial code, so the result is bit-identical for any pool size;
+    /// small batches stay on the serial path because a pool spawn costs
+    /// more than the mapping.
+    pub fn map_points_with(&self, pts: &Matrix, workers: usize) -> Result<Matrix> {
+        if pts.nrows() > 0 && pts.ncols() != self.batch.ncols() {
+            bail!("point dimensionality {} != batch D {}", pts.ncols(), self.batch.ncols());
+        }
+        let rows = pts.nrows();
+        let d = self.d;
+        let mut out = Matrix::zeros(rows, d);
+        let workers = resolve_workers(workers).min(rows.max(1));
+        let per_point = self.batch.nrows() * self.batch.ncols().max(1)
+            + self.k * self.landmarks.len();
+        if workers == 1 || rows * per_point < PAR_MIN_WORK {
+            for i in 0..rows {
+                let y = self.map_point(pts.row(i))?;
+                out.row_mut(i).copy_from_slice(&y);
+            }
+            return Ok(out);
+        }
+        // Carve the output buffer into disjoint row-range spans (the eigen
+        // V-paste idiom) so workers write without locks; chunking only
+        // affects scheduling, never bits.
+        let chunk = rows.div_ceil(workers * 4).max(1);
+        let mut tasks: Vec<(usize, &mut [f64])> = Vec::new();
+        let mut rest: &mut [f64] = out.as_mut_slice();
+        let mut start = 0usize;
+        while start < rows {
+            let end = (start + chunk).min(rows);
+            let (span, tail) = std::mem::take(&mut rest).split_at_mut((end - start) * d);
+            tasks.push((start, span));
+            rest = tail;
+            start = end;
+        }
+        let results = run_tasks(workers, tasks, |(start, span): (usize, &mut [f64])| {
+            let rows_here = span.len() / d;
+            for r in 0..rows_here {
+                let y = self.map_point(pts.row(start + r))?;
+                span[r * d..(r + 1) * d].copy_from_slice(&y);
+            }
+            Ok::<(), anyhow::Error>(())
+        });
+        for r in results {
+            r?;
+        }
+        Ok(out)
+    }
+
+    /// L-Isomap triangulation: y = ½·Λ^{-½}·Qᵀ·(δ̄ − δ).
+    pub(crate) fn triangulate(&self, dsq: &[f64]) -> Vec<f64> {
+        let m = self.landmarks.len();
+        (0..self.d)
+            .map(|j| {
+                let mut acc = 0.0;
+                for a in 0..m {
+                    acc += self.eigvecs[(a, j)] * (self.mean_delta[a] - dsq[a]);
+                }
+                0.5 * acc / self.eigvals[j].sqrt()
+            })
+            .collect()
+    }
+
+    /// Internal consistency check shared by `fit` products and `load`.
+    fn validate(&self) -> Result<()> {
+        let (n, dd) = (self.batch.nrows(), self.batch.ncols());
+        let m = self.landmarks.len();
+        if n == 0 || dd == 0 {
+            bail!("empty batch ({n}×{dd})");
+        }
+        if m == 0 {
+            bail!("no landmarks");
+        }
+        if self.d == 0 {
+            bail!("output dimensionality d = 0");
+        }
+        if self.k == 0 || self.k > n {
+            bail!("neighborhood size k={} out of range 1..={n}", self.k);
+        }
+        if (self.delta.nrows(), self.delta.ncols()) != (m, n) {
+            bail!(
+                "delta shape {}×{} != landmarks×batch {m}×{n}",
+                self.delta.nrows(),
+                self.delta.ncols()
+            );
+        }
+        if (self.eigvecs.nrows(), self.eigvecs.ncols()) != (m, self.d) {
+            bail!(
+                "eigvecs shape {}×{} != m×d {m}×{}",
+                self.eigvecs.nrows(),
+                self.eigvecs.ncols(),
+                self.d
+            );
+        }
+        if (self.batch_embedding.nrows(), self.batch_embedding.ncols()) != (n, self.d) {
+            bail!(
+                "batch embedding shape {}×{} != n×d {n}×{}",
+                self.batch_embedding.nrows(),
+                self.batch_embedding.ncols(),
+                self.d
+            );
+        }
+        if self.mean_delta.len() != m {
+            bail!("mean_delta length {} != m {m}", self.mean_delta.len());
+        }
+        if self.eigvals.len() != self.d {
+            bail!("eigvals length {} != d {}", self.eigvals.len(), self.d);
+        }
+        // The manifest itself carries no checksum (only the .bin files
+        // do), so its floats are the untrusted surface: require them
+        // finite and sane or a bit-rotted model.json would serve inf/NaN
+        // embeddings — which Json::write can't even legally serialize.
+        if let Some(bad) = self.eigvals.iter().find(|v| !v.is_finite() || **v <= 0.0) {
+            bail!("non-positive/non-finite MDS eigenvalue {bad} (triangulation divides by √λ)");
+        }
+        if let Some(bad) = self.mean_delta.iter().find(|v| !v.is_finite()) {
+            bail!("non-finite mean_delta entry {bad}");
+        }
+        if let Some(&bad) = self.landmarks.iter().find(|&&l| l >= n) {
+            bail!("landmark index {bad} out of range for batch n={n}");
+        }
+        Ok(())
+    }
+
+    /// Write the artifact directory (created if missing): four binary
+    /// matrices plus the `model.json` manifest with per-file checksums.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        self.validate().context("refusing to save an inconsistent model")?;
+        std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
+        let mut files: Vec<(&str, Json)> = Vec::new();
+        for (name, m) in [
+            (FILE_BATCH, &self.batch),
+            (FILE_DELTA, &self.delta),
+            (FILE_EIGVECS, &self.eigvecs),
+            (FILE_EMBEDDING, &self.batch_embedding),
+        ] {
+            let path = dir.join(name);
+            write_bin(&path, m).with_context(|| format!("write {name}"))?;
+            let sum = file_fnv1a64(&path).with_context(|| format!("checksum {name}"))?;
+            files.push((
+                name,
+                Json::obj(vec![
+                    ("rows", Json::num(m.nrows() as f64)),
+                    ("cols", Json::num(m.ncols() as f64)),
+                    ("fnv1a64", Json::str(format!("{sum:016x}"))),
+                ]),
+            ));
+        }
+        let manifest = Json::obj(vec![
+            ("kind", Json::str(KIND)),
+            ("format_version", Json::num(FORMAT_VERSION as f64)),
+            ("n", Json::num(self.n() as f64)),
+            ("dim", Json::num(self.dim() as f64)),
+            ("m", Json::num(self.num_landmarks() as f64)),
+            ("d", Json::num(self.d as f64)),
+            ("k", Json::num(self.k as f64)),
+            (
+                "landmarks",
+                Json::arr(self.landmarks.iter().map(|&l| Json::num(l as f64)).collect()),
+            ),
+            ("mean_delta", Json::arr(self.mean_delta.iter().map(|&x| Json::num(x)).collect())),
+            ("eigvals", Json::arr(self.eigvals.iter().map(|&x| Json::num(x)).collect())),
+            ("files", Json::obj(files)),
+        ]);
+        let mpath = dir.join(MANIFEST_FILE);
+        std::fs::write(&mpath, manifest.to_string()).with_context(|| format!("write {mpath:?}"))?;
+        Ok(())
+    }
+
+    /// Load an artifact directory, cross-checking format version, shapes,
+    /// and checksums. Every failure carries context naming the offending
+    /// file or field; nothing in here panics.
+    pub fn load(dir: &Path) -> Result<FittedModel> {
+        let man = Manifest::read(dir)?;
+        if man.format_version != FORMAT_VERSION {
+            bail!(
+                "{}: format version {} (this build reads {FORMAT_VERSION})",
+                dir.join(MANIFEST_FILE).display(),
+                man.format_version
+            );
+        }
+        let batch = man.load_matrix(dir, FILE_BATCH, man.n, man.dim)?;
+        let delta = man.load_matrix(dir, FILE_DELTA, man.m, man.n)?;
+        let eigvecs = man.load_matrix(dir, FILE_EIGVECS, man.m, man.d)?;
+        let batch_embedding = man.load_matrix(dir, FILE_EMBEDDING, man.n, man.d)?;
+        if man.landmarks.len() != man.m {
+            bail!("manifest landmarks length {} != m {}", man.landmarks.len(), man.m);
+        }
+        let model = FittedModel {
+            batch,
+            landmarks: man.landmarks,
+            delta,
+            mean_delta: man.mean_delta,
+            eigvals: man.eigvals,
+            eigvecs,
+            d: man.d,
+            k: man.k,
+            batch_embedding,
+        };
+        model
+            .validate()
+            .with_context(|| format!("model artifact {} is inconsistent", dir.display()))?;
+        Ok(model)
+    }
+}
+
+/// FNV-1a 64-bit over a whole file — cheap, dependency-free corruption
+/// check (this is integrity against truncation/bit-rot, not cryptography).
+fn file_fnv1a64(path: &Path) -> Result<u64> {
+    let bytes = std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+    Ok(fnv1a64(&bytes))
+}
+
+/// Strict non-negative integer from a JSON number: unlike
+/// `Json::as_usize` (a plain cast), this rejects fractional, negative,
+/// non-finite, and >2⁵³ values — a hand-edited or bit-rotted manifest
+/// must fail loudly, not load with silently truncated parameters.
+fn json_index(j: &Json) -> Option<usize> {
+    let x = j.as_f64()?;
+    if x.is_finite() && x.fract() == 0.0 && (0.0..=9e15).contains(&x) {
+        Some(x as usize)
+    } else {
+        None
+    }
+}
+
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Parsed `model.json`, shared between the full loader and the
+/// manifest-only inspector.
+struct Manifest {
+    format_version: usize,
+    n: usize,
+    dim: usize,
+    m: usize,
+    d: usize,
+    k: usize,
+    landmarks: Vec<usize>,
+    mean_delta: Vec<f64>,
+    eigvals: Vec<f64>,
+    /// name → (rows, cols, fnv1a64)
+    files: BTreeMap<String, (usize, usize, u64)>,
+}
+
+impl Manifest {
+    fn read(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("read model manifest {mpath:?}"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parse model manifest {}: {e}", mpath.display()))?;
+        let kind = j.get("kind").and_then(Json::as_str).unwrap_or("<missing>");
+        if kind != KIND {
+            bail!("{}: kind {kind:?} is not a fitted-model manifest ({KIND:?})", mpath.display());
+        }
+        let field = |key: &str| -> Result<usize> {
+            j.get(key).and_then(json_index).ok_or_else(|| {
+                anyhow!("{}: missing/non-integer numeric field {key:?}", mpath.display())
+            })
+        };
+        let floats = |key: &str| -> Result<Vec<f64>> {
+            let arr = j
+                .get(key)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{}: missing array {key:?}", mpath.display()))?;
+            arr.iter()
+                .map(|x| {
+                    x.as_f64().ok_or_else(|| {
+                        anyhow!("{}: non-numeric entry in {key:?}", mpath.display())
+                    })
+                })
+                .collect()
+        };
+        let mut files = BTreeMap::new();
+        if let Some(Json::Obj(fm)) = j.get("files") {
+            for (name, entry) in fm {
+                let rows = entry
+                    .get("rows")
+                    .and_then(json_index)
+                    .ok_or_else(|| anyhow!("{}: file {name}: bad rows", mpath.display()))?;
+                let cols = entry
+                    .get("cols")
+                    .and_then(json_index)
+                    .ok_or_else(|| anyhow!("{}: file {name}: bad cols", mpath.display()))?;
+                let sum = entry
+                    .get("fnv1a64")
+                    .and_then(Json::as_str)
+                    .and_then(|s| u64::from_str_radix(s, 16).ok())
+                    .ok_or_else(|| {
+                        anyhow!("{}: file {name}: missing/garbled fnv1a64", mpath.display())
+                    })?;
+                files.insert(name.clone(), (rows, cols, sum));
+            }
+        } else {
+            bail!("{}: missing \"files\" object", mpath.display());
+        }
+        let landmarks: Vec<usize> = j
+            .get("landmarks")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{}: missing array \"landmarks\"", mpath.display()))?
+            .iter()
+            .map(|x| {
+                json_index(x).ok_or_else(|| {
+                    anyhow!("{}: non-integer landmark index in manifest", mpath.display())
+                })
+            })
+            .collect::<Result<_>>()?;
+        Ok(Manifest {
+            format_version: field("format_version")?,
+            n: field("n")?,
+            dim: field("dim")?,
+            m: field("m")?,
+            d: field("d")?,
+            k: field("k")?,
+            landmarks,
+            mean_delta: floats("mean_delta")?,
+            eigvals: floats("eigvals")?,
+            files,
+        })
+    }
+
+    /// Load one binary matrix, verifying checksum and shape against both
+    /// the per-file manifest entry and the caller's expectation.
+    fn load_matrix(&self, dir: &Path, name: &str, rows: usize, cols: usize) -> Result<Matrix> {
+        let (mrows, mcols, want_sum) = *self
+            .files
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no entry for {name}"))?;
+        if (mrows, mcols) != (rows, cols) {
+            bail!("{name}: manifest shape {mrows}×{mcols} != declared dims {rows}×{cols}");
+        }
+        let path = dir.join(name);
+        let got_sum = file_fnv1a64(&path)?;
+        if got_sum != want_sum {
+            bail!(
+                "{name}: checksum mismatch (manifest {want_sum:016x}, file {got_sum:016x}) — \
+                 artifact corrupt?"
+            );
+        }
+        let m = read_bin(&path).with_context(|| format!("load {name}"))?;
+        if (m.nrows(), m.ncols()) != (rows, cols) {
+            bail!("{name}: stored shape {}×{} != manifest {rows}×{cols}", m.nrows(), m.ncols());
+        }
+        Ok(m)
+    }
+}
+
+/// One binary file as described by the manifest, plus its on-disk reality.
+pub struct FileInfo {
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// Bytes the binary format implies (header + rows·cols·8).
+    pub expected_bytes: u64,
+    /// Actual size, `None` when the file is missing.
+    pub on_disk_bytes: Option<u64>,
+    pub checksum: String,
+}
+
+/// Manifest-only view of a model artifact for `isospark info --model`:
+/// reads `model.json` and stats the binary files, but never loads a matrix
+/// or walks its bytes — a truncated or corrupt artifact stays inspectable.
+pub struct ModelInfo {
+    pub dir: PathBuf,
+    pub format_version: usize,
+    pub n: usize,
+    pub dim: usize,
+    pub m: usize,
+    pub d: usize,
+    pub k: usize,
+    pub files: Vec<FileInfo>,
+}
+
+impl ModelInfo {
+    /// Read the manifest of `dir`. Unlike [`FittedModel::load`], a format
+    /// version this build cannot serve is *reported*, not rejected.
+    pub fn inspect(dir: &Path) -> Result<ModelInfo> {
+        let man = Manifest::read(dir)?;
+        let files = man
+            .files
+            .iter()
+            .map(|(name, &(rows, cols, sum))| FileInfo {
+                name: name.clone(),
+                rows,
+                cols,
+                expected_bytes: crate::data::io::bin_file_size(rows, cols).unwrap_or(u64::MAX),
+                on_disk_bytes: std::fs::metadata(dir.join(name)).ok().map(|m| m.len()),
+                checksum: format!("{sum:016x}"),
+            })
+            .collect();
+        Ok(ModelInfo {
+            dir: dir.to_path_buf(),
+            format_version: man.format_version,
+            n: man.n,
+            dim: man.dim,
+            m: man.m,
+            d: man.d,
+            k: man.k,
+            files,
+        })
+    }
+
+    /// Human-readable report.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "model artifact {} (format v{}{})\n",
+            self.dir.display(),
+            self.format_version,
+            if self.format_version == FORMAT_VERSION {
+                "".to_string()
+            } else {
+                format!(", this build reads v{FORMAT_VERSION}")
+            }
+        ));
+        out.push_str(&format!(
+            "  batch n={} D={} | landmarks m={} | output d={} | kNN k={}\n",
+            self.n, self.dim, self.m, self.d, self.k
+        ));
+        let mut rows = vec![vec![
+            "file".to_string(),
+            "shape".to_string(),
+            "expect".to_string(),
+            "on disk".to_string(),
+            "fnv1a64".to_string(),
+        ]];
+        for f in &self.files {
+            let status = match f.on_disk_bytes {
+                None => "MISSING".to_string(),
+                Some(b) if b != f.expected_bytes => format!("{b} (TRUNCATED?)"),
+                Some(b) => b.to_string(),
+            };
+            rows.push(vec![
+                f.name.clone(),
+                format!("{}×{}", f.rows, f.cols),
+                f.expected_bytes.to_string(),
+                status,
+                f.checksum.clone(),
+            ]);
+        }
+        out.push_str(&render_table(&rows));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("isospark_model_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// A tiny hand-built (not fitted) model for unit tests; the integration
+    /// suite covers real fitted models.
+    fn toy_model() -> FittedModel {
+        let n = 6;
+        let dd = 3;
+        let m = 3;
+        let d = 2;
+        let batch = Matrix::from_vec(n, dd, (0..n * dd).map(|i| i as f64 * 0.5).collect());
+        let mut delta = Matrix::zeros(m, n);
+        for a in 0..m {
+            for j in 0..n {
+                delta[(a, j)] = ((a + 1) * (j + 2)) as f64 * 0.25;
+            }
+        }
+        let mut eigvecs = Matrix::zeros(m, d);
+        for a in 0..m {
+            for j in 0..d {
+                eigvecs[(a, j)] = 0.1 + (a * d + j) as f64 * 0.3;
+            }
+        }
+        let mut model = FittedModel {
+            batch,
+            landmarks: vec![0, 2, 5],
+            delta,
+            mean_delta: vec![1.0, 2.0, 3.0],
+            eigvals: vec![2.5, 1.25],
+            eigvecs,
+            d,
+            k: 2,
+            batch_embedding: Matrix::zeros(n, d),
+        };
+        for i in 0..n {
+            let di: Vec<f64> = (0..m).map(|a| model.delta[(a, i)]).collect();
+            let y = model.triangulate(&di);
+            model.batch_embedding.row_mut(i).copy_from_slice(&y);
+        }
+        model
+    }
+
+    #[test]
+    fn fnv_matches_known_vectors() {
+        // Standard FNV-1a test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn save_load_roundtrip_bits() {
+        let model = toy_model();
+        let dir = tmp_dir("roundtrip");
+        model.save(&dir).unwrap();
+        let loaded = FittedModel::load(&dir).unwrap();
+        assert_eq!(loaded.batch.as_slice(), model.batch.as_slice());
+        assert_eq!(loaded.delta.as_slice(), model.delta.as_slice());
+        assert_eq!(loaded.eigvecs.as_slice(), model.eigvecs.as_slice());
+        assert_eq!(loaded.batch_embedding.as_slice(), model.batch_embedding.as_slice());
+        assert_eq!(loaded.landmarks, model.landmarks);
+        assert_eq!(loaded.mean_delta, model.mean_delta);
+        assert_eq!(loaded.eigvals, model.eigvals);
+        assert_eq!((loaded.d, loaded.k), (model.d, model.k));
+        let p = vec![0.1, 0.2, 0.3];
+        let a = model.map_point(&p).unwrap();
+        let b = loaded.map_point(&p).unwrap();
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn inspect_reads_manifest_only() {
+        let model = toy_model();
+        let dir = tmp_dir("inspect");
+        model.save(&dir).unwrap();
+        // Corrupt a binary file: inspect must still work (manifest-only)…
+        std::fs::write(dir.join(FILE_DELTA), b"garbage").unwrap();
+        let info = ModelInfo::inspect(&dir).unwrap();
+        assert_eq!((info.n, info.dim, info.m, info.d, info.k), (6, 3, 3, 2, 2));
+        assert_eq!(info.format_version, FORMAT_VERSION);
+        let rendered = info.render();
+        assert!(rendered.contains("delta.bin"), "{rendered}");
+        assert!(rendered.contains("TRUNCATED"), "{rendered}");
+        // …while load fails loudly on the same artifact.
+        let err = format!("{:#}", FittedModel::load(&dir).unwrap_err());
+        assert!(err.contains("delta.bin"), "{err}");
+    }
+
+    #[test]
+    fn missing_file_is_reported() {
+        let model = toy_model();
+        let dir = tmp_dir("missing");
+        model.save(&dir).unwrap();
+        std::fs::remove_file(dir.join(FILE_EMBEDDING)).unwrap();
+        let err = format!("{:#}", FittedModel::load(&dir).unwrap_err());
+        assert!(err.contains("embedding.bin"), "{err}");
+        let info = ModelInfo::inspect(&dir).unwrap();
+        assert!(info.render().contains("MISSING"));
+    }
+
+    #[test]
+    fn map_points_parallel_matches_serial_bitwise() {
+        let model = toy_model();
+        // Enough rows that the pool path engages even on a toy model.
+        let rows = PAR_MIN_WORK; // per_point ≥ 1 ⇒ rows·per_point ≥ threshold
+        let rows = rows / (model.batch.nrows() * model.batch.ncols()) + 16;
+        let pts = Matrix::from_vec(
+            rows,
+            3,
+            (0..rows * 3).map(|i| (i as f64 * 0.713).sin()).collect(),
+        );
+        let seq = model.map_points_with(&pts, 1).unwrap();
+        let par = model.map_points_with(&pts, 8).unwrap();
+        for (a, b) in seq.as_slice().iter().zip(par.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn rejects_non_integer_manifest_numbers() {
+        // A hand-edited manifest with fractional/negative "integers" must
+        // fail loudly, not load with silently truncated parameters.
+        let model = toy_model();
+        let dir = tmp_dir("strict");
+        model.save(&dir).unwrap();
+        let mpath = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, text.replace("\"landmarks\":[0,2,5]", "\"landmarks\":[0,2.5,5]"))
+            .unwrap();
+        let err = format!("{:#}", FittedModel::load(&dir).unwrap_err());
+        assert!(err.contains("non-integer landmark"), "{err}");
+
+        model.save(&dir).unwrap();
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, text.replace("\"k\":2", "\"k\":2.9")).unwrap();
+        let err = format!("{:#}", FittedModel::load(&dir).unwrap_err());
+        assert!(err.contains("\"k\""), "{err}");
+
+        model.save(&dir).unwrap();
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, text.replace("\"n\":6", "\"n\":-6")).unwrap();
+        let err = format!("{:#}", FittedModel::load(&dir).unwrap_err());
+        assert!(err.contains("\"n\""), "{err}");
+
+        // Overflow-to-infinity floats (1e400 parses as +inf) must not
+        // produce a model that serves inf embeddings.
+        model.save(&dir).unwrap();
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, text.replace("\"mean_delta\":[1,2,3]", "\"mean_delta\":[1,1e400,3]"))
+            .unwrap();
+        let err = format!("{:#}", FittedModel::load(&dir).unwrap_err());
+        assert!(err.contains("non-finite"), "{err}");
+
+        model.save(&dir).unwrap();
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, text.replace("\"eigvals\":[2.5,1.25]", "\"eigvals\":[2.5,1e400]"))
+            .unwrap();
+        let err = format!("{:#}", FittedModel::load(&dir).unwrap_err());
+        assert!(err.contains("non-finite"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unsupported_version_and_wrong_kind() {
+        let model = toy_model();
+        let dir = tmp_dir("version");
+        model.save(&dir).unwrap();
+        let mpath = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, text.replace("\"format_version\":1", "\"format_version\":99"))
+            .unwrap();
+        let err = format!("{:#}", FittedModel::load(&dir).unwrap_err());
+        assert!(err.contains("format version 99"), "{err}");
+        // Inspection still describes the future-version artifact.
+        let info = ModelInfo::inspect(&dir).unwrap();
+        assert_eq!(info.format_version, 99);
+        // A non-model manifest is refused by kind.
+        std::fs::write(&mpath, "{\"kind\":\"something-else\",\"files\":{}}").unwrap();
+        let err = format!("{:#}", FittedModel::load(&dir).unwrap_err());
+        assert!(err.contains("kind"), "{err}");
+    }
+}

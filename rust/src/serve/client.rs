@@ -1,0 +1,229 @@
+//! Minimal loopback HTTP client: keep-alive connections, JSON helpers,
+//! and the load generator behind `isospark bench-serve` and the
+//! `serve_latency` bench. Tests use it to assert that what comes back over
+//! a real TCP socket is bit-identical to an in-process `map_points`.
+
+use super::{matrix_from_json, matrix_to_json, percentile};
+use crate::linalg::Matrix;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+/// One keep-alive connection to the server.
+pub struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Conn {
+    pub fn connect(addr: &str) -> Result<Conn> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        Ok(Conn { stream, buf: Vec::new() })
+    }
+
+    /// Issue one request and read the full response.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String)> {
+        let b = body.unwrap_or("");
+        let head = format!(
+            "{method} {path} HTTP/1.1\r\nHost: isospark\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+            b.len()
+        );
+        self.stream.write_all(head.as_bytes()).context("send request head")?;
+        self.stream.write_all(b.as_bytes()).context("send request body")?;
+        loop {
+            if let Some((code, body, used)) = parse_response(&self.buf)? {
+                self.buf.drain(..used);
+                return Ok((code, body));
+            }
+            let mut tmp = [0u8; 8192];
+            let n = self.stream.read(&mut tmp).context("read response")?;
+            if n == 0 {
+                bail!("server closed the connection mid-response");
+            }
+            self.buf.extend_from_slice(&tmp[..n]);
+        }
+    }
+}
+
+/// Parse one complete response (status + content-length body) from the
+/// front of `buf`; `None` when incomplete.
+fn parse_response(buf: &[u8]) -> Result<Option<(u16, String, usize)>> {
+    let Some(head_end) = buf.windows(4).position(|w| w == b"\r\n\r\n") else {
+        return Ok(None);
+    };
+    let head = std::str::from_utf8(&buf[..head_end]).context("response head not UTF-8")?;
+    let mut lines = head.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let code: u16 = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line {status_line:?}"))?;
+    let mut body_len = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                body_len = value.trim().parse().context("bad Content-Length")?;
+            }
+        }
+    }
+    let total = head_end + 4 + body_len;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let body = String::from_utf8_lossy(&buf[head_end + 4..total]).into_owned();
+    Ok(Some((code, body, total)))
+}
+
+/// `GET path` on a fresh connection, parsing the JSON body.
+pub fn get_json(addr: &str, path: &str) -> Result<(u16, Json)> {
+    let mut c = Conn::connect(addr)?;
+    let (code, body) = c.request("GET", path, None)?;
+    let j = Json::parse(&body)
+        .map_err(|e| anyhow!("non-JSON body from {path} (status {code}): {e}; body: {body:.200}"))?;
+    Ok((code, j))
+}
+
+/// `POST path` with a JSON body on a fresh connection.
+pub fn post_json(addr: &str, path: &str, body: &Json) -> Result<(u16, Json)> {
+    let mut c = Conn::connect(addr)?;
+    let (code, text) = c.request("POST", path, Some(&body.to_string()))?;
+    let j = Json::parse(&text)
+        .map_err(|e| anyhow!("non-JSON body from {path} (status {code}): {e}; body: {text:.200}"))?;
+    Ok((code, j))
+}
+
+/// Embed `pts` over an existing connection.
+pub fn embed_on(conn: &mut Conn, pts: &Matrix) -> Result<Matrix> {
+    let body = Json::obj(vec![("points", matrix_to_json(pts))]).to_string();
+    let (code, text) = conn.request("POST", "/v1/embed", Some(&body))?;
+    if code != 200 {
+        bail!("embed failed with status {code}: {text:.200}");
+    }
+    let j = Json::parse(&text).map_err(|e| anyhow!("bad embed response: {e}"))?;
+    let emb = j.get("embedding").ok_or_else(|| anyhow!("embed response missing \"embedding\""))?;
+    matrix_from_json(emb).map_err(|e| anyhow!("bad embedding matrix: {e}"))
+}
+
+/// Embed `pts` on a fresh connection.
+pub fn embed(addr: &str, pts: &Matrix) -> Result<Matrix> {
+    let mut c = Conn::connect(addr)?;
+    embed_on(&mut c, pts)
+}
+
+/// Aggregate result of one loopback load run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub requests: usize,
+    pub wall_secs: f64,
+    pub qps: f64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+}
+
+impl LoadReport {
+    pub fn to_json(&self, name: &str, clients: usize, pts_per_request: usize) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(name)),
+            ("clients", Json::num(clients as f64)),
+            ("pts_per_request", Json::num(pts_per_request as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("qps", Json::num(self.qps)),
+            ("mean_us", Json::num(self.mean_us)),
+            ("p50_us", Json::num(self.p50_us)),
+            ("p95_us", Json::num(self.p95_us)),
+            ("p99_us", Json::num(self.p99_us)),
+            ("max_us", Json::num(self.max_us)),
+        ])
+    }
+}
+
+/// Drive `clients` keep-alive connections, each sending
+/// `requests_per_client` embed requests of `pts_per_request` rows drawn
+/// from `pool` (offsets staggered per client so concurrent requests carry
+/// different payloads). Returns exact client-side latency percentiles.
+pub fn loopback_load(
+    addr: &str,
+    clients: usize,
+    requests_per_client: usize,
+    pts_per_request: usize,
+    pool: &Matrix,
+) -> Result<LoadReport> {
+    if pool.nrows() < pts_per_request {
+        bail!("query pool has {} rows < {pts_per_request} per request", pool.nrows());
+    }
+    let span = pool.nrows() - pts_per_request + 1;
+    let sw = Instant::now();
+    let per_client: Vec<Result<Vec<f64>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || -> Result<Vec<f64>> {
+                    let mut conn = Conn::connect(addr)?;
+                    let mut lats = Vec::with_capacity(requests_per_client);
+                    for r in 0..requests_per_client {
+                        let start = (c * 131 + r * pts_per_request) % span;
+                        let pts = pool.slice(start, start + pts_per_request, 0, pool.ncols());
+                        let t = Instant::now();
+                        let emb = embed_on(&mut conn, &pts)?;
+                        lats.push(t.elapsed().as_secs_f64() * 1e6);
+                        if emb.nrows() != pts_per_request {
+                            bail!("embed returned {} rows, want {pts_per_request}", emb.nrows());
+                        }
+                    }
+                    Ok(lats)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("load client panicked"))))
+            .collect()
+    });
+    let wall = sw.elapsed().as_secs_f64();
+    let mut lats: Vec<f64> = Vec::with_capacity(clients * requests_per_client);
+    for r in per_client {
+        lats.extend(r.context("load client failed")?);
+    }
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = lats.len();
+    Ok(LoadReport {
+        requests: n,
+        wall_secs: wall,
+        qps: if wall > 0.0 { n as f64 / wall } else { 0.0 },
+        mean_us: if n == 0 { 0.0 } else { lats.iter().sum::<f64>() / n as f64 },
+        p50_us: percentile(&lats, 0.50),
+        p95_us: percentile(&lats, 0.95),
+        p99_us: percentile(&lats, 0.99),
+        max_us: lats.last().copied().unwrap_or(0.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_response_frames() {
+        let raw = b"HTTP/1.1 200 OK\r\nContent-Length: 4\r\n\r\nbodyNEXT";
+        let (code, body, used) = parse_response(raw).unwrap().unwrap();
+        assert_eq!(code, 200);
+        assert_eq!(body, "body");
+        assert_eq!(&raw[used..], b"NEXT");
+        assert!(parse_response(b"HTTP/1.1 200 OK\r\nContent-Length: 9\r\n\r\nshort")
+            .unwrap()
+            .is_none());
+        assert!(parse_response(b"GARBAGE\r\n\r\n").is_err());
+    }
+}

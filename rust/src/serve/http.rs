@@ -1,0 +1,225 @@
+//! Hand-rolled HTTP/1.1 message framing (the crate is anyhow-only, so no
+//! hyper/tiny_http — this mirrors how `util::json` hand-rolls JSON).
+//!
+//! The parser is a pure function over a byte buffer: callers accumulate
+//! bytes from the socket and ask [`try_parse`] whether a complete request
+//! sits at the front. `Ok(None)` means "need more bytes", `Err` means the
+//! peer sent something malformed (answer 400 and close). This shape keeps
+//! the parser independent of socket timeouts and trivially unit-testable,
+//! and gives request pipelining for free: leftover bytes after `consumed`
+//! are simply the next request.
+//!
+//! Scope: request line + headers + `Content-Length` bodies. Chunked
+//! transfer encoding is rejected (nothing in the serving protocol needs
+//! it), header names are lower-cased at parse time, and head/body sizes
+//! are capped so a confused client cannot balloon server memory.
+
+/// Maximum bytes of request line + headers.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+/// Maximum request body bytes (a 1M-point f64 batch serializes well under
+/// this; anything larger should be split into multiple requests anyway to
+/// keep micro-batches block-sized).
+pub const MAX_BODY_BYTES: usize = 64 * 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// `(name, value)` pairs; names lower-cased.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// True for `HTTP/1.0` requests (default close instead of keep-alive).
+    pub http10: bool,
+}
+
+impl Request {
+    /// First header with the given (lower-case) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the connection must close after this request
+    /// (`Connection: close`, or HTTP/1.0 without `keep-alive`).
+    pub fn wants_close(&self) -> bool {
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => true,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => false,
+            _ => self.http10,
+        }
+    }
+}
+
+/// Try to parse one complete request from the front of `buf`. Returns the
+/// request and the number of bytes consumed; `Ok(None)` when the buffer
+/// does not yet hold a full request.
+pub fn try_parse(buf: &[u8]) -> Result<Option<(Request, usize)>, String> {
+    let head_end = match find_head_end(buf) {
+        Some(e) => e,
+        None if buf.len() > MAX_HEAD_BYTES => {
+            return Err(format!("request head exceeds {MAX_HEAD_BYTES} bytes"));
+        }
+        None => return Ok(None),
+    };
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| "request head is not valid UTF-8".to_string())?;
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ');
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(format!("bad method in request line {request_line:?}"));
+    }
+    if !path.starts_with('/') {
+        return Err(format!("bad path in request line {request_line:?}"));
+    }
+    let http10 = match version {
+        "HTTP/1.1" => false,
+        "HTTP/1.0" => true,
+        other => return Err(format!("unsupported HTTP version {other:?}")),
+    };
+    let mut headers = Vec::new();
+    for line in lines {
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| format!("malformed header line {line:?}"))?;
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let req = Request { method, path, headers, body: Vec::new(), http10 };
+    if req
+        .header("transfer-encoding")
+        .is_some_and(|v| !v.eq_ignore_ascii_case("identity"))
+    {
+        return Err("chunked transfer encoding is not supported".to_string());
+    }
+    let body_len = match req.header("content-length") {
+        None => 0,
+        Some(v) => v
+            .parse::<usize>()
+            .map_err(|_| format!("bad Content-Length {v:?}"))?,
+    };
+    if body_len > MAX_BODY_BYTES {
+        return Err(format!("body of {body_len} bytes exceeds {MAX_BODY_BYTES}"));
+    }
+    let total = head_end + 4 + body_len;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let mut req = req;
+    req.body = buf[head_end + 4..total].to_vec();
+    Ok(Some((req, total)))
+}
+
+/// Byte offset of the `\r\n\r\n` head terminator, if present.
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    let scan = buf.len().min(MAX_HEAD_BYTES + 4);
+    buf[..scan].windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Render a complete response with a body.
+pub fn response(status: u16, content_type: &str, body: &[u8], keep_alive: bool) -> Vec<u8> {
+    let mut out = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        status_reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    )
+    .into_bytes();
+    out.extend_from_slice(body);
+    out
+}
+
+/// Reason phrase for the status codes the server emits.
+pub fn status_reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_get_without_body() {
+        let raw = b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n";
+        let (req, used) = try_parse(raw).unwrap().unwrap();
+        assert_eq!(used, raw.len());
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert_eq!(req.header("host"), Some("x"));
+        assert!(req.body.is_empty());
+        assert!(!req.wants_close()); // HTTP/1.1 defaults to keep-alive
+    }
+
+    #[test]
+    fn parses_post_with_body_incrementally() {
+        let raw = b"POST /v1/embed HTTP/1.1\r\nContent-Length: 5\r\n\r\nhello";
+        // Every strict prefix is incomplete…
+        for cut in 0..raw.len() {
+            assert!(try_parse(&raw[..cut]).unwrap().is_none(), "cut={cut}");
+        }
+        // …and the full buffer parses.
+        let (req, used) = try_parse(raw).unwrap().unwrap();
+        assert_eq!(used, raw.len());
+        assert_eq!(req.body, b"hello");
+    }
+
+    #[test]
+    fn pipelined_requests_report_consumed() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nGET /b HTTP/1.1\r\n\r\n";
+        let (req, used) = try_parse(raw).unwrap().unwrap();
+        assert_eq!(req.path, "/a");
+        let (req2, used2) = try_parse(&raw[used..]).unwrap().unwrap();
+        assert_eq!(req2.path, "/b");
+        assert_eq!(used + used2, raw.len());
+    }
+
+    #[test]
+    fn connection_semantics() {
+        let close = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        assert!(try_parse(close).unwrap().unwrap().0.wants_close());
+        let old = b"GET / HTTP/1.0\r\n\r\n";
+        assert!(try_parse(old).unwrap().unwrap().0.wants_close());
+        let old_ka = b"GET / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n";
+        assert!(!try_parse(old_ka).unwrap().unwrap().0.wants_close());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(try_parse(b"NOT A REQUEST\r\n\r\n").is_err());
+        assert!(try_parse(b"GET nopath HTTP/1.1\r\n\r\n").is_err());
+        assert!(try_parse(b"GET / HTTP/2.0\r\n\r\n").is_err());
+        assert!(try_parse(b"GET / HTTP/1.1\r\nbroken header\r\n\r\n").is_err());
+        assert!(try_parse(b"POST / HTTP/1.1\r\nContent-Length: pony\r\n\r\n").is_err());
+        assert!(try_parse(b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn enforces_size_limits() {
+        let huge_head = vec![b'A'; MAX_HEAD_BYTES + 8];
+        assert!(try_parse(&huge_head).is_err());
+        let huge_body =
+            format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(try_parse(huge_body.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_framing() {
+        let r = response(200, "application/json", b"{\"ok\":true}", true);
+        let text = String::from_utf8(r).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 11\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
+        assert!(text.ends_with("{\"ok\":true}"), "{text}");
+    }
+}

@@ -1,0 +1,848 @@
+//! `isospark serve` — an embedding server over a saved [`FittedModel`].
+//!
+//! The ROADMAP's north star is a fitted manifold that *outlives* the O(n³)
+//! batch job and serves projections to clients. This module is that layer:
+//! a dependency-free HTTP/1.1 server on `std::net::TcpListener` (request
+//! framing hand-rolled in [`http`], as `util::json` hand-rolls JSON)
+//! exposing
+//!
+//! * `POST /v1/embed` — `{"points": [[…],…]}` → `{"embedding": [[…],…]}`,
+//!   bit-identical to calling [`FittedModel::map_points`] in-process;
+//! * `GET  /healthz` — liveness + model summary;
+//! * `GET  /metrics` — request counters, embed latency histogram with
+//!   approximate p50/p95/p99, QPS, micro-batching stats, and (when the
+//!   server was started with a PJRT backend) the per-op offload-coverage
+//!   counters from [`crate::engine::metrics::OffloadStats`];
+//! * `POST /v1/reload` — atomically hot-swap the model from disk behind
+//!   `RwLock<Arc<FittedModel>>`; a failed load keeps the current model.
+//!
+//! ## Architecture
+//!
+//! Connections are accepted by one acceptor thread and claimed by a pool
+//! of worker threads from a shared queue — the same
+//! dynamic-claiming shape as [`crate::engine::executor`], but long-lived
+//! because connections (unlike stage tasks) are open-ended. Workers parse
+//! requests and answer everything except `/v1/embed` directly.
+//!
+//! ## Micro-batching
+//!
+//! Embed requests do not call the model from the worker: they enqueue the
+//! parsed points and block on a response channel. A single batch-executor
+//! thread drains *everything currently queued* (up to `max_batch` points),
+//! concatenates it into one matrix, runs one
+//! [`FittedModel::map_points_with`] call on the worker pool, and scatters
+//! the rows back to the waiting requests. While a batch executes, new
+//! arrivals pile up and form the next batch — classic adaptive batching:
+//! zero added latency when idle, block-sized backend calls under load.
+//! Because each row is projected by the same serial code regardless of
+//! batch composition, coalescing never changes bits.
+
+pub mod client;
+pub mod http;
+
+use crate::backend::Backend;
+use crate::model::FittedModel;
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::time::{Duration, Instant};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address (default loopback; set `0.0.0.0` to expose).
+    pub host: String,
+    /// TCP port; 0 binds an ephemeral port (see [`ServerHandle::port`]).
+    pub port: u16,
+    /// HTTP worker threads, which is also the `map_points` pool size
+    /// (0 = all cores).
+    pub threads: usize,
+    /// Maximum points coalesced into one `map_points` call.
+    pub max_batch: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { host: "127.0.0.1".to_string(), port: 0, threads: 0, max_batch: 1024 }
+    }
+}
+
+/// Upper bounds (µs) of the embed-latency histogram buckets; one implicit
+/// overflow bucket follows.
+const LAT_BUCKETS_US: [u64; 12] =
+    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000];
+
+/// Wait slice for idle condvar loops; shutdown latency is bounded by it.
+const POLL: Duration = Duration::from_millis(250);
+
+/// Socket read slice: how long a worker blocks on one connection before
+/// re-checking for queued peers (bounds the scheduling latency a parked
+/// idle connection can inflict on a waiting one).
+const READ_SLICE: Duration = Duration::from_millis(50);
+
+/// Read slices a connection may stall *mid-request* before it is answered
+/// with 408 and dropped (100 × 50 ms = 5 s).
+const MAX_STALL_SLICES: u32 = 100;
+
+/// Per-syscall write timeout: the longest a worker can be pinned by a
+/// client that stopped reading its response.
+const WRITE_LIMIT: Duration = Duration::from_secs(10);
+
+/// Thread-safe server counters (all relaxed atomics — monitoring data).
+struct ServerMetrics {
+    started: Instant,
+    embed: AtomicU64,
+    healthz: AtomicU64,
+    metrics: AtomicU64,
+    reload: AtomicU64,
+    errors: AtomicU64,
+    batches: AtomicU64,
+    batched_points: AtomicU64,
+    max_batch_points: AtomicU64,
+    lat_count: AtomicU64,
+    lat_sum_us: AtomicU64,
+    lat_max_us: AtomicU64,
+    lat_buckets: [AtomicU64; LAT_BUCKETS_US.len() + 1],
+}
+
+impl ServerMetrics {
+    fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            embed: AtomicU64::new(0),
+            healthz: AtomicU64::new(0),
+            metrics: AtomicU64::new(0),
+            reload: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_points: AtomicU64::new(0),
+            max_batch_points: AtomicU64::new(0),
+            lat_count: AtomicU64::new(0),
+            lat_sum_us: AtomicU64::new(0),
+            lat_max_us: AtomicU64::new(0),
+            lat_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    fn record_latency_us(&self, us: u64) {
+        self.lat_count.fetch_add(1, Ordering::Relaxed);
+        self.lat_sum_us.fetch_add(us, Ordering::Relaxed);
+        self.lat_max_us.fetch_max(us, Ordering::Relaxed);
+        let idx = LAT_BUCKETS_US
+            .iter()
+            .position(|&le| us <= le)
+            .unwrap_or(LAT_BUCKETS_US.len());
+        self.lat_buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Approximate quantile from the histogram: the upper bound of the
+    /// bucket holding the q-th request (max observed for the overflow
+    /// bucket).
+    fn percentile_us(&self, q: f64) -> f64 {
+        let count = self.lat_count.load(Ordering::Relaxed);
+        if count == 0 {
+            return 0.0;
+        }
+        let target = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut cum = 0u64;
+        for (i, b) in self.lat_buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return match LAT_BUCKETS_US.get(i) {
+                    Some(&le) => le as f64,
+                    None => self.lat_max_us.load(Ordering::Relaxed) as f64,
+                };
+            }
+        }
+        self.lat_max_us.load(Ordering::Relaxed) as f64
+    }
+
+    fn to_json(&self, model: &FittedModel, backend: Option<&Backend>) -> Json {
+        let uptime = self.started.elapsed().as_secs_f64();
+        let embeds = self.embed.load(Ordering::Relaxed);
+        let count = self.lat_count.load(Ordering::Relaxed);
+        let mean_us = if count == 0 {
+            0.0
+        } else {
+            self.lat_sum_us.load(Ordering::Relaxed) as f64 / count as f64
+        };
+        let mut hist: Vec<Json> = LAT_BUCKETS_US
+            .iter()
+            .enumerate()
+            .map(|(i, &le)| {
+                Json::obj(vec![
+                    ("le_us", Json::num(le as f64)),
+                    ("count", Json::num(self.lat_buckets[i].load(Ordering::Relaxed) as f64)),
+                ])
+            })
+            .collect();
+        hist.push(Json::obj(vec![
+            ("le_us", Json::Null), // overflow bucket
+            (
+                "count",
+                Json::num(self.lat_buckets[LAT_BUCKETS_US.len()].load(Ordering::Relaxed) as f64),
+            ),
+        ]));
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batched = self.batched_points.load(Ordering::Relaxed);
+        let offload = match backend.and_then(Backend::offload_snapshot) {
+            None => Json::Null,
+            Some(snap) => Json::arr(
+                snap.iter()
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("op", Json::str(s.op.name())),
+                            ("exact", Json::num(s.exact as f64)),
+                            ("padded", Json::num(s.padded as f64)),
+                            ("fallback", Json::num(s.missed as f64)),
+                            ("coverage", Json::num(s.coverage())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        };
+        Json::obj(vec![
+            ("uptime_secs", Json::num(uptime)),
+            (
+                "requests",
+                Json::obj(vec![
+                    ("embed", Json::num(embeds as f64)),
+                    ("healthz", Json::num(self.healthz.load(Ordering::Relaxed) as f64)),
+                    ("metrics", Json::num(self.metrics.load(Ordering::Relaxed) as f64)),
+                    ("reload", Json::num(self.reload.load(Ordering::Relaxed) as f64)),
+                    ("errors", Json::num(self.errors.load(Ordering::Relaxed) as f64)),
+                ]),
+            ),
+            ("qps", Json::num(if uptime > 0.0 { embeds as f64 / uptime } else { 0.0 })),
+            (
+                "embed_latency_us",
+                Json::obj(vec![
+                    ("count", Json::num(count as f64)),
+                    ("mean", Json::num(mean_us)),
+                    ("p50", Json::num(self.percentile_us(0.50))),
+                    ("p95", Json::num(self.percentile_us(0.95))),
+                    ("p99", Json::num(self.percentile_us(0.99))),
+                    ("max", Json::num(self.lat_max_us.load(Ordering::Relaxed) as f64)),
+                    ("histogram", Json::arr(hist)),
+                ]),
+            ),
+            (
+                "batching",
+                Json::obj(vec![
+                    ("batches", Json::num(batches as f64)),
+                    ("points", Json::num(batched as f64)),
+                    (
+                        "max_points_in_batch",
+                        Json::num(self.max_batch_points.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "mean_points_per_batch",
+                        Json::num(if batches == 0 { 0.0 } else { batched as f64 / batches as f64 }),
+                    ),
+                ]),
+            ),
+            ("model", model_json(model)),
+            ("offload", offload),
+        ])
+    }
+}
+
+/// One embed request parked in the micro-batch queue.
+struct Pending {
+    pts: crate::linalg::Matrix,
+    tx: mpsc::Sender<Result<crate::linalg::Matrix, String>>,
+}
+
+/// One client connection with its read state; travels through the
+/// connection queue between worker visits so keep-alive state (buffered
+/// bytes, stall count) survives re-scheduling.
+struct Conn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    stalls: u32,
+}
+
+struct Shared {
+    model: RwLock<Arc<FittedModel>>,
+    model_path: Mutex<Option<PathBuf>>,
+    backend: Option<Backend>,
+    conns: Mutex<VecDeque<Conn>>,
+    conns_cv: Condvar,
+    queue: Mutex<VecDeque<Pending>>,
+    queue_cv: Condvar,
+    stop: AtomicBool,
+    metrics: ServerMetrics,
+    workers: usize,
+    max_batch: usize,
+}
+
+/// A running server; dropping the handle leaves the threads running —
+/// call [`ServerHandle::shutdown`] for an orderly stop or
+/// [`ServerHandle::wait`] to block until the process dies.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// `host:port` the server is listening on.
+    pub fn addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Bound port (useful with `port: 0`).
+    pub fn port(&self) -> u16 {
+        self.addr.port()
+    }
+
+    /// Currently served model.
+    pub fn model(&self) -> Arc<FittedModel> {
+        self.shared.model.read().unwrap().clone()
+    }
+
+    /// Block this thread for the server's lifetime (i.e. forever — the
+    /// CLI's foreground mode; the process is stopped by signal).
+    pub fn wait(mut self) {
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Orderly shutdown: stop accepting, drain workers, join threads.
+    /// In-flight connections are abandoned after at most one poll slice.
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.conns_cv.notify_all();
+        self.shared.queue_cv.notify_all();
+        // Unblock the acceptor's blocking accept().
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start serving `model`. `model_path` seeds the default for
+/// `POST /v1/reload`; `backend` is only consulted for the `/metrics`
+/// offload-coverage section (projection itself is pure native code).
+pub fn start(
+    model: FittedModel,
+    model_path: Option<PathBuf>,
+    backend: Option<Backend>,
+    cfg: &ServeConfig,
+) -> Result<ServerHandle> {
+    let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+        .with_context(|| format!("bind {}:{}", cfg.host, cfg.port))?;
+    let addr = listener.local_addr().context("query bound address")?;
+    let workers = crate::engine::executor::resolve_workers(cfg.threads);
+    let shared = Arc::new(Shared {
+        model: RwLock::new(Arc::new(model)),
+        model_path: Mutex::new(model_path),
+        backend,
+        conns: Mutex::new(VecDeque::new()),
+        conns_cv: Condvar::new(),
+        queue: Mutex::new(VecDeque::new()),
+        queue_cv: Condvar::new(),
+        stop: AtomicBool::new(false),
+        metrics: ServerMetrics::new(),
+        workers,
+        max_batch: cfg.max_batch.max(1),
+    });
+    let mut threads = Vec::with_capacity(workers + 2);
+    {
+        let sh = Arc::clone(&shared);
+        threads.push(
+            std::thread::Builder::new()
+                .name("serve-accept".into())
+                .spawn(move || accept_loop(listener, &sh))
+                .context("spawn acceptor")?,
+        );
+    }
+    for i in 0..workers {
+        let sh = Arc::clone(&shared);
+        threads.push(
+            std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .context("spawn worker")?,
+        );
+    }
+    {
+        let sh = Arc::clone(&shared);
+        threads.push(
+            std::thread::Builder::new()
+                .name("serve-batch".into())
+                .spawn(move || batch_loop(&sh))
+                .context("spawn batch executor")?,
+        );
+    }
+    Ok(ServerHandle { addr, shared, threads })
+}
+
+fn accept_loop(listener: TcpListener, sh: &Shared) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                if sh.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                let conn = Conn { stream, buf: Vec::new(), stalls: 0 };
+                sh.conns.lock().unwrap().push_back(conn);
+                sh.conns_cv.notify_one();
+            }
+            Err(_) => {
+                if sh.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                // Transient accept failure (fd pressure, aborted handshake).
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+fn worker_loop(sh: &Shared) {
+    loop {
+        let conn = {
+            let mut q = sh.conns.lock().unwrap();
+            loop {
+                if sh.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                if let Some(c) = q.pop_front() {
+                    break c;
+                }
+                q = sh.conns_cv.wait_timeout(q, POLL).unwrap().0;
+            }
+        };
+        // Serve the connection for one scheduling slice. A keep-alive
+        // connection that is still open afterwards goes back to the queue
+        // with its read state, so `threads` workers multiplex any number
+        // of connections instead of each worker being pinned to one
+        // (which would starve connection `threads + 1` indefinitely).
+        if let Some(conn) = serve_slice(sh, conn) {
+            sh.conns.lock().unwrap().push_back(conn);
+            sh.conns_cv.notify_one();
+        }
+    }
+}
+
+/// Serve one connection until it is closed or until it should yield the
+/// worker. Yield happens when the connection has nothing ready *and*
+/// other connections are waiting; while the queue is empty the worker
+/// stays parked here so a lone client never pays re-queue latency.
+/// Returns the connection if it should be re-queued.
+fn serve_slice(sh: &Shared, mut conn: Conn) -> Option<Conn> {
+    if conn.stream.set_read_timeout(Some(READ_SLICE)).is_err() {
+        return None;
+    }
+    // Bound writes too: a client that stops *reading* must not pin this
+    // worker in write_all forever once the socket send buffer fills. The
+    // timeout is per syscall, so a slow-but-draining client keeps making
+    // progress; a stopped one costs at most one timeout, then is dropped.
+    if conn.stream.set_write_timeout(Some(WRITE_LIMIT)).is_err() {
+        return None;
+    }
+    let _ = conn.stream.set_nodelay(true);
+    let mut scratch = [0u8; 8192];
+    let mut served = false;
+    loop {
+        match http::try_parse(&conn.buf) {
+            Err(e) => {
+                sh.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                let body = Json::obj(vec![("error", Json::str(e))]).to_string();
+                let resp = http::response(400, "application/json", body.as_bytes(), false);
+                let _ = conn.stream.write_all(&resp);
+                return None;
+            }
+            Ok(Some((req, used))) => {
+                conn.buf.drain(..used);
+                conn.stalls = 0;
+                served = true;
+                let keep = !req.wants_close();
+                let resp = route(sh, &req, keep);
+                if conn.stream.write_all(&resp).is_err() || !keep {
+                    return None;
+                }
+                continue; // drain pipelined requests already buffered
+            }
+            Ok(None) => {}
+        }
+        // Fairness point: this connection has no complete request ready.
+        // If we have served it at least once this slice and peers are
+        // queued, hand the worker over instead of blocking on the socket.
+        if served && !sh.conns.lock().unwrap().is_empty() {
+            return Some(conn);
+        }
+        match conn.stream.read(&mut scratch) {
+            Ok(0) => return None, // clean EOF
+            Ok(n) => {
+                conn.buf.extend_from_slice(&scratch[..n]);
+                conn.stalls = 0;
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if sh.stop.load(Ordering::Relaxed) {
+                    return None;
+                }
+                if conn.buf.is_empty() {
+                    // Idle keep-alive: yield to queued peers, else keep
+                    // waiting here (no peers ⇒ nothing to be fair to).
+                    if !sh.conns.lock().unwrap().is_empty() {
+                        return Some(conn);
+                    }
+                } else {
+                    conn.stalls += 1;
+                    if conn.stalls > MAX_STALL_SLICES {
+                        // Seconds mid-request: dead or glacial client.
+                        let resp = http::response(408, "application/json", b"{}", false);
+                        let _ = conn.stream.write_all(&resp);
+                        return None;
+                    }
+                    // Mid-request stall with peers waiting: requeue and let
+                    // the stall budget keep ticking on later visits.
+                    if !sh.conns.lock().unwrap().is_empty() {
+                        return Some(conn);
+                    }
+                }
+            }
+            Err(_) => return None,
+        }
+    }
+}
+
+fn route(sh: &Shared, req: &http::Request, keep: bool) -> Vec<u8> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            sh.metrics.healthz.fetch_add(1, Ordering::Relaxed);
+            let model = sh.model.read().unwrap().clone();
+            let body = Json::obj(vec![
+                ("status", Json::str("ok")),
+                ("uptime_secs", Json::num(sh.metrics.started.elapsed().as_secs_f64())),
+                ("model", model_json(&model)),
+            ]);
+            ok_json(&body, keep)
+        }
+        ("GET", "/metrics") => {
+            sh.metrics.metrics.fetch_add(1, Ordering::Relaxed);
+            let model = sh.model.read().unwrap().clone();
+            ok_json(&sh.metrics.to_json(&model, sh.backend.as_ref()), keep)
+        }
+        ("POST", "/v1/embed") => handle_embed(sh, req, keep),
+        ("POST", "/v1/reload") => handle_reload(sh, req, keep),
+        (_, "/healthz" | "/metrics" | "/v1/embed" | "/v1/reload") => {
+            err_json(sh, 405, format!("method {} not allowed here", req.method), keep)
+        }
+        _ => err_json(sh, 404, format!("no such endpoint {:?}", req.path), keep),
+    }
+}
+
+fn handle_embed(sh: &Shared, req: &http::Request, keep: bool) -> Vec<u8> {
+    let sw = Instant::now();
+    sh.metrics.embed.fetch_add(1, Ordering::Relaxed);
+    let resp = match embed_inner(sh, &req.body) {
+        Ok(body) => ok_json(&body, keep),
+        Err((status, msg)) => err_json(sh, status, msg, keep),
+    };
+    sh.metrics.record_latency_us(sw.elapsed().as_micros() as u64);
+    resp
+}
+
+fn embed_inner(sh: &Shared, body: &[u8]) -> Result<Json, (u16, String)> {
+    let text =
+        std::str::from_utf8(body).map_err(|_| (400, "body is not UTF-8".to_string()))?;
+    let j = Json::parse(text).map_err(|e| (400, format!("bad JSON body: {e}")))?;
+    let pts = j
+        .get("points")
+        .ok_or_else(|| (400, "missing \"points\" array".to_string()))?;
+    let pts = matrix_from_json(pts).map_err(|e| (400, format!("bad points: {e}")))?;
+    if pts.nrows() == 0 {
+        return Err((400, "empty points array".to_string()));
+    }
+    let model = sh.model.read().unwrap().clone();
+    if pts.ncols() != model.dim() {
+        return Err((
+            400,
+            format!("point dimensionality {} != model D {}", pts.ncols(), model.dim()),
+        ));
+    }
+    let rows = pts.nrows();
+    let (tx, rx) = mpsc::channel();
+    {
+        // The stop check must happen under the queue lock: batch_loop only
+        // exits while holding this lock with the queue empty and stop set,
+        // so a push that observes !stop here is guaranteed a drainer —
+        // otherwise a request enqueued right as the server stops would
+        // wait out the full recv timeout with nobody left to serve it.
+        let mut q = sh.queue.lock().unwrap();
+        if sh.stop.load(Ordering::Relaxed) {
+            return Err((503, "server is shutting down".to_string()));
+        }
+        q.push_back(Pending { pts, tx });
+    }
+    sh.queue_cv.notify_one();
+    match rx.recv_timeout(Duration::from_secs(60)) {
+        Ok(Ok(emb)) => Ok(Json::obj(vec![
+            ("embedding", matrix_to_json(&emb)),
+            ("points", Json::num(rows as f64)),
+            ("d", Json::num(emb.ncols() as f64)),
+        ])),
+        // Model was hot-swapped between validation and execution and the
+        // new model disagrees about D — the client should retry.
+        Ok(Err(msg)) => Err((400, msg)),
+        Err(_) => Err((503, "embed queue timed out (server overloaded or stopping)".to_string())),
+    }
+}
+
+fn handle_reload(sh: &Shared, req: &http::Request, keep: bool) -> Vec<u8> {
+    sh.metrics.reload.fetch_add(1, Ordering::Relaxed);
+    let requested: Option<PathBuf> = if req.body.is_empty() {
+        None
+    } else {
+        match std::str::from_utf8(&req.body).ok().and_then(|t| Json::parse(t).ok()) {
+            Some(j) => j.get("path").and_then(Json::as_str).map(PathBuf::from),
+            None => return err_json(sh, 400, "bad JSON body".to_string(), keep),
+        }
+    };
+    let path = match requested.or_else(|| sh.model_path.lock().unwrap().clone()) {
+        Some(p) => p,
+        None => {
+            return err_json(
+                sh,
+                400,
+                "no \"path\" given and the server was started without a model path".to_string(),
+                keep,
+            )
+        }
+    };
+    match FittedModel::load(&path) {
+        Ok(new_model) => {
+            let arc = Arc::new(new_model);
+            *sh.model.write().unwrap() = Arc::clone(&arc);
+            *sh.model_path.lock().unwrap() = Some(path.clone());
+            ok_json(
+                &Json::obj(vec![
+                    ("status", Json::str("reloaded")),
+                    ("path", Json::str(path.display().to_string())),
+                    ("model", model_json(&arc)),
+                ]),
+                keep,
+            )
+        }
+        // The RwLock is only taken on success: a broken artifact on disk
+        // can never displace the model that is already serving.
+        Err(e) => err_json(sh, 400, format!("reload failed, keeping current model: {e:#}"), keep),
+    }
+}
+
+/// Batch-executor loop: drain the queue, run one pooled `map_points`,
+/// scatter results. Exits once stopped *and* drained.
+fn batch_loop(sh: &Shared) {
+    loop {
+        let drained: Vec<Pending> = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if !q.is_empty() {
+                    break;
+                }
+                if sh.stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                q = sh.queue_cv.wait_timeout(q, POLL).unwrap().0;
+            }
+            let mut out = Vec::new();
+            let mut rows = 0usize;
+            while let Some(p) = q.front() {
+                let r = p.pts.nrows();
+                if !out.is_empty() && rows + r > sh.max_batch {
+                    break;
+                }
+                rows += r;
+                out.push(q.pop_front().unwrap());
+            }
+            out
+        };
+        execute_batch(sh, drained);
+    }
+}
+
+fn execute_batch(sh: &Shared, drained: Vec<Pending>) {
+    let model = sh.model.read().unwrap().clone();
+    let d_in = model.dim();
+    // Requests validated against a model that has since been hot-swapped
+    // to a different input dimensionality get individual errors; the rest
+    // batch together.
+    let mut batch: Vec<Pending> = Vec::with_capacity(drained.len());
+    for p in drained {
+        if p.pts.ncols() == d_in {
+            batch.push(p);
+        } else {
+            let _ = p.tx.send(Err(format!(
+                "model was reloaded: point dimensionality {} != model D {d_in}",
+                p.pts.ncols()
+            )));
+        }
+    }
+    if batch.is_empty() {
+        return;
+    }
+    let total: usize = batch.iter().map(|p| p.pts.nrows()).sum();
+    let mut data = Vec::with_capacity(total * d_in);
+    for p in &batch {
+        data.extend_from_slice(p.pts.as_slice());
+    }
+    let big = crate::linalg::Matrix::from_vec(total, d_in, data);
+    sh.metrics.batches.fetch_add(1, Ordering::Relaxed);
+    sh.metrics.batched_points.fetch_add(total as u64, Ordering::Relaxed);
+    sh.metrics.max_batch_points.fetch_max(total as u64, Ordering::Relaxed);
+    match model.map_points_with(&big, sh.workers) {
+        Ok(emb) => {
+            let d_out = emb.ncols();
+            let mut row = 0usize;
+            for p in &batch {
+                let r = p.pts.nrows();
+                let slice = emb.slice(row, row + r, 0, d_out);
+                row += r;
+                let _ = p.tx.send(Ok(slice));
+            }
+        }
+        Err(e) => {
+            let msg = format!("projection failed: {e:#}");
+            for p in &batch {
+                let _ = p.tx.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+fn ok_json(body: &Json, keep: bool) -> Vec<u8> {
+    http::response(200, "application/json", body.to_string().as_bytes(), keep)
+}
+
+fn err_json(sh: &Shared, status: u16, msg: String, keep: bool) -> Vec<u8> {
+    sh.metrics.errors.fetch_add(1, Ordering::Relaxed);
+    let body = Json::obj(vec![("error", Json::str(msg))]);
+    http::response(status, "application/json", body.to_string().as_bytes(), keep)
+}
+
+/// Model summary used by `/healthz`, `/metrics`, and `/v1/reload`.
+pub fn model_json(m: &FittedModel) -> Json {
+    Json::obj(vec![
+        ("n", Json::num(m.n() as f64)),
+        ("dim", Json::num(m.dim() as f64)),
+        ("landmarks", Json::num(m.num_landmarks() as f64)),
+        ("d", Json::num(m.out_dim() as f64)),
+        ("k", Json::num(m.k() as f64)),
+    ])
+}
+
+/// Matrix → JSON array-of-row-arrays. Rust's float `Display` is
+/// shortest-roundtrip, so serialize → parse restores every f64 bit-exactly
+/// (the embed endpoint's bit-identity guarantee rides on this).
+pub fn matrix_to_json(m: &crate::linalg::Matrix) -> Json {
+    Json::arr(
+        (0..m.nrows())
+            .map(|i| Json::arr(m.row(i).iter().map(|&x| Json::num(x)).collect()))
+            .collect(),
+    )
+}
+
+/// JSON array-of-row-arrays → matrix; rejects ragged/non-numeric input.
+pub fn matrix_from_json(j: &Json) -> Result<crate::linalg::Matrix, String> {
+    let rows = j.as_arr().ok_or("expected an array of rows")?;
+    let mut out: Vec<Vec<f64>> = Vec::with_capacity(rows.len());
+    for (i, row) in rows.iter().enumerate() {
+        let cells = row.as_arr().ok_or_else(|| format!("row {i} is not an array"))?;
+        let mut r = Vec::with_capacity(cells.len());
+        for (jj, c) in cells.iter().enumerate() {
+            r.push(c.as_f64().ok_or_else(|| format!("row {i} col {jj} is not a number"))?);
+        }
+        if let Some(first) = out.first() {
+            if first.len() != r.len() {
+                return Err(format!(
+                    "ragged rows: row {i} has {} cols, row 0 has {}",
+                    r.len(),
+                    first.len()
+                ));
+            }
+        }
+        out.push(r);
+    }
+    Ok(crate::linalg::Matrix::from_rows(&out))
+}
+
+/// Exact percentile of a **sorted** latency sample (nearest-rank); used by
+/// the loopback load generator and `bench-serve`.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len()) - 1;
+    sorted[idx]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_json_roundtrip_bits() {
+        let m = crate::linalg::Matrix::from_rows(&[
+            vec![std::f64::consts::PI, -0.0, 1e-308],
+            vec![1.0 / 3.0, 2.5e17, -7.125],
+        ]);
+        let j = matrix_to_json(&m);
+        let text = j.to_string();
+        let back = matrix_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.nrows(), 2);
+        for (a, b) in m.as_slice().iter().zip(back.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn matrix_from_json_rejects_garbage() {
+        assert!(matrix_from_json(&Json::parse("42").unwrap()).is_err());
+        assert!(matrix_from_json(&Json::parse("[[1,2],[3]]").unwrap()).is_err());
+        assert!(matrix_from_json(&Json::parse("[[1,\"x\"]]").unwrap()).is_err());
+        assert!(matrix_from_json(&Json::parse("[]").unwrap()).unwrap().nrows() == 0);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&s, 0.50), 50.0);
+        assert_eq!(percentile(&s, 0.95), 95.0);
+        assert_eq!(percentile(&s, 0.99), 99.0);
+        assert_eq!(percentile(&s, 1.0), 100.0);
+        assert_eq!(percentile(&[7.0], 0.5), 7.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn latency_histogram_percentiles() {
+        let m = ServerMetrics::new();
+        for _ in 0..90 {
+            m.record_latency_us(80); // ≤100 bucket
+        }
+        for _ in 0..10 {
+            m.record_latency_us(9_000); // ≤10_000 bucket
+        }
+        assert_eq!(m.percentile_us(0.50), 100.0);
+        assert_eq!(m.percentile_us(0.95), 10_000.0);
+        assert_eq!(m.lat_max_us.load(Ordering::Relaxed), 9_000);
+        // Overflow bucket reports the observed max.
+        m.record_latency_us(400_000);
+        assert_eq!(m.percentile_us(1.0), 400_000.0);
+    }
+}

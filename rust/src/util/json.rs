@@ -68,19 +68,15 @@ impl Json {
         }
     }
 
-    /// Serialize to a compact JSON string.
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 9e15 {
+                // Integer-valued floats print without ".0" — except -0.0,
+                // which must stay "-0" so parse → serialize → parse is
+                // bit-exact (serving relies on that roundtrip).
+                if x.fract() == 0.0 && x.abs() < 9e15 && (*x != 0.0 || x.is_sign_positive()) {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -110,6 +106,15 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact JSON serialization (`to_string()` comes with it for free).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 
@@ -327,6 +332,16 @@ mod tests {
         assert_eq!(ops[0].get("name").unwrap().as_str(), Some("minplus"));
         assert_eq!(ops[0].get("b").unwrap().as_usize(), Some(128));
         assert_eq!(v.get("version").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn negative_zero_roundtrips_bit_exact() {
+        let v = Json::Num(-0.0);
+        assert_eq!(v.to_string(), "-0");
+        let back = Json::parse(&v.to_string()).unwrap().as_f64().unwrap();
+        assert_eq!(back.to_bits(), (-0.0f64).to_bits());
+        // Positive zero still prints as a plain integer.
+        assert_eq!(Json::Num(0.0).to_string(), "0");
     }
 
     #[test]

@@ -1,0 +1,273 @@
+//! Model persistence + serving subsystem, end to end over real sockets:
+//!
+//! * `save → load → map_points` is bit-identical to the in-memory model;
+//! * corrupt / truncated / version-mismatched artifacts fail with context,
+//!   never panics;
+//! * `POST /v1/embed` over a real loopback TCP connection returns exactly
+//!   (bit-for-bit) what in-process `map_points` returns;
+//! * `/v1/reload` hot-swaps atomically and a failed reload keeps serving;
+//! * concurrent embeds coalesce through the micro-batch queue without
+//!   changing a single bit.
+
+use isospark::backend::Backend;
+use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::coordinator::streaming::StreamingModel;
+use isospark::data::swiss_roll;
+use isospark::model::FittedModel;
+use isospark::serve::{self, client, ServeConfig};
+use isospark::util::json::Json;
+use std::path::PathBuf;
+
+fn fit_model(n: usize, seed: u64) -> FittedModel {
+    let ds = swiss_roll::euler_isometric(n, seed);
+    let cfg = IsomapConfig { k: 10, d: 2, block: 64, seed, ..Default::default() };
+    let m = (n / 6).max(40);
+    StreamingModel::fit(&ds.points, &cfg, m, &ClusterConfig::local(), &Backend::Native)
+        .expect("fit")
+        .into_model()
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("isospark_serve_it_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn assert_bits_eq(a: &isospark::linalg::Matrix, b: &isospark::linalg::Matrix, what: &str) {
+    assert_eq!((a.nrows(), a.ncols()), (b.nrows(), b.ncols()), "{what}: shape");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i}: {x} vs {y}");
+    }
+}
+
+fn start_default(model: FittedModel, path: Option<PathBuf>) -> serve::ServerHandle {
+    serve::start(model, path, None, &ServeConfig { threads: 4, ..Default::default() })
+        .expect("start server")
+}
+
+#[test]
+fn save_load_map_points_bit_identical() {
+    let model = fit_model(300, 11);
+    let dir = tmp_dir("roundtrip");
+    model.save(&dir).unwrap();
+    let loaded = FittedModel::load(&dir).unwrap();
+    assert_bits_eq(&loaded.batch_embedding, &model.batch_embedding, "batch embedding");
+    let fresh = swiss_roll::euler_isometric(64, 99).points;
+    let a = model.map_points(&fresh).unwrap();
+    let b = loaded.map_points(&fresh).unwrap();
+    assert_bits_eq(&a, &b, "map_points after reload");
+}
+
+#[test]
+fn corrupt_and_truncated_artifacts_fail_with_context() {
+    let model = fit_model(260, 3);
+    let dir = tmp_dir("corrupt");
+    model.save(&dir).unwrap();
+
+    // Bit-flip inside delta.bin (length preserved): checksum must catch it.
+    let dpath = dir.join("delta.bin");
+    let mut bytes = std::fs::read(&dpath).unwrap();
+    bytes[100] ^= 0xff;
+    std::fs::write(&dpath, &bytes).unwrap();
+    let err = format!("{:#}", FittedModel::load(&dir).unwrap_err());
+    assert!(err.contains("delta.bin") && err.contains("checksum"), "{err}");
+
+    // Restore, then truncate batch.bin: the binary reader must refuse.
+    model.save(&dir).unwrap();
+    let bpath = dir.join("batch.bin");
+    let bytes = std::fs::read(&bpath).unwrap();
+    std::fs::write(&bpath, &bytes[..bytes.len() / 2]).unwrap();
+    let err = format!("{:#}", FittedModel::load(&dir).unwrap_err());
+    assert!(err.contains("batch.bin"), "{err}");
+
+    // Manifest/file disagreement: shrink "d" so eigvals no longer match.
+    model.save(&dir).unwrap();
+    let mpath = dir.join("model.json");
+    let text = std::fs::read_to_string(&mpath).unwrap();
+    std::fs::write(&mpath, text.replace("\"d\":2", "\"d\":3")).unwrap();
+    assert!(FittedModel::load(&dir).is_err());
+
+    // Unsupported format version is named in the error.
+    model.save(&dir).unwrap();
+    let text = std::fs::read_to_string(&mpath).unwrap();
+    std::fs::write(&mpath, text.replace("\"format_version\":1", "\"format_version\":42")).unwrap();
+    let err = format!("{:#}", FittedModel::load(&dir).unwrap_err());
+    assert!(err.contains("format version 42"), "{err}");
+}
+
+#[test]
+fn loopback_embed_is_bit_identical_to_in_process() {
+    let model = fit_model(280, 7);
+    let fresh = swiss_roll::euler_isometric(24, 55).points;
+    let expected = model.map_points(&fresh).unwrap();
+    let handle = start_default(model, None);
+    let addr = handle.addr();
+
+    let served = client::embed(&addr, &fresh).unwrap();
+    assert_bits_eq(&served, &expected, "served embedding");
+
+    let (code, health) = client::get_json(&addr, "/healthz").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+    assert_eq!(
+        health.get("model").and_then(|m| m.get("n")).and_then(Json::as_usize),
+        Some(280)
+    );
+
+    let (code, metrics) = client::get_json(&addr, "/metrics").unwrap();
+    assert_eq!(code, 200);
+    let embeds = metrics
+        .get("requests")
+        .and_then(|r| r.get("embed"))
+        .and_then(Json::as_usize)
+        .unwrap();
+    assert!(embeds >= 1, "embed count {embeds}");
+    assert!(metrics.get("embed_latency_us").is_some());
+    // Native backend ⇒ no offload counters, reported as null not omitted.
+    assert_eq!(metrics.get("offload"), Some(&Json::Null));
+
+    handle.shutdown();
+}
+
+#[test]
+fn reload_hot_swaps_and_failed_reload_keeps_serving() {
+    let model_a = fit_model(260, 1);
+    let model_b = fit_model(260, 2);
+    let dir_a = tmp_dir("reload_a");
+    let dir_b = tmp_dir("reload_b");
+    model_a.save(&dir_a).unwrap();
+    model_b.save(&dir_b).unwrap();
+    let fresh = swiss_roll::euler_isometric(16, 77).points;
+    let expect_a = model_a.map_points(&fresh).unwrap();
+    let expect_b = model_b.map_points(&fresh).unwrap();
+    // Different seeds ⇒ different landmarks ⇒ genuinely different frames.
+    assert!(expect_a.max_abs_diff(&expect_b) > 0.0, "models indistinguishable");
+
+    let handle = start_default(FittedModel::load(&dir_a).unwrap(), Some(dir_a.clone()));
+    let addr = handle.addr();
+    assert_bits_eq(&client::embed(&addr, &fresh).unwrap(), &expect_a, "before reload");
+
+    let body = Json::obj(vec![("path", Json::str(dir_b.to_str().unwrap()))]);
+    let (code, resp) = client::post_json(&addr, "/v1/reload", &body).unwrap();
+    assert_eq!(code, 200, "{resp}");
+    assert_bits_eq(&client::embed(&addr, &fresh).unwrap(), &expect_b, "after reload");
+
+    // Reload pointing at garbage: 400, current model keeps serving.
+    let bad = Json::obj(vec![("path", Json::str("/nonexistent/model/dir"))]);
+    let (code, resp) = client::post_json(&addr, "/v1/reload", &bad).unwrap();
+    assert_eq!(code, 400, "{resp}");
+    assert!(resp.get("error").is_some());
+    assert_bits_eq(&client::embed(&addr, &fresh).unwrap(), &expect_b, "after failed reload");
+
+    // Empty body re-reads the last successful path (dir_b).
+    let (code, _) = client::post_json(&addr, "/v1/reload", &Json::obj(vec![])).unwrap();
+    assert_eq!(code, 200);
+    assert_bits_eq(&client::embed(&addr, &fresh).unwrap(), &expect_b, "after re-reload");
+
+    handle.shutdown();
+}
+
+#[test]
+fn concurrent_embeds_are_coalesced_and_bit_identical() {
+    let model = fit_model(300, 5);
+    let fresh = swiss_roll::euler_isometric(64, 31).points;
+    let expected = model.map_points(&fresh).unwrap();
+    let handle = start_default(model, None);
+    let addr = handle.addr();
+
+    // 8 clients × 4 rounds × one disjoint 8-row chunk each.
+    let chunks = 8usize;
+    let rows = fresh.nrows() / chunks;
+    std::thread::scope(|scope| {
+        for c in 0..chunks {
+            let addr = addr.clone();
+            let fresh = &fresh;
+            let expected = &expected;
+            scope.spawn(move || {
+                let mut conn = client::Conn::connect(&addr).unwrap();
+                let pts = fresh.slice(c * rows, (c + 1) * rows, 0, fresh.ncols());
+                let want = expected.slice(c * rows, (c + 1) * rows, 0, expected.ncols());
+                for round in 0..4 {
+                    let got = client::embed_on(&mut conn, &pts).unwrap();
+                    assert_bits_eq(&got, &want, &format!("chunk {c} round {round}"));
+                }
+            });
+        }
+    });
+
+    let (_, metrics) = client::get_json(&addr, "/metrics").unwrap();
+    let batching = metrics.get("batching").unwrap();
+    let points = batching.get("points").and_then(Json::as_usize).unwrap();
+    let batches = batching.get("batches").and_then(Json::as_usize).unwrap();
+    assert_eq!(points, chunks * 4 * rows, "every served point is accounted");
+    assert!(batches >= 1 && batches <= chunks * 4, "batches {batches}");
+
+    handle.shutdown();
+}
+
+#[test]
+fn malformed_requests_get_http_errors_not_hangs() {
+    let model = fit_model(240, 9);
+    let handle = start_default(model, None);
+    let addr = handle.addr();
+
+    // Raw garbage: 400 and close.
+    {
+        use std::io::{Read, Write};
+        let mut s = std::net::TcpStream::connect(&addr).unwrap();
+        s.write_all(b"GARBAGE\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 400"), "{out}");
+    }
+    // Bad JSON body.
+    let mut conn = client::Conn::connect(&addr).unwrap();
+    let (code, _) = conn.request("POST", "/v1/embed", Some("{not json")).unwrap();
+    assert_eq!(code, 400);
+    // Wrong dimensionality (model D is 3).
+    let (code, body) = conn
+        .request("POST", "/v1/embed", Some("{\"points\": [[1.0, 2.0]]}"))
+        .unwrap();
+    assert_eq!(code, 400, "{body}");
+    assert!(body.contains("dimensionality"), "{body}");
+    // Empty points.
+    let (code, _) = conn.request("POST", "/v1/embed", Some("{\"points\": []}")).unwrap();
+    assert_eq!(code, 400);
+    // Unknown path / wrong method.
+    let (code, _) = conn.request("GET", "/nope", None).unwrap();
+    assert_eq!(code, 404);
+    let (code, _) = conn.request("POST", "/healthz", None).unwrap();
+    assert_eq!(code, 405);
+    // The connection survived all of that (keep-alive) and still serves.
+    let fresh = swiss_roll::euler_isometric(4, 12).points;
+    let got = client::embed_on(&mut conn, &fresh).unwrap();
+    assert_eq!(got.nrows(), 4);
+
+    let (_, metrics) = client::get_json(&addr, "/metrics").unwrap();
+    let errors = metrics
+        .get("requests")
+        .and_then(|r| r.get("errors"))
+        .and_then(Json::as_usize)
+        .unwrap();
+    assert!(errors >= 5, "errors {errors}");
+
+    handle.shutdown();
+}
+
+#[test]
+fn fit_save_serve_roundtrip_matches_cli_flow() {
+    // The acceptance-criteria path as a library-level test: fit → save →
+    // load in a "fresh process" → serve → query == in-process map_points.
+    let model = fit_model(260, 21);
+    let dir = tmp_dir("cli_flow");
+    model.save(&dir).unwrap();
+    let fresh = swiss_roll::euler_isometric(10, 5).points;
+    let expected = model.map_points(&fresh).unwrap();
+    drop(model); // only the artifact survives
+
+    let served_model = FittedModel::load(&dir).unwrap();
+    let handle = start_default(served_model, Some(dir));
+    let got = client::embed(&handle.addr(), &fresh).unwrap();
+    assert_bits_eq(&got, &expected, "fit→save→serve roundtrip");
+    handle.shutdown();
+}
