@@ -240,6 +240,84 @@ fn main() {
     std::fs::write("BENCH_apsp.json", bench_json.to_string()).ok();
     println!("(stage wall-times written to BENCH_apsp.json)");
 
+    // Dense blocked Floyd–Warshall vs the sparse CSR + pooled multi-source
+    // Dijkstra geodesics path, on the *same* kNN graph (swiss-roll,
+    // k = 10). Both paths produce the squared-geodesic feature blocks the
+    // centering stage consumes; the sparse path never builds the dense
+    // APSP RDD. Results land in BENCH_geodesics.json (CI uploads it as the
+    // BENCH_geodesics artifact).
+    println!("\n== geodesics: dense blocked FW vs sparse CSR Dijkstra ({cores} threads) ==");
+    let mut geo_cases: Vec<Json> = Vec::new();
+    for n in [512usize, 1024, 2048] {
+        let (b, k) = (256usize, 10usize);
+        let ds = swiss_roll::euler_isometric(n, 17);
+        let cfg = IsomapConfig { k, block: b, ..Default::default() };
+        // Lists only: the dense case below reconstructs its graph from the
+        // lists, so the blocked graph-fill would be wasted setup work.
+        let kl = knn::build_lists(
+            &SparkContext::new(ClusterConfig::local()),
+            &ds.points,
+            &cfg,
+            &Backend::Native,
+        )
+        .unwrap();
+        let edges = isospark::graph::CsrGraph::from_knn_lists(&kl.lists).unwrap().num_edges();
+        let dense_graph = isospark::baselines::knn_graph_dense(&kl.lists);
+        let q = num_blocks(n, b);
+        let threaded = || SparkContext::new(ClusterConfig {
+            parallelism: cores,
+            ..ClusterConfig::local()
+        });
+        let mut run = Bencher::with(12.0, 2, 1);
+        let dense_secs = run.case(&format!("geodesics:dense-fw:n{n}:b{b}"), || {
+            let ctx = threaded();
+            let part = Arc::new(UpperTriangularPartitioner::new(q, q))
+                as Arc<dyn isospark::engine::Partitioner>;
+            let rdd = ctx.parallelize("g", blocks_from_dense(&dense_graph, b), part);
+            let out = apsp::solve(rdd, q, &cfg, &Backend::Native).unwrap();
+            assert_eq!(out.len(), q * (q + 1) / 2);
+        });
+        let sparse_secs = run.case(&format!("geodesics:sparse-dijkstra:n{n}:b{b}"), || {
+            let ctx = threaded();
+            let out = apsp::solve_sparse(&ctx, &kl.lists, n, &cfg).unwrap();
+            assert_eq!(out.len(), q * (q + 1) / 2);
+        });
+        if n == 512 {
+            // Cross-check once per bench run: both paths must agree on the
+            // geodesics to 1e-9 elementwise (mirrors the test suite).
+            let ctx = threaded();
+            let a = apsp::solve_sparse(&ctx, &kl.lists, n, &cfg).unwrap();
+            let sparse = isospark::coordinator::dense_from_blocks(&a, n, b);
+            let ctx = threaded();
+            let part = Arc::new(UpperTriangularPartitioner::new(q, q))
+                as Arc<dyn isospark::engine::Partitioner>;
+            let rdd = ctx.parallelize("g", blocks_from_dense(&dense_graph, b), part);
+            let a = apsp::solve(rdd, q, &cfg, &Backend::Native).unwrap();
+            let dense = isospark::coordinator::dense_from_blocks(&a, n, b);
+            for (x, y) in dense.as_slice().iter().zip(sparse.as_slice()) {
+                assert!((x.sqrt() - y.sqrt()).abs() <= 1e-9, "{x} vs {y}");
+            }
+        }
+        let speedup = dense_secs / sparse_secs;
+        bench.report_value(&format!("geodesics:sparse_speedup:n{n}:b{b}"), speedup, "x");
+        geo_cases.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("b", Json::num(b as f64)),
+            ("k", Json::num(k as f64)),
+            ("csr_arcs", Json::num(edges as f64)),
+            ("threads", Json::num(cores as f64)),
+            ("dense_fw_secs", Json::num(dense_secs)),
+            ("sparse_dijkstra_secs", Json::num(sparse_secs)),
+            ("speedup", Json::num(speedup)),
+        ]));
+    }
+    isospark::bench::write_kernel_section(
+        "BENCH_geodesics.json",
+        "stage_apsp:geodesics",
+        geo_cases,
+    );
+    println!("(dense-vs-sparse geodesics written to BENCH_geodesics.json)");
+
     // Checkpoint-cadence ablation on a simulated 4-node cluster: virtual
     // time as a function of cadence (0 = never). The paper found 10 best.
     println!("\n== checkpoint cadence ablation (virtual seconds, 4 nodes) ==");

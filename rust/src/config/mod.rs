@@ -7,6 +7,56 @@ use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
 
+/// How the exact pipeline computes geodesic distances (config key
+/// `geodesics` in the `isomap` section; CLI `--geodesics`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GeodesicsMode {
+    /// The paper's dense blocked Floyd–Warshall APSP: `O(n³)` work over
+    /// the `∞`-filled neighborhood blocks.
+    DenseFw,
+    /// CSR graph + pooled multi-source Dijkstra (`crate::graph`):
+    /// `O(n·(n + nk) log n)` work, no dense APSP RDD — the path that
+    /// stays feasible when an `n × n` matrix no longer fits in memory.
+    SparseDijkstra,
+}
+
+impl GeodesicsMode {
+    /// Canonical config/CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            GeodesicsMode::DenseFw => "dense-fw",
+            GeodesicsMode::SparseDijkstra => "sparse-dijkstra",
+        }
+    }
+
+    /// One-line human description for run reports.
+    pub fn describe(self) -> &'static str {
+        match self {
+            GeodesicsMode::DenseFw => "dense-fw (blocked Floyd–Warshall over dense blocks)",
+            GeodesicsMode::SparseDijkstra => {
+                "sparse-dijkstra (CSR graph + pooled multi-source Dijkstra; no dense APSP RDD)"
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for GeodesicsMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for GeodesicsMode {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "dense-fw" | "dense" | "fw" => Ok(GeodesicsMode::DenseFw),
+            "sparse-dijkstra" | "sparse" | "dijkstra" => Ok(GeodesicsMode::SparseDijkstra),
+            other => Err(format!("unknown geodesics mode {other:?} (dense-fw|sparse-dijkstra)")),
+        }
+    }
+}
+
 /// Isomap algorithm parameters (paper Alg. 1 + §IV defaults).
 #[derive(Clone, Debug, PartialEq)]
 pub struct IsomapConfig {
@@ -26,11 +76,23 @@ pub struct IsomapConfig {
     pub checkpoint_every: usize,
     /// Random seed used by data generators / landmark selection.
     pub seed: u64,
+    /// Geodesic-distance backend of the exact pipeline (the approximate
+    /// landmark / streaming fits always use the sparse Dijkstra path).
+    pub geodesics: GeodesicsMode,
 }
 
 impl Default for IsomapConfig {
     fn default() -> Self {
-        Self { k: 10, d: 2, block: 128, tol: 1e-9, max_iter: 100, checkpoint_every: 10, seed: 42 }
+        Self {
+            k: 10,
+            d: 2,
+            block: 128,
+            tol: 1e-9,
+            max_iter: 100,
+            checkpoint_every: 10,
+            seed: 42,
+            geodesics: GeodesicsMode::DenseFw,
+        }
     }
 }
 
@@ -197,6 +259,7 @@ impl RawConfig {
             max_iter: self.typed("isomap", "max_iter", d.max_iter)?,
             checkpoint_every: self.typed("isomap", "checkpoint_every", d.checkpoint_every)?,
             seed: self.typed("isomap", "seed", d.seed)?,
+            geodesics: self.typed("isomap", "geodesics", d.geodesics)?,
         })
     }
 
@@ -276,6 +339,18 @@ mod tests {
         assert_eq!(c.parallelism, 1); // local correctness runs stay sequential
         assert_eq!(ClusterConfig::paper_testbed(25).total_cores(), 500);
         assert_eq!(ClusterConfig::paper_testbed(25).parallelism, 0); // auto
+    }
+
+    #[test]
+    fn geodesics_mode_parses() {
+        assert_eq!(IsomapConfig::default().geodesics, GeodesicsMode::DenseFw);
+        let raw = RawConfig::parse("[isomap]\ngeodesics = sparse-dijkstra\n").unwrap();
+        assert_eq!(raw.isomap().unwrap().geodesics, GeodesicsMode::SparseDijkstra);
+        let raw = RawConfig::parse("[isomap]\ngeodesics = dense-fw\n").unwrap();
+        assert_eq!(raw.isomap().unwrap().geodesics, GeodesicsMode::DenseFw);
+        assert!(RawConfig::parse("[isomap]\ngeodesics = bogus\n").unwrap().isomap().is_err());
+        assert_eq!("sparse".parse::<GeodesicsMode>().unwrap(), GeodesicsMode::SparseDijkstra);
+        assert_eq!(GeodesicsMode::SparseDijkstra.to_string(), "sparse-dijkstra");
     }
 
     #[test]

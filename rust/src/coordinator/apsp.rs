@@ -22,12 +22,19 @@
 //! leaves untouched are never cloned at all. Lineage is checkpointed every
 //! `checkpoint_every` iterations (paper: 10) to keep the driver model's
 //! scheduling overhead bounded.
+//!
+//! [`solve_sparse`] is the k-sparse alternative (`--geodesics
+//! sparse-dijkstra`): the same squared-geodesic feature blocks, produced
+//! by pooled multi-source Dijkstra over a CSR view of the kNN lists
+//! instead of `O(n³)` dense block algebra — see [`crate::graph`].
 
 use crate::backend::Backend;
 use crate::config::IsomapConfig;
-use crate::engine::{BlockId, BlockRdd};
+use crate::engine::{BlockId, BlockRdd, SparkContext};
+use crate::graph::{dijkstra, CsrGraph};
+use crate::kernels::kselect::Neighbor;
 use crate::linalg::Matrix;
-use anyhow::Result;
+use anyhow::{Context, Result};
 use std::sync::Arc;
 
 /// Left operand marker (`A_RI`) in Phase-3 messages.
@@ -146,6 +153,93 @@ pub fn solve(
     Ok(a)
 }
 
+/// Sparse alternative to [`solve`]: squared geodesics straight from the
+/// kNN lists via a CSR graph and pooled multi-source Dijkstra
+/// (`isospark run --geodesics sparse-dijkstra`).
+///
+/// One panel per block-row: the `b` points of block-row `I` are the
+/// sources of one batched Dijkstra ([`crate::graph::dijkstra::multi_source`],
+/// fanned over the engine's worker pool), and the resulting `b × n`
+/// distance panel is squared and sliced into the upper-triangular feature
+/// blocks `(I, J), J ≥ I` — the exact shape the centering stage consumes.
+/// The dense blocked APSP RDD (and its `O(q)` shuffle rounds) is never
+/// built; peak transient state is one row panel. Work drops from the
+/// dense path's `O(n³)` to `O(n·(n + E) log n)` with `E = n·k`.
+///
+/// Deterministic for any pool size (each source row is an independent
+/// serial Dijkstra), and bails up front with context when the graph is
+/// disconnected — the condition the dense path only surfaces as infinite
+/// column sums at the centering stage.
+pub fn solve_sparse(
+    ctx: &SparkContext,
+    lists: &[Vec<Neighbor>],
+    n: usize,
+    cfg: &IsomapConfig,
+) -> Result<BlockRdd<Matrix>> {
+    use super::{block_range, default_partitions, num_blocks};
+    use crate::engine::partitioner::UpperTriangularPartitioner;
+
+    if lists.len() != n {
+        anyhow::bail!("sparse geodesics: {} kNN lists for n = {n} points", lists.len());
+    }
+    let csr = CsrGraph::from_knn_lists(lists).context("sparse geodesics: CSR construction")?;
+    csr.require_connected().context("sparse geodesics")?;
+    let b = cfg.block;
+    let q = num_blocks(n, b);
+    let workers = ctx.parallelism();
+
+    let mut blocks: Vec<(BlockId, Matrix)> =
+        Vec::with_capacity(crate::engine::partitioner::ut_count(q));
+    let mut panel_tasks = Vec::with_capacity(q);
+    let mut compute_real = 0.0;
+    let mut sources = Vec::with_capacity(b);
+    for i in 0..q {
+        let (rs, re) = block_range(n, b, i);
+        let sw = crate::util::Stopwatch::start();
+        sources.clear();
+        sources.extend(rs..re);
+        let panel = dijkstra::multi_source(&csr, &sources, workers);
+        // Square and slice the panel into its UT blocks. Geodesics are
+        // finite here: connectivity was checked against the same graph.
+        for j in i..q {
+            let (cs, ce) = block_range(n, b, j);
+            let mut blk = Matrix::zeros(re - rs, ce - cs);
+            for r in 0..(re - rs) {
+                let src_row = &panel.row(r)[cs..ce];
+                for (dst, &v) in blk.row_mut(r).iter_mut().zip(src_row) {
+                    *dst = v * v;
+                }
+            }
+            blocks.push((BlockId::new(i, j), blk));
+        }
+        let secs = sw.secs();
+        compute_real += secs;
+        panel_tasks.push(crate::engine::clock::Task { node: ctx.node_of(i, q), duration: secs });
+    }
+
+    // Account the panel computation like any other stage: measured
+    // durations replay onto the virtual cluster, plus the driver's
+    // per-task scheduling charge.
+    let virtual_span = ctx.run_stage(&panel_tasks);
+    let driver_time = ctx.charge_driver("geo:dijkstra", q, 0);
+    ctx.push_metrics(crate::engine::metrics::StageMetrics {
+        name: "geo:dijkstra".to_string(),
+        tasks: q,
+        compute_real,
+        virtual_span,
+        shuffle_bytes: 0,
+        network_time: 0.0,
+        driver_time,
+    });
+
+    let parts = default_partitions(q, ctx.cluster().total_cores());
+    let part: Arc<dyn crate::engine::Partitioner> =
+        Arc::new(UpperTriangularPartitioner::new(q, parts));
+    let a = ctx.parallelize("geo:blocks", blocks, part);
+    a.persist("G")?;
+    Ok(a)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -232,5 +326,64 @@ mod tests {
         let (x, got) = engine_geodesics(42, 5, 6, 3);
         let want = reference_geodesics(&x, 6);
         assert_close(&got, &want, 1e-9);
+    }
+
+    /// Sparse path: kNN lists -> CSR -> pooled Dijkstra panels, densified
+    /// back to geodesic distances (square-rooted).
+    fn sparse_geodesics(n: usize, b: usize, k: usize, workers: usize) -> (Matrix, Matrix) {
+        let ds = swiss_roll::euler_isometric(n, 21);
+        let ctx = SparkContext::new(ClusterConfig {
+            parallelism: workers,
+            ..ClusterConfig::local()
+        });
+        let cfg = IsomapConfig { k, block: b, ..Default::default() };
+        let kl = knn::build_lists(&ctx, &ds.points, &cfg, &Backend::Native).unwrap();
+        let a = solve_sparse(&ctx, &kl.lists, n, &cfg).unwrap();
+        let dense = crate::coordinator::dense_from_blocks(&a, n, b).map(|v| v.sqrt());
+        (ds.points, dense)
+    }
+
+    #[test]
+    fn sparse_matches_dense_fw() {
+        // Same seed/config as `engine_geodesics`, so the two engine paths
+        // are compared on the identical kNN graph.
+        let (_, dense_fw) = engine_geodesics(50, 16, 6, 10);
+        let (x, sparse) = sparse_geodesics(50, 16, 6, 1);
+        assert_close(&sparse, &dense_fw, 1e-9);
+        let want = reference_geodesics(&x, 6);
+        assert_close(&sparse, &want, 1e-9);
+    }
+
+    #[test]
+    fn sparse_pool_size_is_invisible() {
+        let (_, serial) = sparse_geodesics(53, 16, 6, 1);
+        for workers in [2, 4, 7] {
+            let (_, pooled) = sparse_geodesics(53, 16, 6, workers);
+            assert_close(&pooled, &serial, 0.0); // bitwise
+        }
+    }
+
+    #[test]
+    fn sparse_rejects_disconnected_graph() {
+        // Two far-apart blobs at tiny k: the dense path reports this at
+        // centering; the sparse path must bail up front, with context.
+        let x = crate::data::clusters::gaussian_clusters(30, 3, 2, 0.01, 3).points;
+        let ctx = SparkContext::new(ClusterConfig::local());
+        let cfg = IsomapConfig { k: 2, block: 8, ..Default::default() };
+        let kl = knn::build_lists(&ctx, &x, &cfg, &Backend::Native).unwrap();
+        let err = solve_sparse(&ctx, &kl.lists, 30, &cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("disconnected"), "{err:#}");
+    }
+
+    #[test]
+    fn sparse_metrics_account_the_geo_stage() {
+        let ds = swiss_roll::euler_isometric(40, 21);
+        let ctx = SparkContext::new(ClusterConfig::local());
+        let cfg = IsomapConfig { k: 6, block: 16, ..Default::default() };
+        let kl = knn::build_lists(&ctx, &ds.points, &cfg, &Backend::Native).unwrap();
+        let _ = solve_sparse(&ctx, &kl.lists, 40, &cfg).unwrap();
+        let geo = ctx.stage_aggregate("geo");
+        assert!(geo.tasks >= kl.q, "geo stage tasks = {}", geo.tasks);
+        assert!(geo.compute_real >= 0.0);
     }
 }

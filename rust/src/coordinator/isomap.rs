@@ -8,7 +8,7 @@
 
 use super::{centering, eigen, knn, num_blocks};
 use crate::backend::Backend;
-use crate::config::{ClusterConfig, IsomapConfig};
+use crate::config::{ClusterConfig, GeodesicsMode, IsomapConfig};
 use crate::engine::metrics::OffloadOpSnapshot;
 use crate::engine::SparkContext;
 use crate::linalg::Matrix;
@@ -28,6 +28,9 @@ pub struct IsomapOutput {
     pub q: usize,
     /// Connected components of the kNN graph (must be 1 for a valid run).
     pub graph_components: usize,
+    /// Which geodesics path ran (`dense-fw` blocked Floyd–Warshall or
+    /// `sparse-dijkstra` over the CSR graph).
+    pub geodesics: GeodesicsMode,
     /// Virtual wall-clock of the simulated cluster, seconds.
     pub virtual_secs: f64,
     /// Total bytes shuffled across the simulated network.
@@ -60,12 +63,25 @@ pub fn run_with(
     cfg.validate(n)?;
     let ctx = SparkContext::new(cluster.clone());
 
-    // Stage 1: kNN + neighborhood graph.
-    let kg = knn::build(&ctx, x, cfg, backend).context("kNN stage")?;
-    let graph_components = crate::eval::components(&kg.lists);
-
-    // Stage 2: APSP -> squared-geodesic feature matrix.
-    let a = super::apsp::solve(kg.graph, kg.q, cfg, backend).context("APSP stage")?;
+    // Stages 1 + 2: kNN, then the squared-geodesic feature matrix through
+    // the configured path. Dense: neighborhood-graph blocks -> blocked
+    // Floyd–Warshall. Sparse: kNN lists only -> CSR -> pooled multi-source
+    // Dijkstra row panels (the dense APSP RDD is never built).
+    let (graph_components, a) = match cfg.geodesics {
+        GeodesicsMode::DenseFw => {
+            let kg = knn::build(&ctx, x, cfg, backend).context("kNN stage")?;
+            let components = crate::eval::components(&kg.lists);
+            let a = super::apsp::solve(kg.graph, kg.q, cfg, backend).context("APSP stage")?;
+            (components, a)
+        }
+        GeodesicsMode::SparseDijkstra => {
+            let kl = knn::build_lists(&ctx, x, cfg, backend).context("kNN stage")?;
+            let components = crate::eval::components(&kl.lists);
+            let a = super::apsp::solve_sparse(&ctx, &kl.lists, n, cfg)
+                .context("sparse geodesics stage")?;
+            (components, a)
+        }
+    };
 
     // Stage 3: double centering.
     let (centered, _mu) = centering::center(a, n, cfg.block, backend).context("centering stage")?;
@@ -92,10 +108,12 @@ pub fn run_with(
         eigen_converged: eig.converged,
         q: num_blocks(n, cfg.block),
         graph_components,
+        geodesics: cfg.geodesics,
         virtual_secs: ctx.virtual_now(),
         shuffle_bytes: ctx.total_shuffle_bytes(),
         compute_secs: ctx.total_compute_real(),
-        metrics_table: ctx.metrics_report(&["knn", "apsp", "center", "eigen", "checkpoint"]),
+        metrics_table: ctx
+            .metrics_report(&["knn", "geo", "apsp", "center", "eigen", "checkpoint"]),
         offload: backend.offload_snapshot(),
     })
 }
@@ -153,5 +171,28 @@ mod tests {
         let ds = swiss_roll::euler_isometric(20, 1);
         let cfg = IsomapConfig { k: 25, ..Default::default() };
         assert!(run(&ds.points, &cfg, &ClusterConfig::local()).is_err());
+    }
+
+    #[test]
+    fn sparse_mode_matches_dense_mode() {
+        // The two geodesics paths compute the same feature matrix up to
+        // floating-point path-association, so the embeddings must agree to
+        // high precision (and the sparse run must report its path and a
+        // populated `geo` stage in place of `apsp` work).
+        let ds = swiss_roll::euler_isometric(120, 31);
+        let dense_cfg = IsomapConfig { k: 8, d: 2, block: 32, ..Default::default() };
+        let sparse_cfg = IsomapConfig {
+            geodesics: GeodesicsMode::SparseDijkstra,
+            ..dense_cfg.clone()
+        };
+        let dense = run(&ds.points, &dense_cfg, &ClusterConfig::local()).unwrap();
+        let sparse = run(&ds.points, &sparse_cfg, &ClusterConfig::local()).unwrap();
+        assert_eq!(dense.geodesics, GeodesicsMode::DenseFw);
+        assert_eq!(sparse.geodesics, GeodesicsMode::SparseDijkstra);
+        let err = procrustes(&dense.embedding, &sparse.embedding);
+        assert!(err < 1e-8, "dense vs sparse procrustes = {err}");
+        assert!(sparse.metrics_table.contains("geo"));
+        // No APSP shuffle rounds ran on the sparse path.
+        assert_eq!(sparse.graph_components, 1);
     }
 }

@@ -37,8 +37,110 @@ pub struct KnnGraph {
     pub lists: Vec<Vec<Neighbor>>,
 }
 
-/// Run the blocked kNN stage.
-pub fn build(ctx: &SparkContext, x: &Matrix, cfg: &IsomapConfig, backend: &Backend) -> Result<KnnGraph> {
+/// Output of the lists-only kNN stage ([`build_lists`]): the global kNN
+/// lists without the dense blocked neighborhood graph — the input the
+/// sparse-geodesics path (`crate::graph`: CSR + pooled multi-source
+/// Dijkstra) consumes. The distance blocks `M` are still computed (that
+/// is the paper's kNN algorithm) but are dropped as soon as the lists are
+/// merged; the ∞-filled graph blocks `G` are never built.
+pub struct KnnLists {
+    /// Global kNN lists (`n·k` entries).
+    pub lists: Vec<Vec<Neighbor>>,
+    /// Logical block count `q`.
+    pub q: usize,
+}
+
+/// Intermediates shared by [`build`] and [`build_lists`]: the pipeline up
+/// to (and including) the driver-side assembly of the global lists.
+struct ListsStage {
+    /// Distance blocks `M` (the dense path reuses their buffers as graph
+    /// storage).
+    m: BlockRdd<Matrix>,
+    /// Per-point merged top-k lists, still distributed.
+    knn_lists: BlockRdd<Vec<Neighbor>>,
+    /// Collected global lists.
+    lists: Vec<Vec<Neighbor>>,
+    q: usize,
+}
+
+/// Run the blocked kNN stage through the neighborhood-graph fill.
+pub fn build(
+    ctx: &SparkContext,
+    x: &Matrix,
+    cfg: &IsomapConfig,
+    backend: &Backend,
+) -> Result<KnnGraph> {
+    let n = x.nrows();
+    let b = cfg.block;
+    let st = lists_stage(ctx, x, cfg, backend)?;
+
+    // Neighborhood-graph fill: reuse M's blocks, overwrite with ∞, set kNN
+    // distances symmetrically (edge (i,j) lands in the upper block).
+    let edges = st.knn_lists.flat_map("knn:edges", |id, list| {
+        let (s, _) = block_range(n, b, id.i);
+        let gi = s + id.j;
+        let mut out = Vec::with_capacity(list.len());
+        for &(dist, gj) in list {
+            let (bi, li) = (gi / b, gi % b);
+            let (bj, lj) = (gj / b, gj % b);
+            if bi <= bj {
+                out.push((BlockId::new(bi, bj), (li, lj, dist)));
+            } else {
+                out.push((BlockId::new(bj, bi), (lj, li, dist)));
+            }
+        }
+        out
+    });
+    let graph = st.m.join_update("knn:graph_fill", edges, |id, blk, es| {
+        // Every block is rewritten wholesale; M's buffers are uniquely
+        // held here, so make_mut recycles them in place without a copy.
+        let blk = blk.make_mut();
+        for v in blk.as_mut_slice() {
+            *v = f64::INFINITY;
+        }
+        if id.i == id.j {
+            for r in 0..blk.nrows() {
+                blk[(r, r)] = 0.0;
+            }
+        }
+        for (li, lj, d) in es {
+            if d < blk[(li, lj)] {
+                blk[(li, lj)] = d;
+                if id.i == id.j {
+                    blk[(lj, li)] = d;
+                }
+            }
+        }
+    });
+    graph.persist("G")?;
+    ctx.clear_resident("M");
+
+    Ok(KnnGraph { graph, q: st.q, lists: st.lists })
+}
+
+/// Run the blocked kNN stage but stop at the global lists: no `knn:edges`
+/// shuffle, no graph-fill stage, and the distance blocks are unpersisted
+/// immediately — the dense blocked neighborhood graph is never
+/// materialized. This is the front end of the sparse-geodesics path.
+pub fn build_lists(
+    ctx: &SparkContext,
+    x: &Matrix,
+    cfg: &IsomapConfig,
+    backend: &Backend,
+) -> Result<KnnLists> {
+    let st = lists_stage(ctx, x, cfg, backend)?;
+    ctx.clear_resident("M");
+    Ok(KnnLists { lists: st.lists, q: st.q })
+}
+
+/// The shared kNN front end: distance blocks, per-block top-k, global
+/// list merge, and the driver-side lists assembly.
+fn lists_stage(
+    ctx: &SparkContext,
+    x: &Matrix,
+    cfg: &IsomapConfig,
+    backend: &Backend,
+) -> Result<ListsStage> {
     let n = x.nrows();
     let b = cfg.block;
     let q = num_blocks(n, b);
@@ -156,48 +258,7 @@ pub fn build(ctx: &SparkContext, x: &Matrix, cfg: &IsomapConfig, backend: &Backe
         });
     }
 
-    // Neighborhood-graph fill: reuse M's blocks, overwrite with ∞, set kNN
-    // distances symmetrically (edge (i,j) lands in the upper block).
-    let edges = knn_lists.flat_map("knn:edges", |id, list| {
-        let (s, _) = block_range(n, b, id.i);
-        let gi = s + id.j;
-        let mut out = Vec::with_capacity(list.len());
-        for &(dist, gj) in list {
-            let (bi, li) = (gi / b, gi % b);
-            let (bj, lj) = (gj / b, gj % b);
-            if bi <= bj {
-                out.push((BlockId::new(bi, bj), (li, lj, dist)));
-            } else {
-                out.push((BlockId::new(bj, bi), (lj, li, dist)));
-            }
-        }
-        out
-    });
-    let graph = m.join_update("knn:graph_fill", edges, |id, blk, es| {
-        // Every block is rewritten wholesale; M's buffers are uniquely
-        // held here, so make_mut recycles them in place without a copy.
-        let blk = blk.make_mut();
-        for v in blk.as_mut_slice() {
-            *v = f64::INFINITY;
-        }
-        if id.i == id.j {
-            for r in 0..blk.nrows() {
-                blk[(r, r)] = 0.0;
-            }
-        }
-        for (li, lj, d) in es {
-            if d < blk[(li, lj)] {
-                blk[(li, lj)] = d;
-                if id.i == id.j {
-                    blk[(lj, li)] = d;
-                }
-            }
-        }
-    });
-    graph.persist("G")?;
-    ctx.clear_resident("M");
-
-    Ok(KnnGraph { graph, q, lists })
+    Ok(ListsStage { m, knn_lists, lists, q })
 }
 
 #[cfg(test)]
@@ -273,6 +334,30 @@ mod tests {
             let exp: Vec<usize> = want[i].iter().map(|&(_, j)| j).collect();
             assert_eq!(got, exp, "point {i}");
         }
+    }
+
+    #[test]
+    fn build_lists_matches_full_build() {
+        // The lists-only front end must produce exactly the lists the full
+        // build does — it is the same pipeline, stopped before graph-fill.
+        let ds = swiss_roll::euler_isometric(60, 11);
+        let cfg = IsomapConfig { k: 5, block: 16, ..Default::default() };
+        let full = build(
+            &SparkContext::new(ClusterConfig::local()),
+            &ds.points,
+            &cfg,
+            &Backend::Native,
+        )
+        .unwrap();
+        let lists_only = build_lists(
+            &SparkContext::new(ClusterConfig::local()),
+            &ds.points,
+            &cfg,
+            &Backend::Native,
+        )
+        .unwrap();
+        assert_eq!(lists_only.q, full.q);
+        assert_eq!(lists_only.lists, full.lists);
     }
 
     #[test]

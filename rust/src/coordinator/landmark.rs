@@ -2,12 +2,16 @@
 //! contrasts with (§V, de Silva & Tenenbaum): `m` landmarks are embedded
 //! by exact MDS on their geodesic distances; the remaining points are
 //! placed by distance-based triangulation. Shares the distributed kNN
-//! stage with the exact pipeline; the `m × n` geodesics come from
-//! per-landmark Dijkstra over the (sparse) neighborhood graph.
+//! stage with the exact pipeline; the `m × n` geodesics come from the
+//! pooled multi-source Dijkstra over the CSR neighborhood graph
+//! ([`crate::graph`]) — past the kNN stage (whose blocked distance
+//! computation is still all-pairs), the only dense state is the
+//! `m × n` landmark table.
 
 use crate::backend::Backend;
 use crate::config::{ClusterConfig, IsomapConfig};
 use crate::engine::SparkContext;
+use crate::graph::{self, CsrGraph};
 use crate::linalg::{jacobi, Matrix};
 use crate::util::Rng;
 use anyhow::{bail, Context, Result};
@@ -38,9 +42,10 @@ pub fn run(
     }
     let ctx = SparkContext::new(cluster.clone());
 
-    // Distributed kNN stage (same as exact Isomap).
-    let kg = super::knn::build(&ctx, x, cfg, backend).context("kNN stage")?;
-    if crate::eval::components(&kg.lists) != 1 {
+    // Distributed kNN stage, lists only — L-Isomap never needs the dense
+    // blocked neighborhood graph, so it is never built.
+    let kl = super::knn::build_lists(&ctx, x, cfg, backend).context("kNN stage")?;
+    if crate::eval::components(&kl.lists) != 1 {
         bail!("kNN graph disconnected; increase k");
     }
 
@@ -48,27 +53,12 @@ pub fn run(
     let mut rng = Rng::seed(cfg.seed);
     let landmarks = rng.sample_indices(n, m);
 
-    // Sparse symmetric adjacency from the kNN lists.
-    let mut adj: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
-    for (i, list) in kg.lists.iter().enumerate() {
-        for &(d, j) in list {
-            adj[i].push((j, d));
-            adj[j].push((i, d));
-        }
-    }
-
-    // Geodesics landmark -> all points (m Dijkstra runs; the O(n³) APSP is
-    // exactly what L-Isomap avoids).
-    let mut delta = Matrix::zeros(m, n); // squared distances
-    for (li, &l) in landmarks.iter().enumerate() {
-        let dist = dijkstra_sparse(&adj, l);
-        for (j, dj) in dist.iter().enumerate() {
-            if !dj.is_finite() {
-                bail!("landmark {l} cannot reach point {j}");
-            }
-            delta[(li, j)] = dj * dj;
-        }
-    }
+    // Geodesics landmark -> all points: m pooled Dijkstra sources over the
+    // CSR graph (the O(n³) APSP is exactly what L-Isomap avoids; past the
+    // kNN stage the only dense state is the m × n landmark table).
+    let csr = CsrGraph::from_knn_lists(&kl.lists).context("CSR construction")?;
+    let delta = graph::geodesics_squared(&csr, &landmarks, ctx.parallelism())
+        .context("landmark geodesics")?;
 
     // MDS on the m×m landmark sub-matrix.
     let mut dl = Matrix::zeros(m, m);
@@ -108,42 +98,6 @@ pub fn run(
 /// Raw squared landmark-landmark distance (helper for the mean row).
 fn dl_raw(delta: &Matrix, landmarks: &[usize], a: usize, b: usize) -> f64 {
     delta[(a, landmarks[b])]
-}
-
-fn dijkstra_sparse(adj: &[Vec<(usize, f64)>], src: usize) -> Vec<f64> {
-    use std::cmp::Ordering;
-    use std::collections::BinaryHeap;
-    #[derive(PartialEq)]
-    struct Item(f64, usize);
-    impl Eq for Item {}
-    impl Ord for Item {
-        fn cmp(&self, o: &Self) -> Ordering {
-            o.0.partial_cmp(&self.0).unwrap_or(Ordering::Equal)
-        }
-    }
-    impl PartialOrd for Item {
-        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
-            Some(self.cmp(o))
-        }
-    }
-    let n = adj.len();
-    let mut dist = vec![f64::INFINITY; n];
-    let mut heap = BinaryHeap::new();
-    dist[src] = 0.0;
-    heap.push(Item(0.0, src));
-    while let Some(Item(d, u)) = heap.pop() {
-        if d > dist[u] {
-            continue;
-        }
-        for &(v, w) in &adj[u] {
-            let nd = d + w;
-            if nd < dist[v] {
-                dist[v] = nd;
-                heap.push(Item(nd, v));
-            }
-        }
-    }
-    dist
 }
 
 #[cfg(test)]

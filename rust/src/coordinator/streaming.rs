@@ -15,6 +15,7 @@
 
 use crate::backend::Backend;
 use crate::config::{ClusterConfig, IsomapConfig};
+use crate::graph::{self, CsrGraph};
 use crate::linalg::{jacobi, Matrix};
 use crate::model::FittedModel;
 use crate::util::Rng;
@@ -24,6 +25,7 @@ use anyhow::{bail, Context, Result};
 /// wrapped around the serializable [`FittedModel`].
 pub struct StreamingModel {
     model: FittedModel,
+    fit_report: String,
 }
 
 impl std::ops::Deref for StreamingModel {
@@ -49,32 +51,26 @@ impl StreamingModel {
             bail!("landmark count m={m} out of range");
         }
         let ctx = crate::engine::SparkContext::new(cluster.clone());
-        let kg = super::knn::build(&ctx, x, cfg, backend).context("kNN stage")?;
-        if crate::eval::components(&kg.lists) != 1 {
+        // Lists-only kNN: the fit needs the neighbor lists, never the
+        // dense blocked neighborhood graph.
+        let kl = super::knn::build_lists(&ctx, x, cfg, backend).context("kNN stage")?;
+        if crate::eval::components(&kl.lists) != 1 {
             bail!("batch kNN graph disconnected; increase k");
-        }
-
-        // Symmetric sparse adjacency.
-        let mut adj: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
-        for (i, list) in kg.lists.iter().enumerate() {
-            for &(dist, j) in list {
-                adj[i].push((j, dist));
-                adj[j].push((i, dist));
-            }
         }
 
         let mut rng = Rng::seed(cfg.seed);
         let landmarks = rng.sample_indices(n, m);
-        let mut delta = Matrix::zeros(m, n);
-        for (li, &l) in landmarks.iter().enumerate() {
-            let dist = dijkstra(&adj, l);
-            for (j, dj) in dist.iter().enumerate() {
-                if !dj.is_finite() {
-                    bail!("landmark {l} cannot reach point {j}");
-                }
-                delta[(li, j)] = dj * dj;
-            }
-        }
+        // Landmark geodesics: m pooled Dijkstra sources over the CSR
+        // graph — past the kNN stage, the only dense state is the m × n
+        // landmark table.
+        let csr = CsrGraph::from_knn_lists(&kl.lists).context("CSR construction")?;
+        let delta = graph::geodesics_squared(&csr, &landmarks, ctx.parallelism())
+            .context("landmark geodesics")?;
+        let fit_report = format!(
+            "geodesics: sparse-dijkstra (CSR: {} arcs over {n} points; {m} pooled sources)\n{}",
+            csr.num_edges(),
+            ctx.metrics_report(&["knn"]),
+        );
 
         // Landmark MDS.
         let mut dl = Matrix::zeros(m, m);
@@ -110,7 +106,14 @@ impl StreamingModel {
             let y = model.triangulate(&di);
             model.batch_embedding.row_mut(i).copy_from_slice(&y);
         }
-        Ok(StreamingModel { model })
+        Ok(StreamingModel { model, fit_report })
+    }
+
+    /// Human-readable summary of how the fit was computed: which
+    /// geodesics path ran (always the CSR sparse path) and the kNN stage
+    /// metrics. Surfaced by `isospark fit` / `isospark stream`.
+    pub fn fit_report(&self) -> &str {
+        &self.fit_report
     }
 
     /// Borrow the serializable fit-state.
@@ -122,42 +125,6 @@ impl StreamingModel {
     pub fn into_model(self) -> FittedModel {
         self.model
     }
-}
-
-fn dijkstra(adj: &[Vec<(usize, f64)>], src: usize) -> Vec<f64> {
-    use std::cmp::Ordering;
-    use std::collections::BinaryHeap;
-    #[derive(PartialEq)]
-    struct Item(f64, usize);
-    impl Eq for Item {}
-    impl Ord for Item {
-        fn cmp(&self, o: &Self) -> Ordering {
-            o.0.partial_cmp(&self.0).unwrap_or(Ordering::Equal)
-        }
-    }
-    impl PartialOrd for Item {
-        fn partial_cmp(&self, o: &Self) -> Option<Ordering> {
-            Some(self.cmp(o))
-        }
-    }
-    let n = adj.len();
-    let mut dist = vec![f64::INFINITY; n];
-    let mut heap = BinaryHeap::new();
-    dist[src] = 0.0;
-    heap.push(Item(0.0, src));
-    while let Some(Item(d, u)) = heap.pop() {
-        if d > dist[u] {
-            continue;
-        }
-        for &(v, w) in &adj[u] {
-            let nd = d + w;
-            if nd < dist[v] {
-                dist[v] = nd;
-                heap.push(Item(nd, v));
-            }
-        }
-    }
-    dist
 }
 
 #[cfg(test)]
@@ -180,6 +147,9 @@ mod tests {
         let (model, ds) = fitted(600, 100, 23);
         let err = procrustes(ds.ground_truth.as_ref().unwrap(), &model.batch_embedding);
         assert!(err < 0.05, "batch procrustes = {err}");
+        // The fit reports its geodesics path and kNN stage metrics.
+        assert!(model.fit_report().contains("sparse-dijkstra"), "{}", model.fit_report());
+        assert!(model.fit_report().contains("knn"));
     }
 
     #[test]

@@ -26,7 +26,7 @@
 pub mod block;
 pub mod clock;
 pub mod context;
-pub(crate) mod executor;
+pub mod executor;
 pub mod fault;
 pub mod lineage;
 pub mod metrics;

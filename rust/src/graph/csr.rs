@@ -1,0 +1,242 @@
+//! Immutable CSR (compressed sparse row) neighborhood graph.
+//!
+//! Built once from the kNN stage's per-point neighbor lists and never
+//! mutated: `row_ptr` (length `n + 1`) delimits each vertex's adjacency
+//! span inside the parallel `cols` / `weights` arrays. Edges are
+//! symmetrized (kNN lists are directed; the geodesic graph is not),
+//! deduplicated keeping the smallest weight, and column-sorted per row —
+//! so construction is deterministic and adjacency scans are contiguous,
+//! cache-friendly streams. Column indices are `u32` (half the memory of
+//! `usize` at the scales this path exists for).
+
+use crate::kernels::kselect::Neighbor;
+use anyhow::{bail, Result};
+
+/// An immutable, symmetrized kNN neighborhood graph in CSR form.
+///
+/// Memory: `n·4 + nnz·(4 + 8)` bytes plus the row pointers — for `n`
+/// points at `k` neighbors that is `O(n·k)`, against `O(n²)` for the
+/// dense blocked graph the Floyd–Warshall path operates on.
+#[derive(Clone, Debug)]
+pub struct CsrGraph {
+    n: usize,
+    /// `row_ptr[v]..row_ptr[v + 1]` spans vertex `v`'s adjacency.
+    row_ptr: Vec<usize>,
+    /// Neighbor vertex ids, column-sorted within each row.
+    cols: Vec<u32>,
+    /// Edge weights, parallel to `cols`.
+    weights: Vec<f64>,
+}
+
+impl CsrGraph {
+    /// Build from per-point kNN lists (`lists[i]` = the `(distance,
+    /// neighbor)` pairs of point `i`, as produced by the distributed kNN
+    /// stage). Lists may be ragged — points can carry fewer than `k`
+    /// entries. Every directed list edge `(i, j)` contributes both arcs
+    /// `i → j` and `j → i`; duplicate arcs (mutual neighbors) collapse to
+    /// the minimum weight.
+    pub fn from_knn_lists(lists: &[Vec<Neighbor>]) -> Result<CsrGraph> {
+        let n = lists.len();
+        if n > u32::MAX as usize {
+            bail!("CSR graph: {n} points exceed the u32 column-index range");
+        }
+        // Pass 1: symmetrized degree count.
+        let mut deg = vec![0usize; n];
+        for (i, list) in lists.iter().enumerate() {
+            for &(w, j) in list {
+                if j >= n {
+                    bail!("CSR graph: point {i} lists neighbor {j}, but n = {n}");
+                }
+                if !w.is_finite() || w < 0.0 {
+                    bail!("CSR graph: edge ({i}, {j}) has invalid weight {w}");
+                }
+                deg[i] += 1;
+                deg[j] += 1;
+            }
+        }
+        let mut row_ptr = vec![0usize; n + 1];
+        for i in 0..n {
+            row_ptr[i + 1] = row_ptr[i] + deg[i];
+        }
+        // Pass 2: scatter both arc directions.
+        let mut cursor = row_ptr.clone();
+        let mut cols = vec![0u32; row_ptr[n]];
+        let mut weights = vec![0.0f64; row_ptr[n]];
+        for (i, list) in lists.iter().enumerate() {
+            for &(w, j) in list {
+                cols[cursor[i]] = j as u32;
+                weights[cursor[i]] = w;
+                cursor[i] += 1;
+                cols[cursor[j]] = i as u32;
+                weights[cursor[j]] = w;
+                cursor[j] += 1;
+            }
+        }
+        // Pass 3: per-row sort by (column, weight) and dedup keeping the
+        // minimum weight, compacting the arrays in place. The write head
+        // never catches the read head (rows only shrink), and rows are
+        // staged through a reused scratch buffer so each row is sorted
+        // independently of its final position.
+        let mut scratch: Vec<(u32, f64)> = Vec::new();
+        let mut write = 0usize;
+        let mut out_ptr = vec![0usize; n + 1];
+        for i in 0..n {
+            let (s, e) = (row_ptr[i], row_ptr[i + 1]);
+            scratch.clear();
+            scratch.extend(cols[s..e].iter().copied().zip(weights[s..e].iter().copied()));
+            scratch.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(a.1.total_cmp(&b.1)));
+            let mut last: Option<u32> = None;
+            for &(c, w) in &scratch {
+                if last == Some(c) {
+                    continue; // duplicate arc: the sort put the minimum first
+                }
+                last = Some(c);
+                cols[write] = c;
+                weights[write] = w;
+                write += 1;
+            }
+            out_ptr[i + 1] = write;
+        }
+        cols.truncate(write);
+        weights.truncate(write);
+        cols.shrink_to_fit();
+        weights.shrink_to_fit();
+        Ok(CsrGraph { n, row_ptr: out_ptr, cols, weights })
+    }
+
+    /// Number of vertices.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Number of directed arcs (twice the undirected edge count).
+    pub fn num_edges(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Adjacency of vertex `u` as parallel `(columns, weights)` slices,
+    /// column-sorted.
+    pub fn neighbors(&self, u: usize) -> (&[u32], &[f64]) {
+        let (s, e) = (self.row_ptr[u], self.row_ptr[u + 1]);
+        (&self.cols[s..e], &self.weights[s..e])
+    }
+
+    /// Number of connected components (iterative DFS over the CSR arrays).
+    pub fn components(&self) -> usize {
+        let mut seen = vec![false; self.n];
+        let mut stack: Vec<usize> = Vec::new();
+        let mut count = 0usize;
+        for start in 0..self.n {
+            if seen[start] {
+                continue;
+            }
+            count += 1;
+            seen[start] = true;
+            stack.push(start);
+            while let Some(u) = stack.pop() {
+                let (cols, _) = self.neighbors(u);
+                for &v in cols {
+                    let v = v as usize;
+                    if !seen[v] {
+                        seen[v] = true;
+                        stack.push(v);
+                    }
+                }
+            }
+        }
+        count
+    }
+
+    /// Error unless the graph is a single connected component — geodesics
+    /// between components are infinite, which the dense path reports at
+    /// the centering stage; the sparse path reports it up front.
+    pub fn require_connected(&self) -> Result<()> {
+        let c = self.components();
+        if c != 1 {
+            bail!("kNN graph disconnected ({c} components); increase k");
+        }
+        Ok(())
+    }
+
+    /// Resident bytes of the CSR arrays (diagnostics / memory model).
+    pub fn nbytes(&self) -> u64 {
+        (self.row_ptr.len() * 8 + self.cols.len() * 4 + self.weights.len() * 8) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lists(edges: &[(usize, usize, f64)], n: usize) -> Vec<Vec<Neighbor>> {
+        let mut out = vec![Vec::new(); n];
+        for &(i, j, w) in edges {
+            out[i].push((w, j));
+        }
+        out
+    }
+
+    #[test]
+    fn symmetrizes_and_sorts() {
+        // Directed list edges 0->2 and 0->1; CSR must carry both arcs of
+        // each, column-sorted.
+        let g = CsrGraph::from_knn_lists(&lists(&[(0, 2, 2.0), (0, 1, 1.0)], 3)).unwrap();
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.num_edges(), 4);
+        let (c0, w0) = g.neighbors(0);
+        assert_eq!(c0, &[1, 2]);
+        assert_eq!(w0, &[1.0, 2.0]);
+        let (c1, w1) = g.neighbors(1);
+        assert_eq!((c1, w1), (&[0u32][..], &[1.0][..]));
+        let (c2, w2) = g.neighbors(2);
+        assert_eq!((c2, w2), (&[0u32][..], &[2.0][..]));
+    }
+
+    #[test]
+    fn dedups_mutual_edges_keeping_min() {
+        // 0 lists 1 at 1.5 and 1 lists 0 at 1.0 (asymmetric top-k raggedness
+        // cannot produce different distances, but the CSR must be robust to
+        // it): one arc per direction survives, at the smaller weight.
+        let g = CsrGraph::from_knn_lists(&lists(&[(0, 1, 1.5), (1, 0, 1.0)], 2)).unwrap();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbors(0).1, &[1.0]);
+        assert_eq!(g.neighbors(1).1, &[1.0]);
+    }
+
+    #[test]
+    fn ragged_lists_and_isolated_points() {
+        // Ragged: point 0 has two neighbors, 1 has none of its own, 3 is
+        // fully isolated.
+        let g =
+            CsrGraph::from_knn_lists(&lists(&[(0, 1, 1.0), (0, 2, 2.0), (2, 1, 0.5)], 4)).unwrap();
+        let (c3, w3) = g.neighbors(3);
+        assert!(c3.is_empty() && w3.is_empty());
+        assert_eq!(g.neighbors(1).0, &[0, 2]);
+        assert_eq!(g.components(), 2); // {0,1,2} and {3}
+        let err = g.require_connected().unwrap_err();
+        assert!(format!("{err:#}").contains("disconnected"), "{err:#}");
+    }
+
+    #[test]
+    fn connected_passes() {
+        let g = CsrGraph::from_knn_lists(&lists(&[(0, 1, 1.0), (1, 2, 1.0)], 3)).unwrap();
+        assert_eq!(g.components(), 1);
+        assert!(g.require_connected().is_ok());
+    }
+
+    #[test]
+    fn rejects_bad_input() {
+        assert!(CsrGraph::from_knn_lists(&lists(&[(0, 5, 1.0)], 2)).is_err()); // j out of range
+        assert!(CsrGraph::from_knn_lists(&lists(&[(0, 1, f64::NAN)], 2)).is_err());
+        assert!(CsrGraph::from_knn_lists(&lists(&[(0, 1, f64::INFINITY)], 2)).is_err());
+        assert!(CsrGraph::from_knn_lists(&lists(&[(0, 1, -1.0)], 2)).is_err());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CsrGraph::from_knn_lists(&[]).unwrap();
+        assert_eq!(g.n(), 0);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.components(), 0);
+    }
+}

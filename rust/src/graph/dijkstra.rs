@@ -1,0 +1,222 @@
+//! Batched multi-source Dijkstra over a [`CsrGraph`].
+//!
+//! One source = one binary-heap Dijkstra writing its distance row
+//! directly into the caller's buffer. [`multi_source`] fans a batch of
+//! sources out over the engine's worker pool: sources are independent,
+//! each runs the exact same serial code against the immutable CSR, and
+//! every worker reuses a thread-local heap ([`DijkstraScratch`]) across
+//! the sources it claims — so the output is **bit-identical for any
+//! worker count** (the property the determinism suite enforces for every
+//! pooled path in the crate).
+//!
+//! Cost per source is `O((n + E) log n)` with `E = O(n·k)` — against the
+//! `O(n²)` per-row share of the dense blocked Floyd–Warshall, this is the
+//! path that stays feasible when an `n × n` matrix no longer fits.
+
+use super::csr::CsrGraph;
+use crate::engine::executor::{resolve_workers, run_tasks};
+use crate::linalg::Matrix;
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Reusable per-thread Dijkstra state: the binary heap. (The distance
+/// array itself is the caller's output row, so the only allocation worth
+/// keeping warm between sources is the heap's backing buffer.)
+#[derive(Debug, Default)]
+pub struct DijkstraScratch {
+    heap: BinaryHeap<HeapEntry>,
+}
+
+impl DijkstraScratch {
+    /// Fresh scratch with an empty heap.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Min-heap entry; `BinaryHeap` is a max-heap, so the ordering is
+/// reversed. Distances are finite and non-negative (CSR construction
+/// rejects anything else), and ties break on the node id, so the order is
+/// total and deterministic.
+#[derive(Debug, PartialEq)]
+struct HeapEntry {
+    dist: f64,
+    node: u32,
+}
+
+impl Eq for HeapEntry {}
+
+impl Ord for HeapEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.dist.total_cmp(&self.dist).then(other.node.cmp(&self.node))
+    }
+}
+
+impl PartialOrd for HeapEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Single-source shortest paths from `src`, written into `dist`
+/// (`dist.len()` must equal the vertex count; unreachable vertices keep
+/// `+∞`). The scratch heap is cleared on entry and reusable afterwards.
+pub fn sssp_into(g: &CsrGraph, src: usize, scratch: &mut DijkstraScratch, dist: &mut [f64]) {
+    assert_eq!(dist.len(), g.n(), "distance buffer length must equal the vertex count");
+    assert!(src < g.n(), "source {src} out of range (n = {})", g.n());
+    dist.fill(f64::INFINITY);
+    dist[src] = 0.0;
+    scratch.heap.clear();
+    scratch.heap.push(HeapEntry { dist: 0.0, node: src as u32 });
+    while let Some(HeapEntry { dist: d, node: u }) = scratch.heap.pop() {
+        if d > dist[u as usize] {
+            continue; // stale entry: u was settled through a shorter path
+        }
+        let (cols, weights) = g.neighbors(u as usize);
+        for (&v, &w) in cols.iter().zip(weights) {
+            let nd = d + w;
+            if nd < dist[v as usize] {
+                dist[v as usize] = nd;
+                scratch.heap.push(HeapEntry { dist: nd, node: v });
+            }
+        }
+    }
+}
+
+thread_local! {
+    /// Per-thread scratch for [`multi_source`]: each pool worker keeps one
+    /// heap warm across every source it claims.
+    static SCRATCH: RefCell<DijkstraScratch> = RefCell::new(DijkstraScratch::new());
+}
+
+/// Geodesic distances from each of `sources` to every vertex, as an
+/// `m × n` matrix (row `i` = distances from `sources[i]`; unreachable
+/// vertices hold `+∞`). Sources run concurrently on `workers` pool
+/// threads (`0` = all cores); each row is produced by the same serial
+/// [`sssp_into`], so the result is bit-identical for any worker count.
+///
+/// ```
+/// use isospark::graph::{dijkstra, CsrGraph};
+///
+/// // A weighted path 0 —1.0— 1 —2.0— 2, given as directed kNN lists
+/// // (the constructor symmetrizes them).
+/// let lists: Vec<Vec<(f64, usize)>> = vec![
+///     vec![(1.0, 1)],
+///     vec![(2.0, 2)],
+///     vec![],
+/// ];
+/// let g = CsrGraph::from_knn_lists(&lists).unwrap();
+/// let d = dijkstra::multi_source(&g, &[0, 2], 2);
+/// assert_eq!(d[(0, 2)], 3.0); // 0 → 1 → 2
+/// assert_eq!(d[(1, 0)], 3.0); // symmetric
+/// assert_eq!(d[(1, 1)], 2.0);
+/// ```
+pub fn multi_source(g: &CsrGraph, sources: &[usize], workers: usize) -> Matrix {
+    let n = g.n();
+    let m = sources.len();
+    let mut out = Matrix::full(m, n, f64::INFINITY);
+    let workers = resolve_workers(workers).min(m.max(1));
+    let tasks: Vec<(usize, &mut [f64])> =
+        sources.iter().copied().zip(out.as_mut_slice().chunks_mut(n.max(1))).collect();
+    run_tasks(workers, tasks, |(src, row)| {
+        SCRATCH.with(|s| sssp_into(g, src, &mut s.borrow_mut(), row));
+    });
+    out
+}
+
+/// Squared geodesics from each source — the `m × n` landmark table the
+/// L-Isomap / streaming fits triangulate against. Errors (with the
+/// offending pair) if any vertex is unreachable from any source, which
+/// mirrors how the dense path surfaces a disconnected graph.
+pub fn geodesics_squared(g: &CsrGraph, sources: &[usize], workers: usize) -> Result<Matrix> {
+    let mut delta = multi_source(g, sources, workers);
+    for (i, &src) in sources.iter().enumerate() {
+        for (j, v) in delta.row_mut(i).iter_mut().enumerate() {
+            if !v.is_finite() {
+                bail!(
+                    "source {src} cannot reach point {j}: the kNN graph is disconnected; \
+                     increase k"
+                );
+            }
+            *v *= *v;
+        }
+    }
+    Ok(delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path_graph(n: usize) -> CsrGraph {
+        // 0 —1— 1 —1— 2 … a unit-weight path.
+        let mut lists: Vec<Vec<(f64, usize)>> = vec![Vec::new(); n];
+        for (i, list) in lists.iter_mut().enumerate().take(n - 1) {
+            list.push((1.0, i + 1));
+        }
+        CsrGraph::from_knn_lists(&lists).unwrap()
+    }
+
+    #[test]
+    fn sssp_on_a_path() {
+        let g = path_graph(6);
+        let mut scratch = DijkstraScratch::new();
+        let mut dist = vec![0.0; 6];
+        sssp_into(&g, 2, &mut scratch, &mut dist);
+        assert_eq!(dist, vec![2.0, 1.0, 0.0, 1.0, 2.0, 3.0]);
+        // Scratch reuse: a second run from a different source is clean.
+        sssp_into(&g, 5, &mut scratch, &mut dist);
+        assert_eq!(dist, vec![5.0, 4.0, 3.0, 2.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn shorter_path_wins() {
+        // Triangle with a shortcut: 0-1 (1.0), 1-2 (1.0), 0-2 (1.5).
+        let lists: Vec<Vec<(f64, usize)>> =
+            vec![vec![(1.0, 1), (1.5, 2)], vec![(1.0, 2)], vec![]];
+        let g = CsrGraph::from_knn_lists(&lists).unwrap();
+        let d = multi_source(&g, &[0], 1);
+        assert_eq!(d[(0, 2)], 1.5); // direct edge beats 0→1→2 = 2.0
+    }
+
+    #[test]
+    fn unreachable_stays_infinite() {
+        let lists: Vec<Vec<(f64, usize)>> = vec![vec![(1.0, 1)], vec![], vec![]];
+        let g = CsrGraph::from_knn_lists(&lists).unwrap();
+        let d = multi_source(&g, &[0], 1);
+        assert!(d[(0, 2)].is_infinite());
+        let err = geodesics_squared(&g, &[0], 1).unwrap_err();
+        assert!(format!("{err:#}").contains("cannot reach point 2"), "{err:#}");
+    }
+
+    #[test]
+    fn pooled_matches_serial_bitwise() {
+        let g = path_graph(40);
+        let sources: Vec<usize> = (0..40).step_by(3).collect();
+        let serial = multi_source(&g, &sources, 1);
+        for workers in [2, 3, 8] {
+            let pooled = multi_source(&g, &sources, workers);
+            for (a, b) in serial.as_slice().iter().zip(pooled.as_slice()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers = {workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn squared_table_is_squared() {
+        let g = path_graph(4);
+        let sq = geodesics_squared(&g, &[0, 3], 2).unwrap();
+        assert_eq!(sq[(0, 3)], 9.0);
+        assert_eq!(sq[(1, 0)], 9.0);
+        assert_eq!(sq[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn empty_sources() {
+        let g = path_graph(3);
+        let d = multi_source(&g, &[], 4);
+        assert_eq!(d.nrows(), 0);
+    }
+}

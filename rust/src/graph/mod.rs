@@ -1,0 +1,31 @@
+//! Sparse geodesics: the k-sparse alternative to the dense blocked APSP.
+//!
+//! The paper's exact pipeline is capped by the blocked Floyd–Warshall
+//! stage — `O(n³)` work and `O(n²)` resident state — yet the neighborhood
+//! graph it runs on has only `n·k` edges. This module keeps geodesic
+//! computation sparse end to end:
+//!
+//! * [`CsrGraph`] ([`csr`]) — an immutable compressed-sparse-row view of
+//!   the kNN neighborhood graph, built directly from the per-point kNN
+//!   lists (symmetrized, deduplicated, column-sorted) without ever
+//!   materializing dense blocks.
+//! * [`dijkstra`] — a batched multi-source Dijkstra over the CSR graph:
+//!   sources fan out over the engine's worker pool
+//!   (`engine::executor`), each source runs a binary-heap Dijkstra with
+//!   per-thread scratch reuse, and the output is bit-deterministic for
+//!   any pool size.
+//!
+//! Consumers: `coordinator::apsp::solve_sparse` feeds squared-geodesic
+//! row panels straight into the centering stage (the dense APSP RDD is
+//! never built — `isospark run --geodesics sparse-dijkstra`), and the
+//! landmark / streaming fits compute their `m × n` landmark geodesics
+//! through the same pooled path with no dense `n × n` state at all.
+//!
+//! See `docs/ARCHITECTURE.md` ("Sparse geodesics") for where this sits in
+//! the full dataflow.
+
+pub mod csr;
+pub mod dijkstra;
+
+pub use csr::CsrGraph;
+pub use dijkstra::{geodesics_squared, multi_source, sssp_into, DijkstraScratch};

@@ -5,7 +5,7 @@
 //! twin of the Pallas kernel in `python/compile/kernels/minplus.py`.
 //!
 //! All three entry points run one register-blocked micro-kernel
-//! ([`mp_tile`]): the destination is processed in [`J_TILE`]-wide column
+//! (`mp_tile`): the destination is processed in [`J_TILE`]-wide column
 //! tiles held in a stack array across the whole `k` sweep, and the right
 //! operand's column panel is packed k-major into per-thread scratch so the
 //! inner loop is unit-stride. Versus the PR-1 loop nest (which re-streamed

@@ -9,6 +9,11 @@
 //!   and checkpointing, a simulated multi-node cluster with a GbE network
 //!   model, and the four Isomap stages (kNN, APSP, centering, spectral
 //!   decomposition) expressed over it ([`coordinator`], [`engine`]).
+//! * **Sparse geodesics** — [`graph`] keeps the geodesic stage `O(n·k)`-
+//!   sparse: a CSR view of the kNN graph plus a pooled multi-source
+//!   Dijkstra. The exact pipeline selects it with `--geodesics
+//!   sparse-dijkstra` (the dense APSP RDD is never built); the landmark
+//!   and streaming fits always use it.
 //! * **L2/L1 (python/compile)** — JAX block ops backed by Pallas kernels,
 //!   AOT-lowered to HLO text once at build time (`make artifacts`).
 //! * **Runtime bridge** — [`runtime`] loads the HLO artifacts through the
@@ -19,6 +24,11 @@
 //!   versioned on-disk artifact, and [`serve`] exposes it over HTTP with
 //!   micro-batched out-of-sample projection (`isospark fit --save` /
 //!   `isospark serve`).
+//!
+//! The full architecture guide — dataflow walkthrough, the simulated-
+//! cluster vs. real-thread-pool distinction, the PJRT offload boundary
+//! and padded-execution policy, and a per-directory module map — lives in
+//! `docs/ARCHITECTURE.md` at the repository root.
 //!
 //! ## Quickstart
 //!
@@ -40,6 +50,7 @@ pub mod coordinator;
 pub mod data;
 pub mod engine;
 pub mod eval;
+pub mod graph;
 pub mod kernels;
 pub mod linalg;
 pub mod model;
@@ -51,10 +62,11 @@ pub mod util;
 /// Convenience re-exports for the common entry points.
 pub mod prelude {
     pub use crate::backend::Backend;
-    pub use crate::config::{ClusterConfig, IsomapConfig};
+    pub use crate::config::{ClusterConfig, GeodesicsMode, IsomapConfig};
     pub use crate::coordinator::isomap::{self, IsomapOutput};
     pub use crate::engine::block::BlockId;
     pub use crate::engine::context::SparkContext;
+    pub use crate::graph::CsrGraph;
     pub use crate::linalg::matrix::Matrix;
     pub use crate::model::FittedModel;
 }

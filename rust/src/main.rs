@@ -32,6 +32,8 @@ COMMANDS:
                    --n <pts> --k <nn> --d <dim> --block <b> --seed <s>
                    --backend native|pjrt --artifacts <dir> --nodes <n>
                    --cores <c> --threads <t> --out <csv> --config <file>
+                   --geodesics dense-fw|sparse-dijkstra (sparse: CSR graph
+                    + pooled multi-source Dijkstra, no dense APSP RDD)
                    (--threads: OS worker threads for real block tasks;
                     0 = all cores. Results are identical for any value.)
   landmark         L-Isomap: same options plus --landmarks <m>
@@ -112,6 +114,7 @@ fn parse_common(args: &Args) -> Result<(IsomapConfig, ClusterConfig)> {
     iso.checkpoint_every =
         args.get("checkpoint-every", iso.checkpoint_every).map_err(anyhow_str)?;
     iso.seed = args.get("seed", iso.seed).map_err(anyhow_str)?;
+    iso.geodesics = args.get("geodesics", iso.geodesics).map_err(anyhow_str)?;
     let nodes: usize = args.get("nodes", cluster.nodes).map_err(anyhow_str)?;
     if nodes != cluster.nodes {
         cluster = ClusterConfig::paper_testbed(nodes);
@@ -172,6 +175,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         "q={} blocks | graph components={} | eigen iters={} converged={}",
         out.q, out.graph_components, out.eigen_iterations, out.eigen_converged
     );
+    println!("geodesics path: {}", out.geodesics.describe());
     println!("eigenvalues: {:?}", out.eigenvalues);
     if let Some(truth) = &ds.ground_truth {
         if truth.ncols() == cfg.d {
@@ -263,6 +267,7 @@ fn cmd_stream(args: &Args) -> Result<()> {
         model.num_landmarks(),
         human_duration(sw.secs())
     );
+    println!("{}", model.fit_report());
     let fresh = data::by_name(args.opt("dataset").unwrap_or("swiss"), stream_n, cfg.seed + 1)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset"))?;
     let sw = isospark::util::Stopwatch::start();
@@ -291,14 +296,16 @@ fn cmd_fit(args: &Args) -> Result<()> {
         .opt("save")
         .ok_or_else(|| anyhow::anyhow!("fit requires --save <dir> (the artifact directory)"))?;
     let sw = isospark::util::Stopwatch::start();
-    let model = StreamingModel::fit(&ds.points, &cfg, m, &cluster, &backend)?.into_model();
+    let fit = StreamingModel::fit(&ds.points, &cfg, m, &cluster, &backend)?;
     println!(
         "fitted streaming model on batch n={} D={} with {} landmarks in {}",
         ds.n(),
         ds.dim(),
-        model.num_landmarks(),
+        fit.num_landmarks(),
         human_duration(sw.secs())
     );
+    println!("{}", fit.fit_report());
+    let model = fit.into_model();
     let dir = Path::new(save);
     model.save(dir).with_context(|| format!("save model artifact to {save}"))?;
     println!("{}", isospark::model::ModelInfo::inspect(dir)?.render());

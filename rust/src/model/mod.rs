@@ -280,6 +280,19 @@ impl FittedModel {
 
     /// Write the artifact directory (created if missing): four binary
     /// matrices plus the `model.json` manifest with per-file checksums.
+    ///
+    /// ```no_run
+    /// use isospark::backend::Backend;
+    /// use isospark::config::{ClusterConfig, IsomapConfig};
+    /// use isospark::coordinator::streaming::StreamingModel;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let batch = isospark::data::swiss_roll::euler_isometric(400, 42).points;
+    /// let cfg = IsomapConfig { k: 10, d: 2, block: 64, ..Default::default() };
+    /// let fit = StreamingModel::fit(&batch, &cfg, 64, &ClusterConfig::local(), &Backend::Native)?;
+    /// fit.model().save(std::path::Path::new("/tmp/isospark-model"))?;
+    /// # Ok(()) }
+    /// ```
     pub fn save(&self, dir: &Path) -> Result<()> {
         self.validate().context("refusing to save an inconsistent model")?;
         std::fs::create_dir_all(dir).with_context(|| format!("create {dir:?}"))?;
@@ -326,6 +339,18 @@ impl FittedModel {
     /// Load an artifact directory, cross-checking format version, shapes,
     /// and checksums. Every failure carries context naming the offending
     /// file or field; nothing in here panics.
+    ///
+    /// ```no_run
+    /// use isospark::linalg::Matrix;
+    /// use isospark::model::FittedModel;
+    ///
+    /// # fn main() -> anyhow::Result<()> {
+    /// let model = FittedModel::load(std::path::Path::new("/tmp/isospark-model"))?;
+    /// let point = Matrix::zeros(1, model.dim()); // one D-dimensional query point
+    /// let embedded = model.map_points(&point)?;
+    /// assert_eq!(embedded.ncols(), model.out_dim());
+    /// # Ok(()) }
+    /// ```
     pub fn load(dir: &Path) -> Result<FittedModel> {
         let man = Manifest::read(dir)?;
         if man.format_version != FORMAT_VERSION {

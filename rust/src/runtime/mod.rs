@@ -3,13 +3,13 @@
 //! `make artifacts` runs `python/compile/aot.py`, which lowers each L2 JAX
 //! block op (backed by the L1 Pallas kernels) to **HLO text** and writes
 //! `artifacts/manifest.json` describing every (op, shape) artifact. The
-//! [`pjrt`] implementation loads those artifacts through the `xla` crate's
+//! `pjrt` implementation loads those artifacts through the `xla` crate's
 //! PJRT CPU client: compile once per (op, shape), cache the executable,
 //! and execute from the L3 hot path. Python never runs at request time.
 //!
 //! The bridge is gated behind the **`pjrt` cargo feature** (off by
 //! default): the `xla` crate cannot be fetched in the offline build
-//! environment, so the default build substitutes [`stub`], whose
+//! environment, so the default build substitutes `stub`, whose
 //! `PjrtEngine::load` always errors — [`crate::backend::Backend`] then
 //! falls back to the native kernels and `cargo build/test` stay green
 //! with no network access. Enabling the feature additionally requires
@@ -66,7 +66,7 @@
 //!   fallbacks — a corrupted artifact must never silently degrade the run
 //!   to the native kernels.
 //!
-//! The offline [`stub`] mirrors the same surface: every call records a
+//! The offline `stub` mirrors the same surface: every call records a
 //! counted miss, so fallback accounting is testable without the `xla`
 //! dependency.
 

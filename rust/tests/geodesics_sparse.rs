@@ -1,0 +1,153 @@
+//! Sparse-geodesics subsystem, end to end: CSR construction from real kNN
+//! lists, pooled-vs-serial Dijkstra bit-equality, sparse-vs-dense
+//! geodesic agreement on swiss-roll (the acceptance bound: 1e-9
+//! elementwise at n ≤ 512, k = 10), and full-pipeline determinism of the
+//! `--geodesics sparse-dijkstra` mode for any worker count.
+
+use isospark::backend::Backend;
+use isospark::config::{ClusterConfig, GeodesicsMode, IsomapConfig};
+use isospark::coordinator::{apsp, dense_from_blocks, isomap, knn};
+use isospark::data::swiss_roll;
+use isospark::engine::SparkContext;
+use isospark::graph::{dijkstra, CsrGraph};
+use isospark::linalg::Matrix;
+
+fn knn_lists(n: usize, k: usize, b: usize, seed: u64) -> (Matrix, Vec<Vec<(f64, usize)>>) {
+    let ds = swiss_roll::euler_isometric(n, seed);
+    let ctx = SparkContext::new(ClusterConfig::local());
+    let cfg = IsomapConfig { k, block: b, ..Default::default() };
+    let kl = knn::build_lists(&ctx, &ds.points, &cfg, &Backend::Native).unwrap();
+    (ds.points, kl.lists)
+}
+
+#[test]
+fn csr_from_real_knn_lists_is_symmetric_and_sorted() {
+    // Real kNN lists are ragged in the graph sense: mutual neighbors
+    // produce duplicate arcs, non-mutual ones produce single directed
+    // edges — the CSR must come out symmetric, deduplicated, sorted.
+    let (_, lists) = knn_lists(200, 10, 64, 3);
+    let g = CsrGraph::from_knn_lists(&lists).unwrap();
+    assert_eq!(g.n(), 200);
+    let undirected: usize = lists.iter().map(Vec::len).sum();
+    // Symmetrization can only dedup, never add: directed arc count is at
+    // most twice the list entries and at least the list entries.
+    assert!(g.num_edges() <= 2 * undirected && g.num_edges() >= undirected);
+    for u in 0..g.n() {
+        let (cols, weights) = g.neighbors(u);
+        for w in cols.windows(2) {
+            assert!(w[0] < w[1], "row {u} not strictly column-sorted");
+        }
+        for (&v, &w) in cols.iter().zip(weights) {
+            let (vc, vw) = g.neighbors(v as usize);
+            let pos = vc.binary_search(&(u as u32)).expect("missing reverse arc");
+            assert_eq!(vw[pos].to_bits(), w.to_bits(), "asymmetric weight {u}<->{v}");
+        }
+    }
+    assert_eq!(g.components(), 1);
+    assert!(g.require_connected().is_ok());
+}
+
+#[test]
+fn pooled_dijkstra_bit_equal_for_any_worker_count() {
+    let (_, lists) = knn_lists(300, 10, 64, 5);
+    let g = CsrGraph::from_knn_lists(&lists).unwrap();
+    let sources: Vec<usize> = (0..300).step_by(7).collect();
+    let serial = dijkstra::multi_source(&g, &sources, 1);
+    for workers in [2, 3, 4, 8, 16] {
+        let pooled = dijkstra::multi_source(&g, &sources, workers);
+        for (i, (a, b)) in serial.as_slice().iter().zip(pooled.as_slice()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "workers={workers} flat index {i}");
+        }
+    }
+}
+
+#[test]
+fn sparse_agrees_with_dense_fw_at_acceptance_scale() {
+    // Acceptance bound: swiss-roll, n ≤ 512, k = 10, agreement within
+    // 1e-9 elementwise on the geodesic distances.
+    let n = 512;
+    let (b, k) = (128, 10);
+    let ds = swiss_roll::euler_isometric(n, 13);
+    let cfg = IsomapConfig { k, block: b, ..Default::default() };
+
+    let ctx_dense = SparkContext::new(ClusterConfig::local());
+    let kg = knn::build(&ctx_dense, &ds.points, &cfg, &Backend::Native).unwrap();
+    let a_dense = apsp::solve(kg.graph, kg.q, &cfg, &Backend::Native).unwrap();
+    let dense = dense_from_blocks(&a_dense, n, b).map(|v| v.sqrt());
+
+    let ctx_sparse = SparkContext::new(ClusterConfig::local());
+    let a_sparse = apsp::solve_sparse(&ctx_sparse, &kg.lists, n, &cfg).unwrap();
+    let sparse = dense_from_blocks(&a_sparse, n, b).map(|v| v.sqrt());
+
+    for i in 0..n {
+        for j in 0..n {
+            let (x, y) = (dense[(i, j)], sparse[(i, j)]);
+            assert!((x - y).abs() <= 1e-9, "({i},{j}): dense {x} vs sparse {y}");
+        }
+    }
+}
+
+#[test]
+fn sparse_pipeline_bit_deterministic_across_pool_sizes() {
+    // The tentpole guarantee end to end: the whole sparse-mode pipeline
+    // (kNN -> CSR Dijkstra -> centering -> eigen) is bit-identical for
+    // any physical worker count.
+    let ds = swiss_roll::euler_isometric(150, 23);
+    let cfg = IsomapConfig {
+        k: 8,
+        d: 2,
+        block: 32,
+        geodesics: GeodesicsMode::SparseDijkstra,
+        ..Default::default()
+    };
+    let run_with_threads = |threads: usize| {
+        let cluster = ClusterConfig { parallelism: threads, ..ClusterConfig::local() };
+        isomap::run(&ds.points, &cfg, &cluster).unwrap()
+    };
+    let seq = run_with_threads(1);
+    assert_eq!(seq.geodesics, GeodesicsMode::SparseDijkstra);
+    for threads in [2, 4, 8] {
+        let par = run_with_threads(threads);
+        for (a, b) in seq.embedding.as_slice().iter().zip(par.embedding.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn disconnected_graph_bails_with_context_before_any_panel() {
+    // Two severed halves: drop every cross-half edge from a real kNN run.
+    let (_, mut lists) = knn_lists(80, 6, 32, 7);
+    for (i, list) in lists.iter_mut().enumerate() {
+        list.retain(|&(_, j)| (i < 40) == (j < 40));
+    }
+    let g = CsrGraph::from_knn_lists(&lists).unwrap();
+    assert!(g.components() >= 2);
+    let ctx = SparkContext::new(ClusterConfig::local());
+    let cfg = IsomapConfig { k: 6, block: 32, ..Default::default() };
+    let err = apsp::solve_sparse(&ctx, &lists, 80, &cfg).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("disconnected") && msg.contains("increase k"), "{msg}");
+}
+
+#[test]
+fn ragged_last_block_and_single_block() {
+    // b ∤ n exercises the ragged tail panel; b ≥ n collapses to one panel.
+    for (n, b) in [(70usize, 32usize), (40, 64)] {
+        let ds = swiss_roll::euler_isometric(n, 19);
+        let cfg = IsomapConfig { k: 8, block: b, ..Default::default() };
+        let ctx = SparkContext::new(ClusterConfig::local());
+        let kg = knn::build(&ctx, &ds.points, &cfg, &Backend::Native).unwrap();
+        let ctx2 = SparkContext::new(ClusterConfig::local());
+        let a_sparse = apsp::solve_sparse(&ctx2, &kg.lists, n, &cfg).unwrap();
+        let sparse = dense_from_blocks(&a_sparse, n, b).map(|v| v.sqrt());
+        let a_dense = apsp::solve(kg.graph, kg.q, &cfg, &Backend::Native).unwrap();
+        let dense = dense_from_blocks(&a_dense, n, b).map(|v| v.sqrt());
+        for i in 0..n {
+            for j in 0..n {
+                let (x, y) = (dense[(i, j)], sparse[(i, j)]);
+                assert!((x - y).abs() <= 1e-9, "n={n} b={b} ({i},{j}): {x} vs {y}");
+            }
+        }
+    }
+}
