@@ -7,10 +7,11 @@
 
 use isospark::backend::Backend;
 use isospark::bench::Bencher;
-use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::config::{ClusterConfig, IsomapConfig, KnnMode};
 use isospark::coordinator::knn;
 use isospark::data::{emnist_synth, swiss_roll};
 use isospark::engine::SparkContext;
+use isospark::eval;
 use isospark::kernels::sqdist;
 use isospark::linalg::Matrix;
 use isospark::util::json::Json;
@@ -134,6 +135,77 @@ fn main() {
             assert_eq!(g.lists.len(), 512);
         });
     }
+
+    // Exact vs rp-forest front end: build+query time, speedup, recall and
+    // the candidate-pair fraction, written to BENCH_knn.json. Block 512
+    // keeps engine overhead (pair shuffle, block count) proportionate at
+    // the larger sizes; both paths see the identical configuration apart
+    // from the `knn` fork. One measured iteration per case — the exact
+    // path at n = 32768 is the very O(n²) wall this section demonstrates.
+    println!("\n== exact vs rp-forest front end ==");
+    let mut fe = Bencher::with(20.0, 2, 0);
+    let mut frontend_cases: Vec<Json> = Vec::new();
+    for n in [2048usize, 8192, 32768] {
+        let ds = swiss_roll::euler_isometric(n, 11);
+        let cluster = ClusterConfig {
+            parallelism: 0, // all physical cores
+            cores_per_node: 8,
+            ..ClusterConfig::local()
+        };
+        let exact_cfg = IsomapConfig { k: 10, block: 512, ..Default::default() };
+        let rp_cfg = IsomapConfig { knn: KnnMode::RpForest, ..exact_cfg.clone() };
+
+        let mut exact_lists = None;
+        let exact_secs = fe.case(&format!("knn:frontend:exact:n{n}"), || {
+            let ctx = SparkContext::new(cluster.clone());
+            let kl = knn::build_lists(&ctx, &ds.points, &exact_cfg, &Backend::Native).unwrap();
+            exact_lists = Some(kl.lists);
+        });
+        let mut rp_lists = None;
+        let mut rp_stats = None;
+        let rp_secs = fe.case(&format!("knn:frontend:rp-forest:n{n}"), || {
+            let ctx = SparkContext::new(cluster.clone());
+            let kl = knn::build_lists(&ctx, &ds.points, &rp_cfg, &Backend::Native).unwrap();
+            let knn::KnnPath::RpForest(stats) = kl.path else { unreachable!() };
+            rp_stats = Some(stats);
+            rp_lists = Some(kl.lists);
+        });
+
+        let stats = rp_stats.unwrap();
+        let recall = eval::recall_at_k(&rp_lists.unwrap(), &exact_lists.unwrap(), 10);
+        let exact_pairs = (n as u64) * (n as u64 - 1) / 2;
+        // Acceptance criterion: sub-quadratic candidate generation.
+        assert!(
+            stats.candidate_pairs < (n as u64) * (n as u64) / 5,
+            "n={n}: candidate pairs {} ≥ 20% of n²",
+            stats.candidate_pairs
+        );
+        fe.report_value(&format!("knn:frontend:speedup:n{n}"), exact_secs / rp_secs, "x");
+        fe.report_value(&format!("knn:frontend:recall@10:n{n}"), recall, "");
+        fe.report_value(
+            &format!("knn:frontend:pair_frac:n{n}"),
+            100.0 * stats.pair_fraction(),
+            "% of n²",
+        );
+        frontend_cases.push(Json::obj(vec![
+            ("n", Json::num(n as f64)),
+            ("k", Json::num(10.0)),
+            ("block", Json::num(512.0)),
+            ("trees", Json::num(stats.trees as f64)),
+            ("leaf_size", Json::num(stats.leaf_size as f64)),
+            ("exact_secs", Json::num(exact_secs)),
+            ("rp_secs", Json::num(rp_secs)),
+            ("speedup", Json::num(exact_secs / rp_secs)),
+            ("recall_at_10", Json::num(recall)),
+            ("exact_pairs", Json::num(exact_pairs as f64)),
+            ("candidate_pairs", Json::num(stats.candidate_pairs as f64)),
+            ("pair_fraction_of_n2", Json::num(stats.pair_fraction())),
+            ("mean_distinct_candidates", Json::num(stats.mean_distinct_candidates)),
+            ("full_fraction", Json::num(stats.full_fraction)),
+        ]));
+    }
+    isospark::bench::write_kernel_section("BENCH_knn.json", "stage_knn_frontend", frontend_cases);
+    println!("(front-end comparison written to BENCH_knn.json)\n");
 
     // Shuffle accounting on a multi-node simulated cluster.
     let cfg = IsomapConfig { k: 10, block: 128, ..Default::default() };

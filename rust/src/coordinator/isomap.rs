@@ -31,6 +31,9 @@ pub struct IsomapOutput {
     /// Which geodesics path ran (`dense-fw` blocked Floyd–Warshall or
     /// `sparse-dijkstra` over the CSR graph).
     pub geodesics: GeodesicsMode,
+    /// Which kNN front end ran (`exact` all-pairs or `rp-forest`), with
+    /// the forest's candidate counters when approximate.
+    pub knn: knn::KnnPath,
     /// Virtual wall-clock of the simulated cluster, seconds.
     pub virtual_secs: f64,
     /// Total bytes shuffled across the simulated network.
@@ -67,19 +70,19 @@ pub fn run_with(
     // the configured path. Dense: neighborhood-graph blocks -> blocked
     // Floyd–Warshall. Sparse: kNN lists only -> CSR -> pooled multi-source
     // Dijkstra row panels (the dense APSP RDD is never built).
-    let (graph_components, a) = match cfg.geodesics {
+    let (graph_components, knn_path, a) = match cfg.geodesics {
         GeodesicsMode::DenseFw => {
             let kg = knn::build(&ctx, x, cfg, backend).context("kNN stage")?;
             let components = crate::eval::components(&kg.lists);
             let a = super::apsp::solve(kg.graph, kg.q, cfg, backend).context("APSP stage")?;
-            (components, a)
+            (components, kg.path, a)
         }
         GeodesicsMode::SparseDijkstra => {
             let kl = knn::build_lists(&ctx, x, cfg, backend).context("kNN stage")?;
             let components = crate::eval::components(&kl.lists);
             let a = super::apsp::solve_sparse(&ctx, &kl.lists, n, cfg)
                 .context("sparse geodesics stage")?;
-            (components, a)
+            (components, kl.path, a)
         }
     };
 
@@ -109,6 +112,7 @@ pub fn run_with(
         q: num_blocks(n, cfg.block),
         graph_components,
         geodesics: cfg.geodesics,
+        knn: knn_path,
         virtual_secs: ctx.virtual_now(),
         shuffle_bytes: ctx.total_shuffle_bytes(),
         compute_secs: ctx.total_compute_real(),
@@ -171,6 +175,28 @@ mod tests {
         let ds = swiss_roll::euler_isometric(20, 1);
         let cfg = IsomapConfig { k: 25, ..Default::default() };
         assert!(run(&ds.points, &cfg, &ClusterConfig::local()).is_err());
+    }
+
+    #[test]
+    fn rp_forest_pipeline_recovers_latents() {
+        // The fully sub-quadratic pipeline — rp-forest candidates + sparse
+        // Dijkstra geodesics — must still unroll the swiss roll.
+        use crate::config::KnnMode;
+        let ds = swiss_roll::euler_isometric(600, 13);
+        let cfg = IsomapConfig {
+            k: 10,
+            d: 2,
+            block: 128,
+            knn: KnnMode::RpForest,
+            geodesics: GeodesicsMode::SparseDijkstra,
+            ..Default::default()
+        };
+        let out = run(&ds.points, &cfg, &ClusterConfig::local()).unwrap();
+        assert_eq!(out.graph_components, 1);
+        assert!(out.knn.describe().contains("rp-forest"), "knn: {}", out.knn.describe());
+        assert!(out.metrics_table.contains("knn:rpforest"));
+        let err = procrustes(ds.ground_truth.as_ref().unwrap(), &out.embedding);
+        assert!(err < 1e-2, "procrustes vs ground truth = {err}");
     }
 
     #[test]

@@ -7,14 +7,24 @@
 //! lists (scanning columns of each block for the under-diagonal
 //! transposes); merge lists per point; finally reuse `M`'s blocks to store
 //! the neighborhood graph `G` (∞-filled, kNN distances set symmetrically).
+//!
+//! This is the *exact* front end. `--knn rp-forest` swaps the all-pairs
+//! distance stage for the seeded random-projection forest in
+//! [`crate::knn_approx`] — same output shape, `O(T·n·leaf)` instead of
+//! `O(n²)` distance FLOPs — and both [`build`] and [`build_lists`] fork on
+//! [`IsomapConfig::knn`], so every caller (exact pipeline, landmark,
+//! streaming) gets the approximate path for free. [`KnnPath`] records
+//! which front end ran, carrying the forest's candidate counters for the
+//! run reports.
 
 use super::{block_range, default_partitions, num_blocks};
 use crate::backend::Backend;
-use crate::config::IsomapConfig;
+use crate::config::{IsomapConfig, KnnMode};
 use crate::engine::executor::run_tasks;
 use crate::engine::partitioner::UpperTriangularPartitioner;
 use crate::engine::{BlockId, BlockRdd, SparkContext};
 use crate::kernels::kselect::{cols_topk, merge_topk, row_topk, Neighbor};
+use crate::knn_approx::{RpForestParams, RpForestStats};
 use crate::linalg::Matrix;
 use anyhow::Result;
 use std::sync::Arc;
@@ -24,6 +34,27 @@ use std::sync::Arc;
 /// spawn, which only amortizes once tens of thousands of `Vec` handles
 /// are being placed.
 const PARALLEL_SCATTER_MIN: usize = 1 << 16;
+
+/// Which front end produced a set of kNN lists, plus its evidence — the
+/// `run`/`fit` reports surface this next to the geodesics mode.
+#[derive(Clone, Debug)]
+pub enum KnnPath {
+    /// All-pairs blocked distance stage (the reference answer).
+    Exact,
+    /// rp-forest candidates, exactly rescored ([`crate::knn_approx`]);
+    /// carries the forest's candidate counters and recall proxy.
+    RpForest(RpForestStats),
+}
+
+impl KnnPath {
+    /// One-line human summary for run reports.
+    pub fn describe(&self) -> String {
+        match self {
+            KnnPath::Exact => KnnMode::Exact.describe().to_string(),
+            KnnPath::RpForest(stats) => stats.describe(),
+        }
+    }
+}
 
 /// Output of the kNN stage.
 pub struct KnnGraph {
@@ -35,6 +66,8 @@ pub struct KnnGraph {
     /// Global kNN lists (collected to the driver for connectivity checks
     /// and L-Isomap; `n·k` entries, small even at paper scale).
     pub lists: Vec<Vec<Neighbor>>,
+    /// Which front end produced the lists.
+    pub path: KnnPath,
 }
 
 /// Output of the lists-only kNN stage ([`build_lists`]): the global kNN
@@ -48,6 +81,8 @@ pub struct KnnLists {
     pub lists: Vec<Vec<Neighbor>>,
     /// Logical block count `q`.
     pub q: usize,
+    /// Which front end produced the lists.
+    pub path: KnnPath,
 }
 
 /// Intermediates shared by [`build`] and [`build_lists`]: the pipeline up
@@ -72,11 +107,60 @@ pub fn build(
 ) -> Result<KnnGraph> {
     let n = x.nrows();
     let b = cfg.block;
-    let st = lists_stage(ctx, x, cfg, backend)?;
 
-    // Neighborhood-graph fill: reuse M's blocks, overwrite with ∞, set kNN
-    // distances symmetrically (edge (i,j) lands in the upper block).
-    let edges = st.knn_lists.flat_map("knn:edges", |id, list| {
+    if cfg.knn == KnnMode::RpForest {
+        // rp-forest front end feeding the dense geodesics path: the
+        // distance blocks M were never materialized, so the graph blocks
+        // are freshly allocated and filled from the collected lists.
+        let (lists, stats) = rp_lists(ctx, x, cfg)?;
+        let q = num_blocks(n, b);
+        let parts = default_partitions(q, ctx.cluster().total_cores());
+        let part: Arc<dyn crate::engine::Partitioner> =
+            Arc::new(UpperTriangularPartitioner::new(q, parts));
+        let base_blocks: Vec<(BlockId, Matrix)> = (0..q)
+            .flat_map(|i| {
+                let (rs, re) = block_range(n, b, i);
+                (i..q).map(move |j| {
+                    let (cs, ce) = block_range(n, b, j);
+                    // Content is irrelevant: graph_fill rewrites wholesale.
+                    (BlockId::new(i, j), Matrix::zeros(re - rs, ce - cs))
+                })
+            })
+            .collect();
+        let base = ctx.parallelize("knn:graph_base", base_blocks, Arc::clone(&part));
+        let list_blocks: Vec<(BlockId, Vec<Neighbor>)> = lists
+            .iter()
+            .enumerate()
+            .map(|(g, list)| (BlockId::new(g / b, g % b), list.clone()))
+            .collect();
+        let lists_rdd = ctx.parallelize("knn:lists", list_blocks, part);
+        let graph = fill_graph(n, b, base, &lists_rdd);
+        graph.persist("G")?;
+        return Ok(KnnGraph { graph, q, lists, path: KnnPath::RpForest(stats) });
+    }
+
+    let st = lists_stage(ctx, x, cfg, backend)?;
+    // Neighborhood-graph fill reusing M's blocks as storage.
+    let graph = fill_graph(n, b, st.m, &st.knn_lists);
+    graph.persist("G")?;
+    ctx.clear_resident("M");
+
+    Ok(KnnGraph { graph, q: st.q, lists: st.lists, path: KnnPath::Exact })
+}
+
+/// Neighborhood-graph fill shared by both front ends: scatter every list
+/// entry to its upper-triangular block (`knn:edges` — edge (i,j) lands in
+/// the block with `bi ≤ bj`), then rewrite the base blocks wholesale —
+/// ∞ everywhere, 0 diagonal, kNN distances set symmetrically. Base block
+/// content is irrelevant; uniquely-held buffers are recycled in place by
+/// `make_mut` without a copy.
+fn fill_graph(
+    n: usize,
+    b: usize,
+    base: BlockRdd<Matrix>,
+    knn_lists: &BlockRdd<Vec<Neighbor>>,
+) -> BlockRdd<Matrix> {
+    let edges = knn_lists.flat_map("knn:edges", |id, list| {
         let (s, _) = block_range(n, b, id.i);
         let gi = s + id.j;
         let mut out = Vec::with_capacity(list.len());
@@ -91,9 +175,7 @@ pub fn build(
         }
         out
     });
-    let graph = st.m.join_update("knn:graph_fill", edges, |id, blk, es| {
-        // Every block is rewritten wholesale; M's buffers are uniquely
-        // held here, so make_mut recycles them in place without a copy.
+    base.join_update("knn:graph_fill", edges, |id, blk, es| {
         let blk = blk.make_mut();
         for v in blk.as_mut_slice() {
             *v = f64::INFINITY;
@@ -111,11 +193,7 @@ pub fn build(
                 }
             }
         }
-    });
-    graph.persist("G")?;
-    ctx.clear_resident("M");
-
-    Ok(KnnGraph { graph, q: st.q, lists: st.lists })
+    })
 }
 
 /// Run the blocked kNN stage but stop at the global lists: no `knn:edges`
@@ -128,9 +206,53 @@ pub fn build_lists(
     cfg: &IsomapConfig,
     backend: &Backend,
 ) -> Result<KnnLists> {
+    if cfg.knn == KnnMode::RpForest {
+        let (lists, stats) = rp_lists(ctx, x, cfg)?;
+        let q = num_blocks(x.nrows(), cfg.block);
+        return Ok(KnnLists { lists, q, path: KnnPath::RpForest(stats) });
+    }
     let st = lists_stage(ctx, x, cfg, backend)?;
     ctx.clear_resident("M");
-    Ok(KnnLists { lists: st.lists, q: st.q })
+    Ok(KnnLists { lists: st.lists, q: st.q, path: KnnPath::Exact })
+}
+
+/// The rp-forest front end run as an engine stage: build + query on the
+/// physical worker pool, accounted as `knn:rpforest` — one virtual task
+/// per tree (the unit of fan-out), measured wall time split evenly across
+/// them, plus the driver's per-task scheduling charge. No simulated
+/// shuffle: the forest is a driver-coordinated stage like `geo:dijkstra`,
+/// not an RDD lineage.
+fn rp_lists(
+    ctx: &SparkContext,
+    x: &Matrix,
+    cfg: &IsomapConfig,
+) -> Result<(Vec<Vec<Neighbor>>, RpForestStats)> {
+    let params = RpForestParams {
+        trees: cfg.rp_trees,
+        leaf_size: cfg.rp_leaf_resolved(),
+        seed: cfg.seed,
+    };
+    let sw = crate::util::Stopwatch::start();
+    let (lists, stats) = crate::knn_approx::knn_lists(x, cfg.k, &params, ctx.parallelism())?;
+    let secs = sw.secs();
+    let tasks: Vec<crate::engine::clock::Task> = (0..params.trees)
+        .map(|t| crate::engine::clock::Task {
+            node: ctx.node_of(t, params.trees),
+            duration: secs / params.trees as f64,
+        })
+        .collect();
+    let virtual_span = ctx.run_stage(&tasks);
+    let driver_time = ctx.charge_driver("knn:rpforest", params.trees, 0);
+    ctx.push_metrics(crate::engine::metrics::StageMetrics {
+        name: "knn:rpforest".to_string(),
+        tasks: params.trees,
+        compute_real: secs,
+        virtual_span,
+        shuffle_bytes: 0,
+        network_time: 0.0,
+        driver_time,
+    });
+    Ok((lists, stats))
 }
 
 /// The shared kNN front end: distance blocks, per-block top-k, global
@@ -364,6 +486,57 @@ mod tests {
     fn swiss_roll_knn_connected() {
         let (_, g, _) = run_knn(200, 64, 10);
         assert!(crate::eval::connectivity(&g.lists));
+    }
+
+    #[test]
+    fn rp_forest_lists_recall_and_path() {
+        let ds = swiss_roll::euler_isometric(600, 11);
+        let cfg = IsomapConfig { k: 8, block: 64, knn: KnnMode::RpForest, ..Default::default() };
+        let ctx = SparkContext::new(ClusterConfig::local());
+        let kl = build_lists(&ctx, &ds.points, &cfg, &Backend::Native).unwrap();
+        assert!(matches!(kl.path, KnnPath::RpForest(_)), "path: {}", kl.path.describe());
+        let KnnPath::RpForest(stats) = &kl.path else { unreachable!() };
+        assert!(stats.candidate_pairs < 600 * 599 / 2, "must beat all-pairs");
+        let exact = baselines::brute_knn(&ds.points, 8);
+        let recall = crate::eval::recall_at_k(&kl.lists, &exact, 8);
+        assert!(recall >= 0.95, "recall@8 = {recall}");
+        // The stage is accounted in the run metrics.
+        assert!(ctx.metrics_report(&["knn"]).contains("knn:rpforest"));
+    }
+
+    #[test]
+    fn rp_forest_dense_graph_consistent_with_lists() {
+        // rp-forest + dense-fw: the graph blocks must encode exactly the
+        // forest's lists (symmetrized), just as the exact path's do.
+        let ds = swiss_roll::euler_isometric(90, 13);
+        let cfg = IsomapConfig { k: 5, block: 32, knn: KnnMode::RpForest, ..Default::default() };
+        let ctx = SparkContext::new(ClusterConfig::local());
+        let g = build(&ctx, &ds.points, &cfg, &Backend::Native).unwrap();
+        assert!(matches!(g.path, KnnPath::RpForest(_)));
+        let mut dense = Matrix::full(90, 90, f64::INFINITY);
+        for (id, blk) in g.graph.iter() {
+            let (rs, _) = block_range(90, 32, id.i);
+            let (cs, _) = block_range(90, 32, id.j);
+            for r in 0..blk.nrows() {
+                for c in 0..blk.ncols() {
+                    dense[(rs + r, cs + c)] = blk[(r, c)];
+                }
+            }
+        }
+        let upper = |i: usize, j: usize| if i <= j { dense[(i, j)] } else { dense[(j, i)] };
+        for i in 0..90 {
+            assert_eq!(upper(i, i), 0.0);
+            for &(d, j) in &g.lists[i] {
+                assert!((upper(i, j) - d).abs() < 1e-12, "edge ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_path_reports_exact() {
+        let (_, g, _) = run_knn(40, 16, 4);
+        assert!(matches!(g.path, KnnPath::Exact));
+        assert!(g.path.describe().contains("exact"));
     }
 
     #[test]

@@ -67,7 +67,9 @@ impl StreamingModel {
         let delta = graph::geodesics_squared(&csr, &landmarks, ctx.parallelism())
             .context("landmark geodesics")?;
         let fit_report = format!(
-            "geodesics: sparse-dijkstra (CSR: {} arcs over {n} points; {m} pooled sources)\n{}",
+            "knn: {}\ngeodesics: sparse-dijkstra (CSR: {} arcs over {n} points; {m} pooled \
+             sources)\n{}",
+            kl.path.describe(),
             csr.num_edges(),
             ctx.metrics_report(&["knn"]),
         );
@@ -150,6 +152,23 @@ mod tests {
         // The fit reports its geodesics path and kNN stage metrics.
         assert!(model.fit_report().contains("sparse-dijkstra"), "{}", model.fit_report());
         assert!(model.fit_report().contains("knn"));
+    }
+
+    #[test]
+    fn rp_forest_fit_recovers_latents_and_reports_path() {
+        // The streaming fit inherits the rp-forest front end through
+        // `build_lists` — no streaming-specific wiring required.
+        use crate::config::KnnMode;
+        let ds = swiss_roll::euler_isometric(600, 23);
+        let cfg =
+            IsomapConfig { k: 10, d: 2, block: 64, knn: KnnMode::RpForest, ..Default::default() };
+        let model =
+            StreamingModel::fit(&ds.points, &cfg, 100, &ClusterConfig::local(), &Backend::Native)
+                .unwrap();
+        let err = procrustes(ds.ground_truth.as_ref().unwrap(), &model.batch_embedding);
+        assert!(err < 0.05, "batch procrustes = {err}");
+        assert!(model.fit_report().contains("rp-forest"), "{}", model.fit_report());
+        assert!(model.fit_report().contains("knn:rpforest"));
     }
 
     #[test]

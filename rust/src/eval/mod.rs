@@ -196,6 +196,36 @@ pub fn trustworthiness_continuity(
     (1.0 - norm * t_pen, 1.0 - norm * c_pen)
 }
 
+/// Recall@k of approximate kNN lists against exact lists: the fraction of
+/// true k-nearest neighbors the approximate index recovered, averaged over
+/// all points. Membership is judged on neighbor *indices* — an approximate
+/// hit counts whenever the exact top-k contains the same point, regardless
+/// of list position. Lists longer than `k` are truncated; shorter lists
+/// (an approximate index that could not fill its quota) simply score the
+/// hits they have. 1.0 = perfect recovery.
+///
+/// This is the harness the rp-forest tests and `benches/stage_knn.rs` use
+/// to hold the approximate front end to the ≥ 0.95 acceptance bar.
+pub fn recall_at_k(
+    approx: &[Vec<(f64, usize)>],
+    exact: &[Vec<(f64, usize)>],
+    k: usize,
+) -> f64 {
+    assert_eq!(approx.len(), exact.len(), "list counts differ");
+    assert!(k > 0, "recall@0 is undefined");
+    if approx.is_empty() {
+        return 1.0;
+    }
+    let mut hits = 0usize;
+    let mut truth = 0usize;
+    for (a, e) in approx.iter().zip(exact) {
+        let want: Vec<usize> = e.iter().take(k).map(|&(_, j)| j).collect();
+        truth += want.len();
+        hits += a.iter().take(k).filter(|&&(_, j)| want.contains(&j)).count();
+    }
+    hits as f64 / truth.max(1) as f64
+}
+
 /// Number of connected components of a kNN graph given as neighbor lists.
 pub fn components(knn: &[Vec<(f64, usize)>]) -> usize {
     let n = knn.len();
@@ -325,6 +355,39 @@ mod tests {
         }
         let (t, c) = trustworthiness_continuity(&x, &y, 6, 1000);
         assert!((t - 1.0).abs() < 1e-12 && (c - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn recall_perfect_and_partial() {
+        let exact = vec![
+            vec![(0.1, 1), (0.2, 2), (0.3, 3)],
+            vec![(0.1, 0), (0.2, 3), (0.3, 2)],
+        ];
+        assert_eq!(recall_at_k(&exact, &exact, 3), 1.0);
+        // Second list misses one of three true neighbors.
+        let approx = vec![
+            vec![(0.1, 1), (0.2, 2), (0.3, 3)],
+            vec![(0.1, 0), (0.2, 3), (0.35, 9)],
+        ];
+        let r = recall_at_k(&approx, &exact, 3);
+        assert!((r - 5.0 / 6.0).abs() < 1e-12, "r={r}");
+        // Distances are irrelevant — only index membership counts.
+        let rescored = vec![
+            vec![(9.0, 3), (8.0, 2), (7.0, 1)],
+            vec![(9.0, 2), (8.0, 3), (7.0, 0)],
+        ];
+        assert_eq!(recall_at_k(&rescored, &exact, 3), 1.0);
+    }
+
+    #[test]
+    fn recall_truncates_to_k_and_tolerates_short_lists() {
+        let exact = vec![vec![(0.1, 1), (0.2, 2), (0.3, 3), (0.4, 4)]];
+        // Only the first k entries of each list participate.
+        let approx = vec![vec![(0.1, 1), (0.2, 5), (0.3, 2), (0.4, 3)]];
+        assert_eq!(recall_at_k(&approx, &exact, 2), 0.5);
+        // A short approximate list scores the hits it has.
+        let short = vec![vec![(0.1, 2)]];
+        assert!((recall_at_k(&short, &exact, 4) - 0.25).abs() < 1e-12);
     }
 
     #[test]

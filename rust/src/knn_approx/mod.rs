@@ -1,0 +1,29 @@
+//! Approximate kNN front ends — sub-quadratic candidate generation for
+//! the pipeline's one remaining all-pairs stage.
+//!
+//! Every fit in the crate starts from per-point kNN lists
+//! ([`crate::coordinator::knn::build_lists`]). The exact front end
+//! computes all `n(n−1)/2` pairwise distances in blocked form — `O(n²)`
+//! FLOPs and the hard ceiling on fit size once the geodesics stage is
+//! sparse (`--geodesics sparse-dijkstra` needs only the lists). This
+//! module provides the randomized alternative the megaman system
+//! (arXiv 1603.02763) identifies as the key to manifold learning at
+//! millions of points:
+//!
+//! * [`rpforest`] — a seeded random-projection forest: `T` trees of
+//!   recursive median splits on random hyperplanes route every point to
+//!   one leaf per tree; leaf co-members are the candidate set, and only
+//!   candidate pairs are exactly rescored (tiled [`crate::kernels::sqdist`]
+//!   kernels + [`crate::kernels::kselect`] top-k). Candidate generation is
+//!   `O(T·n log n)` and rescoring `O(T·n·leaf)` — at `n = 32768` with the
+//!   defaults, under 1% of the exact pair count.
+//!
+//! The output is the same `Vec<Vec<Neighbor>>` shape the exact stage
+//! produces, bit-deterministic for any worker count (seeded
+//! [`crate::util::Rng`] per tree, `total_cmp` + index tie-breaks, fixed
+//! tree order), so the exact pipeline, landmark, and streaming fits all
+//! consume it unchanged via the `--knn {exact|rp-forest}` fork.
+
+pub mod rpforest;
+
+pub use rpforest::{knn_lists, RpForest, RpForestParams, RpForestStats};

@@ -1,0 +1,464 @@
+//! Seeded random-projection forest for approximate kNN lists.
+//!
+//! **Build** (per tree, seeded): recursively split the point set on a
+//! random gaussian hyperplane — project every member onto the direction,
+//! sort by `(projection, point id)` (`total_cmp`, so the order is total
+//! and canonical), and cut at the median — until a node holds at most
+//! `leaf_size` points. **Query** (in-sample): routing a point down the
+//! tree it was built from lands exactly in the leaf that holds it, so the
+//! leaf partition *is* the routing result; a point's candidates are the
+//! union of its leaf co-members across all `T` trees. **Rescore**: each
+//! leaf's member rows are gathered into per-thread scratch and pushed
+//! through the tiled symmetric distance kernel
+//! ([`crate::kernels::sqdist::dist_block_sym`]), whose per-pair distance
+//! is a pure function of the two rows — bit-identical wherever the pair
+//! is evaluated — then per-member top-k selection
+//! ([`crate::kernels::kselect::TopK`]) keeps the `k` smallest with the
+//! crate's canonical `(distance, index)` tie-break. Per-tree lists are
+//! merged per point (sort + dedup by index — duplicates across trees are
+//! bit-identical, so they land adjacent) and truncated to `k`.
+//!
+//! **Determinism**: tree `t` draws from `Rng::seed(seed ⊕ mix(t))`, split
+//! directions are consumed in fixed pre-order, trees are merged in fixed
+//! tree order, and every fan-out runs over the engine executor's
+//! `run_tasks` (submission-order results) — so the lists are
+//! bit-identical for any worker count.
+//!
+//! **Cost**: build is `O(T · n log(n/leaf) · D)`, rescoring
+//! `O(T · n · leaf · D)` FLOPs against the exact stage's `O(n² · D)` —
+//! the candidate-pair fraction is `≈ T·leaf/(2n)` of `n²` and *shrinks*
+//! as `n` grows (0.8% at `n = 32768` with the defaults).
+//!
+//! ```
+//! use isospark::knn_approx::{knn_lists, RpForestParams};
+//! use isospark::linalg::Matrix;
+//!
+//! // 64 points on a line: median splits cut the line into contiguous
+//! // runs, so point 10's true neighbors (9 and 11) share its leaf.
+//! let x = Matrix::from_vec(64, 1, (0..64).map(|i| i as f64).collect());
+//! let params = RpForestParams { trees: 2, leaf_size: 8, seed: 7 };
+//! let (lists, stats) = knn_lists(&x, 2, &params, 1).unwrap();
+//! let ids: Vec<usize> = lists[10].iter().map(|&(_, j)| j).collect();
+//! assert_eq!(ids, vec![9, 11]);
+//! assert!(stats.candidate_pairs > 0);
+//! ```
+
+use crate::engine::executor::{resolve_workers, run_tasks};
+use crate::kernels::kselect::{Neighbor, TopK};
+use crate::kernels::sqdist;
+use crate::linalg::Matrix;
+use crate::util::Rng;
+use anyhow::{bail, Result};
+use std::cell::RefCell;
+
+thread_local! {
+    /// Per-thread gather buffer for leaf rescoring: each pool worker
+    /// reuses one backing allocation across every leaf it claims.
+    static GATHER: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Forest hyper-parameters. `leaf_size` is the recall/cost knob: each
+/// point is exactly rescored against ≈ `trees · leaf_size` candidates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RpForestParams {
+    /// Number of trees `T` (independent seeded random partitions).
+    pub trees: usize,
+    /// Maximum leaf population; splitting stops at or below this size.
+    pub leaf_size: usize,
+    /// Base seed; tree `t` uses an independent derived stream.
+    pub seed: u64,
+}
+
+impl RpForestParams {
+    /// Reject degenerate configurations up front, with the constraint in
+    /// the message: zero trees find nothing, and a leaf that cannot hold
+    /// `k` co-members cannot fill a top-k list from any single tree.
+    pub fn validate(&self, k: usize) -> Result<()> {
+        if self.trees == 0 {
+            bail!("rp-forest: tree count T must be ≥ 1 (got 0)");
+        }
+        if self.leaf_size <= k {
+            bail!(
+                "rp-forest: leaf size {} must exceed k = {k} (a leaf holds a point plus \
+                 its candidates; use rp_leaf = 0 for the automatic default)",
+                self.leaf_size
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Evidence from an rp-forest run — the candidate-generation counters the
+/// `run`/`fit` reports surface next to the stage metrics, including the
+/// recall proxy (list fullness + distinct-candidate depth).
+#[derive(Clone, Debug)]
+pub struct RpForestStats {
+    /// Point count the forest indexed.
+    pub n: usize,
+    /// Neighbors requested per point.
+    pub k: usize,
+    /// Trees built.
+    pub trees: usize,
+    /// Leaf-size bound used (after resolving the automatic default).
+    pub leaf_size: usize,
+    /// Total leaves across all trees.
+    pub leaves: usize,
+    /// Exactly rescored candidate pairs, `Σ_leaves L(L−1)/2` — the FLOP
+    /// count that replaces the exact stage's `n(n−1)/2`.
+    pub candidate_pairs: u64,
+    /// Mean distinct candidates per point that survived into the merge
+    /// (unioned across trees, before truncation to `k`).
+    pub mean_distinct_candidates: f64,
+    /// Fraction of points whose merged candidate set had ≥ `k` distinct
+    /// members — with every list full and candidates ≫ k, low recall
+    /// would require all trees to co-locate the same wrong neighbors.
+    pub full_fraction: f64,
+}
+
+impl RpForestStats {
+    /// Candidate pairs as a fraction of `n²` (the acceptance metric; the
+    /// exact stage sits at `(n−1)/(2n) ≈ 0.5`).
+    pub fn pair_fraction(&self) -> f64 {
+        self.candidate_pairs as f64 / (self.n as f64 * self.n as f64)
+    }
+
+    /// One-line human summary for run reports.
+    pub fn describe(&self) -> String {
+        format!(
+            "rp-forest (T={}, leaf={}, {} leaves): {} candidate pairs = {:.2}% of n² \
+             | recall proxy: {:.1} distinct candidates/point, {:.1}% lists full",
+            self.trees,
+            self.leaf_size,
+            self.leaves,
+            self.candidate_pairs,
+            100.0 * self.pair_fraction(),
+            self.mean_distinct_candidates,
+            100.0 * self.full_fraction,
+        )
+    }
+}
+
+/// A built forest: per tree, the leaf partition of `0..n` (each leaf
+/// sorted ascending by point id). For in-sample queries the partition is
+/// the routing result, so this is all a kNN build needs to retain.
+#[derive(Clone, Debug)]
+pub struct RpForest {
+    trees: Vec<Vec<Vec<u32>>>,
+    params: RpForestParams,
+}
+
+impl RpForest {
+    /// Build `params.trees` trees over the rows of `x`, fanned out over
+    /// `workers` pool threads (`0` = all cores). Bit-deterministic for
+    /// any worker count: each tree is an independent task with its own
+    /// seeded stream, and results come back in tree order.
+    pub fn build(x: &Matrix, params: &RpForestParams, workers: usize) -> Result<RpForest> {
+        if x.nrows() < 2 {
+            bail!("rp-forest: need at least 2 points, got {}", x.nrows());
+        }
+        let workers = resolve_workers(workers).min(params.trees);
+        let trees = run_tasks(workers, (0..params.trees).collect(), |t| {
+            // Independent stream per tree: the SplitMix64 expansion in
+            // `Rng::seed` decorrelates nearby seeds.
+            let mut rng = Rng::seed(params.seed ^ (t as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            let mut leaves = Vec::new();
+            let idx: Vec<u32> = (0..x.nrows() as u32).collect();
+            split_node(x, idx, params.leaf_size, &mut rng, &mut leaves);
+            leaves
+        });
+        Ok(RpForest { trees, params: *params })
+    }
+
+    /// Total leaves across all trees.
+    pub fn num_leaves(&self) -> usize {
+        self.trees.iter().map(Vec::len).sum()
+    }
+
+    /// Exact-rescored approximate kNN lists: every leaf's co-member pairs
+    /// are scored with the tiled symmetric distance kernel, per-tree
+    /// top-k lists are merged per point in fixed tree order, deduplicated
+    /// by index, and truncated to `k`. Output matches the exact stage's
+    /// shape and tie-break contract; bit-deterministic for any worker
+    /// count.
+    pub fn knn_lists(
+        &self,
+        x: &Matrix,
+        k: usize,
+        workers: usize,
+    ) -> Result<(Vec<Vec<Neighbor>>, RpForestStats)> {
+        self.params.validate(k)?;
+        let n = x.nrows();
+        let workers = resolve_workers(workers);
+
+        // Rescore every leaf (all trees flattened — leaf tasks are
+        // independent and results return in submission order).
+        let leaf_tasks: Vec<&[u32]> =
+            self.trees.iter().flat_map(|t| t.iter().map(Vec::as_slice)).collect();
+        let scored = run_tasks(workers.min(leaf_tasks.len().max(1)), leaf_tasks, |members| {
+            score_leaf(x, members, k)
+        });
+
+        // Driver-side scatter, in (tree, leaf, member) order: each point
+        // collects exactly one candidate list per tree.
+        let mut cand: Vec<Vec<Neighbor>> = vec![Vec::new(); n];
+        let mut candidate_pairs = 0u64;
+        for (lists, pairs) in scored {
+            candidate_pairs += pairs;
+            for (g, list) in lists {
+                cand[g as usize].extend(list);
+            }
+        }
+
+        // Merge per point: canonical sort, dedup by index (cross-tree
+        // duplicates carry bit-identical distances, so they sort
+        // adjacent), truncate to k. Chunk ownership — not arrival order —
+        // decides placement, so any pool size gives the same lists.
+        let chunk = n.div_ceil(workers).max(1);
+        let tasks: Vec<&mut [Vec<Neighbor>]> = cand.chunks_mut(chunk).collect();
+        let partials = run_tasks(workers.min(tasks.len().max(1)), tasks, |slice| {
+            let mut distinct = 0u64;
+            let mut full = 0u64;
+            for list in slice.iter_mut() {
+                list.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+                list.dedup_by_key(|e| e.1);
+                distinct += list.len() as u64;
+                if list.len() >= k {
+                    full += 1;
+                }
+                list.truncate(k);
+                list.shrink_to_fit();
+            }
+            (distinct, full)
+        });
+        let (distinct, full) =
+            partials.iter().fold((0u64, 0u64), |(d, f), &(pd, pf)| (d + pd, f + pf));
+
+        let stats = RpForestStats {
+            n,
+            k,
+            trees: self.params.trees,
+            leaf_size: self.params.leaf_size,
+            leaves: self.num_leaves(),
+            candidate_pairs,
+            mean_distinct_candidates: distinct as f64 / n.max(1) as f64,
+            full_fraction: full as f64 / n.max(1) as f64,
+        };
+        Ok((cand, stats))
+    }
+}
+
+/// Build + query in one call — the shape `coordinator::knn` consumes.
+pub fn knn_lists(
+    x: &Matrix,
+    k: usize,
+    params: &RpForestParams,
+    workers: usize,
+) -> Result<(Vec<Vec<Neighbor>>, RpForestStats)> {
+    params.validate(k)?;
+    let forest = RpForest::build(x, params, workers)?;
+    forest.knn_lists(x, k, workers)
+}
+
+/// Recursive median split. `idx` arrives in arbitrary order; leaves are
+/// stored sorted ascending so candidate scans are canonical. Pre-order
+/// recursion (left before right) fixes the rng consumption order.
+fn split_node(
+    x: &Matrix,
+    mut idx: Vec<u32>,
+    leaf_size: usize,
+    rng: &mut Rng,
+    out: &mut Vec<Vec<u32>>,
+) {
+    if idx.len() <= leaf_size {
+        idx.sort_unstable();
+        out.push(idx);
+        return;
+    }
+    let d = x.ncols();
+    let dir: Vec<f64> = (0..d).map(|_| rng.gaussian()).collect();
+    let mut keyed: Vec<(f64, u32)> = idx
+        .into_iter()
+        .map(|i| {
+            let row = x.row(i as usize);
+            let proj = row.iter().zip(&dir).map(|(a, b)| a * b).sum::<f64>();
+            (proj, i)
+        })
+        .collect();
+    // Total order: projection (total_cmp) then point id — ties (e.g. a
+    // degenerate direction or duplicate points) still halve the node, so
+    // recursion always terminates.
+    keyed.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let half = keyed.len() / 2;
+    let right: Vec<u32> = keyed[half..].iter().map(|&(_, i)| i).collect();
+    keyed.truncate(half);
+    let left: Vec<u32> = keyed.into_iter().map(|(_, i)| i).collect();
+    split_node(x, left, leaf_size, rng, out);
+    split_node(x, right, leaf_size, rng, out);
+}
+
+/// Score one leaf: gather member rows into per-thread scratch, run the
+/// tiled symmetric distance kernel, and keep each member's k smallest
+/// co-members (canonical tie-break: members are scanned ascending by
+/// global id, and `TopK` keeps the first-seen on threshold ties).
+/// Returns the per-member lists plus the pair count `L(L−1)/2`.
+#[allow(clippy::type_complexity)]
+fn score_leaf(x: &Matrix, members: &[u32], k: usize) -> (Vec<(u32, Vec<Neighbor>)>, u64) {
+    let l = members.len();
+    let d = x.ncols();
+    let mut buf = GATHER.with(|c| std::mem::take(&mut *c.borrow_mut()));
+    buf.clear();
+    buf.reserve(l * d);
+    for &m in members {
+        buf.extend_from_slice(x.row(m as usize));
+    }
+    let sub = Matrix::from_vec(l, d, buf);
+    let dist = sqdist::dist_block_sym(&sub);
+    let mut out = Vec::with_capacity(l);
+    for (r, &gr) in members.iter().enumerate() {
+        let mut top = TopK::new(k);
+        for (c, &gc) in members.iter().enumerate() {
+            if c != r {
+                top.push(dist[(r, c)], gc as usize);
+            }
+        }
+        out.push((gr, top.into_sorted()));
+    }
+    GATHER.with(|c| *c.borrow_mut() = sub.into_vec());
+    (out, (l as u64) * (l as u64 - 1) / 2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines;
+    use crate::data::swiss_roll;
+
+    fn swiss(n: usize, seed: u64) -> Matrix {
+        swiss_roll::euler_isometric(n, seed).points
+    }
+
+    #[test]
+    fn lists_are_well_formed() {
+        let x = swiss(512, 3);
+        let params = RpForestParams { trees: 4, leaf_size: 32, seed: 1 };
+        let (lists, stats) = knn_lists(&x, 6, &params, 1).unwrap();
+        assert_eq!(lists.len(), 512);
+        assert_eq!(stats.n, 512);
+        assert!(stats.leaves >= 4, "at least one leaf per tree");
+        for (i, list) in lists.iter().enumerate() {
+            assert_eq!(list.len(), 6, "point {i}");
+            for w in list.windows(2) {
+                assert!(
+                    w[0].0 < w[1].0 || (w[0].0 == w[1].0 && w[0].1 < w[1].1),
+                    "point {i}: unsorted or duplicate"
+                );
+            }
+            assert!(list.iter().all(|&(_, j)| j != i), "point {i} lists itself");
+        }
+    }
+
+    #[test]
+    fn rescoring_is_exact_on_candidates() {
+        // With one tree and leaf ≥ n the forest degenerates to the exact
+        // brute-force lists — the rescoring path must reproduce them
+        // entry for entry.
+        let x = swiss(96, 5);
+        let params = RpForestParams { trees: 1, leaf_size: 96, seed: 9 };
+        let (lists, stats) = knn_lists(&x, 7, &params, 1).unwrap();
+        let exact = baselines::brute_knn(&x, 7);
+        for i in 0..96 {
+            let got: Vec<usize> = lists[i].iter().map(|&(_, j)| j).collect();
+            let want: Vec<usize> = exact[i].iter().map(|&(_, j)| j).collect();
+            assert_eq!(got, want, "point {i}");
+        }
+        assert_eq!(stats.leaves, 1);
+        assert_eq!(stats.candidate_pairs, 96 * 95 / 2);
+        assert_eq!(stats.full_fraction, 1.0);
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let x = swiss(400, 7);
+        let params = RpForestParams { trees: 6, leaf_size: 24, seed: 11 };
+        let (reference, ref_stats) = knn_lists(&x, 5, &params, 1).unwrap();
+        for workers in [2, 4, 8] {
+            let (lists, stats) = knn_lists(&x, 5, &params, workers).unwrap();
+            assert_eq!(stats.candidate_pairs, ref_stats.candidate_pairs);
+            for (i, (a, b)) in reference.iter().zip(&lists).enumerate() {
+                assert_eq!(a.len(), b.len(), "workers={workers} point {i}");
+                for (u, v) in a.iter().zip(b) {
+                    assert_eq!(u.0.to_bits(), v.0.to_bits(), "workers={workers} point {i}");
+                    assert_eq!(u.1, v.1, "workers={workers} point {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn seed_changes_the_forest() {
+        let x = swiss(256, 13);
+        let a = RpForest::build(&x, &RpForestParams { trees: 2, leaf_size: 16, seed: 1 }, 1)
+            .unwrap();
+        let b = RpForest::build(&x, &RpForestParams { trees: 2, leaf_size: 16, seed: 2 }, 1)
+            .unwrap();
+        assert_ne!(a.trees, b.trees, "different seeds must give different partitions");
+        let a2 = RpForest::build(&x, &RpForestParams { trees: 2, leaf_size: 16, seed: 1 }, 4)
+            .unwrap();
+        assert_eq!(a.trees, a2.trees, "same seed must give the same forest at any pool size");
+    }
+
+    #[test]
+    fn leaves_partition_the_points() {
+        let x = swiss(333, 17);
+        let params = RpForestParams { trees: 3, leaf_size: 20, seed: 4 };
+        let forest = RpForest::build(&x, &params, 2).unwrap();
+        for (t, tree) in forest.trees.iter().enumerate() {
+            let mut seen = vec![false; 333];
+            for leaf in tree {
+                assert!(leaf.len() <= 20, "tree {t}: oversized leaf");
+                for &i in leaf {
+                    assert!(!seen[i as usize], "tree {t}: point {i} in two leaves");
+                    seen[i as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "tree {t}: point missing from partition");
+        }
+    }
+
+    #[test]
+    fn degenerate_params_rejected() {
+        let x = swiss(64, 19);
+        let err = knn_lists(&x, 5, &RpForestParams { trees: 0, leaf_size: 32, seed: 1 }, 1)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("T must be ≥ 1"), "{err:#}");
+        let err = knn_lists(&x, 5, &RpForestParams { trees: 2, leaf_size: 5, seed: 1 }, 1)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("must exceed k"), "{err:#}");
+        let one = Matrix::zeros(1, 3);
+        assert!(RpForest::build(&one, &RpForestParams { trees: 1, leaf_size: 8, seed: 1 }, 1)
+            .is_err());
+    }
+
+    #[test]
+    fn constant_data_terminates() {
+        // All projections tie: the id tie-break must still halve nodes.
+        let x = Matrix::full(100, 4, 1.0);
+        let params = RpForestParams { trees: 2, leaf_size: 8, seed: 21 };
+        let (lists, _) = knn_lists(&x, 3, &params, 1).unwrap();
+        assert_eq!(lists.len(), 100);
+        // All distances are zero: neighbors are the smallest co-member ids.
+        assert_eq!(lists[0].iter().map(|&(_, j)| j).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn recall_close_to_one_on_swiss_roll() {
+        let x = swiss(1024, 23);
+        let params = RpForestParams { trees: 8, leaf_size: 40, seed: 42 };
+        let (lists, stats) = knn_lists(&x, 10, &params, 2).unwrap();
+        let exact = baselines::brute_knn(&x, 10);
+        let recall = crate::eval::recall_at_k(&lists, &exact, 10);
+        assert!(recall >= 0.95, "recall@10 = {recall}");
+        assert!(stats.pair_fraction() < 0.5, "must beat all-pairs");
+        assert!(stats.full_fraction > 0.99);
+    }
+}

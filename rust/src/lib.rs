@@ -52,6 +52,7 @@ pub mod engine;
 pub mod eval;
 pub mod graph;
 pub mod kernels;
+pub mod knn_approx;
 pub mod linalg;
 pub mod model;
 pub mod runtime;
@@ -62,7 +63,7 @@ pub mod util;
 /// Convenience re-exports for the common entry points.
 pub mod prelude {
     pub use crate::backend::Backend;
-    pub use crate::config::{ClusterConfig, GeodesicsMode, IsomapConfig};
+    pub use crate::config::{ClusterConfig, GeodesicsMode, IsomapConfig, KnnMode};
     pub use crate::coordinator::isomap::{self, IsomapOutput};
     pub use crate::engine::block::BlockId;
     pub use crate::engine::context::SparkContext;

@@ -34,6 +34,11 @@ COMMANDS:
                    --cores <c> --threads <t> --out <csv> --config <file>
                    --geodesics dense-fw|sparse-dijkstra (sparse: CSR graph
                     + pooled multi-source Dijkstra, no dense APSP RDD)
+                   --knn exact|rp-forest (rp-forest: seeded random-
+                    projection-forest candidates + exact rescoring —
+                    O(T·n·leaf) instead of O(n²) distance FLOPs; tune with
+                    --rp-trees <T> (default 8) and --rp-leaf <L>
+                    (default 0 = max(4k, 32)))
                    (--threads: OS worker threads for real block tasks;
                     0 = all cores. Results are identical for any value.)
   landmark         L-Isomap: same options plus --landmarks <m>
@@ -115,6 +120,9 @@ fn parse_common(args: &Args) -> Result<(IsomapConfig, ClusterConfig)> {
         args.get("checkpoint-every", iso.checkpoint_every).map_err(anyhow_str)?;
     iso.seed = args.get("seed", iso.seed).map_err(anyhow_str)?;
     iso.geodesics = args.get("geodesics", iso.geodesics).map_err(anyhow_str)?;
+    iso.knn = args.get("knn", iso.knn).map_err(anyhow_str)?;
+    iso.rp_trees = args.get("rp-trees", iso.rp_trees).map_err(anyhow_str)?;
+    iso.rp_leaf = args.get("rp-leaf", iso.rp_leaf).map_err(anyhow_str)?;
     let nodes: usize = args.get("nodes", cluster.nodes).map_err(anyhow_str)?;
     if nodes != cluster.nodes {
         cluster = ClusterConfig::paper_testbed(nodes);
@@ -176,6 +184,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         out.q, out.graph_components, out.eigen_iterations, out.eigen_converged
     );
     println!("geodesics path: {}", out.geodesics.describe());
+    println!("knn path: {}", out.knn.describe());
     println!("eigenvalues: {:?}", out.eigenvalues);
     if let Some(truth) = &ds.ground_truth {
         if truth.ncols() == cfg.d {

@@ -1,0 +1,167 @@
+//! rp-forest kNN front end: the ISSUE-6 acceptance suite.
+//!
+//! * recall ≥ 0.95 @ k = 10 against exact lists on swiss-roll n = 2048;
+//! * bit-determinism for any worker count [1, 2, 4, 8];
+//! * the fully sub-quadratic pipeline (`--knn rp-forest --geodesics
+//!   sparse-dijkstra`) bit-identical across runs and pool sizes;
+//! * config parse/reject for the new keys;
+//! * graceful errors for degenerate tree count / leaf size.
+
+use isospark::backend::Backend;
+use isospark::baselines;
+use isospark::config::{ClusterConfig, GeodesicsMode, IsomapConfig, KnnMode, RawConfig};
+use isospark::coordinator::{isomap, knn};
+use isospark::data::swiss_roll;
+use isospark::engine::SparkContext;
+use isospark::eval;
+use isospark::knn_approx::{knn_lists, RpForestParams};
+use isospark::linalg::Matrix;
+
+fn cluster(threads: usize) -> ClusterConfig {
+    ClusterConfig { parallelism: threads, cores_per_node: 4, ..ClusterConfig::local() }
+}
+
+fn assert_bits_equal(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!((a.nrows(), a.ncols()), (b.nrows(), b.ncols()), "{what}: shape");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i} differs: {x} vs {y}");
+    }
+}
+
+#[test]
+fn recall_at_least_095_on_swiss_roll_2048() {
+    // The headline acceptance bar, at the defaults the pipeline ships
+    // with (T = 8, leaf = max(4k, 32) = 40 at k = 10).
+    let ds = swiss_roll::euler_isometric(2048, 11);
+    let cfg = IsomapConfig { knn: KnnMode::RpForest, ..Default::default() };
+    let params = RpForestParams {
+        trees: cfg.rp_trees,
+        leaf_size: cfg.rp_leaf_resolved(),
+        seed: cfg.seed,
+    };
+    let (lists, stats) = knn_lists(&ds.points, 10, &params, 0).unwrap();
+    let exact = baselines::brute_knn(&ds.points, 10);
+    let recall = eval::recall_at_k(&lists, &exact, 10);
+    assert!(recall >= 0.95, "recall@10 = {recall} (acceptance bar is 0.95)");
+    // Sub-quadratic candidate generation: far fewer pairs than n(n−1)/2.
+    let n = 2048u64;
+    assert!(
+        stats.candidate_pairs < n * n / 5,
+        "candidate pairs {} ≥ 20% of n²",
+        stats.candidate_pairs
+    );
+}
+
+#[test]
+fn lists_bit_deterministic_across_worker_counts() {
+    let ds = swiss_roll::euler_isometric(1500, 31);
+    let params = RpForestParams { trees: 8, leaf_size: 40, seed: 42 };
+    let (reference, ref_stats) = knn_lists(&ds.points, 10, &params, 1).unwrap();
+    for workers in [2, 4, 8] {
+        let (lists, stats) = knn_lists(&ds.points, 10, &params, workers).unwrap();
+        assert_eq!(
+            stats.candidate_pairs, ref_stats.candidate_pairs,
+            "workers={workers}: pair count drifted"
+        );
+        for (i, (a, b)) in reference.iter().zip(&lists).enumerate() {
+            assert_eq!(a.len(), b.len(), "workers={workers} point {i}: length");
+            for ((da, ja), (db, jb)) in a.iter().zip(b) {
+                assert_eq!(ja, jb, "workers={workers} point {i}: neighbor id");
+                assert_eq!(
+                    da.to_bits(),
+                    db.to_bits(),
+                    "workers={workers} point {i}: distance bits"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn full_subquadratic_pipeline_bit_identical() {
+    // rp-forest candidates + sparse Dijkstra geodesics: the embedding and
+    // spectrum must be bit-identical across repeated runs and across
+    // worker-pool sizes — the whole pipeline honors the determinism
+    // contract, not just the lists.
+    let ds = swiss_roll::euler_isometric(500, 7);
+    let cfg = IsomapConfig {
+        k: 10,
+        d: 2,
+        block: 64,
+        knn: KnnMode::RpForest,
+        geodesics: GeodesicsMode::SparseDijkstra,
+        ..Default::default()
+    };
+    let run = |threads: usize| isomap::run(&ds.points, &cfg, &cluster(threads)).unwrap();
+    let reference = run(1);
+    assert!(matches!(reference.knn, knn::KnnPath::RpForest(_)));
+    let repeat = run(1);
+    assert_bits_equal(&reference.embedding, &repeat.embedding, "repeat run");
+    for threads in [2, 4, 8] {
+        let out = run(threads);
+        assert_bits_equal(&reference.embedding, &out.embedding, "threads");
+        for (a, b) in reference.eigenvalues.iter().zip(&out.eigenvalues) {
+            assert_eq!(a.to_bits(), b.to_bits(), "eigenvalue bits at threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn build_lists_fork_selects_the_forest() {
+    let ds = swiss_roll::euler_isometric(400, 3);
+    let base = IsomapConfig { k: 8, block: 64, ..Default::default() };
+    let ctx = SparkContext::new(ClusterConfig::local());
+    let exact = knn::build_lists(&ctx, &ds.points, &base, &Backend::Native).unwrap();
+    assert!(matches!(exact.path, knn::KnnPath::Exact));
+    let rp_cfg = IsomapConfig { knn: KnnMode::RpForest, ..base };
+    let ctx = SparkContext::new(ClusterConfig::local());
+    let rp = knn::build_lists(&ctx, &ds.points, &rp_cfg, &Backend::Native).unwrap();
+    let knn::KnnPath::RpForest(stats) = &rp.path else {
+        panic!("expected rp-forest path, got {}", rp.path.describe())
+    };
+    assert!(stats.pair_fraction() < 0.5);
+    assert_eq!(rp.q, exact.q);
+    // High agreement between the two front ends at these settings.
+    let recall = eval::recall_at_k(&rp.lists, &exact.lists, 8);
+    assert!(recall >= 0.95, "recall@8 = {recall}");
+}
+
+#[test]
+fn config_keys_parse_and_reject() {
+    let raw = RawConfig::parse(
+        "[isomap]\nknn = rp-forest\nrp_trees = 6\nrp_leaf = 48\ngeodesics = sparse-dijkstra\n",
+    )
+    .unwrap();
+    let cfg = raw.isomap().unwrap();
+    assert_eq!(cfg.knn, KnnMode::RpForest);
+    assert_eq!(cfg.rp_trees, 6);
+    assert_eq!(cfg.rp_leaf, 48);
+    assert_eq!(cfg.rp_leaf_resolved(), 48);
+    assert!(cfg.validate(1000).is_ok());
+
+    // Unknown spelling is rejected at parse time…
+    assert!(RawConfig::parse("[isomap]\nknn = annoy\n").unwrap().isomap().is_err());
+    // …and non-numeric knob values too.
+    assert!(RawConfig::parse("[isomap]\nrp_trees = many\n").unwrap().isomap().is_err());
+    // The default config never selects the forest.
+    assert_eq!(IsomapConfig::default().knn, KnnMode::Exact);
+}
+
+#[test]
+fn degenerate_forest_shapes_error_gracefully() {
+    let ds = swiss_roll::euler_isometric(128, 5);
+
+    // Zero trees: rejected by config validation and by the forest itself.
+    let cfg = IsomapConfig { knn: KnnMode::RpForest, rp_trees: 0, ..Default::default() };
+    let err = cfg.validate(128).unwrap_err();
+    assert!(format!("{err:#}").contains("rp_trees"), "{err:#}");
+    let err = knn_lists(&ds.points, 10, &RpForestParams { trees: 0, leaf_size: 64, seed: 1 }, 1)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("≥ 1"), "{err:#}");
+
+    // Leaf too small to hold k candidates: rejected with the constraint
+    // spelled out, end to end through the pipeline entry point.
+    let cfg = IsomapConfig { knn: KnnMode::RpForest, rp_leaf: 4, ..Default::default() };
+    let err = isomap::run(&ds.points, &cfg, &ClusterConfig::local()).unwrap_err();
+    assert!(format!("{err:#}").contains("must exceed k"), "{err:#}");
+}
