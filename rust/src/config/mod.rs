@@ -242,6 +242,27 @@ pub struct ClusterConfig {
     /// pool can inflate them; use `parallelism = 1` (or `compute_scale`
     /// recalibration) when reproducing calibrated Table-I-style numbers.
     pub parallelism: usize,
+    /// Live fault-injection rate in `[0, 1]` (`[fault] rate`,
+    /// `--fault-rate`): probability that a task's first attempt is served
+    /// an injected panic or transient error by the seeded
+    /// [`crate::engine::fault::FaultPlan`]. `0.0` (the default) installs
+    /// no plan at all — every stage runs the plain fast path. Injection is
+    /// a pure function of `(fault_seed, stage, task, attempt)`, so the
+    /// output stays bit-identical to the fault-free run at any rate.
+    pub fault_rate: f64,
+    /// Seed of the deterministic fault schedule (`[fault] seed`,
+    /// `--fault-seed`).
+    pub fault_seed: u64,
+    /// Attempt ceiling per task under injection (`[fault] max_attempts`,
+    /// `--max-attempts`); exhausting it fails the stage with the original
+    /// payload annotated with stage name and attempt count.
+    pub fault_max_attempts: usize,
+    /// Durable checkpoint directory (`[fault] checkpoint_dir`,
+    /// `--checkpoint-dir`): when set, `checkpoint()` spills RDD blocks to
+    /// checksummed files under this directory and the APSP / streaming
+    /// fits restore from the latest valid checkpoint on startup. `None`
+    /// keeps checkpoints purely simulated (virtual disk charge only).
+    pub checkpoint_dir: Option<String>,
 }
 
 impl ClusterConfig {
@@ -258,6 +279,10 @@ impl ClusterConfig {
             disk_bandwidth: f64::INFINITY,
             compute_scale: 1.0,
             parallelism: 1,
+            fault_rate: 0.0,
+            fault_seed: 0,
+            fault_max_attempts: crate::engine::fault::DEFAULT_MAX_ATTEMPTS,
+            checkpoint_dir: None,
         }
     }
 
@@ -274,6 +299,10 @@ impl ClusterConfig {
             disk_bandwidth: 100.0e6, // SATA HDD sequential
             compute_scale: 1.0,
             parallelism: 0, // physical pool: all available cores
+            fault_rate: 0.0,
+            fault_seed: 0,
+            fault_max_attempts: crate::engine::fault::DEFAULT_MAX_ATTEMPTS,
+            checkpoint_dir: None,
         }
     }
 
@@ -367,6 +396,10 @@ impl RawConfig {
             disk_bandwidth: self.typed("cluster", "disk_bandwidth", d.disk_bandwidth)?,
             compute_scale: self.typed("cluster", "compute_scale", d.compute_scale)?,
             parallelism: self.typed("cluster", "parallelism", d.parallelism)?,
+            fault_rate: self.typed("fault", "rate", d.fault_rate)?,
+            fault_seed: self.typed("fault", "seed", d.fault_seed)?,
+            fault_max_attempts: self.typed("fault", "max_attempts", d.fault_max_attempts)?,
+            checkpoint_dir: self.get("fault", "checkpoint_dir").map(str::to_string),
         })
     }
 }
@@ -484,5 +517,28 @@ mod tests {
     fn parallelism_key_parses() {
         let raw = RawConfig::parse("[cluster]\nnodes = 2\nparallelism = 6\n").unwrap();
         assert_eq!(raw.cluster().unwrap().parallelism, 6);
+    }
+
+    #[test]
+    fn fault_section_parses_with_safe_defaults() {
+        // Defaults: injection off, no durable checkpoint directory.
+        let none = RawConfig::parse("[cluster]\nnodes = 2\n").unwrap().cluster().unwrap();
+        assert_eq!(none.fault_rate, 0.0);
+        assert_eq!(none.fault_seed, 0);
+        assert_eq!(none.fault_max_attempts, crate::engine::fault::DEFAULT_MAX_ATTEMPTS);
+        assert_eq!(none.checkpoint_dir, None);
+
+        let raw = RawConfig::parse(
+            "[fault]\nrate = 0.25\nseed = 7\nmax_attempts = 3\ncheckpoint_dir = /tmp/ckpt\n",
+        )
+        .unwrap();
+        let cl = raw.cluster().unwrap();
+        assert_eq!(cl.fault_rate, 0.25);
+        assert_eq!(cl.fault_seed, 7);
+        assert_eq!(cl.fault_max_attempts, 3);
+        assert_eq!(cl.checkpoint_dir.as_deref(), Some("/tmp/ckpt"));
+
+        let bad = RawConfig::parse("[fault]\nrate = often\n").unwrap();
+        assert!(bad.cluster().is_err());
     }
 }

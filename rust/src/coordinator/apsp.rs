@@ -42,18 +42,71 @@ const LEFT: usize = 0;
 /// Right operand marker (`A_IC`).
 const RIGHT: usize = 1;
 
+/// Content fingerprint binding a durable APSP checkpoint to its input:
+/// FNV over `q` and every input block's id, shape, and f64 bits. A
+/// checkpoint directory reused across different datasets/configs can
+/// never serve stale state — a different input graph hashes to a
+/// different job key and simply finds no checkpoint.
+fn graph_fingerprint(graph: &BlockRdd<Matrix>, q: usize) -> u64 {
+    let mut h = crate::data::io::Fnv1a64::new();
+    h.update(&(q as u64).to_le_bytes());
+    for (id, blk) in graph.iter() {
+        h.update(&(id.i as u64).to_le_bytes());
+        h.update(&(id.j as u64).to_le_bytes());
+        h.update(&(blk.nrows() as u64).to_le_bytes());
+        h.update(&(blk.ncols() as u64).to_le_bytes());
+        for v in blk.as_slice() {
+            h.update(&v.to_le_bytes());
+        }
+    }
+    h.finish()
+}
+
 /// Solve APSP in place over the graph's upper-triangular blocks; returns
 /// the *feature matrix* `A = G°²` (squared geodesics), ready for
 /// double centering.
+///
+/// With `--checkpoint-dir` set, the `checkpoint_every` cadence also spills
+/// the blocks durably (keyed by a content fingerprint of the input), and a
+/// fresh call restores from the newest valid spill, skipping the already
+/// completed pivot iterations — the resumed run's output is bit-identical
+/// to an uninterrupted one, because the blocks round-trip bit-exactly and
+/// the remaining pivots see exactly the state they would have seen.
 pub fn solve(
     graph: BlockRdd<Matrix>,
     q: usize,
     cfg: &IsomapConfig,
     backend: &Backend,
 ) -> Result<BlockRdd<Matrix>> {
-    let mut g = graph;
+    let ctx = graph.context();
+    let job = ctx
+        .checkpoint_store()
+        .map(|_| format!("apsp-{:016x}", graph_fingerprint(&graph, q)));
 
-    for piv in 0..q {
+    let mut g = graph;
+    let mut start = 0usize;
+    if let (Some(store), Some(job)) = (ctx.checkpoint_store(), job.as_deref()) {
+        if let Some((step, blocks)) = store.latest_valid(job) {
+            // `step` = completed pivot iterations at spill time.
+            let sw = crate::util::Stopwatch::start();
+            let part = g.partitioner();
+            g = ctx.parallelize("apsp:restore", blocks, part);
+            g.persist("G")?;
+            ctx.resilience().record_restore();
+            ctx.push_metrics(crate::engine::metrics::StageMetrics {
+                name: "checkpoint:restore".to_string(),
+                tasks: g.len(),
+                compute_real: 0.0,
+                virtual_span: 0.0,
+                shuffle_bytes: 0,
+                network_time: 0.0,
+                driver_time: sw.secs(),
+            });
+            start = step.min(q);
+        }
+    }
+
+    for piv in start..q {
         // ---- Phase 1: FW on the diagonal block, then replicate. ----
         let diag = g
             .filter_blocks(&format!("apsp:p1_filter[{piv}]"), |id| id.i == piv && id.j == piv)
@@ -140,9 +193,16 @@ pub fn solve(
             }
         });
 
-        // ---- Lineage maintenance (paper: checkpoint every 10 iters). ----
+        // ---- Lineage maintenance (paper: checkpoint every 10 iters),
+        // made durable when a checkpoint store is configured. ----
         if cfg.checkpoint_every > 0 && (piv + 1) % cfg.checkpoint_every == 0 {
-            g.checkpoint();
+            match job.as_deref() {
+                Some(job) => {
+                    g.checkpoint_durable(job, piv + 1)
+                        .with_context(|| format!("durable checkpoint at pivot {piv}"))?;
+                }
+                None => g.checkpoint(),
+            }
             g.persist("G")?;
         }
     }
@@ -188,6 +248,7 @@ pub fn solve_sparse(
     let q = num_blocks(n, b);
     let workers = ctx.parallelism();
 
+    let policy = ctx.task_policy();
     let mut blocks: Vec<(BlockId, Matrix)> =
         Vec::with_capacity(crate::engine::partitioner::ut_count(q));
     let mut panel_tasks = Vec::with_capacity(q);
@@ -198,7 +259,7 @@ pub fn solve_sparse(
         let sw = crate::util::Stopwatch::start();
         sources.clear();
         sources.extend(rs..re);
-        let panel = dijkstra::multi_source(&csr, &sources, workers);
+        let panel = dijkstra::multi_source_with_policy(&csr, &sources, workers, policy.as_ref());
         // Square and slice the panel into its UT blocks. Geodesics are
         // finite here: connectivity was checked against the same graph.
         for j in i..q {

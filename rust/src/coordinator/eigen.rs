@@ -10,7 +10,7 @@
 
 use super::block_range;
 use crate::backend::Backend;
-use crate::engine::executor::run_tasks;
+use crate::engine::executor::run_tasks_with_policy;
 use crate::engine::{BlockId, BlockRdd};
 use crate::linalg::qr::qr_thin;
 use crate::linalg::Matrix;
@@ -111,7 +111,10 @@ pub fn simultaneous_power_iteration(
                 next_row = re;
             }
             debug_assert_eq!(next_row, n, "eigen: V blocks must cover all rows");
-            run_tasks(workers, tasks, |(span, blk)| span.copy_from_slice(blk.as_slice()));
+            let policy = ctx.task_policy();
+            run_tasks_with_policy(policy.as_ref(), "eigen:paste", workers, tasks, |(span, blk)| {
+                span.copy_from_slice(blk.as_slice())
+            });
         }
         let (qn, rn) = qr_thin(&v);
         let delta = qn.fro_dist(&q);

@@ -20,7 +20,7 @@
 use super::{block_range, default_partitions, num_blocks};
 use crate::backend::Backend;
 use crate::config::{IsomapConfig, KnnMode};
-use crate::engine::executor::run_tasks;
+use crate::engine::executor::run_tasks_with_policy;
 use crate::engine::partitioner::UpperTriangularPartitioner;
 use crate::engine::{BlockId, BlockRdd, SparkContext};
 use crate::kernels::kselect::{cols_topk, merge_topk, row_topk, Neighbor};
@@ -233,7 +233,14 @@ fn rp_lists(
         seed: cfg.seed,
     };
     let sw = crate::util::Stopwatch::start();
-    let (lists, stats) = crate::knn_approx::knn_lists(x, cfg.k, &params, ctx.parallelism())?;
+    let policy = ctx.task_policy();
+    let (lists, stats) = crate::knn_approx::knn_lists_with_policy(
+        x,
+        cfg.k,
+        &params,
+        ctx.parallelism(),
+        policy.as_ref(),
+    )?;
     let secs = sw.secs();
     let tasks: Vec<crate::engine::clock::Task> = (0..params.trees)
         .map(|t| crate::engine::clock::Task {
@@ -373,11 +380,18 @@ fn lists_stage(
             buckets[g / chunk].push((g % chunk, list));
         }
         let tasks: Vec<_> = lists.chunks_mut(chunk).zip(buckets).collect();
-        run_tasks(workers, tasks, |(slice, items)| {
-            for (off, list) in items {
-                slice[off] = list;
-            }
-        });
+        let policy = ctx.task_policy();
+        run_tasks_with_policy(
+            policy.as_ref(),
+            "knn:lists_scatter",
+            workers,
+            tasks,
+            |(slice, items)| {
+                for (off, list) in std::mem::take(items) {
+                    slice[off] = list;
+                }
+            },
+        );
     }
 
     Ok(ListsStage { m, knn_lists, lists, q })

@@ -14,12 +14,84 @@
 //! as before.
 
 use crate::backend::Backend;
-use crate::config::{ClusterConfig, IsomapConfig};
+use crate::config::{ClusterConfig, IsomapConfig, KnnMode};
+use crate::engine::metrics::StageMetrics;
+use crate::engine::{BlockId, SparkContext};
 use crate::graph::{self, CsrGraph};
 use crate::linalg::{jacobi, Matrix};
 use crate::model::FittedModel;
-use crate::util::Rng;
+use crate::util::{Rng, Stopwatch};
 use anyhow::{bail, Context, Result};
+
+/// Content fingerprint binding a streaming-fit durable checkpoint to its
+/// input: FNV over the batch bytes and every knob that shapes the
+/// landmark table δ (m, k, seed, kNN front end, forest params). A
+/// checkpoint directory reused across datasets or configs can never serve
+/// a stale table — a different input hashes to a different job key and
+/// simply finds no checkpoint.
+fn delta_job_key(x: &Matrix, cfg: &IsomapConfig, m: usize) -> String {
+    let mut h = crate::data::io::Fnv1a64::new();
+    h.update(&(x.nrows() as u64).to_le_bytes());
+    h.update(&(x.ncols() as u64).to_le_bytes());
+    for v in x.as_slice() {
+        h.update(&v.to_le_bytes());
+    }
+    h.update(&(m as u64).to_le_bytes());
+    h.update(&(cfg.k as u64).to_le_bytes());
+    h.update(&cfg.seed.to_le_bytes());
+    h.update(&[(cfg.knn == KnnMode::RpForest) as u8]);
+    h.update(&(cfg.rp_trees as u64).to_le_bytes());
+    h.update(&(cfg.rp_leaf_resolved() as u64).to_le_bytes());
+    format!("stream-{:016x}", h.finish())
+}
+
+/// Try to restore the landmark table δ from the latest valid durable
+/// checkpoint under `job`. Shape-guarded: anything unexpected falls back
+/// to recomputation (the fit is always able to proceed from scratch).
+fn restore_delta(ctx: &SparkContext, job: &str, m: usize, n: usize) -> Option<Matrix> {
+    let store = ctx.checkpoint_store()?;
+    let sw = Stopwatch::start();
+    let (_, mut blocks) = store.latest_valid(job)?;
+    if blocks.len() != 1 {
+        return None;
+    }
+    let (_, delta) = blocks.pop()?;
+    if delta.nrows() != m || delta.ncols() != n {
+        return None;
+    }
+    ctx.resilience().record_restore();
+    ctx.push_metrics(StageMetrics {
+        name: "checkpoint:restore".to_string(),
+        tasks: 1,
+        compute_real: 0.0,
+        virtual_span: 0.0,
+        shuffle_bytes: 0,
+        network_time: 0.0,
+        driver_time: sw.secs(),
+    });
+    Some(delta)
+}
+
+/// Spill the landmark table δ as a single-block durable checkpoint under
+/// `job`. A no-op without a configured checkpoint directory.
+fn save_delta(ctx: &SparkContext, job: &str, delta: &Matrix) -> Result<()> {
+    let Some(store) = ctx.checkpoint_store() else {
+        return Ok(());
+    };
+    let sw = Stopwatch::start();
+    let bytes = store.save(job, 1, &[(BlockId::new(0, 0), delta)])?;
+    ctx.resilience().record_spill(bytes);
+    ctx.push_metrics(StageMetrics {
+        name: "checkpoint:durable".to_string(),
+        tasks: 1,
+        compute_real: 0.0,
+        virtual_span: 0.0,
+        shuffle_bytes: 0,
+        network_time: 0.0,
+        driver_time: sw.secs(),
+    });
+    Ok(())
+}
 
 /// A fitted streaming model: batch data + landmark geodesic tables,
 /// wrapped around the serializable [`FittedModel`].
@@ -64,8 +136,26 @@ impl StreamingModel {
         // graph — past the kNN stage, the only dense state is the m × n
         // landmark table.
         let csr = CsrGraph::from_knn_lists(&kl.lists).context("CSR construction")?;
-        let delta = graph::geodesics_squared(&csr, &landmarks, ctx.parallelism())
-            .context("landmark geodesics")?;
+        // Landmark table δ: restored bitwise from the latest valid durable
+        // checkpoint when one exists for this exact (batch, config) input,
+        // else computed and spilled for the next attempt. Restore skips
+        // the m pooled Dijkstra sources — the dominant post-kNN cost.
+        let job = delta_job_key(x, cfg, m);
+        let delta = match restore_delta(&ctx, &job, m, n) {
+            Some(delta) => delta,
+            None => {
+                let policy = ctx.task_policy();
+                let delta = graph::geodesics_squared_with_policy(
+                    &csr,
+                    &landmarks,
+                    ctx.parallelism(),
+                    policy.as_ref(),
+                )
+                .context("landmark geodesics")?;
+                save_delta(&ctx, &job, &delta).context("durable checkpoint of landmark table")?;
+                delta
+            }
+        };
         let fit_report = format!(
             "knn: {}\ngeodesics: sparse-dijkstra (CSR: {} arcs over {n} points; {m} pooled \
              sources)\n{}",
@@ -220,6 +310,46 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
             }
         }
+    }
+
+    #[test]
+    fn fit_restores_landmark_table_bitwise_from_durable_checkpoint() {
+        let dir = std::env::temp_dir()
+            .join(format!("isospark_stream_ckpt_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let ds = swiss_roll::euler_isometric(300, 23);
+        let cfg = IsomapConfig { k: 10, d: 2, block: 64, ..Default::default() };
+        let cluster = ClusterConfig {
+            checkpoint_dir: Some(dir.to_string_lossy().into_owned()),
+            ..ClusterConfig::local()
+        };
+        let first =
+            StreamingModel::fit(&ds.points, &cfg, 60, &cluster, &Backend::Native).unwrap();
+        // The fit spilled its landmark table under a content-keyed job dir.
+        let jobs: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(jobs.len(), 1, "one stream-<fingerprint> job dir expected");
+        // A second fit restores δ from disk instead of recomputing — and
+        // must be bit-identical to both the first fit and a fit that never
+        // saw a checkpoint directory.
+        let second =
+            StreamingModel::fit(&ds.points, &cfg, 60, &cluster, &Backend::Native).unwrap();
+        let plain = StreamingModel::fit(
+            &ds.points,
+            &cfg,
+            60,
+            &ClusterConfig::local(),
+            &Backend::Native,
+        )
+        .unwrap();
+        for (a, b) in first.delta.as_slice().iter().zip(second.delta.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in
+            plain.batch_embedding.as_slice().iter().zip(second.batch_embedding.as_slice())
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

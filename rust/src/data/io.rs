@@ -77,6 +77,45 @@ pub fn write_bin(path: &Path, m: &Matrix) -> Result<()> {
     Ok(())
 }
 
+/// FNV-1a 64-bit over a byte slice — the crate's cheap, dependency-free
+/// corruption check (integrity against truncation/bit-rot, not
+/// cryptography). Shared by the model artifact manifest and the durable
+/// checkpoint store so both speak the same checksum.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a64::new();
+    h.update(bytes);
+    h.finish()
+}
+
+/// Incremental FNV-1a 64-bit, for hashing data that is not contiguous in
+/// memory (e.g. the durable checkpoint job fingerprints over block maps).
+/// `update`-ing in pieces is bit-identical to [`fnv1a64`] over the
+/// concatenation.
+pub(crate) struct Fnv1a64(u64);
+
+impl Fnv1a64 {
+    pub(crate) fn new() -> Self {
+        Self(0xcbf2_9ce4_8422_2325)
+    }
+
+    pub(crate) fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub(crate) fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// FNV-1a 64-bit over a whole file.
+pub(crate) fn file_fnv1a64(path: &Path) -> Result<u64> {
+    let bytes = std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+    Ok(fnv1a64(&bytes))
+}
+
 /// Read the raw binary matrix format.
 pub fn read_bin(path: &Path) -> Result<Matrix> {
     let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;

@@ -10,6 +10,8 @@
 //! always performed between stages, never inside task closures.
 
 use super::clock::VirtualClock;
+use super::durable::CheckpointStore;
+use super::fault::{FaultPlan, ResilienceSnapshot, ResilienceStats, TaskPolicy};
 use super::lineage::LineageGraph;
 use super::metrics::{Metrics, StageMetrics};
 use super::network::{NetworkModel, Traffic};
@@ -31,6 +33,12 @@ pub(crate) struct CtxState {
     pub lineage: LineageGraph,
     /// Persisted bytes per node, by tag (e.g. "G", "A").
     resident: BTreeMap<String, Vec<u64>>,
+    /// Live fault-injection schedule, installed when `fault_rate > 0`.
+    /// `None` keeps every stage on the plain `run_tasks` fast path.
+    fault_plan: Option<FaultPlan>,
+    /// Retry / recovery / checkpoint counters, shared with worker threads
+    /// through the [`TaskPolicy`] handed to each stage.
+    resilience: Arc<ResilienceStats>,
 }
 
 /// Cheaply cloneable, thread-safe handle to the driver state.
@@ -44,6 +52,9 @@ impl SparkContext {
     pub fn new(cluster: ClusterConfig) -> Self {
         let clock = VirtualClock::new(cluster.nodes, cluster.cores_per_node);
         let net = NetworkModel::new(&cluster);
+        let fault_plan = (cluster.fault_rate > 0.0).then(|| {
+            FaultPlan::new(cluster.fault_rate, cluster.fault_seed, cluster.fault_max_attempts)
+        });
         Self {
             st: Arc::new(Mutex::new(CtxState {
                 cluster,
@@ -52,6 +63,8 @@ impl SparkContext {
                 metrics: Metrics::new(),
                 lineage: LineageGraph::new(),
                 resident: BTreeMap::new(),
+                fault_plan,
+                resilience: Arc::new(ResilienceStats::default()),
             })),
         }
     }
@@ -93,9 +106,48 @@ impl SparkContext {
         self.lock().clock.now()
     }
 
-    /// Borrow the metrics (cloned snapshot report).
+    /// Borrow the metrics (cloned snapshot report). When any resilience
+    /// event happened (retry, recovery, straggler, checkpoint spill or
+    /// restore) a `resilience` block is appended after the stage table.
     pub fn metrics_report(&self, prefixes: &[&str]) -> String {
-        self.lock().metrics.report(prefixes)
+        let st = self.lock();
+        let mut out = st.metrics.report(prefixes);
+        let res = st.resilience.report();
+        if !res.is_empty() {
+            if !out.is_empty() && !out.ends_with('\n') {
+                out.push('\n');
+            }
+            out.push_str(&res);
+        }
+        out
+    }
+
+    /// The per-stage retry policy, or `None` when no fault plan is
+    /// installed (`fault_rate == 0`) — stages then take the plain
+    /// `run_tasks` fast path with zero overhead.
+    pub(crate) fn task_policy(&self) -> Option<TaskPolicy> {
+        let st = self.lock();
+        let plan = st.fault_plan.clone()?;
+        let stats = Arc::clone(&st.resilience);
+        drop(st);
+        Some(TaskPolicy::new(plan, stats, self.clone()))
+    }
+
+    /// Shared resilience counters (worker threads record through the
+    /// policy; driver-side code like the durable store records here).
+    pub(crate) fn resilience(&self) -> Arc<ResilienceStats> {
+        Arc::clone(&self.lock().resilience)
+    }
+
+    /// Point-in-time copy of the resilience counters.
+    pub fn resilience_snapshot(&self) -> ResilienceSnapshot {
+        self.lock().resilience.snapshot()
+    }
+
+    /// The durable checkpoint store, when `--checkpoint-dir` is set.
+    pub(crate) fn checkpoint_store(&self) -> Option<CheckpointStore> {
+        let st = self.lock();
+        st.cluster.checkpoint_dir.as_deref().map(CheckpointStore::new)
     }
 
     /// Total bytes shuffled so far.
@@ -330,6 +382,30 @@ mod tests {
         let deep = ctx.charge_driver("d", 10, 20);
         assert!(deep > shallow * 1.5, "deep={deep} shallow={shallow}");
         assert!((ctx.virtual_now() - (shallow + deep)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_plan_installed_only_when_rate_positive() {
+        let off = SparkContext::new(ClusterConfig::local());
+        assert!(off.task_policy().is_none());
+        assert!(off.checkpoint_store().is_none());
+        let on = SparkContext::new(ClusterConfig {
+            fault_rate: 0.3,
+            fault_seed: 9,
+            ..ClusterConfig::local()
+        });
+        let policy = on.task_policy().expect("rate > 0 installs a plan");
+        assert_eq!(policy.plan.rate(), 0.3);
+    }
+
+    #[test]
+    fn metrics_report_appends_resilience_block_only_on_events() {
+        let ctx = SparkContext::new(ClusterConfig::local());
+        assert!(!ctx.metrics_report(&[]).contains("resilience"));
+        ctx.resilience().record_restore();
+        let report = ctx.metrics_report(&[]);
+        assert!(report.contains("resilience"), "{report}");
+        assert_eq!(ctx.resilience_snapshot().checkpoint_restores, 1);
     }
 
     #[test]

@@ -1,0 +1,358 @@
+//! Durable checkpoints: real files behind the engine's simulated
+//! `checkpoint()`.
+//!
+//! The simulated checkpoint (`SparkContext::charge_checkpoint`) prunes
+//! lineage and charges virtual disk time but keeps every block in memory —
+//! fine for pricing the paper's checkpoint-cadence trade-off, useless for
+//! surviving a driver crash. When `--checkpoint-dir` is set, iterative
+//! drivers (the APSP pivot loop, the streaming fit) additionally spill
+//! their state through this store and restore from the newest *valid*
+//! checkpoint on startup, skipping already-completed iterations.
+//!
+//! On disk a checkpoint is a directory per `(job, step)`:
+//!
+//! ```text
+//! <root>/<job>/step-<N>/
+//!   manifest.json          # kind, job, step, per-file shapes + checksums
+//!   block-<i>-<j>.bin      # one data::io binary matrix per block
+//! ```
+//!
+//! `job` is a caller-chosen key that must *bind the checkpoint to its
+//! inputs* — the drivers embed an FNV fingerprint of the input data and
+//! the relevant config, so a checkpoint directory reused across different
+//! runs can never serve stale state: a different input hashes to a
+//! different job and simply finds no checkpoint.
+//!
+//! Integrity follows the model-artifact manifest idiom
+//! ([`crate::model`]): every block file's FNV-1a-64 checksum is recorded
+//! in the manifest and re-verified on load; [`CheckpointStore::load`]
+//! fails with context naming the offending file, and
+//! [`CheckpointStore::latest_valid`] scans steps newest-first, skipping
+//! (with a stderr note) any that fail validation — a truncated spill from
+//! a killed run degrades to the previous step instead of poisoning the
+//! restore.
+//!
+//! Restores are bit-exact: blocks round-trip through the little-endian
+//! f64 binary format, so a run resumed from a checkpoint reproduces the
+//! uninterrupted run's embedding bitwise (enforced by the chaos suite).
+
+use super::block::BlockId;
+use crate::data::io::{file_fnv1a64, read_bin, write_bin};
+use crate::linalg::Matrix;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::PathBuf;
+
+/// Manifest `kind` tag (defence against pointing the loader at some other
+/// manifest, e.g. a model artifact).
+const KIND: &str = "isospark-checkpoint";
+/// On-disk checkpoint format version this build writes and reads.
+const FORMAT_VERSION: usize = 1;
+/// Manifest file name inside a step directory.
+const MANIFEST_FILE: &str = "manifest.json";
+
+/// A directory-backed store of durable checkpoints, rooted at
+/// `--checkpoint-dir`.
+#[derive(Clone, Debug)]
+pub struct CheckpointStore {
+    root: PathBuf,
+}
+
+impl CheckpointStore {
+    /// A store rooted at `root` (created lazily on first save).
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        Self { root: root.into() }
+    }
+
+    fn step_dir(&self, job: &str, step: usize) -> PathBuf {
+        self.root.join(job).join(format!("step-{step}"))
+    }
+
+    /// Spill `blocks` as checkpoint `step` of `job`, replacing any previous
+    /// spill of the same step. Returns the payload bytes written (block
+    /// files only, not the manifest). The manifest is written *last*, so a
+    /// step directory without one (a killed run mid-spill) is never valid.
+    pub fn save(&self, job: &str, step: usize, blocks: &[(BlockId, &Matrix)]) -> Result<u64> {
+        let dir = self.step_dir(job, step);
+        // Clear any partial previous attempt at this step.
+        if dir.exists() {
+            std::fs::remove_dir_all(&dir).with_context(|| format!("clear {dir:?}"))?;
+        }
+        std::fs::create_dir_all(&dir).with_context(|| format!("create {dir:?}"))?;
+        let mut files: Vec<(String, Json)> = Vec::new();
+        let mut bytes = 0u64;
+        for (id, m) in blocks {
+            let name = format!("block-{}-{}.bin", id.i, id.j);
+            let path = dir.join(&name);
+            write_bin(&path, m).with_context(|| format!("spill {name}"))?;
+            bytes += std::fs::metadata(&path).map(|md| md.len()).unwrap_or(0);
+            let sum = file_fnv1a64(&path).with_context(|| format!("checksum {name}"))?;
+            files.push((
+                name,
+                Json::obj(vec![
+                    ("i", Json::num(id.i as f64)),
+                    ("j", Json::num(id.j as f64)),
+                    ("rows", Json::num(m.nrows() as f64)),
+                    ("cols", Json::num(m.ncols() as f64)),
+                    ("fnv1a64", Json::str(format!("{sum:016x}"))),
+                ]),
+            ));
+        }
+        let refs: Vec<(&str, Json)> = files.iter().map(|(n, j)| (n.as_str(), j.clone())).collect();
+        let manifest = Json::obj(vec![
+            ("kind", Json::str(KIND)),
+            ("format_version", Json::num(FORMAT_VERSION as f64)),
+            ("job", Json::str(job)),
+            ("step", Json::num(step as f64)),
+            ("files", Json::obj(refs)),
+        ]);
+        let mpath = dir.join(MANIFEST_FILE);
+        std::fs::write(&mpath, manifest.to_string()).with_context(|| format!("write {mpath:?}"))?;
+        Ok(bytes)
+    }
+
+    /// Load checkpoint `step` of `job`, verifying the manifest kind, job
+    /// binding, and every block's checksum and shape. Every failure names
+    /// the offending file or field.
+    pub fn load(&self, job: &str, step: usize) -> Result<Vec<(BlockId, Matrix)>> {
+        let dir = self.step_dir(job, step);
+        let mpath = dir.join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("read checkpoint manifest {mpath:?}"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("parse checkpoint manifest {}: {e}", mpath.display()))?;
+        let kind = j.get("kind").and_then(Json::as_str).unwrap_or("<missing>");
+        if kind != KIND {
+            bail!("{}: kind {kind:?} is not a checkpoint manifest ({KIND:?})", mpath.display());
+        }
+        let version = j.get("format_version").and_then(index_field).unwrap_or(0);
+        if version != FORMAT_VERSION {
+            bail!(
+                "{}: format version {version} (this build reads {FORMAT_VERSION})",
+                mpath.display()
+            );
+        }
+        let bound = j.get("job").and_then(Json::as_str).unwrap_or("<missing>");
+        if bound != job {
+            bail!("{}: bound to job {bound:?}, expected {job:?}", mpath.display());
+        }
+        let Some(Json::Obj(fm)) = j.get("files") else {
+            bail!("{}: missing \"files\" object", mpath.display());
+        };
+        let mut out = Vec::with_capacity(fm.len());
+        for (name, entry) in fm {
+            let want = |key: &str| -> Result<usize> {
+                entry.get(key).and_then(index_field).ok_or_else(|| {
+                    anyhow!("{}: file {name}: missing/non-integer {key:?}", mpath.display())
+                })
+            };
+            let (i, jj) = (want("i")?, want("j")?);
+            let (rows, cols) = (want("rows")?, want("cols")?);
+            let want_sum = entry
+                .get("fnv1a64")
+                .and_then(Json::as_str)
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or_else(|| {
+                    anyhow!("{}: file {name}: missing/garbled fnv1a64", mpath.display())
+                })?;
+            let path = dir.join(name);
+            let got_sum = file_fnv1a64(&path)?;
+            if got_sum != want_sum {
+                bail!(
+                    "{}: checksum mismatch (manifest {want_sum:016x}, file {got_sum:016x}) — \
+                     checkpoint corrupt?",
+                    path.display()
+                );
+            }
+            let m = read_bin(&path).with_context(|| format!("load checkpoint block {name}"))?;
+            if (m.nrows(), m.ncols()) != (rows, cols) {
+                bail!(
+                    "{}: stored shape {}×{} != manifest {rows}×{cols}",
+                    path.display(),
+                    m.nrows(),
+                    m.ncols()
+                );
+            }
+            out.push((BlockId::new(i, jj), m));
+        }
+        // BTreeMap iteration is lexicographic on file names; re-key by id so
+        // callers get a deterministic block order independent of naming.
+        out.sort_by_key(|(id, _)| *id);
+        Ok(out)
+    }
+
+    /// Steps present on disk for `job` (any directory named `step-<N>`,
+    /// valid or not), descending.
+    fn steps(&self, job: &str) -> Vec<usize> {
+        let Ok(entries) = std::fs::read_dir(self.root.join(job)) else {
+            return Vec::new();
+        };
+        let mut steps: Vec<usize> = entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                e.file_name().to_str()?.strip_prefix("step-")?.parse::<usize>().ok()
+            })
+            .collect();
+        steps.sort_unstable_by(|a, b| b.cmp(a));
+        steps
+    }
+
+    /// The newest checkpoint of `job` that passes full validation, or
+    /// `None` when the job has no usable checkpoint at all. Invalid steps
+    /// (truncated spill, corrupt block, foreign manifest) are skipped with
+    /// a stderr note — restore degrades instead of failing.
+    pub fn latest_valid(&self, job: &str) -> Option<(usize, Vec<(BlockId, Matrix)>)> {
+        for step in self.steps(job) {
+            match self.load(job, step) {
+                Ok(blocks) => return Some((step, blocks)),
+                Err(e) => {
+                    eprintln!("checkpoint {job}/step-{step} unusable, trying older: {e:#}");
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Strict non-negative integer from a JSON number (same rationale as the
+/// model manifest: hand-edited or bit-rotted manifests fail loudly).
+fn index_field(j: &Json) -> Option<usize> {
+    let x = j.as_f64()?;
+    if x.is_finite() && x.fract() == 0.0 && (0.0..=9e15).contains(&x) {
+        Some(x as usize)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_store(name: &str) -> CheckpointStore {
+        let dir =
+            std::env::temp_dir().join(format!("isospark_durable_{}_{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        CheckpointStore::new(dir)
+    }
+
+    fn toy_blocks() -> Vec<(BlockId, Matrix)> {
+        vec![
+            (BlockId::new(0, 0), Matrix::from_rows(&[vec![1.5, -2.0], vec![0.25, 1e-3]])),
+            (BlockId::new(0, 1), Matrix::from_rows(&[vec![std::f64::consts::PI]])),
+            (BlockId::new(1, 1), Matrix::zeros(3, 2)),
+        ]
+    }
+
+    fn save_toy(store: &CheckpointStore, job: &str, step: usize) -> u64 {
+        let blocks = toy_blocks();
+        let refs: Vec<(BlockId, &Matrix)> = blocks.iter().map(|(id, m)| (*id, m)).collect();
+        store.save(job, step, &refs).unwrap()
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let store = tmp_store("roundtrip");
+        let bytes = save_toy(&store, "job-a", 3);
+        assert!(bytes > 0);
+        let loaded = store.load("job-a", 3).unwrap();
+        let original = toy_blocks();
+        assert_eq!(loaded.len(), original.len());
+        for ((id_a, m_a), (id_b, m_b)) in loaded.iter().zip(&original) {
+            assert_eq!(id_a, id_b);
+            let bits_a: Vec<u64> = m_a.as_slice().iter().map(|x| x.to_bits()).collect();
+            let bits_b: Vec<u64> = m_b.as_slice().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bits_a, bits_b);
+        }
+    }
+
+    #[test]
+    fn latest_valid_prefers_newest() {
+        let store = tmp_store("newest");
+        save_toy(&store, "j", 2);
+        save_toy(&store, "j", 10);
+        save_toy(&store, "j", 7);
+        let (step, blocks) = store.latest_valid("j").unwrap();
+        assert_eq!(step, 10);
+        assert_eq!(blocks.len(), 3);
+        assert_eq!(store.latest_valid("other-job"), None);
+    }
+
+    #[test]
+    fn corrupt_block_is_rejected_with_checksum_context() {
+        let store = tmp_store("corrupt");
+        save_toy(&store, "j", 1);
+        // Flip one payload byte; the file still parses as a matrix.
+        let path = store.step_dir("j", 1).join("block-0-0.bin");
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = format!("{:#}", store.load("j", 1).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("block-0-0.bin"), "{err}");
+    }
+
+    #[test]
+    fn truncated_block_is_rejected() {
+        let store = tmp_store("truncated");
+        save_toy(&store, "j", 1);
+        let path = store.step_dir("j", 1).join("block-0-1.bin");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() - 4]).unwrap();
+        let err = format!("{:#}", store.load("j", 1).unwrap_err());
+        assert!(err.contains("block-0-1.bin"), "{err}");
+    }
+
+    #[test]
+    fn latest_valid_skips_bad_steps() {
+        let store = tmp_store("skip");
+        save_toy(&store, "j", 1);
+        save_toy(&store, "j", 2);
+        // Ruin step 2 (the newest): missing manifest = killed mid-spill.
+        std::fs::remove_file(store.step_dir("j", 2).join(MANIFEST_FILE)).unwrap();
+        let (step, _) = store.latest_valid("j").unwrap();
+        assert_eq!(step, 1);
+    }
+
+    #[test]
+    fn manifest_binds_job_and_kind() {
+        let store = tmp_store("binding");
+        save_toy(&store, "j", 1);
+        // A manifest from a different job must not be served.
+        let dir = store.step_dir("other", 4);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::copy(
+            store.step_dir("j", 1).join(MANIFEST_FILE),
+            dir.join(MANIFEST_FILE),
+        )
+        .unwrap();
+        for (id, _) in toy_blocks() {
+            std::fs::copy(
+                store.step_dir("j", 1).join(format!("block-{}-{}.bin", id.i, id.j)),
+                dir.join(format!("block-{}-{}.bin", id.i, id.j)),
+            )
+            .unwrap();
+        }
+        let err = format!("{:#}", store.load("other", 4).unwrap_err());
+        assert!(err.contains("bound to job"), "{err}");
+        // A foreign manifest kind is refused too.
+        let mpath = store.step_dir("j", 1).join(MANIFEST_FILE);
+        let text = std::fs::read_to_string(&mpath).unwrap();
+        std::fs::write(&mpath, text.replace(KIND, "some-other-artifact")).unwrap();
+        let err = format!("{:#}", store.load("j", 1).unwrap_err());
+        assert!(err.contains("kind"), "{err}");
+    }
+
+    #[test]
+    fn resave_replaces_partial_step() {
+        let store = tmp_store("resave");
+        save_toy(&store, "j", 5);
+        // Leave debris that a naive re-save would merge with.
+        std::fs::write(store.step_dir("j", 5).join("block-9-9.bin"), b"junk").unwrap();
+        save_toy(&store, "j", 5);
+        let blocks = store.load("j", 5).unwrap();
+        assert_eq!(blocks.len(), 3);
+        assert!(!store.step_dir("j", 5).join("block-9-9.bin").exists());
+    }
+}

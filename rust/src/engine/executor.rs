@@ -20,6 +20,7 @@
 //! re-raised on the driver thread — callers observe the *original* panic
 //! (message and all), exactly as they would under sequential execution.
 
+use super::fault::{backoff_ms, Inject, TaskPolicy};
 use std::any::Any;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -54,7 +55,22 @@ where
     }
     let workers = workers.max(1).min(n);
     if workers == 1 {
-        return tasks.into_iter().map(f).collect();
+        // Same panic reporting as the pooled path below: sequential and
+        // parallel failures must be indistinguishable to the caller (and
+        // to whoever reads the driver log).
+        let mut out = Vec::with_capacity(n);
+        for (i, t) in tasks.into_iter().enumerate() {
+            match catch_unwind(AssertUnwindSafe(|| f(t))) {
+                Ok(o) => out.push(o),
+                Err(payload) => {
+                    eprintln!(
+                        "engine executor: task {i} of {n} panicked; re-raising on the driver"
+                    );
+                    resume_unwind(payload);
+                }
+            }
+        }
+        return out;
     }
 
     // Each slot holds the pending input and, after execution, the output.
@@ -108,6 +124,116 @@ where
         .into_iter()
         .map(|m| m.into_inner().unwrap().1.expect("worker died before finishing task"))
         .collect()
+}
+
+/// [`run_tasks`] with a fault-tolerance policy in front of every task.
+///
+/// `policy: None` (the fault-free fast path) delegates straight to
+/// [`run_tasks`] — no per-task branching, no extra allocation beyond the
+/// closure adaptor. With a policy, each task runs an attempt loop of up to
+/// [`crate::engine::fault::FaultPlan::max_attempts`]:
+///
+/// * An injected [`Inject::Panic`] / [`Inject::TransientErr`] aborts the
+///   attempt *before the task body runs* — so `f` executes at most once
+///   per task and retry is trivially idempotent even for closures that
+///   consume their input — and charges capped exponential backoff to the
+///   virtual clock (no real sleep; wall-clock is bounded by the work
+///   itself).
+/// * An injected [`Inject::StragglerDelay`] charges virtual delay, then
+///   the attempt proceeds normally.
+/// * A *real* panic from `f` is never retried: a deterministic task fails
+///   deterministically, so retrying would at best waste attempts and at
+///   worst (for input-consuming closures) succeed vacuously. The original
+///   payload propagates immediately, exactly as under [`run_tasks`].
+/// * Exhausting every attempt panics with the stage name, task index, and
+///   attempt count wrapping the original failure message.
+///
+/// `f` takes `&mut I` (not `I`) so the retry loop can keep ownership of
+/// the input across attempts — tasks whose inputs are un-clonable mutable
+/// spans (Dijkstra rows, eigen paste targets) retry by re-borrowing.
+///
+/// Injection decisions key on the *global task index*, so the schedule —
+/// and therefore the output — is identical for any worker count.
+pub(crate) fn run_tasks_with_policy<I, O, F>(
+    policy: Option<&TaskPolicy>,
+    stage: &str,
+    workers: usize,
+    tasks: Vec<I>,
+    f: F,
+) -> Vec<O>
+where
+    I: Send,
+    O: Send,
+    F: Fn(&mut I) -> O + Sync,
+{
+    let Some(policy) = policy else {
+        return run_tasks(workers, tasks, |mut t| f(&mut t));
+    };
+    let n = tasks.len();
+    let indexed: Vec<(usize, I)> = tasks.into_iter().enumerate().collect();
+    // Workers accumulate injected delay into integer atomics; the clock is
+    // charged once below with the (order-independent) total, so virtual
+    // time never depends on which worker recorded what first.
+    let delay_before = policy.stats.virtual_delay_ms();
+    let out = run_tasks(workers, indexed, |(i, mut input)| {
+        attempt_loop(policy, stage, i, n, &mut input, &f)
+    });
+    let added = policy.stats.virtual_delay_ms().saturating_sub(delay_before);
+    policy.charge_virtual_ms(added);
+    out
+}
+
+/// Retry loop for one task under a policy; runs on the worker thread.
+fn attempt_loop<I, O, F>(
+    policy: &TaskPolicy,
+    stage: &str,
+    i: usize,
+    n: usize,
+    input: &mut I,
+    f: &F,
+) -> O
+where
+    F: Fn(&mut I) -> O + Sync,
+{
+    let max = policy.plan.max_attempts();
+    let mut failed_before = false;
+    for attempt in 0..max {
+        let injected: Option<&'static str> = match policy.plan.decide(stage, i, attempt) {
+            Some(Inject::Panic) => {
+                policy.stats.record_injected_panic();
+                Some("injected task panic")
+            }
+            Some(Inject::TransientErr) => {
+                policy.stats.record_injected_error();
+                Some("injected transient error")
+            }
+            Some(Inject::StragglerDelay(ms)) => {
+                policy.stats.record_straggler(ms);
+                None
+            }
+            None => None,
+        };
+        let failure = match injected {
+            Some(msg) => msg,
+            None => match catch_unwind(AssertUnwindSafe(|| f(input))) {
+                Ok(out) => {
+                    if failed_before {
+                        policy.stats.record_recovered();
+                    }
+                    return out;
+                }
+                // Real panics are not retried — see the function docs.
+                Err(payload) => resume_unwind(payload),
+            },
+        };
+        failed_before = true;
+        if attempt + 1 == max {
+            policy.stats.record_exhausted();
+            panic!("stage {stage}: task {i} of {n} failed after {max} attempts: {failure}");
+        }
+        policy.stats.record_retry(backoff_ms(attempt));
+    }
+    unreachable!("attempt loop either returns or panics")
 }
 
 #[cfg(test)]
@@ -195,5 +321,134 @@ mod tests {
             });
             assert!(result.is_err());
         }
+    }
+
+    use crate::config::ClusterConfig;
+    use crate::engine::fault::{FaultPlan, ResilienceStats, TaskPolicy};
+    use crate::engine::SparkContext;
+    use std::sync::Arc;
+
+    fn test_policy(rate: f64, seed: u64, attempts: usize) -> TaskPolicy {
+        TaskPolicy::new(
+            FaultPlan::new(rate, seed, attempts),
+            Arc::new(ResilienceStats::default()),
+            SparkContext::new(ClusterConfig::local()),
+        )
+    }
+
+    #[test]
+    fn no_policy_is_the_plain_fast_path() {
+        let out =
+            run_tasks_with_policy(None, "s", 4, (0..32).collect::<Vec<usize>>(), |i| *i * 3);
+        assert_eq!(out, (0..32).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn injected_faults_recover_bit_identically_across_worker_counts() {
+        // Rate 0.3 over 5 attempts: P(exhaust) per task ≈ 1.4e-8, so this
+        // deterministic schedule recovers every task — and must produce
+        // the same outputs as a fault-free run, for any pool size.
+        let clean =
+            run_tasks_with_policy(None, "stage", 1, (0..256).collect::<Vec<usize>>(), |i| {
+                (*i as f64).sqrt()
+            });
+        for workers in [1usize, 4, 8] {
+            let p = test_policy(0.3, 42, 5);
+            let chaotic = run_tasks_with_policy(
+                Some(&p),
+                "stage",
+                workers,
+                (0..256).collect::<Vec<usize>>(),
+                |i| (*i as f64).sqrt(),
+            );
+            for (a, b) in clean.iter().zip(&chaotic) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
+            }
+            let s = p.stats.snapshot();
+            assert!(
+                s.recovered_tasks > 0,
+                "rate 0.3 over 256 tasks must hit something (workers={workers})"
+            );
+            assert_eq!(s.exhausted_tasks, 0, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn fault_schedule_is_worker_count_invariant() {
+        // The *counters*, not just the outputs: which attempts fail is a
+        // pure function of (seed, stage, task, attempt), so two pool
+        // sizes must record identical injection/retry/recovery totals.
+        let count = |workers: usize| {
+            let p = test_policy(0.3, 7, 5);
+            let _ = run_tasks_with_policy(
+                Some(&p),
+                "stage",
+                workers,
+                (0..200).collect::<Vec<usize>>(),
+                |i| *i,
+            );
+            p.stats.snapshot()
+        };
+        assert_eq!(count(1), count(8));
+    }
+
+    #[test]
+    fn exhausted_retries_carry_stage_and_attempt_count() {
+        let p = test_policy(1.0, 3, 4);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            run_tasks_with_policy(Some(&p), "apsp:p3[0]", 2, vec![0usize, 1], |i| *i)
+        }));
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+            .unwrap_or_default();
+        assert!(msg.contains("apsp:p3[0]"), "stage name lost: {msg:?}");
+        assert!(msg.contains("failed after 4 attempts"), "attempt count lost: {msg:?}");
+        assert!(p.stats.snapshot().exhausted_tasks >= 1);
+    }
+
+    #[test]
+    fn real_panics_are_not_retried_and_keep_their_payload() {
+        let p = test_policy(0.0, 0, 5);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            run_tasks_with_policy(Some(&p), "s", 2, (0..8).collect::<Vec<usize>>(), |i| {
+                if *i == 3 {
+                    panic!("genuine bug in task 3");
+                }
+                *i
+            })
+        }));
+        let payload = result.unwrap_err();
+        let msg = payload
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| payload.downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        assert!(msg.contains("genuine bug in task 3"), "payload lost: {msg:?}");
+        assert_eq!(p.stats.snapshot().retries, 0, "real panics must not be retried");
+    }
+
+    #[test]
+    fn straggler_and_backoff_delay_is_charged_to_the_virtual_clock() {
+        let p = test_policy(0.5, 11, 5);
+        let ctx = p.ctx.clone();
+        let before = ctx.virtual_now();
+        let _ = run_tasks_with_policy(
+            Some(&p),
+            "stage",
+            4,
+            (0..128).collect::<Vec<usize>>(),
+            |i| *i,
+        );
+        let delay_ms = p.stats.virtual_delay_ms();
+        assert!(delay_ms > 0, "rate 0.5 over 128 tasks must delay something");
+        let expect = delay_ms as f64 / 1000.0;
+        assert!(
+            (ctx.virtual_now() - before - expect).abs() < 1e-9,
+            "clock moved {} for {expect}",
+            ctx.virtual_now() - before
+        );
     }
 }

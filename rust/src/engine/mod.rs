@@ -26,6 +26,7 @@
 pub mod block;
 pub mod clock;
 pub mod context;
+pub mod durable;
 pub mod executor;
 pub mod fault;
 pub mod lineage;

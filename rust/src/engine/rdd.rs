@@ -232,6 +232,40 @@ impl<T: HasBytes + Send + Sync> BlockRdd<T> {
         self.ctx.charge_checkpoint(self.lineage_id, &per_node);
     }
 
+    /// [`BlockRdd::checkpoint`], made durable when `--checkpoint-dir` is
+    /// set: in addition to the simulated disk charge and lineage prune,
+    /// really spill every block through the durable store as checkpoint
+    /// `step` of `job`, recording the spill in the resilience counters and
+    /// a `checkpoint:durable` metrics row. Without a configured store this
+    /// is exactly `checkpoint()`. Returns the payload bytes spilled.
+    pub fn checkpoint_durable(&self, job: &str, step: usize) -> anyhow::Result<u64>
+    where
+        T: std::borrow::Borrow<crate::linalg::Matrix>,
+    {
+        self.checkpoint();
+        let Some(store) = self.ctx.checkpoint_store() else {
+            return Ok(0);
+        };
+        let blocks: Vec<(BlockId, &crate::linalg::Matrix)> = self
+            .items
+            .iter()
+            .map(|(&id, v)| (id, std::borrow::Borrow::borrow(v.as_ref())))
+            .collect();
+        let sw = Stopwatch::start();
+        let bytes = store.save(job, step, &blocks)?;
+        self.ctx.resilience().record_spill(bytes);
+        self.ctx.push_metrics(StageMetrics {
+            name: "checkpoint:durable".to_string(),
+            tasks: blocks.len(),
+            compute_real: 0.0,
+            virtual_span: 0.0,
+            shuffle_bytes: 0,
+            network_time: 0.0,
+            driver_time: sw.secs(),
+        });
+        Ok(bytes)
+    }
+
     /// Group block references by partition, in partition order. Each entry
     /// is one schedulable task of the stage; blocks within a partition
     /// stay in key order.
@@ -252,14 +286,19 @@ impl<T: HasBytes + Send + Sync> BlockRdd<T> {
         f: impl Fn(BlockId, &T) -> U + Sync,
     ) -> BlockRdd<U> {
         let f = &f;
-        let results = executor::run_tasks(
+        let policy = self.ctx.task_policy();
+        let results = executor::run_tasks_with_policy(
+            policy.as_ref(),
+            name,
             self.ctx.parallelism(),
             self.partition_tasks(),
             move |(p, blocks)| {
                 let sw = Stopwatch::start();
-                let outs: Vec<(BlockId, Arc<U>)> =
-                    blocks.into_iter().map(|(id, v)| (id, Arc::new(f(id, v.as_ref())))).collect();
-                (p, outs, sw.secs())
+                let outs: Vec<(BlockId, Arc<U>)> = std::mem::take(blocks)
+                    .into_iter()
+                    .map(|(id, v)| (id, Arc::new(f(id, v.as_ref()))))
+                    .collect();
+                (*p, outs, sw.secs())
             },
         );
         let (out, per_part) = collect_results(results);
@@ -329,14 +368,17 @@ impl<T: HasBytes + Send + Sync> BlockRdd<T> {
         f: impl Fn(BlockId, &Arc<T>) -> Vec<(BlockId, U)> + Sync,
     ) -> Keyed<U> {
         let f = &f;
-        let results = executor::run_tasks(
+        let policy = self.ctx.task_policy();
+        let results = executor::run_tasks_with_policy(
+            policy.as_ref(),
+            name,
             self.ctx.parallelism(),
             self.partition_tasks(),
             move |(p, blocks)| {
                 let sw = Stopwatch::start();
                 let emitted: Vec<(BlockId, Vec<(BlockId, U)>)> =
-                    blocks.into_iter().map(|(id, v)| (id, f(id, v))).collect();
-                (p, emitted, sw.secs())
+                    std::mem::take(blocks).into_iter().map(|(id, v)| (id, f(id, v))).collect();
+                (*p, emitted, sw.secs())
             },
         );
         // Reassemble records in source-block key order — exactly the
@@ -422,12 +464,15 @@ impl<T: HasBytes + Send + Sync> BlockRdd<T> {
         );
 
         let f = &f;
-        let results = executor::run_tasks(
+        let policy = ctx.task_policy();
+        let results = executor::run_tasks_with_policy(
+            policy.as_ref(),
+            name,
             ctx.parallelism(),
             per.into_iter().collect::<Vec<_>>(),
             move |(p, blocks)| {
                 let sw = Stopwatch::start();
-                let outs: Vec<(BlockId, Arc<T>)> = blocks
+                let outs: Vec<(BlockId, Arc<T>)> = std::mem::take(blocks)
                     .into_iter()
                     .map(|(id, mut arc, recs)| {
                         let mut slot = BlockRef { slot: &mut arc };
@@ -435,7 +480,7 @@ impl<T: HasBytes + Send + Sync> BlockRdd<T> {
                         (id, arc)
                     })
                     .collect();
-                (p, outs, sw.secs())
+                (*p, outs, sw.secs())
             },
         );
         let (out, per_part) = collect_results(results);
@@ -513,13 +558,16 @@ impl<U: HasBytes + Send + Sync> Keyed<U> {
     ) -> BlockRdd<U> {
         let (ctx, parent, per, shuffle_bytes, network_time) = self.shuffle_to(&part);
         let f = &f;
-        let results = executor::run_tasks(
+        let policy = ctx.task_policy();
+        let results = executor::run_tasks_with_policy(
+            policy.as_ref(),
+            name,
             ctx.parallelism(),
             per.into_iter().collect::<Vec<_>>(),
             move |(p, recs)| {
                 let sw = Stopwatch::start();
                 let mut acc: BTreeMap<BlockId, U> = BTreeMap::new();
-                for (k, u) in recs {
+                for (k, u) in std::mem::take(recs) {
                     match acc.remove(&k) {
                         None => {
                             acc.insert(k, u);
@@ -531,7 +579,7 @@ impl<U: HasBytes + Send + Sync> Keyed<U> {
                 }
                 let outs: Vec<(BlockId, Arc<U>)> =
                     acc.into_iter().map(|(k, u)| (k, Arc::new(u))).collect();
-                (p, outs, sw.secs())
+                (*p, outs, sw.secs())
             },
         );
         let (items, per_part) = collect_results(results);
@@ -543,18 +591,21 @@ impl<U: HasBytes + Send + Sync> Keyed<U> {
     /// like every other stage.
     pub fn group_by_key(self, name: &str, part: Arc<dyn Partitioner>) -> BlockRdd<Vec<U>> {
         let (ctx, parent, per, shuffle_bytes, network_time) = self.shuffle_to(&part);
-        let results = executor::run_tasks(
+        let policy = ctx.task_policy();
+        let results = executor::run_tasks_with_policy(
+            policy.as_ref(),
+            name,
             ctx.parallelism(),
             per.into_iter().collect::<Vec<_>>(),
             move |(p, recs)| {
                 let sw = Stopwatch::start();
                 let mut acc: BTreeMap<BlockId, Vec<U>> = BTreeMap::new();
-                for (k, u) in recs {
+                for (k, u) in std::mem::take(recs) {
                     acc.entry(k).or_default().push(u);
                 }
                 let outs: Vec<(BlockId, Arc<Vec<U>>)> =
                     acc.into_iter().map(|(k, v)| (k, Arc::new(v))).collect();
-                (p, outs, sw.secs())
+                (*p, outs, sw.secs())
             },
         );
         let (items, per_part) = collect_results(results);

@@ -14,7 +14,8 @@
 //! path that stays feasible when an `n × n` matrix no longer fits.
 
 use super::csr::CsrGraph;
-use crate::engine::executor::{resolve_workers, run_tasks};
+use crate::engine::executor::{resolve_workers, run_tasks_with_policy};
+use crate::engine::fault::TaskPolicy;
 use crate::linalg::Matrix;
 use anyhow::{bail, Result};
 use std::cell::RefCell;
@@ -114,14 +115,27 @@ thread_local! {
 /// assert_eq!(d[(1, 1)], 2.0);
 /// ```
 pub fn multi_source(g: &CsrGraph, sources: &[usize], workers: usize) -> Matrix {
+    multi_source_with_policy(g, sources, workers, None)
+}
+
+/// [`multi_source`] with a fault-tolerance policy in front of every
+/// source's task (stage `geo:dijkstra`). `None` is the untouched fast
+/// path. Injected failures abort an attempt *before* the task body runs,
+/// so a retried source never observes a half-written distance row.
+pub fn multi_source_with_policy(
+    g: &CsrGraph,
+    sources: &[usize],
+    workers: usize,
+    policy: Option<&TaskPolicy>,
+) -> Matrix {
     let n = g.n();
     let m = sources.len();
     let mut out = Matrix::full(m, n, f64::INFINITY);
     let workers = resolve_workers(workers).min(m.max(1));
     let tasks: Vec<(usize, &mut [f64])> =
         sources.iter().copied().zip(out.as_mut_slice().chunks_mut(n.max(1))).collect();
-    run_tasks(workers, tasks, |(src, row)| {
-        SCRATCH.with(|s| sssp_into(g, src, &mut s.borrow_mut(), row));
+    run_tasks_with_policy(policy, "geo:dijkstra", workers, tasks, |(src, row)| {
+        SCRATCH.with(|s| sssp_into(g, *src, &mut s.borrow_mut(), row));
     });
     out
 }
@@ -131,7 +145,18 @@ pub fn multi_source(g: &CsrGraph, sources: &[usize], workers: usize) -> Matrix {
 /// offending pair) if any vertex is unreachable from any source, which
 /// mirrors how the dense path surfaces a disconnected graph.
 pub fn geodesics_squared(g: &CsrGraph, sources: &[usize], workers: usize) -> Result<Matrix> {
-    let mut delta = multi_source(g, sources, workers);
+    geodesics_squared_with_policy(g, sources, workers, None)
+}
+
+/// [`geodesics_squared`] with a fault-tolerance policy threaded through
+/// the underlying [`multi_source_with_policy`] fan-out.
+pub fn geodesics_squared_with_policy(
+    g: &CsrGraph,
+    sources: &[usize],
+    workers: usize,
+    policy: Option<&TaskPolicy>,
+) -> Result<Matrix> {
+    let mut delta = multi_source_with_policy(g, sources, workers, policy);
     for (i, &src) in sources.iter().enumerate() {
         for (j, v) in delta.row_mut(i).iter_mut().enumerate() {
             if !v.is_finite() {
@@ -218,5 +243,28 @@ mod tests {
         let g = path_graph(3);
         let d = multi_source(&g, &[], 4);
         assert_eq!(d.nrows(), 0);
+    }
+
+    #[test]
+    fn faulty_run_is_bit_identical_to_clean() {
+        use crate::config::ClusterConfig;
+        use crate::engine::fault::{FaultPlan, ResilienceStats};
+        use crate::engine::SparkContext;
+        use std::sync::Arc;
+
+        let g = path_graph(40);
+        let sources: Vec<usize> = (0..40).step_by(2).collect();
+        let clean = multi_source(&g, &sources, 2);
+        let policy = TaskPolicy::new(
+            FaultPlan::new(0.3, 9, 5),
+            Arc::new(ResilienceStats::default()),
+            SparkContext::new(ClusterConfig::local()),
+        );
+        let chaotic = multi_source_with_policy(&g, &sources, 4, Some(&policy));
+        for (a, b) in clean.as_slice().iter().zip(chaotic.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let s = policy.stats.snapshot();
+        assert!(s.any(), "rate 0.3 over 20 sources must inject something");
     }
 }

@@ -28,4 +28,7 @@ pub mod csr;
 pub mod dijkstra;
 
 pub use csr::CsrGraph;
-pub use dijkstra::{geodesics_squared, multi_source, sssp_into, DijkstraScratch};
+pub use dijkstra::{
+    geodesics_squared, geodesics_squared_with_policy, multi_source, multi_source_with_policy,
+    sssp_into, DijkstraScratch,
+};

@@ -26,4 +26,4 @@
 
 pub mod rpforest;
 
-pub use rpforest::{knn_lists, RpForest, RpForestParams, RpForestStats};
+pub use rpforest::{knn_lists, knn_lists_with_policy, RpForest, RpForestParams, RpForestStats};

@@ -43,7 +43,8 @@
 //! assert!(stats.candidate_pairs > 0);
 //! ```
 
-use crate::engine::executor::{resolve_workers, run_tasks};
+use crate::engine::executor::{resolve_workers, run_tasks_with_policy};
+use crate::engine::fault::TaskPolicy;
 use crate::kernels::kselect::{Neighbor, TopK};
 use crate::kernels::sqdist;
 use crate::linalg::Matrix;
@@ -153,14 +154,27 @@ impl RpForest {
     /// any worker count: each tree is an independent task with its own
     /// seeded stream, and results come back in tree order.
     pub fn build(x: &Matrix, params: &RpForestParams, workers: usize) -> Result<RpForest> {
+        Self::build_with_policy(x, params, workers, None)
+    }
+
+    /// [`RpForest::build`] with a fault-tolerance policy in front of every
+    /// per-tree task (stage `knn:rpforest:build`). `None` is the untouched
+    /// fast path.
+    pub fn build_with_policy(
+        x: &Matrix,
+        params: &RpForestParams,
+        workers: usize,
+        policy: Option<&TaskPolicy>,
+    ) -> Result<RpForest> {
         if x.nrows() < 2 {
             bail!("rp-forest: need at least 2 points, got {}", x.nrows());
         }
         let workers = resolve_workers(workers).min(params.trees);
-        let trees = run_tasks(workers, (0..params.trees).collect(), |t| {
+        let tree_ids: Vec<usize> = (0..params.trees).collect();
+        let trees = run_tasks_with_policy(policy, "knn:rpforest:build", workers, tree_ids, |t| {
             // Independent stream per tree: the SplitMix64 expansion in
             // `Rng::seed` decorrelates nearby seeds.
-            let mut rng = Rng::seed(params.seed ^ (t as u64).wrapping_mul(0x9E3779B97F4A7C15));
+            let mut rng = Rng::seed(params.seed ^ (*t as u64).wrapping_mul(0x9E3779B97F4A7C15));
             let mut leaves = Vec::new();
             let idx: Vec<u32> = (0..x.nrows() as u32).collect();
             split_node(x, idx, params.leaf_size, &mut rng, &mut leaves);
@@ -186,6 +200,19 @@ impl RpForest {
         k: usize,
         workers: usize,
     ) -> Result<(Vec<Vec<Neighbor>>, RpForestStats)> {
+        self.knn_lists_with_policy(x, k, workers, None)
+    }
+
+    /// [`RpForest::knn_lists`] with a fault-tolerance policy in front of
+    /// the rescore (`knn:rpforest:rescore`) and merge
+    /// (`knn:rpforest:merge`) fan-outs. `None` is the untouched fast path.
+    pub fn knn_lists_with_policy(
+        &self,
+        x: &Matrix,
+        k: usize,
+        workers: usize,
+        policy: Option<&TaskPolicy>,
+    ) -> Result<(Vec<Vec<Neighbor>>, RpForestStats)> {
         self.params.validate(k)?;
         let n = x.nrows();
         let workers = resolve_workers(workers);
@@ -194,9 +221,13 @@ impl RpForest {
         // independent and results return in submission order).
         let leaf_tasks: Vec<&[u32]> =
             self.trees.iter().flat_map(|t| t.iter().map(Vec::as_slice)).collect();
-        let scored = run_tasks(workers.min(leaf_tasks.len().max(1)), leaf_tasks, |members| {
-            score_leaf(x, members, k)
-        });
+        let scored = run_tasks_with_policy(
+            policy,
+            "knn:rpforest:rescore",
+            workers.min(leaf_tasks.len().max(1)),
+            leaf_tasks,
+            |members| score_leaf(x, members, k),
+        );
 
         // Driver-side scatter, in (tree, leaf, member) order: each point
         // collects exactly one candidate list per tree.
@@ -215,7 +246,12 @@ impl RpForest {
         // decides placement, so any pool size gives the same lists.
         let chunk = n.div_ceil(workers).max(1);
         let tasks: Vec<&mut [Vec<Neighbor>]> = cand.chunks_mut(chunk).collect();
-        let partials = run_tasks(workers.min(tasks.len().max(1)), tasks, |slice| {
+        let partials = run_tasks_with_policy(
+            policy,
+            "knn:rpforest:merge",
+            workers.min(tasks.len().max(1)),
+            tasks,
+            |slice| {
             let mut distinct = 0u64;
             let mut full = 0u64;
             for list in slice.iter_mut() {
@@ -254,9 +290,22 @@ pub fn knn_lists(
     params: &RpForestParams,
     workers: usize,
 ) -> Result<(Vec<Vec<Neighbor>>, RpForestStats)> {
+    knn_lists_with_policy(x, k, params, workers, None)
+}
+
+/// [`knn_lists`] with a fault-tolerance policy threaded through all three
+/// forest fan-outs (build, rescore, merge). `None` is the untouched fast
+/// path.
+pub fn knn_lists_with_policy(
+    x: &Matrix,
+    k: usize,
+    params: &RpForestParams,
+    workers: usize,
+    policy: Option<&TaskPolicy>,
+) -> Result<(Vec<Vec<Neighbor>>, RpForestStats)> {
     params.validate(k)?;
-    let forest = RpForest::build(x, params, workers)?;
-    forest.knn_lists(x, k, workers)
+    let forest = RpForest::build_with_policy(x, params, workers, policy)?;
+    forest.knn_lists_with_policy(x, k, workers, policy)
 }
 
 /// Recursive median split. `idx` arrives in arbitrary order; leaves are

@@ -41,6 +41,17 @@ COMMANDS:
                     (default 0 = max(4k, 32)))
                    (--threads: OS worker threads for real block tasks;
                     0 = all cores. Results are identical for any value.)
+                   --fault-rate <p> deterministic fault injection: each
+                    task attempt fails (panic or transient error) or
+                    straggles with seeded probability p; tasks retry with
+                    capped exponential backoff (virtual time only). The
+                    embedding is bit-identical to a fault-free run.
+                    --fault-seed <s> picks the schedule, --max-attempts
+                    <a> bounds retries (default 5)
+                   --checkpoint-dir <dir> durable checkpoints: APSP and
+                    streaming fits spill checksummed block snapshots and
+                    restore from the latest valid one on re-run, skipping
+                    completed iterations
   landmark         L-Isomap: same options plus --landmarks <m>
   lle              Locally Linear Embedding (paper §VI extension)
   stream           Streaming-Isomap: fit a batch, map --stream-n new points
@@ -51,6 +62,8 @@ COMMANDS:
                    `run` plus --landmarks <m> --save <dir>
   serve            serve a saved model over HTTP: --model <dir> --port <p>
                    (0 = ephemeral) --threads <t> --max-batch <pts>
+                   --max-queue <reqs> (load shedding: max embed requests
+                   queued; beyond it /v1/embed answers 503 + Retry-After)
                    --host <ip> --port-file <file>. Endpoints:
                    POST /v1/embed {\"points\":[[..],..]}, GET /healthz,
                    GET /metrics, POST /v1/reload {\"path\":\"<dir>\"}
@@ -129,6 +142,21 @@ fn parse_common(args: &Args) -> Result<(IsomapConfig, ClusterConfig)> {
     }
     cluster.cores_per_node = args.get("cores", cluster.cores_per_node).map_err(anyhow_str)?;
     cluster.parallelism = args.get("threads", cluster.parallelism).map_err(anyhow_str)?;
+    // Fault-tolerance knobs come after the paper-testbed switch above so
+    // `--nodes` never silently wipes an explicit `--fault-rate`.
+    cluster.fault_rate = args.get("fault-rate", cluster.fault_rate).map_err(anyhow_str)?;
+    if !(0.0..=1.0).contains(&cluster.fault_rate) {
+        bail!("--fault-rate must be in [0, 1] (got {})", cluster.fault_rate);
+    }
+    cluster.fault_seed = args.get("fault-seed", cluster.fault_seed).map_err(anyhow_str)?;
+    cluster.fault_max_attempts =
+        args.get("max-attempts", cluster.fault_max_attempts).map_err(anyhow_str)?;
+    if cluster.fault_max_attempts == 0 {
+        bail!("--max-attempts must be ≥ 1");
+    }
+    if let Some(dir) = args.opt("checkpoint-dir") {
+        cluster.checkpoint_dir = Some(dir.to_string());
+    }
     Ok((iso, cluster))
 }
 
@@ -336,6 +364,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         port: args.get("port", 8080u16).map_err(anyhow_str)?,
         threads: args.get("threads", 0usize).map_err(anyhow_str)?,
         max_batch: args.get("max-batch", 1024usize).map_err(anyhow_str)?,
+        max_queue: args.get("max-queue", 4096usize).map_err(anyhow_str)?,
     };
     let handle = serve::start(model, Some(PathBuf::from(model_path)), Some(backend), &cfg)?;
     println!(

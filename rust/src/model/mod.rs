@@ -33,8 +33,8 @@
 //! checksum passes), so `isospark info --model <dir>` can describe a
 //! broken artifact without tripping over the breakage.
 
-use crate::data::io::{read_bin, write_bin};
-use crate::engine::executor::{resolve_workers, run_tasks};
+use crate::data::io::{file_fnv1a64, read_bin, write_bin};
+use crate::engine::executor::{resolve_workers, run_tasks_with_policy};
 use crate::kernels::kselect::row_topk;
 use crate::linalg::Matrix;
 use crate::util::fmt::render_table;
@@ -189,14 +189,17 @@ impl FittedModel {
             rest = tail;
             start = end;
         }
-        let results = run_tasks(workers, tasks, |(start, span): (usize, &mut [f64])| {
-            let rows_here = span.len() / d;
-            for r in 0..rows_here {
-                let y = self.map_point(pts.row(start + r))?;
-                span[r * d..(r + 1) * d].copy_from_slice(&y);
-            }
-            Ok::<(), anyhow::Error>(())
-        });
+        // Serving has no SparkContext and therefore no fault plan: the
+        // policy slot is always `None` here, i.e. the plain fast path.
+        let results =
+            run_tasks_with_policy(None, "model:map_points", workers, tasks, |(start, span)| {
+                let rows_here = span.len() / d;
+                for r in 0..rows_here {
+                    let y = self.map_point(pts.row(*start + r))?;
+                    span[r * d..(r + 1) * d].copy_from_slice(&y);
+                }
+                Ok::<(), anyhow::Error>(())
+            });
         for r in results {
             r?;
         }
@@ -385,13 +388,6 @@ impl FittedModel {
     }
 }
 
-/// FNV-1a 64-bit over a whole file — cheap, dependency-free corruption
-/// check (this is integrity against truncation/bit-rot, not cryptography).
-fn file_fnv1a64(path: &Path) -> Result<u64> {
-    let bytes = std::fs::read(path).with_context(|| format!("read {path:?}"))?;
-    Ok(fnv1a64(&bytes))
-}
-
 /// Strict non-negative integer from a JSON number: unlike
 /// `Json::as_usize` (a plain cast), this rejects fractional, negative,
 /// non-finite, and >2⁵³ values — a hand-edited or bit-rotted manifest
@@ -403,15 +399,6 @@ fn json_index(j: &Json) -> Option<usize> {
     } else {
         None
     }
-}
-
-fn fnv1a64(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    }
-    h
 }
 
 /// Parsed `model.json`, shared between the full loader and the
@@ -634,6 +621,7 @@ impl ModelInfo {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::io::fnv1a64;
 
     fn tmp_dir(name: &str) -> PathBuf {
         let dir =

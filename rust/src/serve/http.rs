@@ -120,13 +120,33 @@ fn find_head_end(buf: &[u8]) -> Option<usize> {
 
 /// Render a complete response with a body.
 pub fn response(status: u16, content_type: &str, body: &[u8], keep_alive: bool) -> Vec<u8> {
-    let mut out = format!(
-        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+    response_with_headers(status, content_type, body, keep_alive, &[])
+}
+
+/// [`response`] with extra response headers (e.g. `Retry-After` on a
+/// load-shedding 503). `extra` entries are emitted verbatim after the
+/// standard framing headers.
+pub fn response_with_headers(
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    keep_alive: bool,
+    extra: &[(&str, &str)],
+) -> Vec<u8> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: {}\r\n",
         status_reason(status),
         body.len(),
         if keep_alive { "keep-alive" } else { "close" },
-    )
-    .into_bytes();
+    );
+    for (name, value) in extra {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    let mut out = head.into_bytes();
     out.extend_from_slice(body);
     out
 }
@@ -211,6 +231,16 @@ mod tests {
         let huge_body =
             format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
         assert!(try_parse(huge_body.as_bytes()).is_err());
+    }
+
+    #[test]
+    fn response_with_extra_headers() {
+        let r =
+            response_with_headers(503, "application/json", b"{}", false, &[("Retry-After", "1")]);
+        let text = String::from_utf8(r).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+        assert!(text.contains("\r\n\r\n{}"), "{text}");
     }
 
     #[test]

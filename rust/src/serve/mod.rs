@@ -64,11 +64,23 @@ pub struct ServeConfig {
     pub threads: usize,
     /// Maximum points coalesced into one `map_points` call.
     pub max_batch: usize,
+    /// Load shedding: maximum embed requests parked in the micro-batch
+    /// queue. Arrivals beyond the bound are answered immediately with
+    /// `503` + `Retry-After` instead of queueing without limit — bounded
+    /// memory and bounded worst-case latency under overload. The default
+    /// is generous; `0` sheds everything (useful for tests).
+    pub max_queue: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { host: "127.0.0.1".to_string(), port: 0, threads: 0, max_batch: 1024 }
+        Self {
+            host: "127.0.0.1".to_string(),
+            port: 0,
+            threads: 0,
+            max_batch: 1024,
+            max_queue: 4096,
+        }
     }
 }
 
@@ -101,6 +113,7 @@ struct ServerMetrics {
     metrics: AtomicU64,
     reload: AtomicU64,
     errors: AtomicU64,
+    shed: AtomicU64,
     batches: AtomicU64,
     batched_points: AtomicU64,
     max_batch_points: AtomicU64,
@@ -119,6 +132,7 @@ impl ServerMetrics {
             metrics: AtomicU64::new(0),
             reload: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_points: AtomicU64::new(0),
             max_batch_points: AtomicU64::new(0),
@@ -216,6 +230,7 @@ impl ServerMetrics {
                     ("metrics", Json::num(self.metrics.load(Ordering::Relaxed) as f64)),
                     ("reload", Json::num(self.reload.load(Ordering::Relaxed) as f64)),
                     ("errors", Json::num(self.errors.load(Ordering::Relaxed) as f64)),
+                    ("shed", Json::num(self.shed.load(Ordering::Relaxed) as f64)),
                 ]),
             ),
             ("qps", Json::num(if uptime > 0.0 { embeds as f64 / uptime } else { 0.0 })),
@@ -279,6 +294,7 @@ struct Shared {
     metrics: ServerMetrics,
     workers: usize,
     max_batch: usize,
+    max_queue: usize,
 }
 
 /// A running server; dropping the handle leaves the threads running —
@@ -353,6 +369,7 @@ pub fn start(
         metrics: ServerMetrics::new(),
         workers,
         max_batch: cfg.max_batch.max(1),
+        max_queue: cfg.max_queue,
     });
     let mut threads = Vec::with_capacity(workers + 2);
     {
@@ -552,6 +569,19 @@ fn handle_embed(sh: &Shared, req: &http::Request, keep: bool) -> Vec<u8> {
     sh.metrics.embed.fetch_add(1, Ordering::Relaxed);
     let resp = match embed_inner(sh, &req.body) {
         Ok(body) => ok_json(&body, keep),
+        // Every embed 503 (shed, shutdown, drain timeout) is transient by
+        // construction, so they all carry a Retry-After hint.
+        Err((503, msg)) => {
+            sh.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let body = Json::obj(vec![("error", Json::str(msg))]);
+            http::response_with_headers(
+                503,
+                "application/json",
+                body.to_string().as_bytes(),
+                keep,
+                &[("Retry-After", "1")],
+            )
+        }
         Err((status, msg)) => err_json(sh, status, msg, keep),
     };
     sh.metrics.record_latency_us(sw.elapsed().as_micros() as u64);
@@ -587,6 +617,16 @@ fn embed_inner(sh: &Shared, body: &[u8]) -> Result<Json, (u16, String)> {
         let mut q = sh.queue.lock().unwrap();
         if sh.stop.load(Ordering::Relaxed) {
             return Err((503, "server is shutting down".to_string()));
+        }
+        // Load shedding: a full micro-batch queue answers 503 immediately
+        // instead of queueing unboundedly — the client backs off (the
+        // response carries Retry-After) and memory stays bounded.
+        if q.len() >= sh.max_queue {
+            sh.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            return Err((
+                503,
+                format!("embed queue full ({} pending requests); retry shortly", q.len()),
+            ));
         }
         q.push_back(Pending { pts, tx });
     }

@@ -1,0 +1,203 @@
+//! Chaos suite: the fault-tolerance contract, end to end.
+//!
+//! * Any fault rate × any worker count → the final embedding is
+//!   **bit-identical** to the fault-free run (injection keys on the global
+//!   task index and retries re-run the same pure task, so recovery is
+//!   invisible in the output);
+//! * exhausting the attempt budget fails the run with the stage name and
+//!   attempt count, not a bare panic;
+//! * a run restarted on a populated `--checkpoint-dir` restores the APSP
+//!   state durably and still reproduces the uninterrupted embedding
+//!   bitwise;
+//! * corrupt or truncated checkpoints are detected, skipped, and never
+//!   poison the result.
+
+use isospark::backend::Backend;
+use isospark::config::{ClusterConfig, GeodesicsMode, IsomapConfig, KnnMode};
+use isospark::coordinator::isomap;
+use isospark::data::swiss_roll;
+use isospark::linalg::Matrix;
+use std::panic::AssertUnwindSafe;
+use std::path::PathBuf;
+
+fn run(x: &Matrix, cfg: &IsomapConfig, cluster: &ClusterConfig) -> isomap::IsomapOutput {
+    isomap::run_with(x, cfg, cluster, &Backend::Native).expect("pipeline run")
+}
+
+fn chaos_cluster(parallelism: usize, rate: f64, seed: u64) -> ClusterConfig {
+    ClusterConfig {
+        parallelism,
+        fault_rate: rate,
+        fault_seed: seed,
+        ..ClusterConfig::local()
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("isospark_chaos_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn assert_bits_eq(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!((a.nrows(), a.ncols()), (b.nrows(), b.ncols()), "{what}: shape");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn dense_pipeline_is_bit_identical_under_faults() {
+    // The hard contract: for every fault rate and worker count, the
+    // embedding matches the fault-free single-worker run bit for bit.
+    let ds = swiss_roll::euler_isometric(96, 17);
+    let cfg = IsomapConfig { k: 8, d: 2, block: 32, ..Default::default() };
+    let clean = run(&ds.points, &cfg, &ClusterConfig::local());
+    assert!(
+        !clean.metrics_table.contains("resilience"),
+        "fault-free run must not grow a resilience block:\n{}",
+        clean.metrics_table
+    );
+
+    for rate in [0.1, 0.3] {
+        for workers in [1usize, 2, 8] {
+            let out = run(&ds.points, &cfg, &chaos_cluster(workers, rate, 7));
+            assert_bits_eq(
+                &out.embedding,
+                &clean.embedding,
+                &format!("rate={rate} workers={workers}"),
+            );
+            assert_eq!(out.eigen_iterations, clean.eigen_iterations);
+            assert!(
+                out.metrics_table.contains("resilience"),
+                "rate {rate} must record injections:\n{}",
+                out.metrics_table
+            );
+        }
+    }
+}
+
+#[test]
+fn subquadratic_pipeline_is_bit_identical_under_faults() {
+    // Same contract through the other code path: rp-forest candidates +
+    // sparse Dijkstra geodesics (stages "knn:rpforest:*", "geo:dijkstra").
+    let ds = swiss_roll::euler_isometric(300, 13);
+    let cfg = IsomapConfig {
+        k: 10,
+        d: 2,
+        block: 64,
+        knn: KnnMode::RpForest,
+        geodesics: GeodesicsMode::SparseDijkstra,
+        ..Default::default()
+    };
+    let clean = run(&ds.points, &cfg, &ClusterConfig::local());
+    for workers in [1usize, 4] {
+        let out = run(&ds.points, &cfg, &chaos_cluster(workers, 0.3, 11));
+        assert_bits_eq(&out.embedding, &clean.embedding, &format!("workers={workers}"));
+        assert!(out.metrics_table.contains("resilience"), "{}", out.metrics_table);
+    }
+}
+
+#[test]
+fn exhausted_attempts_fail_with_stage_context() {
+    // Rate 1.0: every attempt of every task is served an injected failure,
+    // so the first faulted stage must exhaust its budget and name itself.
+    let ds = swiss_roll::euler_isometric(40, 3);
+    let cfg = IsomapConfig { k: 6, d: 2, block: 16, ..Default::default() };
+    let cluster = ClusterConfig { fault_max_attempts: 2, ..chaos_cluster(1, 1.0, 5) };
+    let result = std::panic::catch_unwind(AssertUnwindSafe(|| run(&ds.points, &cfg, &cluster)));
+    let payload = result.expect_err("rate 1.0 must exhaust every retry budget");
+    let msg = payload
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_default();
+    assert!(msg.contains("failed after 2 attempts"), "attempt count lost: {msg:?}");
+    assert!(msg.contains("injected"), "injected origin lost: {msg:?}");
+}
+
+#[test]
+fn apsp_durable_checkpoint_restarts_bitwise() {
+    let ds = swiss_roll::euler_isometric(120, 29);
+    // q = ⌈120/32⌉ = 4 pivots, durable spills after pivots 2 and 4.
+    let cfg = IsomapConfig { k: 8, d: 2, block: 32, checkpoint_every: 2, ..Default::default() };
+    let dir = tmp_dir("apsp");
+    let durable = ClusterConfig {
+        checkpoint_dir: Some(dir.to_str().unwrap().to_string()),
+        ..ClusterConfig::local()
+    };
+
+    let baseline = run(&ds.points, &cfg, &ClusterConfig::local());
+
+    // First run writes the checkpoints; writing must not change anything.
+    let first = run(&ds.points, &cfg, &durable);
+    assert_bits_eq(&first.embedding, &baseline.embedding, "durable spill run");
+    assert!(
+        first.metrics_table.contains("checkpoint:durable"),
+        "no durable spill recorded:\n{}",
+        first.metrics_table
+    );
+    let job_dir = std::fs::read_dir(&dir)
+        .expect("checkpoint root exists")
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.file_name().is_some_and(|n| n.to_string_lossy().starts_with("apsp-")))
+        .expect("one apsp job directory");
+    assert!(job_dir.join("step-2").join("manifest.json").exists());
+    assert!(job_dir.join("step-4").join("manifest.json").exists());
+
+    // Second run restores the newest checkpoint instead of recomputing.
+    let restored = run(&ds.points, &cfg, &durable);
+    assert_bits_eq(&restored.embedding, &baseline.embedding, "restored run");
+    assert!(
+        restored.metrics_table.contains("checkpoint:restore"),
+        "restart did not restore:\n{}",
+        restored.metrics_table
+    );
+
+    // Corrupt the newest spill: restore must fall back to step 2, replay
+    // the remaining pivots, and still land on the identical embedding.
+    let block = std::fs::read_dir(job_dir.join("step-4"))
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .find(|p| p.file_name().is_some_and(|n| n.to_string_lossy().starts_with("block-")))
+        .expect("a block file in step-4");
+    let mut bytes = std::fs::read(&block).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0xff;
+    std::fs::write(&block, &bytes).unwrap();
+    let after_corrupt = run(&ds.points, &cfg, &durable);
+    assert_bits_eq(&after_corrupt.embedding, &baseline.embedding, "corrupt step skipped");
+    assert!(after_corrupt.metrics_table.contains("checkpoint:restore"));
+
+    // Ruin every remaining step (manifest gone = killed mid-spill): the
+    // run degrades to a full recompute, still bitwise identical.
+    for step in ["step-2", "step-4"] {
+        let _ = std::fs::remove_file(job_dir.join(step).join("manifest.json"));
+    }
+    let from_scratch = run(&ds.points, &cfg, &durable);
+    assert_bits_eq(&from_scratch.embedding, &baseline.embedding, "all steps unusable");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn faults_and_durable_checkpoints_compose() {
+    // Chaos *and* a restart from durable state at once — the combination
+    // the whole subsystem exists for — must still be invisible bitwise.
+    let ds = swiss_roll::euler_isometric(100, 41);
+    let cfg = IsomapConfig { k: 8, d: 2, block: 32, checkpoint_every: 1, ..Default::default() };
+    let dir = tmp_dir("compose");
+    let baseline = run(&ds.points, &cfg, &ClusterConfig::local());
+    let cluster = ClusterConfig {
+        checkpoint_dir: Some(dir.to_str().unwrap().to_string()),
+        ..chaos_cluster(4, 0.25, 19)
+    };
+    let chaotic = run(&ds.points, &cfg, &cluster);
+    assert_bits_eq(&chaotic.embedding, &baseline.embedding, "chaos + spill");
+    let restarted = run(&ds.points, &cfg, &cluster);
+    assert_bits_eq(&restarted.embedding, &baseline.embedding, "chaos + restore");
+    assert!(restarted.metrics_table.contains("checkpoint:restore"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
