@@ -4,13 +4,14 @@
 //! Run: `cargo bench --bench stage_eigen`
 
 use isospark::backend::Backend;
-use isospark::bench::Bencher;
-use isospark::config::ClusterConfig;
-use isospark::coordinator::{blocks_from_dense, eigen, num_blocks};
+use isospark::bench::{write_kernel_section, Bencher};
+use isospark::config::{ClusterConfig, FeatureMode, GeodesicsMode, IsomapConfig, KnnMode};
+use isospark::coordinator::{blocks_from_dense, eigen, isomap, num_blocks};
 use isospark::engine::partitioner::UpperTriangularPartitioner;
 use isospark::engine::SparkContext;
 use isospark::linalg::{qr::qr_thin, Matrix};
-use isospark::util::Rng;
+use isospark::util::json::Json;
+use isospark::util::{Rng, Stopwatch};
 use std::sync::Arc;
 
 fn random_symmetric(n: usize, seed: u64) -> Matrix {
@@ -67,6 +68,52 @@ fn main() {
             assert!(out.iterations > 0);
         });
     }
+
+    // Materialized vs implicit feature source, end to end: wall time,
+    // panel recomputes, and the measured peak resident bytes that justify
+    // the O(n·k + b·n) claim. rp-forest kNN for both modes so the exact
+    // front end's O(n²) distance blocks don't mask the feature-matrix
+    // difference; a fixed handful of power iterations (the peak is set by
+    // residency, not convergence), one timed run per case (a full n = 8192
+    // fit is far past the micro-bench budget).
+    let mut memory_cases = Vec::new();
+    for n in [2048usize, 8192] {
+        let ds = isospark::data::swiss_roll::euler_isometric(n, 13);
+        for feature in [FeatureMode::Materialized, FeatureMode::Implicit] {
+            let cfg = IsomapConfig {
+                k: 10,
+                d: 2,
+                block: 256,
+                max_iter: 4,
+                tol: 1e-30,
+                knn: KnnMode::RpForest,
+                geodesics: GeodesicsMode::SparseDijkstra,
+                feature,
+                ..Default::default()
+            };
+            let cluster = ClusterConfig { parallelism: 0, ..ClusterConfig::local() };
+            let sw = Stopwatch::start();
+            let out = isomap::run(&ds.points, &cfg, &cluster).unwrap();
+            let wall = sw.secs();
+            println!(
+                "eigen:memory:n{n}:{:<12} {wall:>8.3}s  peak {:>12} B  {} panel recomputes",
+                feature.name(),
+                out.peak_resident_bytes,
+                out.panel_recomputes
+            );
+            memory_cases.push(Json::obj(vec![
+                ("n", Json::num(n as f64)),
+                ("d", Json::num(2.0)),
+                ("block", Json::num(256.0)),
+                ("mode", Json::str(feature.name())),
+                ("wall_secs", Json::num(wall)),
+                ("iterations", Json::num(out.eigen_iterations as f64)),
+                ("panel_recomputes", Json::num(out.panel_recomputes as f64)),
+                ("peak_resident_bytes", Json::num(out.peak_resident_bytes as f64)),
+            ]));
+        }
+    }
+    write_kernel_section("BENCH_memory.json", "stage_eigen:memory", memory_cases);
 
     std::fs::create_dir_all("out").ok();
     std::fs::write("out/stage_eigen.json", bench.json()).ok();

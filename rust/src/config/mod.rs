@@ -108,6 +108,58 @@ impl std::str::FromStr for KnnMode {
     }
 }
 
+/// How the squared-geodesic feature matrix is held through centering and
+/// power iteration (config key `feature` in the `isomap` section; CLI
+/// `--feature`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FeatureMode {
+    /// Keep all `q(q+1)/2` upper-triangular blocks resident — the paper's
+    /// layout, `O(n²)` memory, the reference semantics.
+    Materialized,
+    /// Stream `b × n` geodesic row panels on demand from the CSR graph
+    /// (`crate::coordinator::panels`): `O(n·k + b·n)` peak memory, one
+    /// Dijkstra sweep (or durable-spill re-read) per power iteration.
+    /// Requires `--geodesics sparse-dijkstra`.
+    Implicit,
+}
+
+impl FeatureMode {
+    /// Canonical config/CLI spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            FeatureMode::Materialized => "materialized",
+            FeatureMode::Implicit => "implicit",
+        }
+    }
+
+    /// One-line human description for run reports.
+    pub fn describe(self) -> &'static str {
+        match self {
+            FeatureMode::Materialized => "materialized (resident upper-triangular blocks)",
+            FeatureMode::Implicit => {
+                "implicit (geodesic panels recomputed/spilled per iteration; O(n·k + b·n) memory)"
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for FeatureMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for FeatureMode {
+    type Err = String;
+    fn from_str(s: &str) -> std::result::Result<Self, String> {
+        match s {
+            "materialized" | "resident" | "dense" => Ok(FeatureMode::Materialized),
+            "implicit" | "panels" | "streamed" => Ok(FeatureMode::Implicit),
+            other => Err(format!("unknown feature mode {other:?} (materialized|implicit)")),
+        }
+    }
+}
+
 /// Isomap algorithm parameters (paper Alg. 1 + §IV defaults).
 #[derive(Clone, Debug, PartialEq)]
 pub struct IsomapConfig {
@@ -139,6 +191,9 @@ pub struct IsomapConfig {
     /// `max(4k, 32)` — empirically ≥ 0.99 recall@10 on swiss-roll at the
     /// default tree count; see [`IsomapConfig::rp_leaf_resolved`].
     pub rp_leaf: usize,
+    /// Feature-matrix residency through centering + power iteration:
+    /// materialized blocks (the default) or streamed geodesic panels.
+    pub feature: FeatureMode,
 }
 
 impl Default for IsomapConfig {
@@ -155,6 +210,7 @@ impl Default for IsomapConfig {
             knn: KnnMode::Exact,
             rp_trees: 8,
             rp_leaf: 0,
+            feature: FeatureMode::Materialized,
         }
     }
 }
@@ -189,6 +245,13 @@ impl IsomapConfig {
                     self.k
                 );
             }
+        }
+        if self.feature == FeatureMode::Implicit && self.geodesics != GeodesicsMode::SparseDijkstra
+        {
+            bail!(
+                "--feature implicit requires --geodesics sparse-dijkstra (panels are \
+                 recomputed from the CSR graph; dense-fw materializes every block anyway)"
+            );
         }
         Ok(())
     }
@@ -380,6 +443,7 @@ impl RawConfig {
             knn: self.typed("isomap", "knn", d.knn)?,
             rp_trees: self.typed("isomap", "rp_trees", d.rp_trees)?,
             rp_leaf: self.typed("isomap", "rp_leaf", d.rp_leaf)?,
+            feature: self.typed("isomap", "feature", d.feature)?,
         })
     }
 
@@ -492,6 +556,32 @@ mod tests {
         assert!(RawConfig::parse("[isomap]\nrp_trees = -3\n").unwrap().isomap().is_err());
         assert_eq!("rpforest".parse::<KnnMode>().unwrap(), KnnMode::RpForest);
         assert_eq!(KnnMode::RpForest.to_string(), "rp-forest");
+    }
+
+    #[test]
+    fn feature_mode_parses() {
+        assert_eq!(IsomapConfig::default().feature, FeatureMode::Materialized);
+        let raw =
+            RawConfig::parse("[isomap]\nfeature = implicit\ngeodesics = sparse-dijkstra\n")
+                .unwrap();
+        let iso = raw.isomap().unwrap();
+        assert_eq!(iso.feature, FeatureMode::Implicit);
+        assert!(RawConfig::parse("[isomap]\nfeature = bogus\n").unwrap().isomap().is_err());
+        assert_eq!("panels".parse::<FeatureMode>().unwrap(), FeatureMode::Implicit);
+        assert_eq!(FeatureMode::Implicit.to_string(), "implicit");
+    }
+
+    #[test]
+    fn implicit_feature_requires_sparse_geodesics() {
+        let cfg = IsomapConfig { feature: FeatureMode::Implicit, ..Default::default() };
+        let err = cfg.validate(100).unwrap_err();
+        assert!(err.to_string().contains("sparse-dijkstra"), "{err}");
+        let ok = IsomapConfig {
+            feature: FeatureMode::Implicit,
+            geodesics: GeodesicsMode::SparseDijkstra,
+            ..Default::default()
+        };
+        assert!(ok.validate(100).is_ok());
     }
 
     #[test]

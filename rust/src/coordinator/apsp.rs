@@ -259,19 +259,16 @@ pub fn solve_sparse(
         let sw = crate::util::Stopwatch::start();
         sources.clear();
         sources.extend(rs..re);
-        let panel = dijkstra::multi_source_with_policy(&csr, &sources, workers, policy.as_ref());
+        let mut panel =
+            dijkstra::multi_source_with_policy(&csr, &sources, workers, policy.as_ref());
         // Square and slice the panel into its UT blocks. Geodesics are
         // finite here: connectivity was checked against the same graph.
+        // The shared in-place squaring keeps this path bit-identical to
+        // the implicit panel source, which squares the same panels.
+        super::panels::square_panel(&mut panel);
         for j in i..q {
             let (cs, ce) = block_range(n, b, j);
-            let mut blk = Matrix::zeros(re - rs, ce - cs);
-            for r in 0..(re - rs) {
-                let src_row = &panel.row(r)[cs..ce];
-                for (dst, &v) in blk.row_mut(r).iter_mut().zip(src_row) {
-                    *dst = v * v;
-                }
-            }
-            blocks.push((BlockId::new(i, j), blk));
+            blocks.push((BlockId::new(i, j), panel.slice(0, re - rs, cs, ce)));
         }
         let secs = sw.secs();
         compute_real += secs;

@@ -43,11 +43,40 @@ pub fn center(
 
     // Driver: assemble means (reduce + collectAsMap in the paper).
     let collected = reduced.collect();
+    let (mu, grand) = means_from_sums(collected.into_iter().map(|(id, s)| (id.i, s)), n, b)?;
+
+    // Broadcast the means vector to the executors.
+    ctx.broadcast("center:means", (n as u64) * 8 + 8);
+
+    // Apply: a ← −½ (a − μ_row − μ_col + μ̂), per block. In place through
+    // copy-on-write: the feature RDD is consumed here and its blocks have
+    // no other owner, so no block is ever cloned (the apply stage used to
+    // copy every block before writing it).
+    let mu_apply = mu.clone();
+    let centered = feature.update_values("center:apply", move |id, blk| {
+        let (rs, re) = block_range(n, b, id.i);
+        let (cs, ce) = block_range(n, b, id.j);
+        backend.center_block(blk, &mu_apply[rs..re], &mu_apply[cs..ce], grand);
+    });
+    centered.persist("G")?;
+    Ok((centered, mu))
+}
+
+/// Turn per-block-row column sums into the centering means: `μ_j` (column
+/// means) and the grand mean `μ̂`. Factored out of [`center`] so the
+/// implicit panel source (`super::panels`) derives *bit-identical* means
+/// from its streamed sums — the division and the `μ̂` summation order here
+/// are part of the determinism contract between the two feature paths.
+pub(crate) fn means_from_sums(
+    sums: impl IntoIterator<Item = (usize, Vec<f64>)>,
+    n: usize,
+    b: usize,
+) -> Result<(Vec<f64>, f64)> {
     let mut mu = vec![0.0f64; n];
-    for (id, sums) in collected {
-        let (s, e) = block_range(n, b, id.i);
+    for (i, sums) in sums {
+        let (s, e) = block_range(n, b, i);
         if sums.len() != e - s {
-            bail!("centering: block {} produced {} sums for {} columns", id, sums.len(), e - s);
+            bail!("centering: block {i} produced {} sums for {} columns", sums.len(), e - s);
         }
         for (dst, v) in mu[s..e].iter_mut().zip(&sums) {
             if !v.is_finite() {
@@ -59,21 +88,7 @@ pub fn center(
         }
     }
     let grand = mu.iter().sum::<f64>() / n as f64;
-
-    // Broadcast the means vector to the executors.
-    ctx.broadcast("center:means", (n as u64) * 8 + 8);
-
-    // Apply: a ← −½ (a − μ_row − μ_col + μ̂), per block.
-    let mu_apply = mu.clone();
-    let centered = feature.map_values("center:apply", move |id, blk| {
-        let (rs, re) = block_range(n, b, id.i);
-        let (cs, ce) = block_range(n, b, id.j);
-        let mut out = blk.clone();
-        backend.center_block(&mut out, &mu_apply[rs..re], &mu_apply[cs..ce], grand);
-        out
-    });
-    centered.persist("G")?;
-    Ok((centered, mu))
+    Ok((mu, grand))
 }
 
 #[cfg(test)]

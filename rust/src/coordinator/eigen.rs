@@ -1,25 +1,22 @@
 //! Simultaneous power iteration (paper §III-D, Alg. 2).
 //!
 //! The driver owns the tall-skinny `Q (n×d)` and runs BLAS QR on it; the
-//! executors compute the blocked product `V = A·Q`: each upper-triangular
-//! block `(I,J)` contributes `A^{(I,J)}·Q_J` to `V_I` and, when off-
-//! diagonal, `(A^{(I,J)})ᵀ·Q_I` to `V_J` (the paper's transposed yield for
-//! upper-triangular storage). `Q` is broadcast each iteration — small for
-//! practical `d` — so no block pairing/shuffle of `A` is ever needed.
-//! Convergence: `‖Qᶦ − Qᶦ⁻¹‖_F < t` or `l` iterations.
+//! per-iteration blocked product `V = A·Q` is delegated to a
+//! [`FeatureSource`] — resident upper-triangular blocks
+//! ([`panels::Materialized`], the paper's layout: each block `(I,J)`
+//! contributes `A^{(I,J)}·Q_J` to `V_I` and, when off-diagonal,
+//! `(A^{(I,J)})ᵀ·Q_I` to `V_J`) or streamed geodesic panels
+//! ([`panels::Implicit`], which never materializes `A`). `Q` is broadcast
+//! each iteration — small for practical `d` — so no block pairing/shuffle
+//! of `A` is ever needed. Convergence: `‖Qᶦ − Qᶦ⁻¹‖_F < t` or `l`
+//! iterations.
 
-use super::block_range;
+use super::panels::{self, FeatureSource};
 use crate::backend::Backend;
-use crate::engine::executor::run_tasks_with_policy;
-use crate::engine::{BlockId, BlockRdd};
+use crate::engine::BlockRdd;
 use crate::linalg::qr::qr_thin;
 use crate::linalg::Matrix;
 use anyhow::{bail, Result};
-
-/// Elements of `V` below which the per-iteration collect+paste stays on
-/// the driver thread: a scoped pool spawn costs tens of µs, so the copy
-/// must be ≥ ~1 MiB (2¹⁷ f64) before fanning it out pays.
-const PARALLEL_PASTE_MIN: usize = 1 << 17;
 
 /// Result of the spectral stage.
 #[derive(Debug)]
@@ -34,7 +31,9 @@ pub struct EigenOutput {
     pub converged: bool,
 }
 
-/// Run simultaneous power iteration over the centered feature matrix.
+/// Run simultaneous power iteration over the centered feature matrix held
+/// in resident blocks — the historical entry point, now a thin wrapper
+/// over [`power_iteration`] with a [`panels::Materialized`] source.
 pub fn simultaneous_power_iteration(
     a: &BlockRdd<Matrix>,
     n: usize,
@@ -44,10 +43,25 @@ pub fn simultaneous_power_iteration(
     max_iter: usize,
     backend: &Backend,
 ) -> Result<EigenOutput> {
+    let src = panels::Materialized::new(a, n, b, backend);
+    power_iteration(&src, d, tol, max_iter)
+}
+
+/// Run simultaneous power iteration against any [`FeatureSource`]. The
+/// driver-side loop (QR, convergence test, sign fix) is identical for
+/// every source; only the `A·Q` product differs. Sources are responsible
+/// for their own stage accounting, so the metrics table shows where each
+/// iteration's time actually went.
+pub fn power_iteration(
+    src: &dyn FeatureSource,
+    d: usize,
+    tol: f64,
+    max_iter: usize,
+) -> Result<EigenOutput> {
+    let n = src.n();
     if d == 0 || d > n {
         bail!("eigen: d={d} out of range for n={n}");
     }
-    let ctx = a.context();
 
     // V¹ = I_{n×d}; Q¹ from its QR (== the first d basis vectors).
     let (mut q, mut r) = qr_thin(&Matrix::eye(n, d));
@@ -56,66 +70,7 @@ pub fn simultaneous_power_iteration(
 
     for it in 1..=max_iter {
         iterations = it;
-        // Driver broadcasts the whole Qᶦ⁻¹ to all executors.
-        ctx.broadcast("eigen:q", (n as u64) * (d as u64) * 8);
-
-        // Executors: blocked product V = A·Q.
-        let q_ref = &q;
-        let products = a.flat_map("eigen:matvec", move |id, blk| {
-            let (rs, re) = block_range(n, b, id.i);
-            let (cs, ce) = block_range(n, b, id.j);
-            let qj = q_ref.slice(cs, ce, 0, d);
-            let mut c = Matrix::zeros(re - rs, d);
-            backend.gemm_acc(blk, &qj, &mut c);
-            let mut out = vec![(BlockId::new(id.i, 0), c)];
-            if id.i != id.j {
-                let qi = q_ref.slice(rs, re, 0, d);
-                let mut ct = Matrix::zeros(ce - cs, d);
-                backend.gemm_t_acc(blk, &qi, &mut ct);
-                out.push((BlockId::new(id.j, 0), ct));
-            }
-            out
-        });
-        let v_blocks = products.reduce_by_key("eigen:reduce", a.partitioner(), |mut x, y| {
-            for (xa, ya) in x.as_mut_slice().iter_mut().zip(y.as_slice()) {
-                *xa += ya;
-            }
-            x
-        });
-
-        // Driver: collect V, QR-decompose, test convergence. The V blocks
-        // tile the rows exactly (one per block-row, BTreeMap-sorted by
-        // index). Above the copy-size threshold, V's row-major buffer is
-        // carved into disjoint spans and the paste runs on the worker pool
-        // instead of a serial driver loop; tiny V (the practical d ≤ 4
-        // embeddings) stays serial — a scoped thread spawn per iteration
-        // would dwarf the memcpy it parallelizes.
-        let collected = v_blocks.collect();
-        let mut v = Matrix::zeros(n, d);
-        let workers = ctx.parallelism().max(1);
-        if workers == 1 || n * d < PARALLEL_PASTE_MIN {
-            for (id, blk) in &collected {
-                let (rs, _) = block_range(n, b, id.i);
-                v.paste(rs, 0, blk);
-            }
-        } else {
-            let mut tasks = Vec::with_capacity(collected.len());
-            let mut rest: &mut [f64] = v.as_mut_slice();
-            let mut next_row = 0usize;
-            for (id, blk) in &collected {
-                let (rs, re) = block_range(n, b, id.i);
-                debug_assert_eq!(rs, next_row, "eigen: V blocks must tile the rows");
-                let (span, tail) = std::mem::take(&mut rest).split_at_mut((re - rs) * d);
-                tasks.push((span, blk));
-                rest = tail;
-                next_row = re;
-            }
-            debug_assert_eq!(next_row, n, "eigen: V blocks must cover all rows");
-            let policy = ctx.task_policy();
-            run_tasks_with_policy(policy.as_ref(), "eigen:paste", workers, tasks, |(span, blk)| {
-                span.copy_from_slice(blk.as_slice())
-            });
-        }
+        let v = src.matvec(&q)?;
         let (qn, rn) = qr_thin(&v);
         let delta = qn.fro_dist(&q);
         q = qn;
@@ -150,8 +105,9 @@ pub fn simultaneous_power_iteration(
 mod tests {
     use super::*;
     use crate::config::ClusterConfig;
+    use crate::coordinator::block_range;
     use crate::engine::partitioner::UpperTriangularPartitioner;
-    use crate::engine::SparkContext;
+    use crate::engine::{BlockId, SparkContext};
     use crate::linalg::jacobi;
     use crate::util::Rng;
     use std::sync::Arc;

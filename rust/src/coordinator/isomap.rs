@@ -6,9 +6,9 @@
 //! we implement the standard classical-MDS scaling `√λ`, which reproduces
 //! their Procrustes result.)
 
-use super::{centering, eigen, knn, num_blocks};
+use super::{centering, eigen, knn, num_blocks, panels};
 use crate::backend::Backend;
-use crate::config::{ClusterConfig, GeodesicsMode, IsomapConfig};
+use crate::config::{ClusterConfig, FeatureMode, GeodesicsMode, IsomapConfig};
 use crate::engine::metrics::OffloadOpSnapshot;
 use crate::engine::SparkContext;
 use crate::linalg::Matrix;
@@ -34,6 +34,19 @@ pub struct IsomapOutput {
     /// Which kNN front end ran (`exact` all-pairs or `rp-forest`), with
     /// the forest's candidate counters when approximate.
     pub knn: knn::KnnPath,
+    /// Which feature-matrix residency ran (`materialized` blocks or
+    /// `implicit` streamed panels).
+    pub feature: FeatureMode,
+    /// High-water mark of cluster-wide resident bytes over the run — the
+    /// measured side of the memory model: O(n²) materialized, O(n·k + b·n)
+    /// implicit.
+    pub peak_resident_bytes: u64,
+    /// Implicit mode: geodesic panels produced by running Dijkstra
+    /// (0 in materialized mode).
+    pub panel_recomputes: usize,
+    /// Implicit mode: panels served from the durable spill instead of
+    /// recomputed (0 without `--checkpoint-dir`).
+    pub panel_spill_reads: usize,
     /// Virtual wall-clock of the simulated cluster, seconds.
     pub virtual_secs: f64,
     /// Total bytes shuffled across the simulated network.
@@ -66,34 +79,60 @@ pub fn run_with(
     cfg.validate(n)?;
     let ctx = SparkContext::new(cluster.clone());
 
-    // Stages 1 + 2: kNN, then the squared-geodesic feature matrix through
-    // the configured path. Dense: neighborhood-graph blocks -> blocked
-    // Floyd–Warshall. Sparse: kNN lists only -> CSR -> pooled multi-source
-    // Dijkstra row panels (the dense APSP RDD is never built).
-    let (graph_components, knn_path, a) = match cfg.geodesics {
-        GeodesicsMode::DenseFw => {
-            let kg = knn::build(&ctx, x, cfg, backend).context("kNN stage")?;
-            let components = crate::eval::components(&kg.lists);
-            let a = super::apsp::solve(kg.graph, kg.q, cfg, backend).context("APSP stage")?;
-            (components, kg.path, a)
-        }
-        GeodesicsMode::SparseDijkstra => {
+    // Stages 1–4 through the configured feature residency.
+    //
+    // Materialized (the default): kNN, then the squared-geodesic feature
+    // matrix as resident blocks (dense: neighborhood-graph blocks ->
+    // blocked Floyd–Warshall; sparse: kNN lists -> CSR -> pooled
+    // multi-source Dijkstra row panels), double centering over the blocks,
+    // power iteration over the centered RDD.
+    //
+    // Implicit: kNN lists -> CSR only. The panel source folds one panel
+    // sweep into the centering means, then recomputes (or spill-re-reads)
+    // panels inside every power-iteration matvec, centering on the fly —
+    // the dense feature matrix is never resident. Bit-identical to the
+    // materialized sparse-dijkstra run on the same graph.
+    let (graph_components, knn_path, eig, panel_recomputes, panel_spill_reads) = match cfg.feature
+    {
+        FeatureMode::Implicit => {
             let kl = knn::build_lists(&ctx, x, cfg, backend).context("kNN stage")?;
             let components = crate::eval::components(&kl.lists);
-            let a = super::apsp::solve_sparse(&ctx, &kl.lists, n, cfg)
-                .context("sparse geodesics stage")?;
-            (components, kl.path, a)
+            let src = panels::Implicit::build(&ctx, &kl.lists, n, cfg, backend)
+                .context("implicit feature stage")?;
+            let eig = eigen::power_iteration(&src, cfg.d, cfg.tol, cfg.max_iter)
+                .context("eigendecomposition stage")?;
+            (components, kl.path, eig, src.recomputes(), src.spill_reads())
+        }
+        FeatureMode::Materialized => {
+            let (components, knn_path, a) = match cfg.geodesics {
+                GeodesicsMode::DenseFw => {
+                    let kg = knn::build(&ctx, x, cfg, backend).context("kNN stage")?;
+                    let components = crate::eval::components(&kg.lists);
+                    let a =
+                        super::apsp::solve(kg.graph, kg.q, cfg, backend).context("APSP stage")?;
+                    (components, kg.path, a)
+                }
+                GeodesicsMode::SparseDijkstra => {
+                    let kl = knn::build_lists(&ctx, x, cfg, backend).context("kNN stage")?;
+                    let components = crate::eval::components(&kl.lists);
+                    let a = super::apsp::solve_sparse(&ctx, &kl.lists, n, cfg)
+                        .context("sparse geodesics stage")?;
+                    (components, kl.path, a)
+                }
+            };
+
+            // Stage 3: double centering.
+            let (centered, _mu) =
+                centering::center(a, n, cfg.block, backend).context("centering stage")?;
+
+            // Stage 4: spectral decomposition.
+            let eig = eigen::simultaneous_power_iteration(
+                &centered, n, cfg.block, cfg.d, cfg.tol, cfg.max_iter, backend,
+            )
+            .context("eigendecomposition stage")?;
+            (components, knn_path, eig, 0, 0)
         }
     };
-
-    // Stage 3: double centering.
-    let (centered, _mu) = centering::center(a, n, cfg.block, backend).context("centering stage")?;
-
-    // Stage 4: spectral decomposition.
-    let eig = eigen::simultaneous_power_iteration(
-        &centered, n, cfg.block, cfg.d, cfg.tol, cfg.max_iter, backend,
-    )
-    .context("eigendecomposition stage")?;
 
     // Y = Q_d · diag(√λ)  (λ clamped at 0: tiny negatives can appear for
     // non-Euclidean geodesic matrices).
@@ -113,11 +152,15 @@ pub fn run_with(
         graph_components,
         geodesics: cfg.geodesics,
         knn: knn_path,
+        feature: cfg.feature,
+        peak_resident_bytes: ctx.peak_resident_bytes(),
+        panel_recomputes,
+        panel_spill_reads,
         virtual_secs: ctx.virtual_now(),
         shuffle_bytes: ctx.total_shuffle_bytes(),
         compute_secs: ctx.total_compute_real(),
         metrics_table: ctx
-            .metrics_report(&["knn", "geo", "apsp", "center", "eigen", "checkpoint"]),
+            .metrics_report(&["knn", "geo", "apsp", "center", "eigen", "feat", "checkpoint"]),
         offload: backend.offload_snapshot(),
     })
 }

@@ -12,6 +12,7 @@ pub mod isomap;
 pub mod knn;
 pub mod landmark;
 pub mod lle;
+pub mod panels;
 pub mod streaming;
 
 /// Row range `[start, end)` of block `i` in a 1-D decomposition of `n`

@@ -1,0 +1,646 @@
+//! Feature-matrix sources for the pipeline's back half (centering +
+//! power iteration): resident blocks or streamed geodesic panels.
+//!
+//! Centering and simultaneous power iteration never need the squared-
+//! geodesic feature matrix `A` as a value — only two folds over it: the
+//! column sums (for the centering means) and the per-iteration product
+//! `V = A·Q`. [`FeatureSource`] abstracts exactly that access pattern, and
+//! two implementations provide it:
+//!
+//! * [`Materialized`] — today's upper-triangular [`BlockRdd`] of resident
+//!   blocks, `O(n²)` memory, the default and the reference semantics.
+//! * [`Implicit`] — recomputes (or spills once and re-reads) `b × n`
+//!   geodesic row panels on demand from the CSR kNN graph via pooled
+//!   multi-source Dijkstra. The dense feature matrix is never
+//!   materialized: peak memory is `O(n·k)` for the CSR graph plus
+//!   `O(b·n)` for the one live panel, at the price of one Dijkstra sweep
+//!   per power iteration (or one disk read with `--checkpoint-dir`).
+//!
+//! **Bit-determinism contract.** `Implicit` replays the *exact* blocked
+//! computation of the materialized sparse-Dijkstra path, panel by panel:
+//! the same [`dijkstra::multi_source`] rows, the same squared block
+//! slices, the same per-block kernels, and a per-key accumulation order
+//! that mirrors `flat_map` emission order plus `reduce_by_key` fold order
+//! (first record *becomes* the accumulator; later records fold in arrival
+//! order). The embedding is therefore bit-identical to the materialized
+//! run on the same graph — for any worker count, under fault injection,
+//! and across the spill/recompute variants — which is what lets CI `cmp`
+//! the two runs' CSVs byte for byte.
+
+use super::{block_range, centering, num_blocks};
+use crate::backend::Backend;
+use crate::config::IsomapConfig;
+use crate::engine::clock::Task;
+use crate::engine::durable::CheckpointStore;
+use crate::engine::executor::run_tasks_with_policy;
+use crate::engine::metrics::StageMetrics;
+use crate::engine::{BlockId, BlockRdd, SparkContext};
+use crate::graph::{dijkstra, CsrGraph};
+use crate::kernels::centering::{col_sums, row_sums};
+use crate::kernels::kselect::Neighbor;
+use crate::linalg::Matrix;
+use crate::util::Stopwatch;
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Stage name charged for every panel recompute / spill re-read; fault
+/// injection, retry, and the metrics table all see panels under this key.
+pub const PANEL_STAGE: &str = "feat:panel";
+
+/// Elements of `V` below which the per-iteration collect+paste stays on
+/// the driver thread: a scoped pool spawn costs tens of µs, so the copy
+/// must be ≥ ~1 MiB (2¹⁷ f64) before fanning it out pays.
+const PARALLEL_PASTE_MIN: usize = 1 << 17;
+
+/// Read access to the centered feature matrix, shaped as the only two
+/// things the back half of the pipeline ever does with it.
+pub trait FeatureSource {
+    /// Number of points (rows of the virtual `n × n` feature matrix).
+    fn n(&self) -> usize;
+
+    /// One power-iteration step `V = A·Q` over the *centered* features,
+    /// including the per-iteration broadcast of `Q` to the executors.
+    fn matvec(&self, q: &Matrix) -> Result<Matrix>;
+
+    /// Human description for run reports.
+    fn describe(&self) -> String;
+}
+
+/// Square a geodesic panel element-wise in place (`d → d²`, the feature
+/// entries double centering consumes). Shared with the materialized
+/// sparse path so both square with the identical per-element operation.
+pub(crate) fn square_panel(panel: &mut Matrix) {
+    for v in panel.as_mut_slice() {
+        *v *= *v;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Materialized: resident upper-triangular blocks (the default).
+// ---------------------------------------------------------------------------
+
+/// The resident-block source: today's centered upper-triangular
+/// [`BlockRdd`], wrapped behind [`FeatureSource`]. Each matvec is the
+/// engine's blocked product — broadcast `Q`, `flat_map` per-block GEMMs,
+/// `reduce_by_key` into per-block-row `V` slices, collect + paste.
+pub struct Materialized<'a> {
+    a: &'a BlockRdd<Matrix>,
+    n: usize,
+    b: usize,
+    backend: &'a Backend,
+}
+
+impl<'a> Materialized<'a> {
+    /// Wrap a centered feature RDD (`n` points in blocks of `b`).
+    pub fn new(a: &'a BlockRdd<Matrix>, n: usize, b: usize, backend: &'a Backend) -> Self {
+        Self { a, n, b, backend }
+    }
+}
+
+impl FeatureSource for Materialized<'_> {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn matvec(&self, q: &Matrix) -> Result<Matrix> {
+        let (n, b, backend) = (self.n, self.b, self.backend);
+        let d = q.ncols();
+        let ctx = self.a.context();
+
+        // Driver broadcasts the whole Qᶦ⁻¹ to all executors.
+        ctx.broadcast("eigen:q", (n as u64) * (d as u64) * 8);
+
+        // Executors: blocked product V = A·Q. Block (I,J) contributes
+        // A^{(I,J)}·Q_J to V_I and, off-diagonal, (A^{(I,J)})ᵀ·Q_I to V_J
+        // (the transposed yield for upper-triangular storage).
+        let q_ref = &q;
+        let products = self.a.flat_map("eigen:matvec", move |id, blk| {
+            let (rs, re) = block_range(n, b, id.i);
+            let (cs, ce) = block_range(n, b, id.j);
+            let qj = q_ref.slice(cs, ce, 0, d);
+            let mut c = Matrix::zeros(re - rs, d);
+            backend.gemm_acc(blk, &qj, &mut c);
+            let mut out = vec![(BlockId::new(id.i, 0), c)];
+            if id.i != id.j {
+                let qi = q_ref.slice(rs, re, 0, d);
+                let mut ct = Matrix::zeros(ce - cs, d);
+                backend.gemm_t_acc(blk, &qi, &mut ct);
+                out.push((BlockId::new(id.j, 0), ct));
+            }
+            out
+        });
+        let v_blocks = products.reduce_by_key("eigen:reduce", self.a.partitioner(), |mut x, y| {
+            for (xa, ya) in x.as_mut_slice().iter_mut().zip(y.as_slice()) {
+                *xa += ya;
+            }
+            x
+        });
+
+        // Driver: collect V. The V blocks tile the rows exactly (one per
+        // block-row, BTreeMap-sorted by index). Above the copy-size
+        // threshold, V's row-major buffer is carved into disjoint spans
+        // and the paste runs on the worker pool instead of a serial
+        // driver loop; tiny V (the practical d ≤ 4 embeddings) stays
+        // serial — a scoped thread spawn per iteration would dwarf the
+        // memcpy it parallelizes.
+        let collected = v_blocks.collect();
+        let mut v = Matrix::zeros(n, d);
+        let workers = ctx.parallelism().max(1);
+        if workers == 1 || n * d < PARALLEL_PASTE_MIN {
+            for (id, blk) in &collected {
+                let (rs, _) = block_range(n, b, id.i);
+                v.paste(rs, 0, blk);
+            }
+        } else {
+            let mut tasks = Vec::with_capacity(collected.len());
+            let mut rest: &mut [f64] = v.as_mut_slice();
+            let mut next_row = 0usize;
+            for (id, blk) in &collected {
+                let (rs, re) = block_range(n, b, id.i);
+                debug_assert_eq!(rs, next_row, "eigen: V blocks must tile the rows");
+                let (span, tail) = std::mem::take(&mut rest).split_at_mut((re - rs) * d);
+                tasks.push((span, blk));
+                rest = tail;
+                next_row = re;
+            }
+            debug_assert_eq!(next_row, n, "eigen: V blocks must cover all rows");
+            let policy = ctx.task_policy();
+            run_tasks_with_policy(policy.as_ref(), "eigen:paste", workers, tasks, |(span, blk)| {
+                span.copy_from_slice(blk.as_slice())
+            });
+        }
+        Ok(v)
+    }
+
+    fn describe(&self) -> String {
+        format!("materialized (resident upper-triangular blocks, b = {})", self.b)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Implicit: geodesic row panels recomputed / re-read on demand.
+// ---------------------------------------------------------------------------
+
+/// Content fingerprint binding spilled panels to their input graph: FNV
+/// over `n`, `b`, and every CSR adjacency entry. A `--checkpoint-dir`
+/// reused across different datasets or block sizes hashes to a different
+/// job key and simply finds no spill.
+fn graph_fingerprint(csr: &CsrGraph, n: usize, b: usize) -> u64 {
+    let mut h = crate::data::io::Fnv1a64::new();
+    h.update(&(n as u64).to_le_bytes());
+    h.update(&(b as u64).to_le_bytes());
+    for u in 0..csr.n() {
+        let (cols, weights) = csr.neighbors(u);
+        h.update(&(cols.len() as u64).to_le_bytes());
+        for (&v, &w) in cols.iter().zip(weights) {
+            h.update(&v.to_le_bytes());
+            h.update(&w.to_le_bytes());
+        }
+    }
+    h.finish()
+}
+
+/// Fold a partial-sums vector into a per-block-row accumulator with the
+/// engine's `reduce_by_key` semantics: the first record *becomes* the
+/// accumulator (no zero-init, so `0 + (−0)` sign hazards never arise),
+/// later records add element-wise in arrival order.
+fn fold_sums(acc: &mut Option<Vec<f64>>, partial: Vec<f64>) {
+    match acc {
+        None => *acc = Some(partial),
+        Some(a) => {
+            for (x, y) in a.iter_mut().zip(&partial) {
+                *x += y;
+            }
+        }
+    }
+}
+
+/// Add a per-block contribution into `V`'s row span for block-row `key`,
+/// mirroring `eigen:reduce`: the first contribution is copied in
+/// wholesale, later ones add element-wise over the row-major span.
+fn fold_matvec(v: &mut Matrix, touched: &mut [bool], key: usize, rs: usize, d: usize, c: &Matrix) {
+    let span = &mut v.as_mut_slice()[rs * d..rs * d + c.nrows() * d];
+    if touched[key] {
+        for (x, y) in span.iter_mut().zip(c.as_slice()) {
+            *x += y;
+        }
+    } else {
+        span.copy_from_slice(c.as_slice());
+        touched[key] = true;
+    }
+}
+
+/// The panel-streamed source (`--feature implicit`): squared-geodesic
+/// `b × n` row panels produced on demand from the CSR kNN graph, centered
+/// on the fly inside each matvec. Requires `--geodesics sparse-dijkstra`
+/// (validated by [`IsomapConfig::validate`]) — the dense Floyd–Warshall
+/// path must materialize every block to run at all.
+///
+/// With `--checkpoint-dir` set, the construction sweep additionally
+/// spills each squared panel through [`CheckpointStore`] (checksummed,
+/// manifest-last), and later sweeps re-read instead of recomputing; a
+/// missing or corrupt spill silently degrades to recompute. Both
+/// variants produce bit-identical panels — durable blocks round-trip
+/// bit-exactly through the little-endian f64 format.
+pub struct Implicit<'a> {
+    ctx: SparkContext,
+    csr: CsrGraph,
+    n: usize,
+    b: usize,
+    /// Logical block count `q = ⌈n/b⌉`.
+    qb: usize,
+    /// Broadcast column means of the squared-geodesic matrix.
+    mu: Vec<f64>,
+    /// Grand mean `μ̂`.
+    grand: f64,
+    backend: &'a Backend,
+    /// Durable spill target + content-bound job key, when configured.
+    spill: Option<(CheckpointStore, String)>,
+    /// Panels produced by running Dijkstra (including the build sweep).
+    recomputes: AtomicUsize,
+    /// Panels served from the durable spill instead.
+    spill_reads: AtomicUsize,
+}
+
+impl<'a> Implicit<'a> {
+    /// Build the source from kNN lists: CSR construction + connectivity
+    /// check, then one panel sweep folding column sums into the centering
+    /// means (spilling each squared panel when a checkpoint store is
+    /// configured). Charges the same `center:means` broadcast as the
+    /// materialized centering stage.
+    pub fn build(
+        ctx: &SparkContext,
+        lists: &[Vec<Neighbor>],
+        n: usize,
+        cfg: &IsomapConfig,
+        backend: &'a Backend,
+    ) -> Result<Self> {
+        if lists.len() != n {
+            bail!("implicit features: {} kNN lists for n = {n} points", lists.len());
+        }
+        let csr = CsrGraph::from_knn_lists(lists).context("implicit features: CSR construction")?;
+        csr.require_connected().context("implicit features")?;
+        let b = cfg.block;
+        let qb = num_blocks(n, b);
+        let spill = ctx.checkpoint_store().map(|store| {
+            let job = format!("feat-{:016x}", graph_fingerprint(&csr, n, b));
+            (store, job)
+        });
+        // The CSR graph is broadcast state: every executor holds a copy.
+        ctx.set_resident("feat:csr", vec![csr.nbytes(); ctx.nodes()])
+            .context("implicit features: CSR graph")?;
+
+        let src = Self {
+            ctx: ctx.clone(),
+            csr,
+            n,
+            b,
+            qb,
+            mu: Vec::new(),
+            grand: 0.0,
+            backend,
+            spill,
+            recomputes: AtomicUsize::new(0),
+            spill_reads: AtomicUsize::new(0),
+        };
+
+        // Column-sums sweep, replaying the materialized `center:sums` +
+        // `center:reduce` record order exactly: panels ascending, blocks
+        // (I,J), J ≥ I within each panel, column sums keyed J then row
+        // sums keyed I — so each key sees col partials from blocks
+        // (0,K)…(K,K) followed by row partials from (K,K+1)…(K,q−1),
+        // which is the flat_map arrival order the reduce folds in.
+        let mut sums: Vec<Option<Vec<f64>>> = (0..qb).map(|_| None).collect();
+        src.sweep(true, &mut |i, rows, panel| {
+            for j in i..qb {
+                let (cs, ce) = block_range(n, b, j);
+                let blk = panel.slice(0, rows, cs, ce);
+                fold_sums(&mut sums[j], col_sums(&blk));
+                if i != j {
+                    fold_sums(&mut sums[i], row_sums(&blk));
+                }
+            }
+            Ok(())
+        })?;
+        let collected = sums
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| (i, s.expect("every block row contributes column sums")));
+        let (mu, grand) = centering::means_from_sums(collected, n, b)?;
+        src.ctx.broadcast("center:means", (n as u64) * 8 + 8);
+
+        Ok(Self { mu, grand, ..src })
+    }
+
+    /// Broadcast column means (diagnostics; bit-identical to the means
+    /// the materialized centering stage computes on the same graph).
+    pub fn mu(&self) -> &[f64] {
+        &self.mu
+    }
+
+    /// Grand mean `μ̂` of the squared-geodesic matrix.
+    pub fn grand(&self) -> f64 {
+        self.grand
+    }
+
+    /// Panels produced by running Dijkstra (any sweep).
+    pub fn recomputes(&self) -> usize {
+        self.recomputes.load(Ordering::Relaxed)
+    }
+
+    /// Panels served from the durable spill.
+    pub fn spill_reads(&self) -> usize {
+        self.spill_reads.load(Ordering::Relaxed)
+    }
+
+    /// Squared-geodesic panel for block-row `i` by pooled multi-source
+    /// Dijkstra, charged to [`PANEL_STAGE`] for fault injection/retry.
+    fn recompute_panel(&self, i: usize) -> Matrix {
+        let (rs, re) = block_range(self.n, self.b, i);
+        let sources: Vec<usize> = (rs..re).collect();
+        let policy = self.ctx.task_policy();
+        let workers = self.ctx.parallelism();
+        let mut panel =
+            dijkstra::multi_source_stage(&self.csr, &sources, workers, policy.as_ref(), PANEL_STAGE);
+        square_panel(&mut panel);
+        self.recomputes.fetch_add(1, Ordering::Relaxed);
+        panel
+    }
+
+    /// Squared panel `i`: served from the durable spill when present and
+    /// valid (checksums + shape), recomputed otherwise.
+    fn panel_squared(&self, i: usize) -> Matrix {
+        let (rs, re) = block_range(self.n, self.b, i);
+        if let Some((store, job)) = &self.spill {
+            if let Ok(mut blocks) = store.load(job, i) {
+                if blocks.len() == 1 {
+                    let (_, panel) = blocks.pop().expect("len checked");
+                    if panel.nrows() == re - rs && panel.ncols() == self.n {
+                        self.spill_reads.fetch_add(1, Ordering::Relaxed);
+                        return panel;
+                    }
+                }
+            }
+        }
+        self.recompute_panel(i)
+    }
+
+    /// One full pass over the panels, ascending. `per_panel` receives
+    /// `(block_row, rows, squared_panel)`. Handles the residency model
+    /// (one live panel at a time, on its block-row's node), the
+    /// [`PANEL_STAGE`] accounting (measured durations replayed on the
+    /// virtual cluster + driver charge), and — on the build sweep
+    /// (`save`) — the durable spill, reported as a `feat:spill` row.
+    fn sweep(
+        &self,
+        save: bool,
+        per_panel: &mut dyn FnMut(usize, usize, &Matrix) -> Result<()>,
+    ) -> Result<()> {
+        let qb = self.qb;
+        let mut tasks = Vec::with_capacity(qb);
+        let mut compute_real = 0.0;
+        let mut spill_secs = 0.0;
+        let mut spill_tasks = 0usize;
+        for i in 0..qb {
+            let (rs, re) = block_range(self.n, self.b, i);
+            let sw = Stopwatch::start();
+            let panel = if save { self.recompute_panel(i) } else { self.panel_squared(i) };
+            let mut per = vec![0u64; self.ctx.nodes()];
+            per[self.ctx.node_of(i, qb)] = (panel.nrows() * panel.ncols() * 8) as u64;
+            self.ctx.set_resident(PANEL_STAGE, per).context("implicit features: live panel")?;
+            per_panel(i, re - rs, &panel)?;
+            if save {
+                if let Some((store, job)) = &self.spill {
+                    let ssw = Stopwatch::start();
+                    let bytes = store
+                        .save(job, i, &[(BlockId::new(i, 0), &panel)])
+                        .with_context(|| format!("spill feature panel {i}"))?;
+                    self.ctx.resilience().record_spill(bytes);
+                    spill_secs += ssw.secs();
+                    spill_tasks += 1;
+                }
+            }
+            self.ctx.clear_resident(PANEL_STAGE);
+            let secs = sw.secs();
+            compute_real += secs;
+            tasks.push(Task { node: self.ctx.node_of(i, qb), duration: secs });
+        }
+        let virtual_span = self.ctx.run_stage(&tasks);
+        let driver_time = self.ctx.charge_driver(PANEL_STAGE, qb, 0);
+        self.ctx.push_metrics(StageMetrics {
+            name: PANEL_STAGE.to_string(),
+            tasks: qb,
+            compute_real,
+            virtual_span,
+            shuffle_bytes: 0,
+            network_time: 0.0,
+            driver_time,
+        });
+        if spill_tasks > 0 {
+            // Informational: the spill time is also inside the panel
+            // durations above; this row isolates the disk share.
+            self.ctx.push_metrics(StageMetrics {
+                name: "feat:spill".to_string(),
+                tasks: spill_tasks,
+                compute_real: 0.0,
+                virtual_span: 0.0,
+                shuffle_bytes: 0,
+                network_time: 0.0,
+                driver_time: spill_secs,
+            });
+        }
+        Ok(())
+    }
+}
+
+impl FeatureSource for Implicit<'_> {
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn matvec(&self, q: &Matrix) -> Result<Matrix> {
+        let (n, b, qb) = (self.n, self.b, self.qb);
+        let d = q.ncols();
+        self.ctx.broadcast("eigen:q", (n as u64) * (d as u64) * 8);
+
+        // Per-key contribution order mirrors the materialized path: for
+        // block-row K, transposed yields from blocks (0,K)…(K−1,K), then
+        // direct yields from (K,K)…(K,q−1) — exactly the `eigen:matvec`
+        // emission order the `eigen:reduce` fold consumes.
+        let mut v = Matrix::zeros(n, d);
+        let mut touched = vec![false; qb];
+        self.sweep(false, &mut |i, rows, panel| {
+            let (rs, re) = block_range(n, b, i);
+            for j in i..qb {
+                let (cs, ce) = block_range(n, b, j);
+                let mut blk = panel.slice(0, rows, cs, ce);
+                // Centering on the fly: −½(a − μ_r − μ_c + μ̂), the same
+                // kernel the materialized `center:apply` stage ran once.
+                self.backend.center_block(&mut blk, &self.mu[rs..re], &self.mu[cs..ce], self.grand);
+                let qj = q.slice(cs, ce, 0, d);
+                let mut c = Matrix::zeros(re - rs, d);
+                self.backend.gemm_acc(&blk, &qj, &mut c);
+                fold_matvec(&mut v, &mut touched, i, rs, d, &c);
+                if i != j {
+                    let qi = q.slice(rs, re, 0, d);
+                    let mut ct = Matrix::zeros(ce - cs, d);
+                    self.backend.gemm_t_acc(&blk, &qi, &mut ct);
+                    fold_matvec(&mut v, &mut touched, j, cs, d, &ct);
+                }
+            }
+            Ok(())
+        })?;
+        Ok(v)
+    }
+
+    fn describe(&self) -> String {
+        let variant = if self.spill.is_some() {
+            "spilled once, re-read per pass"
+        } else {
+            "recomputed per pass"
+        };
+        format!(
+            "implicit ({}×{} geodesic panels {variant}; dense features never resident)",
+            self.b, self.n
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ClusterConfig, GeodesicsMode};
+    use crate::coordinator::{apsp, knn};
+    use crate::data::swiss_roll;
+    use crate::linalg::qr::qr_thin;
+
+    fn swiss_setup(n: usize, b: usize, workers: usize) -> (SparkContext, Matrix, IsomapConfig) {
+        let ds = swiss_roll::euler_isometric(n, 13);
+        let ctx = SparkContext::new(ClusterConfig {
+            parallelism: workers,
+            ..ClusterConfig::local()
+        });
+        let cfg = IsomapConfig {
+            k: 8,
+            block: b,
+            geodesics: GeodesicsMode::SparseDijkstra,
+            ..Default::default()
+        };
+        (ctx, ds.points, cfg)
+    }
+
+    #[test]
+    fn materialized_matvec_matches_dense_product() {
+        let (ctx, x, cfg) = swiss_setup(60, 16, 1);
+        let be = Backend::Native;
+        let kl = knn::build_lists(&ctx, &x, &cfg, &be).unwrap();
+        let a = apsp::solve_sparse(&ctx, &kl.lists, 60, &cfg).unwrap();
+        let dense = crate::coordinator::dense_from_blocks(&a, 60, 16);
+        let src = Materialized::new(&a, 60, 16, &be);
+        let (q0, _) = qr_thin(&Matrix::eye(60, 3));
+        let got = src.matvec(&q0).unwrap();
+        let want = dense.matmul(&q0);
+        assert!(got.max_abs_diff(&want) < 1e-9);
+    }
+
+    #[test]
+    fn implicit_means_and_matvec_bitwise_match_materialized() {
+        // Ragged blocks on purpose: 90 = 2·32 + 26.
+        let (ctx, x, cfg) = swiss_setup(90, 32, 1);
+        let be = Backend::Native;
+        let kl = knn::build_lists(&ctx, &x, &cfg, &be).unwrap();
+
+        let a = apsp::solve_sparse(&ctx, &kl.lists, 90, &cfg).unwrap();
+        let (centered, mu) = centering::center(a, 90, 32, &be).unwrap();
+        let mat = Materialized::new(&centered, 90, 32, &be);
+
+        let imp = Implicit::build(&ctx, &kl.lists, 90, &cfg, &be).unwrap();
+        assert_eq!(imp.mu().len(), mu.len());
+        for (a, b) in imp.mu().iter().zip(&mu) {
+            assert_eq!(a.to_bits(), b.to_bits(), "means must be bit-identical");
+        }
+
+        let (q0, _) = qr_thin(&Matrix::eye(90, 2));
+        let vm = mat.matvec(&q0).unwrap();
+        let vi = imp.matvec(&q0).unwrap();
+        for (a, b) in vm.as_slice().iter().zip(vi.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "matvec must be bit-identical");
+        }
+        assert_eq!(imp.recomputes(), 3 * 2); // build sweep + one matvec sweep
+        assert_eq!(imp.spill_reads(), 0);
+    }
+
+    #[test]
+    fn implicit_worker_count_is_invisible() {
+        let run = |workers: usize| -> Vec<u64> {
+            let (ctx, x, cfg) = swiss_setup(70, 16, workers);
+            let be = Backend::Native;
+            let kl = knn::build_lists(&ctx, &x, &cfg, &be).unwrap();
+            let imp = Implicit::build(&ctx, &kl.lists, 70, &cfg, &be).unwrap();
+            let (q0, _) = qr_thin(&Matrix::eye(70, 2));
+            let v = imp.matvec(&q0).unwrap();
+            v.as_slice().iter().map(|x| x.to_bits()).collect()
+        };
+        let serial = run(1);
+        for workers in [2, 8] {
+            assert_eq!(run(workers), serial, "workers = {workers}");
+        }
+    }
+
+    #[test]
+    fn implicit_charges_the_panel_stage() {
+        let (ctx, x, cfg) = swiss_setup(40, 16, 1);
+        let be = Backend::Native;
+        let kl = knn::build_lists(&ctx, &x, &cfg, &be).unwrap();
+        let imp = Implicit::build(&ctx, &kl.lists, 40, &cfg, &be).unwrap();
+        let (q0, _) = qr_thin(&Matrix::eye(40, 2));
+        let _ = imp.matvec(&q0).unwrap();
+        let feat = ctx.stage_aggregate("feat");
+        // One build sweep + one matvec sweep over q = 3 panels each.
+        assert_eq!(feat.tasks, 6, "feat stage tasks = {}", feat.tasks);
+        assert!(ctx.peak_resident_bytes() > 0);
+    }
+
+    #[test]
+    fn implicit_rejects_disconnected_graph() {
+        let x = crate::data::clusters::gaussian_clusters(30, 3, 2, 0.01, 3).points;
+        let ctx = SparkContext::new(ClusterConfig::local());
+        let cfg = IsomapConfig { k: 2, block: 8, ..Default::default() };
+        let kl = knn::build_lists(&ctx, &x, &cfg, &Backend::Native).unwrap();
+        let err = Implicit::build(&ctx, &kl.lists, 30, &cfg, &Backend::Native).unwrap_err();
+        assert!(format!("{err:#}").contains("disconnected"), "{err:#}");
+    }
+
+    #[test]
+    fn spilled_panels_round_trip_bitwise() {
+        let dir = std::env::temp_dir().join(format!("isospark-panel-spill-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let run = |spill: bool| -> (Vec<u64>, usize, usize) {
+            let ds = swiss_roll::euler_isometric(50, 13);
+            let cluster = ClusterConfig {
+                checkpoint_dir: spill.then(|| dir.to_string_lossy().into_owned()),
+                ..ClusterConfig::local()
+            };
+            let ctx = SparkContext::new(cluster);
+            let cfg = IsomapConfig {
+                k: 8,
+                block: 16,
+                geodesics: GeodesicsMode::SparseDijkstra,
+                ..Default::default()
+            };
+            let be = Backend::Native;
+            let kl = knn::build_lists(&ctx, &ds.points, &cfg, &be).unwrap();
+            let imp = Implicit::build(&ctx, &kl.lists, 50, &cfg, &be).unwrap();
+            let (q0, _) = qr_thin(&Matrix::eye(50, 2));
+            let v = imp.matvec(&q0).unwrap();
+            let bits = v.as_slice().iter().map(|x| x.to_bits()).collect();
+            (bits, imp.recomputes(), imp.spill_reads())
+        };
+        let (clean, rec_clean, reads_clean) = run(false);
+        let (spilled, rec_spill, reads_spill) = run(true);
+        assert_eq!(clean, spilled, "spill variant must be bit-identical");
+        assert_eq!((rec_clean, reads_clean), (8, 0)); // q = 4, two sweeps
+        assert_eq!((rec_spill, reads_spill), (4, 4)); // matvec sweep reads
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -13,7 +13,7 @@ use super::clock::VirtualClock;
 use super::durable::CheckpointStore;
 use super::fault::{FaultPlan, ResilienceSnapshot, ResilienceStats, TaskPolicy};
 use super::lineage::LineageGraph;
-use super::metrics::{Metrics, StageMetrics};
+use super::metrics::{Metrics, ResidentPeak, StageMetrics};
 use super::network::{NetworkModel, Traffic};
 use crate::config::ClusterConfig;
 use anyhow::{bail, Result};
@@ -33,6 +33,8 @@ pub(crate) struct CtxState {
     pub lineage: LineageGraph,
     /// Persisted bytes per node, by tag (e.g. "G", "A").
     resident: BTreeMap<String, Vec<u64>>,
+    /// High-water mark of the cluster-wide resident total.
+    resident_peak: ResidentPeak,
     /// Live fault-injection schedule, installed when `fault_rate > 0`.
     /// `None` keeps every stage on the plain `run_tasks` fast path.
     fault_plan: Option<FaultPlan>,
@@ -63,6 +65,7 @@ impl SparkContext {
                 metrics: Metrics::new(),
                 lineage: LineageGraph::new(),
                 resident: BTreeMap::new(),
+                resident_peak: ResidentPeak::default(),
                 fault_plan,
                 resilience: Arc::new(ResilienceStats::default()),
             })),
@@ -118,6 +121,16 @@ impl SparkContext {
                 out.push('\n');
             }
             out.push_str(&res);
+        }
+        let peak = st.resident_peak.peak();
+        if peak > 0 {
+            if !out.is_empty() && !out.ends_with('\n') {
+                out.push('\n');
+            }
+            out.push_str(&format!(
+                "peak resident: {} cluster-wide\n",
+                crate::util::fmt::human_bytes(peak)
+            ));
         }
         out
     }
@@ -285,7 +298,16 @@ impl SparkContext {
                 );
             }
         }
+        let total: u64 = st.resident.values().flatten().sum();
+        st.resident_peak.observe(total);
         Ok(())
+    }
+
+    /// Highest cluster-wide resident total ever registered (bytes). The
+    /// measured side of the memory-model claims: materialized feature
+    /// blocks peak at O(n²), the implicit panel source at O(n·k + b·n).
+    pub fn peak_resident_bytes(&self) -> u64 {
+        self.lock().resident_peak.peak()
     }
 
     /// Drop a resident tag (unpersist).
@@ -406,6 +428,21 @@ mod tests {
         let report = ctx.metrics_report(&[]);
         assert!(report.contains("resilience"), "{report}");
         assert_eq!(ctx.resilience_snapshot().checkpoint_restores, 1);
+    }
+
+    #[test]
+    fn peak_resident_tracks_high_water_mark_across_tags() {
+        let ctx = SparkContext::new(ClusterConfig { nodes: 2, ..ClusterConfig::local() });
+        assert_eq!(ctx.peak_resident_bytes(), 0);
+        assert!(!ctx.metrics_report(&[]).contains("peak resident"));
+        ctx.set_resident("G", vec![600, 400]).unwrap();
+        ctx.set_resident("panel", vec![0, 200]).unwrap();
+        assert_eq!(ctx.peak_resident_bytes(), 1200);
+        // Unpersisting never lowers the recorded peak.
+        ctx.clear_resident("G");
+        ctx.set_resident("panel", vec![100, 0]).unwrap();
+        assert_eq!(ctx.peak_resident_bytes(), 1200);
+        assert!(ctx.metrics_report(&[]).contains("peak resident"));
     }
 
     #[test]

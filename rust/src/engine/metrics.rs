@@ -113,6 +113,28 @@ impl Metrics {
     }
 }
 
+/// High-water mark of cluster-wide resident bytes, fed by the residency
+/// model (`SparkContext::set_resident`) every time the resident set
+/// changes. Makes the memory claim of a run a *measured* number: the
+/// implicit feature path asserts its peak stays `O(n·k + b·n)` against the
+/// materialized path's `O(n²)` by comparing these.
+#[derive(Debug, Default)]
+pub struct ResidentPeak {
+    peak: u64,
+}
+
+impl ResidentPeak {
+    /// Fold one observation of the current cluster-wide resident total.
+    pub fn observe(&mut self, total: u64) {
+        self.peak = self.peak.max(total);
+    }
+
+    /// Highest total observed so far (0 if nothing was ever resident).
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+}
+
 /// The PJRT-eligible block operations, in display order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum OffloadOp {
@@ -326,6 +348,17 @@ mod tests {
         let r = m.report(&["knn"]);
         assert!(r.contains("knn"));
         assert!(r.contains("tasks"));
+    }
+
+    #[test]
+    fn resident_peak_is_a_high_water_mark() {
+        let mut p = ResidentPeak::default();
+        assert_eq!(p.peak(), 0);
+        p.observe(100);
+        p.observe(40); // shrinking the resident set never lowers the peak
+        assert_eq!(p.peak(), 100);
+        p.observe(250);
+        assert_eq!(p.peak(), 250);
     }
 
     #[test]

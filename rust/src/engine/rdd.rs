@@ -314,6 +314,44 @@ impl<T: HasBytes + Send + Sync> BlockRdd<T> {
         )
     }
 
+    /// Narrow in-place transformation: apply `f` to every block through
+    /// copy-on-write, preserving keys and partitioning. Consumes the RDD
+    /// so sole-owner blocks mutate in place with zero copies; a block
+    /// still shared (persisted lineage, `filter_blocks` alias) is cloned
+    /// once by [`Arc::make_mut`] before `f` sees it. The cheap sibling of
+    /// [`map_values`] for `T → T` updates like centering's apply stage.
+    pub fn update_values(self, name: &str, f: impl Fn(BlockId, &mut T) + Sync) -> BlockRdd<T>
+    where
+        T: Clone,
+    {
+        let BlockRdd { ctx, items, part, lineage_id } = self;
+        let mut per: BTreeMap<usize, Vec<(BlockId, Arc<T>)>> = BTreeMap::new();
+        for (id, arc) in items {
+            per.entry(part.partition(id)).or_default().push((id, arc));
+        }
+        let f = &f;
+        let policy = ctx.task_policy();
+        let results = executor::run_tasks_with_policy(
+            policy.as_ref(),
+            name,
+            ctx.parallelism(),
+            per.into_iter().collect::<Vec<_>>(),
+            move |(p, blocks)| {
+                let sw = Stopwatch::start();
+                let outs: Vec<(BlockId, Arc<T>)> = std::mem::take(blocks)
+                    .into_iter()
+                    .map(|(id, mut arc)| {
+                        f(id, Arc::make_mut(&mut arc));
+                        (id, arc)
+                    })
+                    .collect();
+                (*p, outs, sw.secs())
+            },
+        );
+        let (out, per_part) = collect_results(results);
+        finish_stage(&ctx, name, &[lineage_id], out, per_part, part, 0, 0.0)
+    }
+
     /// Narrow transformation keeping only blocks satisfying `pred`
     /// (PySpark `filter` over keys). Kept blocks are shared, not copied.
     pub fn filter_blocks(&self, name: &str, pred: impl Fn(BlockId) -> bool + Sync) -> BlockRdd<T> {
@@ -708,6 +746,27 @@ mod tests {
         assert_eq!(*j.get(BlockId::new(0, 0)).unwrap(), 100.0); // 0 + (0+100)
         assert_eq!(*j.get(BlockId::new(1, 1)).unwrap(), 102.0); // 1 + (1+100)
         assert_eq!(*j.get(BlockId::new(5, 5)).unwrap(), 5.0); // untouched
+    }
+
+    #[test]
+    fn update_values_mutates_in_place_and_respects_sharing() {
+        let ctx = ctx(2);
+        let r = small_rdd(&ctx);
+        // Alias every block, so update_values must copy-on-write rather
+        // than scribble over the shared payloads.
+        let alias = r.filter_blocks("alias", |_| true);
+        let u = r.update_values("bump", |_, v| *v += 10.0);
+        assert_eq!(*u.get(BlockId::new(0, 0)).unwrap(), 10.0);
+        assert_eq!(*u.get(BlockId::new(5, 5)).unwrap(), 15.0);
+        assert_eq!(*alias.get(BlockId::new(5, 5)).unwrap(), 5.0); // untouched
+
+        // Sole-owner path: no alias, the same Arc allocation survives.
+        let ptr_before: *const f64 = Arc::as_ptr(u.items.get(&BlockId::new(0, 0)).unwrap());
+        let u2 = u.update_values("bump2", |_, v| *v += 1.0);
+        let ptr_after: *const f64 = Arc::as_ptr(u2.items.get(&BlockId::new(0, 0)).unwrap());
+        assert_eq!(ptr_before, ptr_after, "sole-owner block must mutate in place");
+        assert_eq!(*u2.get(BlockId::new(0, 0)).unwrap(), 11.0);
+        assert!(ctx.stage_aggregate("bump").tasks > 0);
     }
 
     #[test]

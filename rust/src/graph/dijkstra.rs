@@ -128,13 +128,28 @@ pub fn multi_source_with_policy(
     workers: usize,
     policy: Option<&TaskPolicy>,
 ) -> Matrix {
+    multi_source_stage(g, sources, workers, policy, "geo:dijkstra")
+}
+
+/// [`multi_source_with_policy`] charged to a caller-chosen stage name, so
+/// other front ends (the implicit feature source recomputes panels under
+/// `feat:panel`) keep their own fault-injection schedule and metrics rows.
+/// The stage name never reaches the task bodies: distances are
+/// bit-identical across stage names, worker counts, and fault plans.
+pub fn multi_source_stage(
+    g: &CsrGraph,
+    sources: &[usize],
+    workers: usize,
+    policy: Option<&TaskPolicy>,
+    stage: &str,
+) -> Matrix {
     let n = g.n();
     let m = sources.len();
     let mut out = Matrix::full(m, n, f64::INFINITY);
     let workers = resolve_workers(workers).min(m.max(1));
     let tasks: Vec<(usize, &mut [f64])> =
         sources.iter().copied().zip(out.as_mut_slice().chunks_mut(n.max(1))).collect();
-    run_tasks_with_policy(policy, "geo:dijkstra", workers, tasks, |(src, row)| {
+    run_tasks_with_policy(policy, stage, workers, tasks, |(src, row)| {
         SCRATCH.with(|s| sssp_into(g, *src, &mut s.borrow_mut(), row));
     });
     out

@@ -39,6 +39,12 @@ COMMANDS:
                     O(T·n·leaf) instead of O(n²) distance FLOPs; tune with
                     --rp-trees <T> (default 8) and --rp-leaf <L>
                     (default 0 = max(4k, 32)))
+                   --feature materialized|implicit (implicit: stream b×n
+                    geodesic panels per power iteration instead of holding
+                    the O(n²) feature blocks — O(n·k + b·n) peak memory,
+                    bit-identical embedding; requires --geodesics
+                    sparse-dijkstra; with --checkpoint-dir panels spill
+                    once and re-read instead of recomputing)
                    (--threads: OS worker threads for real block tasks;
                     0 = all cores. Results are identical for any value.)
                    --fault-rate <p> deterministic fault injection: each
@@ -136,6 +142,7 @@ fn parse_common(args: &Args) -> Result<(IsomapConfig, ClusterConfig)> {
     iso.knn = args.get("knn", iso.knn).map_err(anyhow_str)?;
     iso.rp_trees = args.get("rp-trees", iso.rp_trees).map_err(anyhow_str)?;
     iso.rp_leaf = args.get("rp-leaf", iso.rp_leaf).map_err(anyhow_str)?;
+    iso.feature = args.get("feature", iso.feature).map_err(anyhow_str)?;
     let nodes: usize = args.get("nodes", cluster.nodes).map_err(anyhow_str)?;
     if nodes != cluster.nodes {
         cluster = ClusterConfig::paper_testbed(nodes);
@@ -213,6 +220,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     println!("geodesics path: {}", out.geodesics.describe());
     println!("knn path: {}", out.knn.describe());
+    println!("feature path: {}", out.feature.describe());
+    print!("peak resident: {} cluster-wide", human_bytes(out.peak_resident_bytes));
+    if out.panel_recomputes > 0 || out.panel_spill_reads > 0 {
+        print!(
+            " | panels: {} recomputed, {} spill re-reads",
+            out.panel_recomputes, out.panel_spill_reads
+        );
+    }
+    println!();
     println!("eigenvalues: {:?}", out.eigenvalues);
     if let Some(truth) = &ds.ground_truth {
         if truth.ncols() == cfg.d {

@@ -1,0 +1,178 @@
+//! The implicit feature-matrix path (`--feature implicit`), end to end:
+//! procrustes agreement and *bit*-identity with the materialized
+//! sparse-dijkstra run on the same graph, invariance under worker count
+//! and fault injection, the measured peak-resident-bytes separation that
+//! is the whole point of the refactor, and the config guard rails.
+
+use isospark::config::{ClusterConfig, FeatureMode, GeodesicsMode, IsomapConfig, KnnMode};
+use isospark::coordinator::isomap::{self, IsomapOutput};
+use isospark::data::swiss_roll;
+use isospark::eval::procrustes;
+use isospark::linalg::Matrix;
+
+fn sparse_cfg(k: usize, block: usize, feature: FeatureMode) -> IsomapConfig {
+    IsomapConfig {
+        k,
+        d: 2,
+        block,
+        feature,
+        geodesics: GeodesicsMode::SparseDijkstra,
+        ..Default::default()
+    }
+}
+
+fn run(n: usize, cfg: &IsomapConfig, cluster: &ClusterConfig) -> IsomapOutput {
+    let ds = swiss_roll::euler_isometric(n, 13);
+    isomap::run(&ds.points, cfg, cluster).unwrap()
+}
+
+fn embedding_bits(e: &Matrix) -> Vec<u64> {
+    e.as_slice().iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn implicit_matches_materialized_procrustes() {
+    // The satellite acceptance bound: < 1e-8 between the two feature
+    // paths on the paper's swiss-roll setup.
+    let cfg_m = sparse_cfg(10, 128, FeatureMode::Materialized);
+    let cfg_i = sparse_cfg(10, 128, FeatureMode::Implicit);
+    let mat = run(600, &cfg_m, &ClusterConfig::local());
+    let imp = run(600, &cfg_i, &ClusterConfig::local());
+    assert_eq!(imp.feature, FeatureMode::Implicit);
+    assert_eq!(mat.feature, FeatureMode::Materialized);
+    let err = procrustes(&mat.embedding, &imp.embedding);
+    assert!(err < 1e-8, "implicit vs materialized procrustes = {err}");
+}
+
+#[test]
+fn implicit_embedding_is_bit_identical_to_materialized() {
+    // Stronger than procrustes: the panel source replays the blocked
+    // computation exactly (same Dijkstra rows, same squared slices, same
+    // per-key accumulation order), so on the same graph the embeddings
+    // agree to the last bit. Ragged tail on purpose: 180 = 2·64 + 52.
+    let mat = run(180, &sparse_cfg(10, 64, FeatureMode::Materialized), &ClusterConfig::local());
+    let imp = run(180, &sparse_cfg(10, 64, FeatureMode::Implicit), &ClusterConfig::local());
+    assert_eq!(mat.eigen_iterations, imp.eigen_iterations);
+    assert_eq!(
+        embedding_bits(&mat.embedding),
+        embedding_bits(&imp.embedding),
+        "implicit embedding must be bit-identical to materialized"
+    );
+    for (a, b) in mat.eigenvalues.iter().zip(&imp.eigenvalues) {
+        assert_eq!(a.to_bits(), b.to_bits(), "eigenvalues must be bit-identical");
+    }
+    // One panel sweep for the means plus one per power iteration.
+    let q = 3;
+    assert_eq!(imp.panel_recomputes, q * (1 + imp.eigen_iterations));
+    assert_eq!(imp.panel_spill_reads, 0);
+}
+
+#[test]
+fn implicit_is_bit_identical_across_worker_counts() {
+    let base = {
+        let cluster = ClusterConfig { parallelism: 1, ..ClusterConfig::local() };
+        run(300, &sparse_cfg(10, 64, FeatureMode::Implicit), &cluster)
+    };
+    for workers in [2, 8] {
+        let cluster =
+            ClusterConfig { parallelism: workers, cores_per_node: 4, ..ClusterConfig::local() };
+        let out = run(300, &sparse_cfg(10, 64, FeatureMode::Implicit), &cluster);
+        assert_eq!(
+            embedding_bits(&base.embedding),
+            embedding_bits(&out.embedding),
+            "workers = {workers}"
+        );
+    }
+}
+
+#[test]
+fn implicit_is_bit_identical_under_fault_injection() {
+    let clean = run(200, &sparse_cfg(10, 64, FeatureMode::Implicit), &ClusterConfig::local());
+    assert!(!clean.metrics_table.contains("resilience"), "{}", clean.metrics_table);
+    let faulty_cluster = ClusterConfig {
+        parallelism: 4,
+        cores_per_node: 4,
+        fault_rate: 0.3,
+        fault_seed: 9,
+        ..ClusterConfig::local()
+    };
+    let faulty = run(200, &sparse_cfg(10, 64, FeatureMode::Implicit), &faulty_cluster);
+    assert_eq!(
+        embedding_bits(&clean.embedding),
+        embedding_bits(&faulty.embedding),
+        "fault injection must not change the embedding"
+    );
+    // At 30% the panel stages really saw failures.
+    assert!(faulty.metrics_table.contains("resilience"), "{}", faulty.metrics_table);
+}
+
+#[test]
+fn implicit_peak_memory_is_strictly_below_materialized() {
+    // The acceptance measurement at n = 2048, b = 256. rp-forest for BOTH
+    // runs: the exact kNN front end persists O(n²) distance blocks, which
+    // would dominate both peaks and mask the feature-matrix difference.
+    // Materialized must peak at O(n²) (the resident feature blocks);
+    // implicit at O(n·k + b·n) (CSR graph + one live panel). A handful of
+    // iterations is plenty — the peak is set by residency, not iterations.
+    let cfg = |feature| IsomapConfig {
+        max_iter: 5,
+        tol: 1e-30,
+        knn: KnnMode::RpForest,
+        ..sparse_cfg(10, 256, feature)
+    };
+    let mat = run(2048, &cfg(FeatureMode::Materialized), &ClusterConfig::local());
+    let imp = run(2048, &cfg(FeatureMode::Implicit), &ClusterConfig::local());
+    assert!(imp.peak_resident_bytes > 0, "implicit peak must be measured");
+    assert!(
+        imp.peak_resident_bytes < mat.peak_resident_bytes,
+        "implicit peak {} must be strictly below materialized peak {}",
+        imp.peak_resident_bytes,
+        mat.peak_resident_bytes
+    );
+    // And the asymptotics are visibly different, not marginal: the n×n
+    // feature matrix alone is 32 MiB; CSR + one 256×2048 panel is ~4.5 MiB.
+    assert!(
+        2 * imp.peak_resident_bytes < mat.peak_resident_bytes,
+        "implicit {} vs materialized {}",
+        imp.peak_resident_bytes,
+        mat.peak_resident_bytes
+    );
+    assert!(mat.metrics_table.contains("peak resident"), "{}", mat.metrics_table);
+}
+
+#[test]
+fn implicit_requires_sparse_geodesics() {
+    let cfg = IsomapConfig {
+        feature: FeatureMode::Implicit,
+        geodesics: GeodesicsMode::DenseFw,
+        ..Default::default()
+    };
+    let ds = swiss_roll::euler_isometric(100, 13);
+    let err = isomap::run(&ds.points, &cfg, &ClusterConfig::local()).unwrap_err();
+    assert!(err.to_string().contains("sparse-dijkstra"), "{err}");
+}
+
+#[test]
+fn implicit_spill_rereads_panels_and_stays_bit_identical() {
+    // With --checkpoint-dir, the build sweep spills each squared panel
+    // once; every matvec sweep then re-reads instead of recomputing, and
+    // the embedding must not move by a bit.
+    let dir = std::env::temp_dir().join(format!("isospark-feat-it-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let plain = run(180, &sparse_cfg(10, 64, FeatureMode::Implicit), &ClusterConfig::local());
+    let spill_cluster = ClusterConfig {
+        checkpoint_dir: Some(dir.to_string_lossy().into_owned()),
+        ..ClusterConfig::local()
+    };
+    let spilled = run(180, &sparse_cfg(10, 64, FeatureMode::Implicit), &spill_cluster);
+    assert_eq!(
+        embedding_bits(&plain.embedding),
+        embedding_bits(&spilled.embedding),
+        "spill variant must be bit-identical"
+    );
+    let q = 3;
+    assert_eq!(spilled.panel_recomputes, q, "spill run recomputes only the build sweep");
+    assert_eq!(spilled.panel_spill_reads, q * spilled.eigen_iterations);
+    assert!(spilled.metrics_table.contains("resilience"), "{}", spilled.metrics_table);
+    let _ = std::fs::remove_dir_all(&dir);
+}
