@@ -1,0 +1,96 @@
+//! Bench: the distributed geodesic panel stage — single process vs real
+//! worker processes over loopback TCP.
+//!
+//! This is the repo's first *measured* (not virtual-clock) distribution
+//! record: the same sparse-Dijkstra pipeline at n = 1024, executed with 0
+//! (single-process), 2, and 4 in-process workers, with the TCP byte
+//! traffic from the driver's own accounting. Output bits are asserted
+//! identical across all configurations before anything is recorded.
+//!
+//! Run: `cargo bench --bench stage_dist` (writes BENCH_dist.json)
+
+use isospark::backend::Backend;
+use isospark::bench::Bencher;
+use isospark::config::{ClusterConfig, GeodesicsMode, IsomapConfig};
+use isospark::coordinator::isomap;
+use isospark::data::swiss_roll;
+use isospark::dist::worker::{self, WorkerHandle, WorkerOptions};
+use isospark::util::json::Json;
+
+fn main() {
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let (n, k, b) = (1024usize, 10usize, 128usize);
+    let ds = swiss_roll::euler_isometric(n, 17);
+    let cfg = IsomapConfig {
+        k,
+        d: 2,
+        block: b,
+        geodesics: GeodesicsMode::SparseDijkstra,
+        ..Default::default()
+    };
+    let cluster_for = |addrs: Vec<String>| ClusterConfig {
+        dist_workers: addrs,
+        parallelism: cores,
+        ..ClusterConfig::local()
+    };
+    let run = |cluster: &ClusterConfig| {
+        isomap::run_with(&ds.points, &cfg, cluster, &Backend::Native).expect("pipeline run")
+    };
+
+    println!("== distributed geodesics: single process vs loopback worker fleets ==");
+    let baseline = run(&cluster_for(Vec::new()));
+
+    let mut bench = Bencher::with(15.0, 2, 1);
+    let mut cases: Vec<Json> = Vec::new();
+    for nworkers in [0usize, 2, 4] {
+        // Workers outlive the timed iterations (the deployment model: a
+        // standing fleet serving many driver runs); each run pays its own
+        // connect + broadcast + stage, which is the real driver cost.
+        let handles: Vec<WorkerHandle> = (0..nworkers)
+            .map(|_| worker::spawn("127.0.0.1:0", WorkerOptions::default()).expect("spawn"))
+            .collect();
+        let addrs: Vec<String> = handles.iter().map(WorkerHandle::addr).collect();
+        let cluster = cluster_for(addrs);
+
+        // Bit-identity gate: a perf record of a wrong answer is worthless.
+        let probe = run(&cluster);
+        for (x, y) in probe.embedding.as_slice().iter().zip(baseline.embedding.as_slice()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{nworkers}-worker embedding diverged");
+        }
+
+        let label = if nworkers == 0 {
+            "dist:single-process".to_string()
+        } else {
+            format!("dist:{nworkers}-workers")
+        };
+        let secs = bench.case(&format!("{label}:n{n}:b{b}"), || {
+            run(&cluster);
+        });
+
+        let mut obj = vec![
+            ("workers", Json::num(nworkers as f64)),
+            ("n", Json::num(n as f64)),
+            ("b", Json::num(b as f64)),
+            ("k", Json::num(k as f64)),
+            ("threads", Json::num(cores as f64)),
+            ("pipeline_secs", Json::num(secs)),
+        ];
+        if let Some(d) = probe.dist {
+            bench.report_value(
+                &format!("{label}:tcp_mb"),
+                (d.bytes_sent + d.bytes_received) as f64 / 1e6,
+                "MB",
+            );
+            obj.push(("stage_wall_secs", Json::num(d.wall_secs)));
+            obj.push(("stage_virtual_secs", Json::num(d.virtual_secs)));
+            obj.push(("bytes_sent", Json::num(d.bytes_sent as f64)));
+            obj.push(("bytes_received", Json::num(d.bytes_received as f64)));
+            obj.push(("retries", Json::num(d.retries as f64)));
+        }
+        cases.push(Json::obj(obj));
+        drop(handles);
+    }
+
+    isospark::bench::write_kernel_section("BENCH_dist.json", "stage_dist", cases);
+    println!("(measured distribution record written to BENCH_dist.json)");
+}

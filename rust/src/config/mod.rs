@@ -326,6 +326,22 @@ pub struct ClusterConfig {
     /// fits restore from the latest valid checkpoint on startup. `None`
     /// keeps checkpoints purely simulated (virtual disk charge only).
     pub checkpoint_dir: Option<String>,
+    /// Real worker processes (`[dist] workers`, `--workers
+    /// host:port,...`): when non-empty, the sparse geodesic panel stage
+    /// executes on these `isospark worker` processes over the TCP
+    /// block-shuffle transport instead of the in-process pool. Requires
+    /// `--geodesics sparse-dijkstra` with the materialized feature path.
+    /// Empty (the default) keeps the run single-process. Worker count
+    /// never changes output bits — only wall-clock.
+    pub dist_workers: Vec<String>,
+    /// Per-response deadline on the dist transport, seconds (`[dist]
+    /// task_timeout_secs`). A worker holding a task longer is treated as
+    /// dead and its tasks are retried elsewhere.
+    pub dist_task_timeout_secs: f64,
+    /// Worker connect + handshake deadline, seconds (`[dist]
+    /// connect_timeout_secs`). Unlike mid-run losses, a worker that is
+    /// unreachable at startup fails the run — that is a config error.
+    pub dist_connect_timeout_secs: f64,
 }
 
 impl ClusterConfig {
@@ -346,6 +362,9 @@ impl ClusterConfig {
             fault_seed: 0,
             fault_max_attempts: crate::engine::fault::DEFAULT_MAX_ATTEMPTS,
             checkpoint_dir: None,
+            dist_workers: Vec::new(),
+            dist_task_timeout_secs: 60.0,
+            dist_connect_timeout_secs: 5.0,
         }
     }
 
@@ -366,6 +385,9 @@ impl ClusterConfig {
             fault_seed: 0,
             fault_max_attempts: crate::engine::fault::DEFAULT_MAX_ATTEMPTS,
             checkpoint_dir: None,
+            dist_workers: Vec::new(),
+            dist_task_timeout_secs: 60.0,
+            dist_connect_timeout_secs: 5.0,
         }
     }
 
@@ -464,8 +486,28 @@ impl RawConfig {
             fault_seed: self.typed("fault", "seed", d.fault_seed)?,
             fault_max_attempts: self.typed("fault", "max_attempts", d.fault_max_attempts)?,
             checkpoint_dir: self.get("fault", "checkpoint_dir").map(str::to_string),
+            dist_workers: self
+                .get("dist", "workers")
+                .map(parse_worker_list)
+                .unwrap_or_default(),
+            dist_task_timeout_secs: self.typed(
+                "dist",
+                "task_timeout_secs",
+                d.dist_task_timeout_secs,
+            )?,
+            dist_connect_timeout_secs: self.typed(
+                "dist",
+                "connect_timeout_secs",
+                d.dist_connect_timeout_secs,
+            )?,
         })
     }
+}
+
+/// Split a `host:port,host:port,...` list (config `[dist] workers` /
+/// `--workers`), dropping empty entries so trailing commas are harmless.
+pub fn parse_worker_list(s: &str) -> Vec<String> {
+    s.split(',').map(|w| w.trim().to_string()).filter(|w| !w.is_empty()).collect()
 }
 
 #[cfg(test)]
@@ -630,5 +672,26 @@ mod tests {
 
         let bad = RawConfig::parse("[fault]\nrate = often\n").unwrap();
         assert!(bad.cluster().is_err());
+    }
+
+    #[test]
+    fn dist_section_parses_with_single_process_default() {
+        let none = RawConfig::parse("[cluster]\nnodes = 2\n").unwrap().cluster().unwrap();
+        assert!(none.dist_workers.is_empty());
+        assert_eq!(none.dist_task_timeout_secs, 60.0);
+        assert_eq!(none.dist_connect_timeout_secs, 5.0);
+
+        let raw = RawConfig::parse(
+            "[dist]\nworkers = 127.0.0.1:7001, 127.0.0.1:7002,\ntask_timeout_secs = 12.5\n\
+             connect_timeout_secs = 2\n",
+        )
+        .unwrap();
+        let cl = raw.cluster().unwrap();
+        assert_eq!(cl.dist_workers, vec!["127.0.0.1:7001", "127.0.0.1:7002"]);
+        assert_eq!(cl.dist_task_timeout_secs, 12.5);
+        assert_eq!(cl.dist_connect_timeout_secs, 2.0);
+        // The flag-side parser is the same function: trailing commas and
+        // stray whitespace never become empty worker addresses.
+        assert_eq!(parse_worker_list(" a:1 ,, b:2, "), vec!["a:1", "b:2"]);
     }
 }

@@ -298,6 +298,115 @@ pub fn solve_sparse(
     Ok(a)
 }
 
+/// [`solve_sparse`] with the panel fan-out executed on real worker
+/// processes over the dist transport (`isospark run --workers ...`).
+///
+/// The driver broadcasts the kNN lists once; each worker rebuilds the
+/// CSR graph (a deterministic construction) and runs the *same*
+/// `multi_source` + `square_panel` kernels the local path runs, so a
+/// panel is a pure function of the broadcast state and the output is
+/// bit-identical to the single-process run for any worker count —
+/// `f64::to_le_bytes` round-trips every value exactly, and panels are
+/// gathered by block-row index regardless of which worker computed them.
+///
+/// Accounting runs both clocks: worker-measured compute durations replay
+/// onto the virtual cluster exactly like the local path's measurements
+/// (stage `geo:dijkstra`), while the measured TCP reality — wall-clock,
+/// shuffle bytes, retries, worker losses — lands in a `geo:dist` stage
+/// row and in [`crate::dist::RemoteCluster::report`] so the run report
+/// can print the model next to its ground truth.
+pub fn solve_sparse_dist(
+    ctx: &SparkContext,
+    remote: &crate::dist::RemoteCluster,
+    lists: &[Vec<Neighbor>],
+    n: usize,
+    cfg: &IsomapConfig,
+) -> Result<BlockRdd<Matrix>> {
+    use super::{block_range, default_partitions, num_blocks};
+    use crate::dist::task::{encode_geo_job, TaskSpec, GEO_JOB};
+    use crate::engine::partitioner::UpperTriangularPartitioner;
+
+    if lists.len() != n {
+        anyhow::bail!("dist geodesics: {} kNN lists for n = {n} points", lists.len());
+    }
+    // Validate connectivity on the driver against the same CSR the
+    // workers will rebuild from the broadcast lists.
+    let csr = CsrGraph::from_knn_lists(lists).context("dist geodesics: CSR construction")?;
+    csr.require_connected().context("dist geodesics")?;
+    let b = cfg.block;
+    let q = num_blocks(n, b);
+
+    let sw_stage = crate::util::Stopwatch::start();
+    remote
+        .broadcast(GEO_JOB, &encode_geo_job(n, b, lists))
+        .context("dist geodesics: broadcast kNN graph")?;
+
+    let specs: Vec<TaskSpec> =
+        (0..q).map(|i| TaskSpec::GeodesicPanel { block: i as u64 }).collect();
+    let policy = ctx.task_policy();
+    let panels = remote
+        .run_stage("geo:dijkstra", &specs, policy.as_ref())
+        .context("dist geodesics: panel stage")?;
+    let stage_wall = sw_stage.secs();
+
+    // Slice each squared panel into its UT blocks — the same layout the
+    // local path produces, so everything downstream is path-agnostic.
+    let mut blocks: Vec<(BlockId, Matrix)> =
+        Vec::with_capacity(crate::engine::partitioner::ut_count(q));
+    let mut panel_tasks = Vec::with_capacity(q);
+    let mut compute_real = 0.0;
+    for (i, (secs, panel)) in panels.into_iter().enumerate() {
+        let (rs, re) = block_range(n, b, i);
+        if panel.nrows() != re - rs || panel.ncols() != n {
+            anyhow::bail!(
+                "dist geodesics: worker returned a {}×{} panel for block {i} (want {}×{n})",
+                panel.nrows(),
+                panel.ncols(),
+                re - rs
+            );
+        }
+        for j in i..q {
+            let (cs, ce) = block_range(n, b, j);
+            blocks.push((BlockId::new(i, j), panel.slice(0, re - rs, cs, ce)));
+        }
+        compute_real += secs;
+        panel_tasks.push(crate::engine::clock::Task { node: ctx.node_of(i, q), duration: secs });
+    }
+
+    // Virtual projection: replay the worker-measured durations onto the
+    // simulated cluster, exactly as the local path replays its own.
+    let virtual_span = ctx.run_stage(&panel_tasks);
+    remote.add_virtual_span(virtual_span);
+    let driver_time = ctx.charge_driver("geo:dijkstra", q, 0);
+    ctx.push_metrics(crate::engine::metrics::StageMetrics {
+        name: "geo:dijkstra".to_string(),
+        tasks: q,
+        compute_real,
+        virtual_span,
+        shuffle_bytes: 0,
+        network_time: 0.0,
+        driver_time,
+    });
+    // Measured ground truth beside the projection: the real TCP stage.
+    let r = remote.report();
+    ctx.push_metrics(crate::engine::metrics::StageMetrics {
+        name: "geo:dist".to_string(),
+        tasks: q,
+        compute_real: 0.0,
+        virtual_span: 0.0,
+        shuffle_bytes: r.bytes_sent + r.bytes_received,
+        network_time: stage_wall,
+        driver_time: 0.0,
+    });
+
+    let parts = default_partitions(q, ctx.cluster().total_cores());
+    let part: Arc<dyn crate::engine::Partitioner> =
+        Arc::new(UpperTriangularPartitioner::new(q, parts));
+    let a = ctx.parallelize("geo:blocks", blocks, part);
+    a.persist("G")?;
+    Ok(a)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

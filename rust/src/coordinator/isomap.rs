@@ -60,6 +60,11 @@ pub struct IsomapOutput {
     /// ragged block op is served through the padded path and `missed`
     /// stays 0 — the offload-coverage acceptance criterion.
     pub offload: Option<Vec<OffloadOpSnapshot>>,
+    /// Measured ground truth of the distributed geodesic stage when the
+    /// run used real worker processes (`--workers`); `None` for
+    /// single-process runs. The run report prints its wall-clock next to
+    /// the virtual-clock projection.
+    pub dist: Option<crate::dist::DistReport>,
 }
 
 /// Run the full pipeline on a fresh context. Convenience wrapper over
@@ -78,6 +83,31 @@ pub fn run_with(
     let n = x.nrows();
     cfg.validate(n)?;
     let ctx = SparkContext::new(cluster.clone());
+
+    // Real worker processes, if configured. Only the sparse geodesic
+    // panel stage has a remote task vocabulary (it dominates the exact
+    // pipeline's compute), so dist runs require that path explicitly
+    // rather than silently falling back to local execution.
+    let remote = if cluster.dist_workers.is_empty() {
+        None
+    } else {
+        if cfg.geodesics != GeodesicsMode::SparseDijkstra || cfg.feature != FeatureMode::Materialized
+        {
+            anyhow::bail!(
+                "--workers requires --geodesics sparse-dijkstra with the materialized feature \
+                 path: the distributed stage ships geodesic row panels to worker processes"
+            );
+        }
+        Some(
+            crate::dist::RemoteCluster::connect(&crate::dist::DistConfig {
+                workers: cluster.dist_workers.clone(),
+                task_timeout_secs: cluster.dist_task_timeout_secs,
+                connect_timeout_secs: cluster.dist_connect_timeout_secs,
+                max_attempts: cluster.fault_max_attempts,
+            })
+            .context("dist: connect to workers")?,
+        )
+    };
 
     // Stages 1–4 through the configured feature residency.
     //
@@ -115,8 +145,12 @@ pub fn run_with(
                 GeodesicsMode::SparseDijkstra => {
                     let kl = knn::build_lists(&ctx, x, cfg, backend).context("kNN stage")?;
                     let components = crate::eval::components(&kl.lists);
-                    let a = super::apsp::solve_sparse(&ctx, &kl.lists, n, cfg)
-                        .context("sparse geodesics stage")?;
+                    let a = match &remote {
+                        Some(rc) => super::apsp::solve_sparse_dist(&ctx, rc, &kl.lists, n, cfg)
+                            .context("distributed geodesics stage")?,
+                        None => super::apsp::solve_sparse(&ctx, &kl.lists, n, cfg)
+                            .context("sparse geodesics stage")?,
+                    };
                     (components, kl.path, a)
                 }
             };
@@ -162,6 +196,7 @@ pub fn run_with(
         metrics_table: ctx
             .metrics_report(&["knn", "geo", "apsp", "center", "eigen", "feat", "checkpoint"]),
         offload: backend.offload_snapshot(),
+        dist: remote.map(|rc| rc.report()),
     })
 }
 

@@ -64,6 +64,45 @@ pub fn bin_file_size(rows: usize, cols: usize) -> Option<u64> {
         .checked_add(MAGIC.len() as u64 + 16)
 }
 
+/// Encode a matrix in the crate's binary layout (magic + u64 dims + f64
+/// little-endian payload) — byte-for-byte what [`write_bin`] puts on disk,
+/// appended to `out`. The distribution layer reuses this encoding as the
+/// block-shuffle frame payload, so a matrix that crossed the wire and one
+/// that round-tripped through disk are the same bytes.
+pub fn matrix_to_bytes(m: &Matrix, out: &mut Vec<u8>) {
+    out.reserve(MAGIC.len() + 16 + m.as_slice().len() * 8);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(m.nrows() as u64).to_le_bytes());
+    out.extend_from_slice(&(m.ncols() as u64).to_le_bytes());
+    for x in m.as_slice() {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Decode a matrix from the [`matrix_to_bytes`] layout at the start of
+/// `buf`; returns the matrix and the number of bytes consumed (trailing
+/// bytes are the caller's business — payloads may concatenate fields).
+/// Bit-exact: `f64::to_le_bytes`/`from_le_bytes` round-trip every value
+/// including `-0.0`, `±∞`, and NaN payloads.
+pub fn matrix_from_bytes(buf: &[u8]) -> Result<(Matrix, usize)> {
+    if buf.len() < MAGIC.len() + 16 || &buf[..MAGIC.len()] != MAGIC {
+        bail!("matrix bytes: bad magic");
+    }
+    let rows = u64::from_le_bytes(buf[8..16].try_into().unwrap()) as usize;
+    let cols = u64::from_le_bytes(buf[16..24].try_into().unwrap()) as usize;
+    let need = bin_file_size(rows, cols)
+        .ok_or_else(|| anyhow::anyhow!("matrix bytes: insane dims {rows}×{cols} in header"))?;
+    if (buf.len() as u64) < need {
+        bail!("matrix bytes: truncated ({} < {need})", buf.len());
+    }
+    let need = need as usize;
+    let data: Vec<f64> = buf[24..need]
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((Matrix::from_vec(rows, cols, data), need))
+}
+
 /// Write the raw binary matrix format.
 pub fn write_bin(path: &Path, m: &Matrix) -> Result<()> {
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
@@ -173,6 +212,36 @@ mod tests {
         write_bin(&p, &m).unwrap();
         let r = read_bin(&p).unwrap();
         assert_eq!(r.as_slice(), m.as_slice());
+    }
+
+    #[test]
+    fn bytes_codec_matches_disk_format_bit_for_bit() {
+        let m = Matrix::from_rows(&[vec![std::f64::consts::E, -0.0], vec![f64::INFINITY, 1e-308]]);
+        let p = tmp("bytes.bin");
+        write_bin(&p, &m).unwrap();
+        let mut wire = Vec::new();
+        matrix_to_bytes(&m, &mut wire);
+        assert_eq!(wire, std::fs::read(&p).unwrap());
+        // Trailing bytes after the matrix are left for the caller.
+        wire.extend_from_slice(&[0xAB; 5]);
+        let (r, used) = matrix_from_bytes(&wire).unwrap();
+        assert_eq!(used, wire.len() - 5);
+        let (rb, mb): (Vec<u64>, Vec<u64>) = (
+            r.as_slice().iter().map(|v| v.to_bits()).collect(),
+            m.as_slice().iter().map(|v| v.to_bits()).collect(),
+        );
+        assert_eq!(rb, mb);
+    }
+
+    #[test]
+    fn bytes_codec_rejects_garbage() {
+        assert!(matrix_from_bytes(b"short").is_err());
+        let mut bad = Vec::new();
+        matrix_to_bytes(&Matrix::zeros(2, 2), &mut bad);
+        let err = format!("{:#}", matrix_from_bytes(&bad[..30]).unwrap_err());
+        assert!(err.contains("truncated"), "{err}");
+        bad[0] = b'X';
+        assert!(matrix_from_bytes(&bad).is_err());
     }
 
     #[test]

@@ -1,0 +1,518 @@
+//! Driver-side view of a real worker fleet: connect, broadcast, scatter
+//! tasks, gather results, and survive worker death.
+//!
+//! [`RemoteCluster`] is the process-boundary sibling of
+//! `engine/executor.rs`: the same stage/task/attempt model, the same
+//! deterministic fault schedule, but tasks execute in other OS processes
+//! reached over the [`super::proto`] transport. The retry loop composes
+//! with the PR 7 machinery in layers:
+//!
+//! - **Injected faults** (the `FaultPlan`) are decided *on the driver*
+//!   before dispatch, at the same `(stage, task, attempt)` coordinates
+//!   the in-process executor uses — an injected failure consumes an
+//!   attempt without ever touching the network, so chaos runs exercise
+//!   the retry path identically in both worlds.
+//! - **Transport failures** (connection lost, response timeout) are typed
+//!   [`TransportError`] values, never panics: the worker is marked dead,
+//!   its in-flight tasks are requeued at `attempt + 1`, and the shared
+//!   `ResilienceStats` can never be poisoned because no lock is ever held
+//!   across a failure edge — each round's worker threads own their
+//!   connection exclusively and report outcomes by value.
+//! - **Exhaustion** (a task out of attempts, or every worker dead)
+//!   propagates as an `anyhow` error carrying stage/task/attempt context,
+//!   exactly like the in-process executor's exhaustion path.
+//!
+//! Determinism across process counts: task *values* are pure functions of
+//! the broadcast state, placement only decides *where* a task runs, and
+//! results are gathered by task index — so worker count, placement, and
+//! retries change wall-clock and byte counts, never a single output bit.
+//! Placement itself reuses the engine's [`Partitioner`] machinery (a
+//! [`HashPartitioner`] over task ids folded onto the live workers), which
+//! keeps it deterministic for a fixed live set without ever mattering for
+//! correctness.
+
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::dist::proto::{self, Frame, FrameKind, FrameReader, TransportError};
+use crate::dist::task::TaskSpec;
+use crate::engine::fault::{backoff_ms, Inject, TaskPolicy};
+use crate::engine::{BlockId, HashPartitioner, Partitioner};
+use crate::linalg::Matrix;
+use crate::util::Stopwatch;
+
+/// How long the driver waits for a slow worker to accept request bytes.
+const WRITE_LIMIT: Duration = Duration::from_secs(30);
+
+/// Connection parameters for a worker fleet, plumbed from the `[dist]`
+/// config section / `--workers` flag.
+#[derive(Clone, Debug)]
+pub struct DistConfig {
+    /// Worker addresses (`host:port`).
+    pub workers: Vec<String>,
+    /// Per-response deadline, seconds. A worker that holds a task longer
+    /// is treated as dead and its tasks retried elsewhere.
+    pub task_timeout_secs: f64,
+    /// Connect + handshake deadline per worker, seconds.
+    pub connect_timeout_secs: f64,
+    /// Attempt ceiling per task when no fault policy is installed (with
+    /// one, the policy's `max_attempts` governs both fault kinds).
+    pub max_attempts: usize,
+}
+
+/// One worker connection. The `FrameReader` travels with the stream —
+/// its buffer may hold the front of a pipelined next frame.
+struct Conn {
+    stream: TcpStream,
+    reader: FrameReader,
+}
+
+/// A worker slot. `conn: None` means the worker was declared dead; it is
+/// never revived within a run (a rejoining worker would recompute the
+/// same bits anyway, but the bookkeeping is simpler and the tests
+/// stricter this way).
+struct WorkerLink {
+    addr: String,
+    conn: Mutex<Option<Conn>>,
+}
+
+/// Measured ground truth of the distributed stage(s), printed by the run
+/// report next to the virtual-clock projection.
+#[derive(Default)]
+struct DistStats {
+    tasks: AtomicU64,
+    retries: AtomicU64,
+    worker_losses: AtomicU64,
+    bytes_tx: AtomicU64,
+    bytes_rx: AtomicU64,
+    wall_us: AtomicU64,
+    virtual_us: AtomicU64,
+}
+
+/// Snapshot of the driver's distribution counters for reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct DistReport {
+    /// Workers the driver connected to at startup.
+    pub workers: usize,
+    /// Workers declared dead during the run.
+    pub workers_lost: u64,
+    /// Stage tasks dispatched (unique tasks, not attempts).
+    pub tasks: u64,
+    /// Tasks requeued after a worker loss or timeout.
+    pub retries: u64,
+    /// Bytes written to workers (broadcasts + task frames).
+    pub bytes_sent: u64,
+    /// Bytes read back (acks + results).
+    pub bytes_received: u64,
+    /// Measured driver wall-clock across distributed stages, seconds.
+    pub wall_secs: f64,
+    /// Virtual-clock projection of the same stages, seconds — the model
+    /// this measurement grounds.
+    pub virtual_secs: f64,
+}
+
+/// What one task attempt came back as. `Lost` marks the worker dead;
+/// `Failed` is a worker-reported error that a retry elsewhere cannot fix.
+enum TaskOutcome {
+    Done(f64, Matrix),
+    Failed(String),
+    Lost(String),
+}
+
+/// A connected fleet of `isospark worker` processes.
+pub struct RemoteCluster {
+    links: Vec<WorkerLink>,
+    task_timeout: Duration,
+    max_attempts: usize,
+    stats: DistStats,
+}
+
+fn resolve(addr: &str) -> Result<SocketAddr> {
+    addr.to_socket_addrs()
+        .with_context(|| format!("dist: resolve worker address {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("dist: {addr} resolved to no address"))
+}
+
+impl RemoteCluster {
+    /// Connect and handshake with every configured worker. Startup is
+    /// strict — a worker that cannot be reached *now* is a config error,
+    /// not a fault to tolerate.
+    pub fn connect(cfg: &DistConfig) -> Result<RemoteCluster> {
+        ensure!(!cfg.workers.is_empty(), "dist: no worker addresses configured");
+        let connect_timeout = Duration::from_secs_f64(cfg.connect_timeout_secs.max(0.1));
+        let mut links = Vec::with_capacity(cfg.workers.len());
+        for addr in &cfg.workers {
+            let sa = resolve(addr)?;
+            let mut stream = TcpStream::connect_timeout(&sa, connect_timeout)
+                .with_context(|| format!("dist: connect to worker {addr}"))?;
+            let _ = stream.set_nodelay(true);
+            let _ = stream.set_write_timeout(Some(WRITE_LIMIT));
+            proto::write_frame(&mut stream, &Frame::control(FrameKind::Hello))
+                .map_err(|e| anyhow::anyhow!("dist: hello to worker {addr}: {e}"))?;
+            let mut reader = FrameReader::new();
+            let ack = reader
+                .read_frame(&mut stream, Some(Instant::now() + connect_timeout), None)
+                .map_err(|e| anyhow::anyhow!("dist: handshake with worker {addr}: {e}"))?;
+            ensure!(
+                ack.kind == FrameKind::HelloAck,
+                "dist: worker {addr} answered hello with a {} frame",
+                ack.kind.name()
+            );
+            links.push(WorkerLink {
+                addr: addr.clone(),
+                conn: Mutex::new(Some(Conn { stream, reader })),
+            });
+        }
+        Ok(RemoteCluster {
+            links,
+            task_timeout: Duration::from_secs_f64(cfg.task_timeout_secs.max(0.1)),
+            max_attempts: cfg.max_attempts.max(1),
+            stats: DistStats::default(),
+        })
+    }
+
+    /// Ship a named blob to every live worker and wait for acks. A worker
+    /// that *rejects* the blob fails the run (the data would be equally
+    /// bad everywhere); a worker that *dies* is just marked lost.
+    pub fn broadcast(&self, name: &str, blob: &[u8]) -> Result<()> {
+        let mut payload = Vec::with_capacity(2 + name.len() + blob.len());
+        payload.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        payload.extend_from_slice(name.as_bytes());
+        payload.extend_from_slice(blob);
+        let frame = Frame::with_payload(FrameKind::Broadcast, payload);
+        let mut alive = 0usize;
+        for link in &self.links {
+            let Some(mut conn) = link.conn.lock().unwrap().take() else { continue };
+            let outcome = self.exchange(&mut conn, &frame);
+            match outcome {
+                Ok(reply) if reply.kind == FrameKind::Ack => {
+                    *link.conn.lock().unwrap() = Some(conn);
+                    alive += 1;
+                }
+                Ok(reply) if reply.kind == FrameKind::TaskErr => bail!(
+                    "dist: broadcast {name:?} rejected by worker {}: {}",
+                    link.addr,
+                    String::from_utf8_lossy(&reply.payload)
+                ),
+                Ok(reply) => bail!(
+                    "dist: broadcast {name:?}: worker {} answered with a {} frame",
+                    link.addr,
+                    reply.kind.name()
+                ),
+                Err(TransportError::Malformed(m)) => {
+                    bail!("dist: broadcast {name:?} to worker {}: {m}", link.addr)
+                }
+                Err(_) => {
+                    self.stats.worker_losses.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        ensure!(alive > 0, "dist: broadcast {name:?}: all {} workers lost", self.links.len());
+        Ok(())
+    }
+
+    /// One request/response round-trip on an owned connection, with byte
+    /// accounting. The connection is NOT put back — the caller decides
+    /// based on the outcome.
+    fn exchange(&self, conn: &mut Conn, frame: &Frame) -> Result<Frame, TransportError> {
+        let nb = proto::write_frame(&mut conn.stream, frame)?;
+        self.stats.bytes_tx.fetch_add(nb as u64, Ordering::Relaxed);
+        let reply = conn.reader.read_frame(
+            &mut conn.stream,
+            Some(Instant::now() + self.task_timeout),
+            None,
+        )?;
+        self.stats.bytes_rx.fetch_add(reply.wire_size() as u64, Ordering::Relaxed);
+        Ok(reply)
+    }
+
+    /// Execute `specs` across the fleet and gather results *by task
+    /// index* — the gather order, and therefore every output bit, is
+    /// independent of placement, worker count, and retries.
+    ///
+    /// `policy` is the same deterministic fault policy the in-process
+    /// executor takes: injected failures consume attempts on the driver
+    /// before dispatch, stragglers charge virtual delay, and the combined
+    /// injected delay is charged to the virtual clock once per stage.
+    pub fn run_stage(
+        &self,
+        stage: &str,
+        specs: &[TaskSpec],
+        policy: Option<&TaskPolicy>,
+    ) -> Result<Vec<(f64, Matrix)>> {
+        let m = specs.len();
+        let max_attempts = policy.map(|p| p.plan.max_attempts()).unwrap_or(self.max_attempts);
+        let sw = Stopwatch::start();
+        self.stats.tasks.fetch_add(m as u64, Ordering::Relaxed);
+
+        let mut results: Vec<Option<(f64, Matrix)>> = Vec::with_capacity(m);
+        results.resize_with(m, || None);
+        // (task, next attempt, saw a failure on an earlier attempt)
+        let mut pending: Vec<(usize, usize, bool)> = (0..m).map(|i| (i, 0, false)).collect();
+        let mut injected_ms: u64 = 0;
+
+        while !pending.is_empty() {
+            // Driver-side fault injection at the executor's coordinates.
+            let mut dispatch: Vec<(usize, usize, bool)> = Vec::with_capacity(pending.len());
+            for (task, mut attempt, mut bumped) in pending.drain(..) {
+                if let Some(p) = policy {
+                    loop {
+                        match p.plan.decide(stage, task, attempt) {
+                            Some(inject @ (Inject::Panic | Inject::TransientErr)) => {
+                                if inject == Inject::Panic {
+                                    p.stats.record_injected_panic();
+                                } else {
+                                    p.stats.record_injected_error();
+                                }
+                                if attempt + 1 >= max_attempts {
+                                    p.stats.record_exhausted();
+                                    bail!(
+                                        "stage {stage}: task {task} of {m} failed after \
+                                         {max_attempts} attempts (injected fault)"
+                                    );
+                                }
+                                let backoff = backoff_ms(attempt);
+                                p.stats.record_retry(backoff);
+                                injected_ms += backoff;
+                                attempt += 1;
+                                bumped = true;
+                            }
+                            Some(Inject::StragglerDelay(ms)) => {
+                                p.stats.record_straggler(ms);
+                                injected_ms += ms;
+                                break;
+                            }
+                            None => break,
+                        }
+                    }
+                }
+                dispatch.push((task, attempt, bumped));
+            }
+
+            let live: Vec<usize> = (0..self.links.len())
+                .filter(|&wi| self.links[wi].conn.lock().unwrap().is_some())
+                .collect();
+            if live.is_empty() {
+                bail!(
+                    "stage {stage}: all {} workers lost with {} of {m} tasks outstanding",
+                    self.links.len(),
+                    dispatch.len()
+                );
+            }
+
+            // Deterministic placement over the live set via the engine's
+            // partitioner machinery. Placement never affects values.
+            let part = HashPartitioner::new(live.len());
+            let mut queues: Vec<Vec<(usize, usize)>> = vec![Vec::new(); live.len()];
+            for &(task, attempt, _) in &dispatch {
+                queues[part.partition(BlockId::new(task, task))].push((task, attempt));
+            }
+
+            // One driver thread per busy worker; each owns its connection
+            // for the round and reports outcomes by value (no shared
+            // mutation, no panics on the failure path).
+            let round: Vec<(usize, usize, TaskOutcome)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = queues
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, q)| !q.is_empty())
+                    .map(|(qi, queue)| {
+                        let wi = live[qi];
+                        scope.spawn(move || self.drive_worker(wi, queue, specs, stage))
+                    })
+                    .collect();
+                handles.into_iter().flat_map(|h| h.join().unwrap_or_default()).collect()
+            });
+
+            // Workers whose connection did not come back this round died.
+            let lost_now = live
+                .iter()
+                .filter(|&&wi| self.links[wi].conn.lock().unwrap().is_none())
+                .count() as u64;
+            if lost_now > 0 {
+                self.stats.worker_losses.fetch_add(lost_now, Ordering::Relaxed);
+                if let Some(p) = policy {
+                    for _ in 0..lost_now {
+                        p.stats.record_worker_loss();
+                    }
+                }
+            }
+
+            let mut outcomes: Vec<Option<TaskOutcome>> = Vec::with_capacity(m);
+            outcomes.resize_with(m, || None);
+            for (task, _, oc) in round {
+                outcomes[task] = Some(oc);
+            }
+            for (task, attempt, bumped) in dispatch {
+                match outcomes[task].take() {
+                    Some(TaskOutcome::Done(secs, mat)) => {
+                        results[task] = Some((secs, mat));
+                        if bumped || attempt > 0 {
+                            if let Some(p) = policy {
+                                p.stats.record_recovered();
+                            }
+                        }
+                    }
+                    Some(TaskOutcome::Failed(msg)) => {
+                        // Worker-reported errors are deterministic bugs
+                        // (bad spec, missing broadcast) — retrying on
+                        // another worker would fail identically.
+                        bail!("stage {stage}: task {task} of {m}: {msg}");
+                    }
+                    lost => {
+                        let reason = match lost {
+                            Some(TaskOutcome::Lost(r)) => r,
+                            _ => "driver thread produced no outcome".to_string(),
+                        };
+                        if attempt + 1 >= max_attempts {
+                            if let Some(p) = policy {
+                                p.stats.record_exhausted();
+                            }
+                            bail!(
+                                "stage {stage}: task {task} of {m} exhausted {max_attempts} \
+                                 attempts; last loss: {reason}"
+                            );
+                        }
+                        self.stats.retries.fetch_add(1, Ordering::Relaxed);
+                        if let Some(p) = policy {
+                            // A real-world retry: counted, but no virtual
+                            // backoff — the virtual model prices injected
+                            // faults, not this machine's TCP behavior.
+                            p.stats.record_retry(0);
+                        }
+                        pending.push((task, attempt + 1, true));
+                    }
+                }
+            }
+        }
+
+        if let Some(p) = policy {
+            p.charge_virtual_ms(injected_ms);
+        }
+        self.stats.wall_us.fetch_add((sw.secs() * 1e6) as u64, Ordering::Relaxed);
+        Ok(results.into_iter().map(|r| r.expect("every task resolved or bailed")).collect())
+    }
+
+    /// Pipeline one round's queue to one worker and stream replies back.
+    /// Every exit path is a returned value — transport failures mark the
+    /// worker dead (its connection stays `None`) and surface as
+    /// [`TaskOutcome::Lost`] entries for the retry loop.
+    fn drive_worker(
+        &self,
+        wi: usize,
+        queue: &[(usize, usize)],
+        specs: &[TaskSpec],
+        stage: &str,
+    ) -> Vec<(usize, usize, TaskOutcome)> {
+        let link = &self.links[wi];
+        let all_lost = |msg: &str| -> Vec<(usize, usize, TaskOutcome)> {
+            queue.iter().map(|&(t, a)| (t, a, TaskOutcome::Lost(msg.to_string()))).collect()
+        };
+        let Some(mut conn) = link.conn.lock().unwrap().take() else {
+            return all_lost(&format!("worker {} already lost", link.addr));
+        };
+
+        // Send the whole queue up front; the worker executes serially and
+        // replies in order, so responses pipeline behind the requests.
+        for &(task, attempt) in queue {
+            let frame = Frame {
+                kind: FrameKind::Task,
+                stage: stage.to_string(),
+                task: task as u32,
+                attempt: attempt as u32,
+                payload: specs[task].encode(),
+            };
+            match proto::write_frame(&mut conn.stream, &frame) {
+                Ok(nb) => {
+                    self.stats.bytes_tx.fetch_add(nb as u64, Ordering::Relaxed);
+                }
+                Err(e) => return all_lost(&format!("worker {}: {e}", link.addr)),
+            }
+        }
+
+        let mut out: Vec<(usize, usize, TaskOutcome)> = Vec::with_capacity(queue.len());
+        for (k, &(task, attempt)) in queue.iter().enumerate() {
+            let deadline = Instant::now() + self.task_timeout;
+            let reply = match conn.reader.read_frame(&mut conn.stream, Some(deadline), None) {
+                Ok(f) => f,
+                Err(e) => {
+                    let msg = format!("worker {}: {e}", link.addr);
+                    out.extend(
+                        queue[k..].iter().map(|&(t, a)| (t, a, TaskOutcome::Lost(msg.clone()))),
+                    );
+                    return out;
+                }
+            };
+            self.stats.bytes_rx.fetch_add(reply.wire_size() as u64, Ordering::Relaxed);
+            let routed = reply.task == task as u32
+                && matches!(reply.kind, FrameKind::TaskOk | FrameKind::TaskErr);
+            if !routed {
+                let msg = format!(
+                    "worker {}: unexpected {} frame for task {} (awaiting task {task})",
+                    link.addr,
+                    reply.kind.name(),
+                    reply.task
+                );
+                out.extend(queue[k..].iter().map(|&(t, a)| (t, a, TaskOutcome::Lost(msg.clone()))));
+                return out;
+            }
+            let outcome = if reply.kind == FrameKind::TaskErr {
+                TaskOutcome::Failed(format!(
+                    "worker {} reports: {}",
+                    link.addr,
+                    String::from_utf8_lossy(&reply.payload)
+                ))
+            } else {
+                match crate::dist::task::decode_panel_result(&reply.payload) {
+                    Ok((secs, mat)) => TaskOutcome::Done(secs, mat),
+                    Err(e) => TaskOutcome::Failed(format!("worker {}: {e}", link.addr)),
+                }
+            };
+            out.push((task, attempt, outcome));
+        }
+        *link.conn.lock().unwrap() = Some(conn);
+        out
+    }
+
+    /// Fold `secs` of virtual-clock stage span into the report, so the
+    /// printed measurement sits next to the projection it grounds.
+    pub(crate) fn add_virtual_span(&self, secs: f64) {
+        self.stats.virtual_us.fetch_add((secs * 1e6) as u64, Ordering::Relaxed);
+    }
+
+    /// Best-effort `Shutdown` to every still-connected worker. The
+    /// pipeline never calls this — workers outlive driver runs by design
+    /// (the CI smoke runs several drivers against one fleet); benches and
+    /// tests use it to tear down workers they spawned.
+    pub fn stop_workers(&self) {
+        for link in &self.links {
+            let Some(mut conn) = link.conn.lock().unwrap().take() else { continue };
+            if proto::write_frame(&mut conn.stream, &Frame::control(FrameKind::Shutdown)).is_ok() {
+                let _ = conn.reader.read_frame(
+                    &mut conn.stream,
+                    Some(Instant::now() + Duration::from_secs(2)),
+                    None,
+                );
+            }
+        }
+    }
+
+    /// Measured ground truth so far.
+    pub fn report(&self) -> DistReport {
+        DistReport {
+            workers: self.links.len(),
+            workers_lost: self.stats.worker_losses.load(Ordering::Relaxed),
+            tasks: self.stats.tasks.load(Ordering::Relaxed),
+            retries: self.stats.retries.load(Ordering::Relaxed),
+            bytes_sent: self.stats.bytes_tx.load(Ordering::Relaxed),
+            bytes_received: self.stats.bytes_rx.load(Ordering::Relaxed),
+            wall_secs: self.stats.wall_us.load(Ordering::Relaxed) as f64 / 1e6,
+            virtual_secs: self.stats.virtual_us.load(Ordering::Relaxed) as f64 / 1e6,
+        }
+    }
+}

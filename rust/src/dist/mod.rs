@@ -1,0 +1,36 @@
+//! Real multi-process distribution: the `isospark worker` runtime and
+//! the driver-side [`RemoteCluster`] that ships stage tasks to it over a
+//! checksummed, length-prefixed TCP block-shuffle protocol.
+//!
+//! Everything else in the engine simulates a cluster (virtual clock,
+//! network model); this module is where bytes actually cross a process
+//! boundary. The layering:
+//!
+//! - [`proto`] — the wire format: 32-byte framed messages with stage/
+//!   task/attempt routing headers, FNV-1a-64 content checksums, and the
+//!   same pure-buffer `try_parse` discipline as `serve/http.rs`.
+//! - [`task`] — the serializable task vocabulary ([`task::TaskSpec`])
+//!   and payload codecs; every `f64` crosses the wire as `to_le_bytes`,
+//!   a bit-exact round-trip.
+//! - [`worker`] — the `isospark worker` server loop: receives broadcast
+//!   state, executes tasks through the same kernels as the in-process
+//!   engine, streams results back.
+//! - [`cluster`] — the driver: placement over live workers via the
+//!   engine's `Partitioner`, pipelined scatter/gather, and a retry loop
+//!   that composes with the `engine/fault` machinery (injected faults
+//!   consume attempts on the driver; a dead worker's tasks are retried
+//!   elsewhere; exhaustion propagates with stage context).
+//!
+//! The bit-determinism contract extends across process counts: a task's
+//! value is a pure function of broadcast state computed by the same code
+//! the single-process path runs, and results are gathered by task index
+//! — so 1 process and N workers produce bit-identical embeddings, which
+//! `tests/dist_cluster.rs` enforces (including under fault injection and
+//! mid-stage worker death).
+
+pub mod cluster;
+pub mod proto;
+pub mod task;
+pub mod worker;
+
+pub use cluster::{DistConfig, DistReport, RemoteCluster};

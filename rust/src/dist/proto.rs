@@ -1,0 +1,430 @@
+//! Length-prefixed binary frame protocol for the block-shuffle transport.
+//!
+//! Same framing discipline as `serve/http.rs`: a pure-buffer
+//! [`try_parse`] that never blocks — `Ok(None)` means "need more bytes",
+//! `Err` means the peer spoke garbage (with enough context to say how) —
+//! plus hard size caps so a malformed length prefix cannot balloon the
+//! read buffer. On top of that, every frame carries an FNV-1a-64 checksum
+//! over its variable-length content, because unlike the HTTP server this
+//! protocol moves gigabytes of matrix payload whose silent corruption
+//! would quietly break the bit-determinism contract.
+//!
+//! Wire layout (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic "ISPD"
+//!      4     1  protocol version (1)
+//!      5     1  frame kind (FrameKind)
+//!      6     2  stage name length in bytes (≤ 256)
+//!      8     4  task index
+//!     12     4  attempt number
+//!     16     8  payload length in bytes (≤ 512 MiB)
+//!     24     8  FNV-1a-64 checksum over stage-name bytes ++ payload
+//!     32     …  stage name (UTF-8), then payload
+//! ```
+//!
+//! The header is fixed at 32 bytes so a reader can always pull it in one
+//! shot and then knows the exact frame size; stage/task/attempt ride in
+//! the header (not the payload) so the retry loop can route responses
+//! without decoding payloads.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::{Duration, Instant};
+
+use crate::data::io::Fnv1a64;
+
+/// First bytes of every frame.
+pub const MAGIC: [u8; 4] = *b"ISPD";
+/// Protocol version; a mismatch is rejected up front rather than
+/// misparsed downstream.
+pub const VERSION: u8 = 1;
+/// Fixed header size — see the module-level wire layout.
+pub const HEADER_BYTES: usize = 32;
+/// Cap on the stage-name field.
+pub const MAX_STAGE_BYTES: usize = 256;
+/// Cap on a single frame's payload. Generous (a 512 MiB panel is a
+/// ~90k-point block-row) but finite, so a corrupt length prefix fails
+/// fast instead of OOMing the reader.
+pub const MAX_PAYLOAD_BYTES: u64 = 512 * (1 << 20);
+
+/// How long a blocked read waits before re-checking its stop flag and
+/// deadline. Mirrors the poll discipline in `serve/mod.rs`.
+const READ_SLICE: Duration = Duration::from_millis(100);
+
+/// What a frame means. The discriminants are the on-wire byte.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// Driver → worker: first frame on a connection.
+    Hello = 0,
+    /// Worker → driver: handshake reply (payload: u64 worker cores).
+    HelloAck = 1,
+    /// Driver → worker: named blob shared by every task of the coming
+    /// stage(s) (payload: u16 name length ++ name ++ blob).
+    Broadcast = 2,
+    /// Driver → worker: execute one stage task (payload: `TaskSpec`).
+    Task = 3,
+    /// Worker → driver: task result (payload is task-specific).
+    TaskOk = 4,
+    /// Worker → driver: task or broadcast failed (payload: UTF-8 message).
+    TaskErr = 5,
+    /// Driver → worker: exit after acknowledging.
+    Shutdown = 6,
+    /// Worker → driver: broadcast/shutdown acknowledged.
+    Ack = 7,
+}
+
+impl FrameKind {
+    fn from_u8(v: u8) -> Option<FrameKind> {
+        use FrameKind::*;
+        Some(match v {
+            0 => Hello,
+            1 => HelloAck,
+            2 => Broadcast,
+            3 => Task,
+            4 => TaskOk,
+            5 => TaskErr,
+            6 => Shutdown,
+            7 => Ack,
+            _ => return None,
+        })
+    }
+
+    /// Human name for error messages.
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameKind::Hello => "hello",
+            FrameKind::HelloAck => "hello-ack",
+            FrameKind::Broadcast => "broadcast",
+            FrameKind::Task => "task",
+            FrameKind::TaskOk => "task-ok",
+            FrameKind::TaskErr => "task-err",
+            FrameKind::Shutdown => "shutdown",
+            FrameKind::Ack => "ack",
+        }
+    }
+}
+
+/// One parsed frame. `stage`/`task`/`attempt` are routing metadata for
+/// task traffic; control frames leave them at their defaults.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub stage: String,
+    pub task: u32,
+    pub attempt: u32,
+    pub payload: Vec<u8>,
+}
+
+impl Frame {
+    /// A metadata-free control frame (hello, ack, shutdown).
+    pub fn control(kind: FrameKind) -> Frame {
+        Frame { kind, stage: String::new(), task: 0, attempt: 0, payload: Vec::new() }
+    }
+
+    /// A control frame carrying a payload (handshake info, broadcasts).
+    pub fn with_payload(kind: FrameKind, payload: Vec<u8>) -> Frame {
+        Frame { kind, stage: String::new(), task: 0, attempt: 0, payload }
+    }
+
+    /// Encoded size on the wire.
+    pub fn wire_size(&self) -> usize {
+        HEADER_BYTES + self.stage.len() + self.payload.len()
+    }
+}
+
+/// Serialize a frame. Panics (debug assert) on frames that exceed the
+/// protocol caps — callers own the caps because they own the chunking.
+pub fn encode(f: &Frame) -> Vec<u8> {
+    let stage = f.stage.as_bytes();
+    debug_assert!(stage.len() <= MAX_STAGE_BYTES, "stage name over protocol cap");
+    debug_assert!(f.payload.len() as u64 <= MAX_PAYLOAD_BYTES, "payload over protocol cap");
+    let mut h = Fnv1a64::new();
+    h.update(stage);
+    h.update(&f.payload);
+    let mut out = Vec::with_capacity(f.wire_size());
+    out.extend_from_slice(&MAGIC);
+    out.push(VERSION);
+    out.push(f.kind as u8);
+    out.extend_from_slice(&(stage.len() as u16).to_le_bytes());
+    out.extend_from_slice(&f.task.to_le_bytes());
+    out.extend_from_slice(&f.attempt.to_le_bytes());
+    out.extend_from_slice(&(f.payload.len() as u64).to_le_bytes());
+    out.extend_from_slice(&h.finish().to_le_bytes());
+    out.extend_from_slice(stage);
+    out.extend_from_slice(&f.payload);
+    out
+}
+
+fn le_u16(buf: &[u8], at: usize) -> u16 {
+    u16::from_le_bytes(buf[at..at + 2].try_into().unwrap())
+}
+
+fn le_u32(buf: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(buf[at..at + 4].try_into().unwrap())
+}
+
+fn le_u64(buf: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(buf[at..at + 8].try_into().unwrap())
+}
+
+/// Try to parse one frame from the front of `buf`.
+///
+/// - `Ok(None)` — not enough bytes yet; read more and call again.
+/// - `Ok(Some((frame, used)))` — one frame parsed; drain `used` bytes.
+/// - `Err(msg)` — the bytes can never become a valid frame (bad magic,
+///   over-cap lengths, checksum mismatch); the connection is unusable.
+///
+/// Pure function of the buffer — no IO, trivially unit-testable, the same
+/// discipline as `serve::http::try_parse`.
+pub fn try_parse(buf: &[u8]) -> Result<Option<(Frame, usize)>, String> {
+    if buf.len() < HEADER_BYTES {
+        return Ok(None);
+    }
+    if buf[..4] != MAGIC {
+        return Err(format!("dist frame: bad magic {:02x?} (want \"ISPD\")", &buf[..4]));
+    }
+    if buf[4] != VERSION {
+        return Err(format!(
+            "dist frame: protocol version {} (this build speaks {VERSION})",
+            buf[4]
+        ));
+    }
+    let kind = FrameKind::from_u8(buf[5])
+        .ok_or_else(|| format!("dist frame: unknown frame kind {}", buf[5]))?;
+    let stage_len = le_u16(buf, 6) as usize;
+    if stage_len > MAX_STAGE_BYTES {
+        return Err(format!(
+            "dist frame: stage name of {stage_len} bytes exceeds the {MAX_STAGE_BYTES}-byte cap"
+        ));
+    }
+    let task = le_u32(buf, 8);
+    let attempt = le_u32(buf, 12);
+    let payload_len = le_u64(buf, 16);
+    if payload_len > MAX_PAYLOAD_BYTES {
+        return Err(format!(
+            "dist frame: payload of {payload_len} bytes exceeds the {MAX_PAYLOAD_BYTES}-byte cap \
+             ({} frame, stage task {task})",
+            kind.name()
+        ));
+    }
+    let total = HEADER_BYTES + stage_len + payload_len as usize;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let want = le_u64(buf, 24);
+    let got = crate::data::io::fnv1a64(&buf[HEADER_BYTES..total]);
+    if got != want {
+        return Err(format!(
+            "dist frame: checksum mismatch on {} frame (task {task}, attempt {attempt}): \
+             computed {got:016x}, header says {want:016x}",
+            kind.name()
+        ));
+    }
+    let stage = std::str::from_utf8(&buf[HEADER_BYTES..HEADER_BYTES + stage_len])
+        .map_err(|_| "dist frame: stage name is not UTF-8".to_string())?
+        .to_string();
+    let payload = buf[HEADER_BYTES + stage_len..total].to_vec();
+    Ok(Some((Frame { kind, stage, task, attempt, payload }, total)))
+}
+
+/// Why a blocking read/write gave up. Transport failures are *data*, not
+/// panics: the driver's retry loop matches on these to decide between
+/// marking a worker dead (`ConnectionLost`/`TimedOut`) and failing the
+/// run (`Malformed` — a protocol bug retrying cannot fix).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// Peer closed the connection or the socket errored.
+    ConnectionLost(String),
+    /// No complete frame arrived before the deadline.
+    TimedOut(String),
+    /// The peer's bytes can never parse as a frame.
+    Malformed(String),
+    /// The local stop flag was raised while waiting.
+    Stopped,
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::ConnectionLost(m) => write!(f, "connection lost: {m}"),
+            TransportError::TimedOut(m) => write!(f, "timed out: {m}"),
+            TransportError::Malformed(m) => write!(f, "malformed frame: {m}"),
+            TransportError::Stopped => write!(f, "stopped"),
+        }
+    }
+}
+
+/// Incremental frame reader over a blocking stream. Keeps its own buffer
+/// so back-to-back frames pipelined by the peer are not lost between
+/// calls — one `FrameReader` per connection, for its whole life.
+#[derive(Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Block until one full frame arrives, the `deadline` passes, `stop`
+    /// is raised, or the connection dies. Reads in `READ_SLICE` slices
+    /// so stop/deadline are observed promptly even when the peer is
+    /// silent.
+    pub fn read_frame(
+        &mut self,
+        stream: &mut TcpStream,
+        deadline: Option<Instant>,
+        stop: Option<&AtomicBool>,
+    ) -> Result<Frame, TransportError> {
+        if stream.set_read_timeout(Some(READ_SLICE)).is_err() {
+            return Err(TransportError::ConnectionLost("set_read_timeout failed".into()));
+        }
+        let mut chunk = [0u8; 64 * 1024];
+        loop {
+            if let Some((frame, used)) = try_parse(&self.buf).map_err(TransportError::Malformed)? {
+                self.buf.drain(..used);
+                return Ok(frame);
+            }
+            if let Some(s) = stop {
+                if s.load(Ordering::SeqCst) {
+                    return Err(TransportError::Stopped);
+                }
+            }
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    return Err(TransportError::TimedOut(format!(
+                        "no complete frame ({} bytes buffered)",
+                        self.buf.len()
+                    )));
+                }
+            }
+            match stream.read(&mut chunk) {
+                Ok(0) => {
+                    return Err(TransportError::ConnectionLost(
+                        "peer closed the connection".into(),
+                    ))
+                }
+                Ok(n) => self.buf.extend_from_slice(&chunk[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) => {}
+                Err(e) => return Err(TransportError::ConnectionLost(e.to_string())),
+            }
+        }
+    }
+}
+
+/// Write one frame; returns its wire size for byte accounting.
+pub fn write_frame(stream: &mut TcpStream, frame: &Frame) -> Result<usize, TransportError> {
+    let bytes = encode(frame);
+    stream.write_all(&bytes).map_err(|e| {
+        TransportError::ConnectionLost(format!("writing {} frame: {e}", frame.kind.name()))
+    })?;
+    Ok(bytes.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Frame {
+        Frame {
+            kind: FrameKind::TaskOk,
+            stage: "geo:dijkstra".into(),
+            task: 3,
+            attempt: 1,
+            payload: vec![7, 8, 9, 250, 0, 1],
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_field() {
+        let f = sample();
+        let bytes = encode(&f);
+        assert_eq!(bytes.len(), f.wire_size());
+        let (parsed, used) = try_parse(&bytes).unwrap().unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(parsed, f);
+    }
+
+    #[test]
+    fn control_frame_roundtrips_with_empty_metadata() {
+        let bytes = encode(&Frame::control(FrameKind::Shutdown));
+        let (parsed, used) = try_parse(&bytes).unwrap().unwrap();
+        assert_eq!(used, HEADER_BYTES);
+        assert_eq!(parsed.kind, FrameKind::Shutdown);
+        assert!(parsed.stage.is_empty() && parsed.payload.is_empty());
+    }
+
+    #[test]
+    fn truncated_frames_ask_for_more_bytes() {
+        let bytes = encode(&sample());
+        for cut in [0, 1, HEADER_BYTES - 1, HEADER_BYTES, bytes.len() - 1] {
+            assert_eq!(try_parse(&bytes[..cut]).unwrap(), None, "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn pipelined_frames_parse_one_at_a_time() {
+        let a = encode(&Frame::control(FrameKind::Hello));
+        let b = encode(&sample());
+        let mut buf = a.clone();
+        buf.extend_from_slice(&b);
+        let (first, used) = try_parse(&buf).unwrap().unwrap();
+        assert_eq!(first.kind, FrameKind::Hello);
+        let (second, used2) = try_parse(&buf[used..]).unwrap().unwrap();
+        assert_eq!(second, sample());
+        assert_eq!(used + used2, buf.len());
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected_with_context() {
+        let mut bytes = encode(&sample());
+        bytes[0] = b'X';
+        let err = try_parse(&bytes).unwrap_err();
+        assert!(err.contains("bad magic"), "{err}");
+        let mut bytes = encode(&sample());
+        bytes[4] = 9;
+        let err = try_parse(&bytes).unwrap_err();
+        assert!(err.contains("version 9"), "{err}");
+    }
+
+    #[test]
+    fn oversized_lengths_fail_fast_not_oom() {
+        let mut bytes = encode(&sample());
+        bytes[6..8].copy_from_slice(&(MAX_STAGE_BYTES as u16 + 1).to_le_bytes());
+        let err = try_parse(&bytes).unwrap_err();
+        assert!(err.contains("stage name"), "{err}");
+        let mut bytes = encode(&sample());
+        bytes[16..24].copy_from_slice(&(MAX_PAYLOAD_BYTES + 1).to_le_bytes());
+        let err = try_parse(&bytes).unwrap_err();
+        assert!(err.contains("exceeds"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_payload_trips_the_checksum() {
+        let mut bytes = encode(&sample());
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40; // single bit-flip in the payload
+        let err = try_parse(&bytes).unwrap_err();
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("task 3"), "{err}");
+    }
+
+    #[test]
+    fn unknown_kind_is_rejected() {
+        let mut bytes = encode(&sample());
+        bytes[5] = 200;
+        let err = try_parse(&bytes).unwrap_err();
+        assert!(err.contains("unknown frame kind 200"), "{err}");
+    }
+}

@@ -1,0 +1,247 @@
+//! Serializable task vocabulary and payload codecs for the dist layer.
+//!
+//! Closures cannot cross a process boundary, so remote stages speak a
+//! typed task enum instead: the driver encodes a [`TaskSpec`] into a
+//! `Task` frame, the worker decodes it and runs the matching kernel
+//! against state it received via `Broadcast` frames. Every codec here is
+//! hand-rolled little-endian (no serde in the dependency tree) with
+//! bounds-checked reads, and every `f64` moves as `to_le_bytes` /
+//! `from_le_bytes` — a bit-exact round-trip, which is what lets the
+//! embedding stay bit-identical no matter how many processes computed it.
+
+use crate::data::io::{matrix_from_bytes, matrix_to_bytes};
+use crate::kernels::kselect::Neighbor;
+use crate::linalg::Matrix;
+
+/// Broadcast name for the geodesic job (kNN graph + block geometry).
+pub const GEO_JOB: &str = "geo-job";
+
+/// Opcode bytes for [`TaskSpec`].
+const OP_GEODESIC_PANEL: u8 = 1;
+
+/// One remotely-executable stage task.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskSpec {
+    /// Compute the squared-geodesic row panel for block-row `block` of
+    /// the broadcast [`GeoJob`]: multi-source Dijkstra from the block's
+    /// rows over the shared CSR graph, then square in place.
+    GeodesicPanel { block: u64 },
+}
+
+impl TaskSpec {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            TaskSpec::GeodesicPanel { block } => {
+                let mut out = Vec::with_capacity(9);
+                out.push(OP_GEODESIC_PANEL);
+                out.extend_from_slice(&block.to_le_bytes());
+                out
+            }
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<TaskSpec, String> {
+        let mut cur = Cur::new(buf);
+        match cur.u8()? {
+            OP_GEODESIC_PANEL => {
+                let block = cur.u64()?;
+                cur.done()?;
+                Ok(TaskSpec::GeodesicPanel { block })
+            }
+            op => Err(format!("task spec: unknown opcode {op}")),
+        }
+    }
+}
+
+/// The broadcast state every geodesic panel task executes against.
+/// Workers rebuild the CSR graph from these lists with
+/// `CsrGraph::from_knn_lists` — a deterministic construction, so every
+/// process sees the identical graph the driver validated.
+pub struct GeoJob {
+    /// Point count.
+    pub n: usize,
+    /// Block size `b` (panel = `b × n`, last block possibly ragged).
+    pub block: usize,
+    /// Per-point kNN lists, exactly as the kNN stage produced them.
+    pub lists: Vec<Vec<Neighbor>>,
+}
+
+/// Encode a [`GeoJob`]: `n` u64, `block` u64, list count u64, then per
+/// list a u32 length followed by (f64 distance, u32 neighbor) pairs.
+/// Neighbor indices fit u32 by the same cap `CsrGraph` enforces.
+pub fn encode_geo_job(n: usize, block: usize, lists: &[Vec<Neighbor>]) -> Vec<u8> {
+    let pairs: usize = lists.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(24 + lists.len() * 4 + pairs * 12);
+    out.extend_from_slice(&(n as u64).to_le_bytes());
+    out.extend_from_slice(&(block as u64).to_le_bytes());
+    out.extend_from_slice(&(lists.len() as u64).to_le_bytes());
+    for list in lists {
+        out.extend_from_slice(&(list.len() as u32).to_le_bytes());
+        for &(dist, j) in list {
+            out.extend_from_slice(&dist.to_le_bytes());
+            out.extend_from_slice(&(j as u32).to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Decode a [`GeoJob`]; rejects truncated or trailing bytes with context.
+pub fn decode_geo_job(buf: &[u8]) -> Result<GeoJob, String> {
+    let mut cur = Cur::new(buf);
+    let n = cur.u64()? as usize;
+    let block = cur.u64()? as usize;
+    let count = cur.u64()? as usize;
+    if block == 0 {
+        return Err("geo job: zero block size".into());
+    }
+    if count != n {
+        return Err(format!("geo job: {count} kNN lists for {n} points"));
+    }
+    // Cheap sanity cap before allocating: every list needs ≥ 4 bytes.
+    if count > buf.len() / 4 {
+        return Err(format!("geo job: {count} lists cannot fit in {} bytes", buf.len()));
+    }
+    let mut lists = Vec::with_capacity(count);
+    for i in 0..count {
+        let len = cur.u32()? as usize;
+        let mut list = Vec::with_capacity(len.min(buf.len() / 12));
+        for _ in 0..len {
+            let dist = cur.f64()?;
+            let j = cur.u32()? as usize;
+            if j >= n {
+                return Err(format!("geo job: list {i} names neighbor {j} ≥ n = {n}"));
+            }
+            list.push((dist, j));
+        }
+        lists.push(list);
+    }
+    cur.done()?;
+    Ok(GeoJob { n, block, lists })
+}
+
+/// Encode a `TaskOk` payload for a geodesic panel: worker-measured
+/// compute seconds (f64), then the squared panel in the `data::io`
+/// matrix layout.
+pub fn encode_panel_result(compute_secs: f64, panel: &Matrix) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + 24 + panel.as_slice().len() * 8);
+    out.extend_from_slice(&compute_secs.to_le_bytes());
+    matrix_to_bytes(panel, &mut out);
+    out
+}
+
+/// Decode a geodesic panel result.
+pub fn decode_panel_result(buf: &[u8]) -> Result<(f64, Matrix), String> {
+    if buf.len() < 8 {
+        return Err(format!("panel result: {} bytes is too short", buf.len()));
+    }
+    let secs = f64::from_le_bytes(buf[..8].try_into().unwrap());
+    let (panel, used) = matrix_from_bytes(&buf[8..]).map_err(|e| format!("panel result: {e:#}"))?;
+    if 8 + used != buf.len() {
+        return Err(format!("panel result: {} trailing bytes", buf.len() - 8 - used));
+    }
+    Ok((secs, panel))
+}
+
+/// Bounds-checked little-endian reader — decode helpers share it so every
+/// truncation produces an error instead of a panic.
+struct Cur<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Cur<'a> {
+        Cur { buf, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self
+            .at
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| format!("payload truncated at byte {} (want {n} more)", self.at))?;
+        let s = &self.buf[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64, String> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> Result<(), String> {
+        if self.at == self.buf.len() {
+            Ok(())
+        } else {
+            Err(format!("payload has {} trailing bytes", self.buf.len() - self.at))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_spec_roundtrips() {
+        let spec = TaskSpec::GeodesicPanel { block: 42 };
+        assert_eq!(TaskSpec::decode(&spec.encode()).unwrap(), spec);
+        assert!(TaskSpec::decode(&[]).is_err());
+        assert!(TaskSpec::decode(&[99]).is_err());
+        let mut trailing = spec.encode();
+        trailing.push(0);
+        assert!(TaskSpec::decode(&trailing).is_err());
+    }
+
+    #[test]
+    fn geo_job_roundtrips_bit_exact() {
+        let lists: Vec<Vec<Neighbor>> =
+            vec![vec![(0.5, 1), (1.25, 2)], vec![(0.5, 0)], vec![(1.25, 0), (3e-17, 1)]];
+        let bytes = encode_geo_job(3, 2, &lists);
+        let job = decode_geo_job(&bytes).unwrap();
+        assert_eq!(job.n, 3);
+        assert_eq!(job.block, 2);
+        assert_eq!(job.lists.len(), 3);
+        for (a, b) in job.lists.iter().flatten().zip(lists.iter().flatten()) {
+            assert_eq!(a.0.to_bits(), b.0.to_bits());
+            assert_eq!(a.1, b.1);
+        }
+    }
+
+    #[test]
+    fn geo_job_rejects_corrupt_shapes() {
+        let lists: Vec<Vec<Neighbor>> = vec![vec![(1.0, 1)], vec![(1.0, 0)]];
+        let good = encode_geo_job(2, 1, &lists);
+        assert!(decode_geo_job(&good[..good.len() - 1]).is_err(), "truncated");
+        let err = decode_geo_job(&encode_geo_job(5, 1, &lists)).unwrap_err();
+        assert!(err.contains("2 kNN lists for 5 points"), "{err}");
+        let oob: Vec<Vec<Neighbor>> = vec![vec![(1.0, 7)], vec![(1.0, 0)]];
+        let err = decode_geo_job(&encode_geo_job(2, 1, &oob)).unwrap_err();
+        assert!(err.contains("neighbor 7"), "{err}");
+    }
+
+    #[test]
+    fn panel_result_roundtrips_bit_exact() {
+        let m = Matrix::from_rows(&[vec![1.5, -0.0, f64::INFINITY], vec![2.5e-300, 4.0, 9.0]]);
+        let (secs, r) = decode_panel_result(&encode_panel_result(0.125, &m)).unwrap();
+        assert_eq!(secs, 0.125);
+        let (rb, mb): (Vec<u64>, Vec<u64>) = (
+            r.as_slice().iter().map(|v| v.to_bits()).collect(),
+            m.as_slice().iter().map(|v| v.to_bits()).collect(),
+        );
+        assert_eq!(rb, mb);
+        assert!(decode_panel_result(&[1, 2, 3]).is_err());
+    }
+}

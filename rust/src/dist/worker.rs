@@ -1,0 +1,286 @@
+//! The `isospark worker` runtime: a TCP server that executes stage tasks
+//! shipped by a driver over the [`super::proto`] frame protocol.
+//!
+//! A worker is state-light on purpose: it holds at most one broadcast
+//! geodesic job (graph + block geometry) and recomputes everything else
+//! per task, so a worker that dies loses only in-flight work — the
+//! driver's retry loop re-runs those tasks elsewhere and, because every
+//! task is a pure function of the broadcast state, gets bit-identical
+//! panels back. Task kernels run through the same code path as the
+//! single-process engine (`dijkstra::multi_source` → the
+//! `engine/executor` task pool), which is the whole determinism argument:
+//! same inputs, same code, same bits.
+//!
+//! Threading mirrors `serve/mod.rs`: an accept loop checks a stop flag
+//! between connections, reads poll in short slices so shutdown is prompt,
+//! and [`WorkerHandle`] unblocks a parked `accept` with a self-connect.
+
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::dist::proto::{self, Frame, FrameKind, FrameReader};
+use crate::dist::task::{decode_geo_job, encode_panel_result, GeoJob, TaskSpec, GEO_JOB};
+use crate::graph::{dijkstra, CsrGraph};
+use crate::util::Stopwatch;
+
+/// How long a worker waits for a slow driver to accept reply bytes.
+const WRITE_LIMIT: Duration = Duration::from_secs(30);
+
+/// Tuning for a worker process.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerOptions {
+    /// OS threads for task kernels (0 = all cores), resolved by the same
+    /// `engine/executor` rule as every other pool in the crate. Thread
+    /// count never changes task *values* — only wall-clock.
+    pub threads: usize,
+    /// Test hook (`--die-after-tasks`): execute this many task frames,
+    /// then drop every connection and stop accepting without replying — a
+    /// deterministic stand-in for `kill -9` mid-stage, used by the
+    /// worker-loss recovery tests and nothing else.
+    pub die_after_tasks: Option<u64>,
+}
+
+struct WorkerState {
+    threads: usize,
+    stop: AtomicBool,
+    /// Countdown for `die_after_tasks`; `None` = immortal.
+    die_countdown: Option<AtomicU64>,
+    /// The broadcast geodesic job, shared across connections so a driver
+    /// reconnect (or a second run) can rebroadcast or reuse.
+    job: Mutex<Option<Arc<GeoJobState>>>,
+}
+
+/// A decoded broadcast job plus the CSR graph rebuilt from it — built
+/// once per broadcast, shared by every task against it.
+struct GeoJobState {
+    n: usize,
+    block: usize,
+    csr: CsrGraph,
+}
+
+/// An in-process worker (tests, benches): the same server loop as the
+/// standalone `isospark worker` process, on a background thread.
+/// Dropping the handle stops and joins the worker.
+pub struct WorkerHandle {
+    addr: SocketAddr,
+    state: Arc<WorkerState>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerHandle {
+    /// The bound address, e.g. to pass as `--workers`.
+    pub fn addr(&self) -> String {
+        self.addr.to_string()
+    }
+
+    /// Stop accepting, wake a parked accept, and join the server thread.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.state.stop.store(true, Ordering::SeqCst);
+        // Unblock a parked accept() the same way serve/mod.rs does.
+        let _ = TcpStream::connect_timeout(&self.addr, Duration::from_millis(500));
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for WorkerHandle {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+fn new_state(opts: &WorkerOptions) -> Arc<WorkerState> {
+    Arc::new(WorkerState {
+        threads: opts.threads,
+        stop: AtomicBool::new(false),
+        die_countdown: opts.die_after_tasks.map(AtomicU64::new),
+        job: Mutex::new(None),
+    })
+}
+
+/// Spawn an in-process worker on `listen` (use port 0 for an ephemeral
+/// port; the bound address is on the returned handle).
+pub fn spawn(listen: &str, opts: WorkerOptions) -> Result<WorkerHandle> {
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("worker: bind {listen}"))?;
+    let addr = listener.local_addr()?;
+    let state = new_state(&opts);
+    let thread_state = Arc::clone(&state);
+    let thread = std::thread::Builder::new()
+        .name("isospark-worker".into())
+        .spawn(move || accept_loop(listener, &thread_state))
+        .context("worker: spawn accept thread")?;
+    Ok(WorkerHandle { addr, state, thread: Some(thread) })
+}
+
+/// Run a worker on the current thread until killed (the `isospark
+/// worker` subcommand). Prints the bound address and optionally writes
+/// the port to `port_file` so scripts can use ephemeral ports — the same
+/// contract as `isospark serve`.
+pub fn run_blocking(listen: &str, opts: WorkerOptions, port_file: Option<&str>) -> Result<()> {
+    let listener =
+        TcpListener::bind(listen).with_context(|| format!("worker: bind {listen}"))?;
+    let addr = listener.local_addr()?;
+    let threads = crate::engine::executor::resolve_workers(opts.threads);
+    println!("isospark worker listening on {addr} ({threads} threads)");
+    if let Some(path) = port_file {
+        let mut f = std::fs::File::create(path).with_context(|| format!("create {path}"))?;
+        writeln!(f, "{}", addr.port())?;
+    }
+    let state = new_state(&opts);
+    accept_loop(listener, &state);
+    Ok(())
+}
+
+/// Serve connections one at a time until the stop flag is raised. A
+/// driver holds one connection for a whole run, so serial service is the
+/// natural discipline; a second driver simply queues.
+fn accept_loop(listener: TcpListener, state: &Arc<WorkerState>) {
+    for conn in listener.incoming() {
+        if state.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(stream) = conn else { continue };
+        serve_conn(state, stream);
+        if state.stop.load(Ordering::SeqCst) {
+            break;
+        }
+    }
+}
+
+/// Frame loop for one driver connection. Returning drops the stream —
+/// the driver sees a closed connection and treats this worker as lost.
+fn serve_conn(state: &Arc<WorkerState>, mut stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_write_timeout(Some(WRITE_LIMIT));
+    let mut reader = FrameReader::new();
+    loop {
+        // No deadline: a healthy driver may think for a long time between
+        // stages. The stop flag still bounds shutdown latency.
+        let frame = match reader.read_frame(&mut stream, None, Some(&state.stop)) {
+            Ok(f) => f,
+            Err(_) => return, // driver gone, garbage, or stopping
+        };
+        let reply = match frame.kind {
+            FrameKind::Hello => Frame::with_payload(
+                FrameKind::HelloAck,
+                (crate::engine::executor::resolve_workers(state.threads) as u64)
+                    .to_le_bytes()
+                    .to_vec(),
+            ),
+            FrameKind::Broadcast => match install_broadcast(state, &frame.payload) {
+                Ok(()) => Frame::control(FrameKind::Ack),
+                Err(msg) => Frame::with_payload(FrameKind::TaskErr, msg.into_bytes()),
+            },
+            FrameKind::Task => {
+                if dies_now(state) {
+                    // Simulated crash: no reply, connection dropped,
+                    // no further accepts.
+                    state.stop.store(true, Ordering::SeqCst);
+                    return;
+                }
+                match run_task(state, &frame) {
+                    Ok(payload) => Frame {
+                        kind: FrameKind::TaskOk,
+                        stage: frame.stage.clone(),
+                        task: frame.task,
+                        attempt: frame.attempt,
+                        payload,
+                    },
+                    Err(msg) => Frame {
+                        kind: FrameKind::TaskErr,
+                        stage: frame.stage.clone(),
+                        task: frame.task,
+                        attempt: frame.attempt,
+                        payload: msg.into_bytes(),
+                    },
+                }
+            }
+            FrameKind::Shutdown => {
+                let _ = proto::write_frame(&mut stream, &Frame::control(FrameKind::Ack));
+                state.stop.store(true, Ordering::SeqCst);
+                return;
+            }
+            // Driver-bound kinds arriving at a worker: protocol confusion.
+            other => Frame::with_payload(
+                FrameKind::TaskErr,
+                format!("worker: unexpected {} frame", other.name()).into_bytes(),
+            ),
+        };
+        if proto::write_frame(&mut stream, &reply).is_err() {
+            return;
+        }
+    }
+}
+
+/// `die_after_tasks` bookkeeping: `false` while the countdown lasts,
+/// `true` on the task that should kill the worker. Atomic because the
+/// countdown must survive driver reconnects.
+fn dies_now(state: &WorkerState) -> bool {
+    let Some(rem) = &state.die_countdown else { return false };
+    rem.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| v.checked_sub(1)).is_err()
+}
+
+/// Decode a `Broadcast` payload (u16 name length ++ name ++ blob) and
+/// install the named state.
+fn install_broadcast(state: &WorkerState, payload: &[u8]) -> Result<(), String> {
+    if payload.len() < 2 {
+        return Err("broadcast: payload too short for name length".into());
+    }
+    let name_len = u16::from_le_bytes(payload[..2].try_into().unwrap()) as usize;
+    if payload.len() < 2 + name_len {
+        return Err(format!("broadcast: truncated name (want {name_len} bytes)"));
+    }
+    let name = std::str::from_utf8(&payload[2..2 + name_len])
+        .map_err(|_| "broadcast: name is not UTF-8".to_string())?;
+    let blob = &payload[2 + name_len..];
+    match name {
+        GEO_JOB => {
+            let GeoJob { n, block, lists } = decode_geo_job(blob)?;
+            let csr = CsrGraph::from_knn_lists(&lists)
+                .map_err(|e| format!("broadcast {GEO_JOB}: CSR construction: {e:#}"))?;
+            *state.job.lock().unwrap() = Some(Arc::new(GeoJobState { n, block, csr }));
+            Ok(())
+        }
+        other => Err(format!("broadcast: unknown name {other:?}")),
+    }
+}
+
+/// Execute one task frame; the returned bytes become the `TaskOk`
+/// payload.
+fn run_task(state: &WorkerState, frame: &Frame) -> Result<Vec<u8>, String> {
+    let spec = TaskSpec::decode(&frame.payload)?;
+    match spec {
+        TaskSpec::GeodesicPanel { block } => {
+            let job = state
+                .job
+                .lock()
+                .unwrap()
+                .clone()
+                .ok_or_else(|| format!("no {GEO_JOB} broadcast received before task"))?;
+            let q = crate::coordinator::num_blocks(job.n, job.block);
+            let i = block as usize;
+            if i >= q {
+                return Err(format!("panel block {block} out of range (q = {q})"));
+            }
+            let (rs, re) = crate::coordinator::block_range(job.n, job.block, i);
+            let sources: Vec<usize> = (rs..re).collect();
+            let sw = Stopwatch::start();
+            // The exact kernel the single-process path runs — this line
+            // is the determinism argument, not just an implementation.
+            let mut panel = dijkstra::multi_source(&job.csr, &sources, state.threads);
+            crate::coordinator::panels::square_panel(&mut panel);
+            Ok(encode_panel_result(sw.secs(), &panel))
+        }
+    }
+}

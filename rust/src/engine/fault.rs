@@ -159,6 +159,7 @@ pub struct ResilienceStats {
     retries: AtomicU64,
     recovered_tasks: AtomicU64,
     exhausted_tasks: AtomicU64,
+    worker_losses: AtomicU64,
     straggler_virtual_ms: AtomicU64,
     backoff_virtual_ms: AtomicU64,
     checkpoint_spills: AtomicU64,
@@ -175,6 +176,7 @@ pub struct ResilienceSnapshot {
     pub retries: u64,
     pub recovered_tasks: u64,
     pub exhausted_tasks: u64,
+    pub worker_losses: u64,
     pub straggler_virtual_ms: u64,
     pub backoff_virtual_ms: u64,
     pub checkpoint_spills: u64,
@@ -216,6 +218,14 @@ impl ResilienceStats {
         self.exhausted_tasks.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// A remote worker process died or timed out mid-stage; its tasks
+    /// were requeued. Recorded by the dist layer's retry loop — transport
+    /// failures are typed errors there, never panics, so they can never
+    /// poison this shared state.
+    pub(crate) fn record_worker_loss(&self) {
+        self.worker_losses.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub(crate) fn record_spill(&self, bytes: u64) {
         self.checkpoint_spills.fetch_add(1, Ordering::Relaxed);
         self.checkpoint_spill_bytes.fetch_add(bytes, Ordering::Relaxed);
@@ -242,6 +252,7 @@ impl ResilienceStats {
             retries: self.retries.load(Ordering::Relaxed),
             recovered_tasks: self.recovered_tasks.load(Ordering::Relaxed),
             exhausted_tasks: self.exhausted_tasks.load(Ordering::Relaxed),
+            worker_losses: self.worker_losses.load(Ordering::Relaxed),
             straggler_virtual_ms: self.straggler_virtual_ms.load(Ordering::Relaxed),
             backoff_virtual_ms: self.backoff_virtual_ms.load(Ordering::Relaxed),
             checkpoint_spills: self.checkpoint_spills.load(Ordering::Relaxed),
@@ -263,6 +274,7 @@ impl ResilienceStats {
                 "retries".to_string(),
                 "recovered".to_string(),
                 "exhausted".to_string(),
+                "workers lost".to_string(),
                 "stragglers".to_string(),
                 "virtual delay".to_string(),
                 "ckpt spills".to_string(),
@@ -273,6 +285,7 @@ impl ResilienceStats {
                 s.retries.to_string(),
                 s.recovered_tasks.to_string(),
                 s.exhausted_tasks.to_string(),
+                s.worker_losses.to_string(),
                 s.stragglers.to_string(),
                 format!("{} ms", s.straggler_virtual_ms + s.backoff_virtual_ms),
                 format!(

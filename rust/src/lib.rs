@@ -24,6 +24,11 @@
 //!   versioned on-disk artifact, and [`serve`] exposes it over HTTP with
 //!   micro-batched out-of-sample projection (`isospark fit --save` /
 //!   `isospark serve`).
+//! * **Distribution** — [`dist`] makes the cluster real: an `isospark
+//!   worker` TCP runtime plus a driver-side [`dist::RemoteCluster`] that
+//!   ships the geodesic panel stage to worker processes over a
+//!   checksummed block-shuffle protocol, with retry-on-worker-loss,
+//!   bit-identical to the single-process run (`--workers`).
 //!
 //! The full architecture guide — dataflow walkthrough, the simulated-
 //! cluster vs. real-thread-pool distinction, the PJRT offload boundary
@@ -48,6 +53,7 @@ pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod engine;
 pub mod eval;
 pub mod graph;

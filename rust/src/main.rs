@@ -8,6 +8,7 @@
 //!   emnist          synthetic-EMNIST embedding + factor analysis (Fig. 5)
 //!   fit             fit a streaming model and save the artifact to disk
 //!   serve           serve a saved model over HTTP (out-of-sample embedding)
+//!   worker          stage-task worker process for distributed runs
 //!   bench-serve     loopback load generator against an in-process server
 //!   info            artifact inventory / environment report
 
@@ -58,6 +59,15 @@ COMMANDS:
                     streaming fits spill checksummed block snapshots and
                     restore from the latest valid one on re-run, skipping
                     completed iterations
+                   --workers host:port,... execute the geodesic panel
+                    stage on real `isospark worker` processes over the
+                    TCP block-shuffle transport (requires --geodesics
+                    sparse-dijkstra); the embedding is bit-identical to
+                    the single-process run for any worker count, and the
+                    report prints measured wall-clock next to the
+                    virtual-clock projection. --task-timeout <secs>
+                    bounds each response (a slower worker is treated as
+                    dead and its tasks retried elsewhere)
   landmark         L-Isomap: same options plus --landmarks <m>
   lle              Locally Linear Embedding (paper §VI extension)
   stream           Streaming-Isomap: fit a batch, map --stream-n new points
@@ -73,6 +83,12 @@ COMMANDS:
                    --host <ip> --port-file <file>. Endpoints:
                    POST /v1/embed {\"points\":[[..],..]}, GET /healthz,
                    GET /metrics, POST /v1/reload {\"path\":\"<dir>\"}
+  worker           stage-task worker for distributed runs: --listen
+                   <ip:port> (port 0 = ephemeral) --threads <t>
+                   --port-file <file>; runs until killed, serving any
+                   number of driver runs. --die-after-tasks <n> is a
+                   test hook: execute n tasks, then drop the connection
+                   mid-stage without replying (simulated crash)
   bench-serve      loopback load generator against an in-process server:
                    [--model <dir>] --requests <n> --concurrency <c>
                    --points <per-request> [--json <file>]; reports
@@ -106,6 +122,7 @@ fn main() {
         "stream" => cmd_stream(&args),
         "fit" => cmd_fit(&args),
         "serve" => cmd_serve(&args),
+        "worker" => cmd_worker(&args),
         "bench-serve" => cmd_bench_serve(&args),
         "scale-table" => cmd_scale_table(&args),
         "blocksize-sweep" => cmd_blocksize(&args),
@@ -164,6 +181,14 @@ fn parse_common(args: &Args) -> Result<(IsomapConfig, ClusterConfig)> {
     if let Some(dir) = args.opt("checkpoint-dir") {
         cluster.checkpoint_dir = Some(dir.to_string());
     }
+    if let Some(ws) = args.opt("workers") {
+        cluster.dist_workers = isospark::config::parse_worker_list(ws);
+        if cluster.dist_workers.is_empty() {
+            bail!("--workers: no worker addresses in {ws:?}");
+        }
+    }
+    cluster.dist_task_timeout_secs =
+        args.get("task-timeout", cluster.dist_task_timeout_secs).map_err(anyhow_str)?;
     Ok((iso, cluster))
 }
 
@@ -214,6 +239,21 @@ fn cmd_run(args: &Args) -> Result<()> {
         human_duration(out.virtual_secs),
         human_bytes(out.shuffle_bytes)
     );
+    if let Some(d) = &out.dist {
+        // Measured ground truth of the distributed stage next to the
+        // virtual-clock projection of the same work.
+        println!(
+            "distributed geodesics: {} worker(s), {} lost | {} tasks, {} retried | {} over TCP \
+             | stage wall {} measured vs {} virtual projection",
+            d.workers,
+            d.workers_lost,
+            d.tasks,
+            d.retries,
+            human_bytes(d.bytes_sent + d.bytes_received),
+            human_duration(d.wall_secs),
+            human_duration(d.virtual_secs)
+        );
+    }
     println!(
         "q={} blocks | graph components={} | eigen iters={} converged={}",
         out.q, out.graph_components, out.eigen_iterations, out.eigen_converged
@@ -402,6 +442,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     handle.wait();
     Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    use isospark::dist::worker::{self, WorkerOptions};
+    let listen = args.opt("listen").unwrap_or("127.0.0.1:0");
+    let die: u64 = args.get("die-after-tasks", 0u64).map_err(anyhow_str)?;
+    let opts = WorkerOptions {
+        threads: args.get("threads", 0usize).map_err(anyhow_str)?,
+        die_after_tasks: (die > 0).then_some(die),
+    };
+    worker::run_blocking(listen, opts, args.opt("port-file"))
 }
 
 fn cmd_bench_serve(args: &Args) -> Result<()> {

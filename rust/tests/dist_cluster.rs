@@ -1,0 +1,174 @@
+//! Multi-process distribution, end to end over real loopback TCP: the
+//! driver's `RemoteCluster` against in-process `dist::worker` instances
+//! (the same server loop the `isospark worker` subcommand runs).
+//!
+//! The contract under test:
+//!
+//! * the embedding is **bit-identical** to the single-process run for 1,
+//!   2, and 4 workers — placement, worker count, and transport never
+//!   touch output bits;
+//! * deterministic fault injection (`--fault-rate`) composes with real
+//!   workers and stays bitwise invisible;
+//! * a worker that dies mid-stage (connection dropped without a reply)
+//!   is declared lost, its tasks are retried on the survivors, and the
+//!   run still lands on the identical bits;
+//! * losing *every* worker fails the run with stage context, not a
+//!   panic or a poisoned lock.
+
+use isospark::backend::Backend;
+use isospark::config::{ClusterConfig, GeodesicsMode, IsomapConfig};
+use isospark::coordinator::isomap;
+use isospark::data::swiss_roll;
+use isospark::dist::worker::{self, WorkerHandle, WorkerOptions};
+use isospark::linalg::Matrix;
+
+fn sparse_cfg() -> IsomapConfig {
+    // 150 points in 32-blocks: q = 5 geodesic panel tasks per run.
+    IsomapConfig {
+        k: 8,
+        d: 2,
+        block: 32,
+        geodesics: GeodesicsMode::SparseDijkstra,
+        ..Default::default()
+    }
+}
+
+fn spawn_workers(specs: &[WorkerOptions]) -> (Vec<WorkerHandle>, Vec<String>) {
+    let handles: Vec<WorkerHandle> = specs
+        .iter()
+        .map(|opts| worker::spawn("127.0.0.1:0", opts.clone()).expect("spawn worker"))
+        .collect();
+    let addrs = handles.iter().map(WorkerHandle::addr).collect();
+    (handles, addrs)
+}
+
+fn dist_cluster(addrs: Vec<String>, fault_rate: f64) -> ClusterConfig {
+    ClusterConfig {
+        dist_workers: addrs,
+        // Generous for CI, tiny against the 60 s default: a dead worker
+        // should fail the stage in seconds, not minutes.
+        dist_task_timeout_secs: 10.0,
+        fault_rate,
+        fault_seed: 11,
+        parallelism: 2,
+        ..ClusterConfig::local()
+    }
+}
+
+fn run(x: &Matrix, cfg: &IsomapConfig, cluster: &ClusterConfig) -> isomap::IsomapOutput {
+    isomap::run_with(x, cfg, cluster, &Backend::Native).expect("pipeline run")
+}
+
+fn assert_bits_eq(a: &Matrix, b: &Matrix, what: &str) {
+    assert_eq!((a.nrows(), a.ncols()), (b.nrows(), b.ncols()), "{what}: shape");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn embedding_is_bit_identical_across_process_counts() {
+    let ds = swiss_roll::euler_isometric(150, 23);
+    let cfg = sparse_cfg();
+    let local = run(&ds.points, &cfg, &ClusterConfig::local());
+    assert!(local.dist.is_none(), "single-process run must not report a dist stage");
+
+    for nworkers in [1usize, 2, 4] {
+        let (handles, addrs) = spawn_workers(&vec![WorkerOptions::default(); nworkers]);
+        let out = run(&ds.points, &cfg, &dist_cluster(addrs, 0.0));
+        assert_bits_eq(&out.embedding, &local.embedding, &format!("{nworkers} workers"));
+
+        let report = out.dist.expect("dist run must carry a DistReport");
+        assert_eq!(report.workers, nworkers);
+        assert_eq!(report.workers_lost, 0, "healthy fleet reported losses");
+        assert_eq!(report.tasks, 5, "q = ceil(150/32) panel tasks");
+        assert_eq!(report.retries, 0);
+        assert!(report.bytes_sent > 0 && report.bytes_received > 0, "{report:?}");
+        assert!(report.wall_secs > 0.0, "{report:?}");
+        // The measured wall sits next to a nonzero virtual projection of
+        // the same stage — the pairing the run report prints.
+        assert!(report.virtual_secs > 0.0, "{report:?}");
+        assert!(
+            out.metrics_table.contains("geo:dist"),
+            "no measured dist stage row:\n{}",
+            out.metrics_table
+        );
+        drop(handles);
+    }
+}
+
+#[test]
+fn fault_injection_composes_with_real_workers() {
+    // The PR 7 chaos schedule keys on (stage, task, attempt) and is
+    // decided on the driver, so the same faults hit the same tasks
+    // whether they execute in-process or across TCP — and the output
+    // stays bitwise clean.
+    let ds = swiss_roll::euler_isometric(150, 23);
+    let cfg = sparse_cfg();
+    let clean = run(&ds.points, &cfg, &ClusterConfig::local());
+
+    let (handles, addrs) = spawn_workers(&vec![WorkerOptions::default(); 2]);
+    let out = run(&ds.points, &cfg, &dist_cluster(addrs, 0.2));
+    assert_bits_eq(&out.embedding, &clean.embedding, "fault rate 0.2 over 2 workers");
+    assert!(
+        out.metrics_table.contains("resilience"),
+        "rate 0.2 must record injections:\n{}",
+        out.metrics_table
+    );
+    drop(handles);
+}
+
+#[test]
+fn dying_worker_mid_stage_recovers_bitwise() {
+    let ds = swiss_roll::euler_isometric(150, 23);
+    let cfg = sparse_cfg();
+    let clean = run(&ds.points, &cfg, &ClusterConfig::local());
+
+    // One worker executes a single task and then drops the connection
+    // without replying (simulated kill -9); two stay healthy. Placement
+    // is deterministic (SplitMix64 of the task id over the live set), so
+    // this is not a coin flip: over 3 workers the 5 panel tasks land as
+    // [_, {0,1,3}, {2,4}] — the dying worker sits at index 1, receives
+    // tasks 0, 1, 3 pipelined, completes task 0, and dies on task 1.
+    let (handles, addrs) = spawn_workers(&[
+        WorkerOptions::default(),
+        WorkerOptions { die_after_tasks: Some(1), ..Default::default() },
+        WorkerOptions::default(),
+    ]);
+    let out = run(&ds.points, &cfg, &dist_cluster(addrs, 0.0));
+    assert_bits_eq(&out.embedding, &clean.embedding, "one worker lost mid-stage");
+
+    let report = out.dist.expect("dist report");
+    assert!(report.workers_lost >= 1, "the dying worker was never declared lost: {report:?}");
+    assert!(report.retries >= 1, "its tasks were never requeued: {report:?}");
+    drop(handles);
+}
+
+#[test]
+fn losing_every_worker_fails_with_stage_context() {
+    let ds = swiss_roll::euler_isometric(150, 23);
+    let cfg = sparse_cfg();
+
+    // The only worker dies before finishing its first task: after the
+    // loss there is nowhere left to retry, and the run must fail with a
+    // typed error naming the stage — never a panic or a poisoned lock.
+    let (handles, addrs) =
+        spawn_workers(&[WorkerOptions { die_after_tasks: Some(0), ..Default::default() }]);
+    let err = isomap::run_with(&ds.points, &cfg, &dist_cluster(addrs, 0.0), &Backend::Native)
+        .expect_err("a fully dead fleet cannot complete the stage");
+    let msg = format!("{err:#}");
+    assert!(msg.contains("geo:dijkstra"), "stage context lost: {msg}");
+    assert!(msg.contains("workers lost"), "loss context lost: {msg}");
+    drop(handles);
+}
+
+#[test]
+fn dist_mode_requires_the_sparse_geodesics_path() {
+    let ds = swiss_roll::euler_isometric(96, 7);
+    let cfg = IsomapConfig { k: 8, d: 2, block: 32, ..Default::default() };
+    let (handles, addrs) = spawn_workers(&[WorkerOptions::default()]);
+    let err = isomap::run_with(&ds.points, &cfg, &dist_cluster(addrs, 0.0), &Backend::Native)
+        .expect_err("dense geodesics has no remote task vocabulary");
+    assert!(format!("{err:#}").contains("sparse-dijkstra"), "{err:#}");
+    drop(handles);
+}
