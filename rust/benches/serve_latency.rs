@@ -89,5 +89,48 @@ fn main() {
     handle.shutdown();
 
     isospark::bench::write_kernel_section("BENCH_serve.json", "serve_latency", cases);
+
+    // Soak ladder on a fresh autoscaling server: double the offered QPS
+    // until the replica stops keeping up, and record the knee of the
+    // latency/throughput curve (same shape `isospark bench-serve --soak`
+    // writes, so CI dashboards read one format).
+    let model = StreamingModel::fit(&ds.points, &cfg, m, &ClusterConfig::local(), &Backend::Native)
+        .expect("refit")
+        .into_model();
+    let handle = serve::start(
+        model,
+        None,
+        None,
+        &ServeConfig { threads_min: 1, threads_max: 4, ..ServeConfig::default() },
+    )
+    .expect("start soak server");
+    let addr = handle.addr();
+    let outcome =
+        client::soak(&addr, "/v1/embed", 25.0, 1600.0, 1.5, 4, &pool).expect("soak ladder");
+    let mut soak_cases: Vec<Json> = outcome.steps.iter().map(|s| s.to_json()).collect();
+    for s in &outcome.steps {
+        println!(
+            "soak @ {:>7.0} qps target: {:>7.1} achieved | p95 {:>9.1} µs | shed {:>4.1}%",
+            s.target_qps,
+            s.achieved_qps,
+            s.p95_us,
+            s.shed_fraction() * 100.0
+        );
+    }
+    println!(
+        "knee: {:.1} qps @ p95 {:.1} µs ({})",
+        outcome.knee_qps,
+        outcome.knee_p95_us,
+        if outcome.saturated { "saturated" } else { "qps ceiling reached" }
+    );
+    soak_cases.push(Json::obj(vec![
+        ("name", Json::str("knee")),
+        ("knee_qps", Json::num(outcome.knee_qps)),
+        ("knee_p95_us", Json::num(outcome.knee_p95_us)),
+        ("saturated", Json::Bool(outcome.saturated)),
+    ]));
+    handle.shutdown();
+
+    isospark::bench::write_kernel_section("BENCH_serve.json", "serve_soak", soak_cases);
     println!("wrote BENCH_serve.json");
 }

@@ -502,6 +502,119 @@ impl RawConfig {
             )?,
         })
     }
+
+    /// Assemble a [`ServeConfig`] from the `[serve]` section (validated).
+    pub fn serve(&self) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
+        let cfg = ServeConfig {
+            host: self.get("serve", "host").unwrap_or(&d.host).to_string(),
+            port: self.typed("serve", "port", d.port)?,
+            threads: self.typed("serve", "threads", d.threads)?,
+            threads_min: self.typed("serve", "threads_min", d.threads_min)?,
+            threads_max: self.typed("serve", "threads_max", d.threads_max)?,
+            max_batch: self.typed("serve", "max_batch", d.max_batch)?,
+            batch_min: self.typed("serve", "batch_min", d.batch_min)?,
+            target_p95_ms: self.typed("serve", "target_p95_ms", d.target_p95_ms)?,
+            max_queue: self.typed("serve", "max_queue", d.max_queue)?,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+}
+
+/// Configuration of the serve tier (`isospark serve` / `[serve]` section).
+///
+/// Two knob families layer over the legacy fixed-pool shape:
+///
+/// * **Pool autoscaling** — when `threads_max > 0` the worker pool floats
+///   between `threads_min..=threads_max` driven by queue depth and
+///   arrival rate; `threads` is ignored. When `threads_max == 0`
+///   (default) the pool is fixed at `threads` workers (0 = all cores),
+///   exactly the pre-autoscaling behavior.
+/// * **Adaptive micro-batching** — when `target_p95_ms > 0` the batch
+///   executor's drain cap floats between `batch_min..=max_batch`,
+///   shrinking while the windowed embed p95 is over target and growing
+///   while it is under half the target. `target_p95_ms == 0` pins the
+///   cap at `max_batch` (the pre-adaptive behavior).
+///
+/// Neither knob can change output bits: batch composition and pool size
+/// are invisible to `FittedModel::map_points_with`.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Interface to bind.
+    pub host: String,
+    /// TCP port; 0 picks an ephemeral port.
+    pub port: u16,
+    /// Fixed pool size when autoscaling is off (0 = all cores).
+    pub threads: usize,
+    /// Autoscale lower bound (only meaningful when `threads_max > 0`).
+    pub threads_min: usize,
+    /// Autoscale upper bound; 0 disables autoscaling.
+    pub threads_max: usize,
+    /// Ceiling on points drained into one pooled `map_points` call.
+    pub max_batch: usize,
+    /// Floor of the adaptive drain cap.
+    pub batch_min: usize,
+    /// Embed-latency p95 target (ms) for adaptive batching; 0 disables.
+    pub target_p95_ms: f64,
+    /// Accept-queue bound: queued embeds beyond this are shed. 0 sheds
+    /// every embed (useful to drain a replica out of rotation).
+    pub max_queue: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            host: "127.0.0.1".to_string(),
+            port: 0,
+            threads: 0,
+            threads_min: 0,
+            threads_max: 0,
+            max_batch: 1024,
+            batch_min: 32,
+            target_p95_ms: 50.0,
+            max_queue: 4096,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Resolved `(min, max)` worker-pool bounds. Fixed-pool mode
+    /// collapses both to the resolved `threads` count.
+    pub fn pool_bounds(&self) -> (usize, usize) {
+        if self.threads_max > 0 {
+            let min = self.threads_min.max(1);
+            (min, self.threads_max.max(min))
+        } else {
+            let w = crate::engine::executor::resolve_workers(self.threads);
+            (w, w)
+        }
+    }
+
+    /// Reject contradictory knob combinations before binding a socket.
+    pub fn validate(&self) -> Result<()> {
+        if self.threads_max > 0 && self.threads_min > self.threads_max {
+            anyhow::bail!(
+                "serve: threads_min ({}) must be <= threads_max ({})",
+                self.threads_min,
+                self.threads_max
+            );
+        }
+        if self.max_batch == 0 {
+            anyhow::bail!("serve: max_batch must be >= 1");
+        }
+        if self.batch_min == 0 || self.batch_min > self.max_batch {
+            anyhow::bail!(
+                "serve: batch_min ({}) must be in 1..=max_batch ({})",
+                self.batch_min,
+                self.max_batch
+            );
+        }
+        if !self.target_p95_ms.is_finite() || self.target_p95_ms < 0.0 {
+            anyhow::bail!("serve: target_p95_ms must be finite and >= 0");
+        }
+        Ok(())
+    }
 }
 
 /// Split a `host:port,host:port,...` list (config `[dist] workers` /
@@ -547,6 +660,48 @@ mod tests {
         let cl = raw.cluster().unwrap();
         assert_eq!(cl.nodes, 8);
         assert_eq!(cl.cores_per_node, 4);
+    }
+
+    #[test]
+    fn serve_section_overrides_defaults() {
+        let raw = RawConfig::parse(
+            "[serve]\nport = 8088\nthreads_min = 2\nthreads_max = 8\nbatch_min = 16\n\
+             max_batch = 512\ntarget_p95_ms = 25.5\nmax_queue = 100\n",
+        )
+        .unwrap();
+        let s = raw.serve().unwrap();
+        assert_eq!(s.port, 8088);
+        assert_eq!(s.pool_bounds(), (2, 8));
+        assert_eq!(s.batch_min, 16);
+        assert_eq!(s.max_batch, 512);
+        assert_eq!(s.target_p95_ms, 25.5);
+        assert_eq!(s.max_queue, 100);
+        assert_eq!(s.host, "127.0.0.1"); // default survives
+    }
+
+    #[test]
+    fn serve_validation_rejects_contradictions() {
+        let base = ServeConfig::default();
+        assert!(base.validate().is_ok());
+        let bad = ServeConfig { threads_min: 8, threads_max: 2, ..base.clone() };
+        assert!(bad.validate().is_err());
+        let bad = ServeConfig { batch_min: 0, ..base.clone() };
+        assert!(bad.validate().is_err());
+        let bad = ServeConfig { batch_min: 2048, max_batch: 1024, ..base.clone() };
+        assert!(bad.validate().is_err());
+        let bad = ServeConfig { target_p95_ms: f64::NAN, ..base.clone() };
+        assert!(bad.validate().is_err());
+        let raw = RawConfig::parse("[serve]\nthreads_min = 9\nthreads_max = 3\n").unwrap();
+        assert!(raw.serve().is_err());
+    }
+
+    #[test]
+    fn serve_pool_bounds_fixed_mode_collapses() {
+        let s = ServeConfig { threads: 3, ..Default::default() };
+        assert_eq!(s.pool_bounds(), (3, 3));
+        let auto = ServeConfig { threads_max: 6, ..Default::default() };
+        let (lo, hi) = auto.pool_bounds();
+        assert_eq!((lo, hi), (1, 6));
     }
 
     #[test]

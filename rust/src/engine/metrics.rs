@@ -135,6 +135,116 @@ impl ResidentPeak {
     }
 }
 
+/// Upper bounds (µs) of the [`LatencyHistogram`] buckets; one implicit
+/// overflow bucket follows the last bound.
+pub const LATENCY_BUCKETS_US: [u64; 12] =
+    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000];
+
+/// Thread-safe fixed-bucket latency histogram (relaxed atomics — this is
+/// monitoring data, not accounting the results depend on). One instance
+/// accumulates over its owner's lifetime; *windowed* views — the signal
+/// the serve tier's adaptive batching controller runs on — come from
+/// diffing two [`LatencySnapshot`]s taken at different times.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+    buckets: [AtomicU64; LATENCY_BUCKETS_US.len() + 1],
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation in microseconds.
+    pub fn record_us(&self, us: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+        let idx = LATENCY_BUCKETS_US
+            .iter()
+            .position(|&le| us <= le)
+            .unwrap_or(LATENCY_BUCKETS_US.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Point-in-time copy of every counter.
+    pub fn snapshot(&self) -> LatencySnapshot {
+        LatencySnapshot {
+            count: self.count.load(Ordering::Relaxed),
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            max_us: self.max_us.load(Ordering::Relaxed),
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Copy of a [`LatencyHistogram`]'s counters at a point in time. Two
+/// snapshots subtract into a *window* ([`LatencySnapshot::since`]), which
+/// is how controllers read "the p95 of the last interval" off a histogram
+/// that only ever accumulates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LatencySnapshot {
+    pub count: u64,
+    pub sum_us: u64,
+    pub max_us: u64,
+    pub buckets: [u64; LATENCY_BUCKETS_US.len() + 1],
+}
+
+impl LatencySnapshot {
+    /// The window between `earlier` and `self`: per-bucket count deltas.
+    /// Counters are monotone, so `saturating_sub` only guards against
+    /// reordered relaxed loads; `max_us` stays the cumulative maximum
+    /// (the buckets bound the window's tail on their own).
+    pub fn since(&self, earlier: &LatencySnapshot) -> LatencySnapshot {
+        LatencySnapshot {
+            count: self.count.saturating_sub(earlier.count),
+            sum_us: self.sum_us.saturating_sub(earlier.sum_us),
+            max_us: self.max_us,
+            buckets: std::array::from_fn(|i| {
+                self.buckets[i].saturating_sub(earlier.buckets[i])
+            }),
+        }
+    }
+
+    /// Mean of the recorded observations (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile: the upper bound of the bucket holding the
+    /// q-th observation (the observed max for the overflow bucket; 0 when
+    /// the snapshot is empty).
+    pub fn percentile_us(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                return match LATENCY_BUCKETS_US.get(i) {
+                    Some(&le) => le as f64,
+                    None => self.max_us as f64,
+                };
+            }
+        }
+        self.max_us as f64
+    }
+}
+
 /// The PJRT-eligible block operations, in display order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum OffloadOp {
@@ -397,6 +507,44 @@ mod tests {
         assert!(r.contains("total"), "{r}");
         assert!(!r.contains("gemmt"), "{r}");
         assert!(r.contains("coverage"), "{r}");
+    }
+
+    #[test]
+    fn latency_histogram_percentiles_and_windows() {
+        let h = LatencyHistogram::new();
+        for _ in 0..90 {
+            h.record_us(40); // bucket ≤ 50
+        }
+        for _ in 0..9 {
+            h.record_us(700); // bucket ≤ 1000
+        }
+        h.record_us(400_000); // overflow bucket
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.percentile_us(0.50), 50.0);
+        assert_eq!(s.percentile_us(0.95), 1_000.0);
+        assert_eq!(s.percentile_us(1.0), 400_000.0);
+        assert_eq!(s.max_us, 400_000);
+
+        // A window that only saw fast observations reports a fast p95
+        // even though the cumulative histogram carries the slow tail.
+        let before = h.snapshot();
+        for _ in 0..10 {
+            h.record_us(45);
+        }
+        let win = h.snapshot().since(&before);
+        assert_eq!(win.count, 10);
+        assert_eq!(win.percentile_us(0.95), 50.0);
+        assert_eq!(win.mean_us(), 45.0);
+    }
+
+    #[test]
+    fn empty_latency_snapshot_is_zero() {
+        let s = LatencyHistogram::new().snapshot();
+        assert_eq!(s.count, 0);
+        assert_eq!(s.percentile_us(0.95), 0.0);
+        assert_eq!(s.mean_us(), 0.0);
+        assert_eq!(s.since(&s), s);
     }
 
     #[test]

@@ -76,13 +76,22 @@ COMMANDS:
   emnist           Fig. 5: --n <pts> --k --d --block, reports factor corrs
   fit              fit a streaming model and save it: dataset options as
                    `run` plus --landmarks <m> --save <dir>
-  serve            serve a saved model over HTTP: --model <dir> --port <p>
-                   (0 = ephemeral) --threads <t> --max-batch <pts>
-                   --max-queue <reqs> (load shedding: max embed requests
-                   queued; beyond it /v1/embed answers 503 + Retry-After)
-                   --host <ip> --port-file <file>. Endpoints:
+  serve            serve saved models over HTTP: --model <dir> and/or
+                   --models name=dir,name=dir --port <p> (0 = ephemeral)
+                   --threads <t> | --threads-min <a> --threads-max <b>
+                   (pool autoscaling between a and b, driven by queue
+                   depth + arrival rate) --max-batch <pts> --batch-min
+                   <pts> --target-p95-ms <ms> (adaptive micro-batch cap:
+                   grows while the windowed p95 is under target, shrinks
+                   over it) --max-queue <reqs> (admission control: 429
+                   brown-out near capacity, 503 + Retry-After at it)
+                   --host <ip> --port-file <file> --config <file>
+                   ([serve] section; flags override). Endpoints:
                    POST /v1/embed {\"points\":[[..],..]}, GET /healthz,
-                   GET /metrics, POST /v1/reload {\"path\":\"<dir>\"}
+                   GET /metrics, POST /v1/reload {\"path\":\"<dir>\"},
+                   GET /v1/models, POST /v1/models/<name>/embed,
+                   POST /v1/models/<name>/reload,
+                   GET /v1/models/<name>/metrics
   worker           stage-task worker for distributed runs: --listen
                    <ip:port> (port 0 = ephemeral) --threads <t>
                    --port-file <file>; runs until killed, serving any
@@ -92,7 +101,12 @@ COMMANDS:
   bench-serve      loopback load generator against an in-process server:
                    [--model <dir>] --requests <n> --concurrency <c>
                    --points <per-request> [--json <file>]; reports
-                   p50/p95/p99 latency + QPS
+                   p50/p95/p99 latency + QPS. --soak holds a QPS target
+                   and doubles it (--qps <start> --qps-max <cap>
+                   --soak-secs <per-step>) until the server stops keeping
+                   up, writes the latency/throughput knee into
+                   BENCH_serve.json, and gates on served embeddings being
+                   bit-identical to in-process map_points
   info             --artifacts <dir>: artifact + environment report;
                    --model <dir>: inspect a saved model artifact manifest
                    (dims, landmark count, format version, file health);
@@ -108,7 +122,8 @@ fn main() {
         return;
     }
     let cmd = argv[0].clone();
-    let args = match Args::parse(argv[1..].to_vec(), &["calibrate", "lineage", "quiet", "smoke"]) {
+    let args = match Args::parse(argv[1..].to_vec(), &["calibrate", "lineage", "quiet", "smoke", "soak"])
+    {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n\n{USAGE}");
@@ -406,36 +421,68 @@ fn cmd_fit(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    use isospark::serve::{self, ServeConfig};
-    let model_path = args
-        .opt("model")
-        .ok_or_else(|| {
-            anyhow::anyhow!("serve requires --model <dir> (from `isospark fit --save`)")
-        })?;
-    let model = isospark::model::FittedModel::load(Path::new(model_path))
-        .with_context(|| format!("load model artifact {model_path}"))?;
-    let backend = backend_from(args)?;
-    let cfg = ServeConfig {
-        host: args.opt("host").unwrap_or("127.0.0.1").to_string(),
-        port: args.get("port", 8080u16).map_err(anyhow_str)?,
-        threads: args.get("threads", 0usize).map_err(anyhow_str)?,
-        max_batch: args.get("max-batch", 1024usize).map_err(anyhow_str)?,
-        max_queue: args.get("max-queue", 4096usize).map_err(anyhow_str)?,
+    use isospark::model::FittedModel;
+    use isospark::serve::{self, registry::Registry, ServeConfig};
+    // A --config [serve] section seeds the defaults; flags override it.
+    let mut cfg = match args.opt("config") {
+        Some(path) => RawConfig::load(Path::new(path))?.serve()?,
+        None => ServeConfig { port: 8080, ..ServeConfig::default() },
     };
-    let handle = serve::start(model, Some(PathBuf::from(model_path)), Some(backend), &cfg)?;
+    if let Some(h) = args.opt("host") {
+        cfg.host = h.to_string();
+    }
+    cfg.port = args.get("port", cfg.port).map_err(anyhow_str)?;
+    cfg.threads = args.get("threads", cfg.threads).map_err(anyhow_str)?;
+    cfg.threads_min = args.get("threads-min", cfg.threads_min).map_err(anyhow_str)?;
+    cfg.threads_max = args.get("threads-max", cfg.threads_max).map_err(anyhow_str)?;
+    cfg.max_batch = args.get("max-batch", cfg.max_batch).map_err(anyhow_str)?;
+    cfg.batch_min = args.get("batch-min", cfg.batch_min).map_err(anyhow_str)?;
+    cfg.target_p95_ms = args.get("target-p95-ms", cfg.target_p95_ms).map_err(anyhow_str)?;
+    cfg.max_queue = args.get("max-queue", cfg.max_queue).map_err(anyhow_str)?;
+    cfg.validate()?;
+    // --model <dir> registers "default"; --models name=dir,... adds (or,
+    // alone, provides) the named entries. The first entry is what the
+    // legacy /v1/embed and /v1/reload paths alias.
+    let mut entries: Vec<(String, FittedModel, Option<PathBuf>)> = Vec::new();
+    if let Some(model_path) = args.opt("model") {
+        let model = FittedModel::load(Path::new(model_path))
+            .with_context(|| format!("load model artifact {model_path}"))?;
+        entries.push(("default".to_string(), model, Some(PathBuf::from(model_path))));
+    }
+    if let Some(spec) = args.opt("models") {
+        for part in spec.split(',').filter(|s| !s.is_empty()) {
+            let (name, dir) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--models expects name=dir, got {part:?}"))?;
+            let model = FittedModel::load(Path::new(dir))
+                .with_context(|| format!("load model artifact {dir} for {name:?}"))?;
+            entries.push((name.to_string(), model, Some(PathBuf::from(dir))));
+        }
+    }
+    if entries.is_empty() {
+        bail!("serve requires --model <dir> and/or --models name=dir[,name=dir...]");
+    }
+    let registry = Registry::from_entries(entries).map_err(anyhow_str)?;
+    let backend = backend_from(args)?;
+    let handle = serve::start_registry(registry, Some(backend), &cfg)?;
+    let m = handle.model();
     println!(
-        "serving model {model_path} (n={} D={} m={} d={} k={}) on http://{}",
-        handle.model().n(),
-        handle.model().dim(),
-        handle.model().num_landmarks(),
-        handle.model().out_dim(),
-        handle.model().k(),
+        "serving {} model(s) [{}] (default: n={} D={} m={} d={} k={}) on http://{}",
+        handle.registry().entries().len(),
+        handle.registry().names().join(", "),
+        m.n(),
+        m.dim(),
+        m.num_landmarks(),
+        m.out_dim(),
+        m.k(),
         handle.addr()
     );
     println!("  POST /v1/embed   {{\"points\": [[..], ..]}} -> {{\"embedding\": [[..], ..]}}");
     println!("  GET  /healthz    liveness + model summary");
-    println!("  GET  /metrics    counters, latency histogram, batching, offload");
-    println!("  POST /v1/reload  {{\"path\": \"<dir>\"}} (default: the --model path)");
+    println!("  GET  /metrics    counters, latency histogram, batching, controllers, offload");
+    println!("  POST /v1/reload  {{\"path\": \"<dir>\"}} (default: the model's source path)");
+    println!("  GET  /v1/models  registered model names");
+    println!("  POST /v1/models/<name>/embed | /reload, GET /v1/models/<name>/metrics");
     if let Some(pf) = args.opt("port-file") {
         std::fs::write(pf, format!("{}\n", handle.port()))
             .with_context(|| format!("write port file {pf}"))?;
@@ -481,15 +528,14 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
     let model_dim = model.dim();
     let srv_cfg = ServeConfig {
         threads: args.get("threads", 0usize).map_err(anyhow_str)?,
+        threads_min: args.get("threads-min", 0usize).map_err(anyhow_str)?,
+        threads_max: args.get("threads-max", 0usize).map_err(anyhow_str)?,
         max_batch: args.get("max-batch", 1024usize).map_err(anyhow_str)?,
+        batch_min: args.get("batch-min", 32usize).map_err(anyhow_str)?,
+        target_p95_ms: args.get("target-p95-ms", 50.0f64).map_err(anyhow_str)?,
+        max_queue: args.get("max-queue", 4096usize).map_err(anyhow_str)?,
         ..ServeConfig::default()
     };
-    let handle = serve::start(model, None, None, &srv_cfg)?;
-    let addr = handle.addr();
-    println!(
-        "loopback server on {addr} | {concurrency} client(s) × {} request(s) × {points} point(s)",
-        requests.div_ceil(concurrency)
-    );
     let pool_n = (points * 4).max(256);
     let pool = data::by_name(dataset, pool_n, cfg.seed + 1)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset {dataset:?}"))?
@@ -498,6 +544,60 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
         pool.ncols() == model_dim,
         "query dataset D={} != model D={model_dim}; pass a matching --dataset",
         pool.ncols()
+    );
+    // Soak mode gates on bit-identity: the served embedding of a probe
+    // batch must match in-process map_points exactly, computed *before*
+    // the model moves into the server.
+    let probe = pool.slice(0, points.min(pool.nrows()), 0, pool.ncols());
+    let expected = if args.flag("soak") { Some(model.map_points(&probe)?) } else { None };
+    let handle = serve::start(model, None, None, &srv_cfg)?;
+    let addr = handle.addr();
+    if let Some(expected) = expected {
+        let served = client::embed(&addr, &probe)?;
+        for (i, (a, b)) in expected.as_slice().iter().zip(served.as_slice()).enumerate() {
+            anyhow::ensure!(
+                a.to_bits() == b.to_bits(),
+                "served embedding differs from in-process map_points at flat index {i}: {a} vs {b}"
+            );
+        }
+        println!("bit-identity gate passed: served probe == in-process map_points");
+        let qps: f64 = args.get("qps", 20.0f64).map_err(anyhow_str)?;
+        let qps_max: f64 = args.get("qps-max", 2000.0f64).map_err(anyhow_str)?;
+        let secs: f64 = args.get("soak-secs", 2.0f64).map_err(anyhow_str)?;
+        println!("soak: walking QPS ladder {qps} → {qps_max} ({secs}s per step) on {addr}");
+        let outcome = client::soak(&addr, "/v1/embed", qps, qps_max, secs, points, &pool)?;
+        for s in &outcome.steps {
+            println!(
+                "  target {:>8.1} qps | achieved {:>8.1} | p95 {:>9} | shed {:>5.1}% | errors {}",
+                s.target_qps,
+                s.achieved_qps,
+                human_duration(s.p95_us / 1e6),
+                s.shed_fraction() * 100.0,
+                s.errors
+            );
+        }
+        println!(
+            "knee: {:.1} qps @ p95 {} (saturated: {})",
+            outcome.knee_qps,
+            human_duration(outcome.knee_p95_us / 1e6),
+            outcome.saturated
+        );
+        let mut cases: Vec<Json> = outcome.steps.iter().map(client::PacedReport::to_json).collect();
+        cases.push(Json::obj(vec![
+            ("name", Json::str("knee")),
+            ("knee_qps", Json::num(outcome.knee_qps)),
+            ("knee_p95_us", Json::num(outcome.knee_p95_us)),
+            ("saturated", Json::Bool(outcome.saturated)),
+        ]));
+        let path = args.opt("json").unwrap_or("BENCH_serve.json");
+        isospark::bench::write_kernel_section(path, "serve_soak", cases);
+        println!("soak report written to {path}");
+        handle.shutdown();
+        return Ok(());
+    }
+    println!(
+        "loopback server on {addr} | {concurrency} client(s) × {} request(s) × {points} point(s)",
+        requests.div_ceil(concurrency)
     );
     let report =
         client::loopback_load(&addr, concurrency, requests.div_ceil(concurrency), points, &pool)?;

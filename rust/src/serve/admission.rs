@@ -1,0 +1,237 @@
+//! Admission control for the serve tier: the bounded accept queue's
+//! shedding policy.
+//!
+//! Every embed request passes through [`AdmissionController::decide`]
+//! while the caller holds the pending-queue lock (so the observed queue
+//! length cannot race the enqueue). Two watermarks:
+//!
+//! * **Hard** (`queue_len >= capacity`) — the queue is full; shed with
+//!   `503 Service Unavailable`. `capacity == 0` sheds every embed, which
+//!   is how a replica is drained out of rotation.
+//! * **Soft** (`queue_len >= soft_limit`, at ¾ capacity) — the queue is
+//!   approaching full; *brown out* by shedding every fourth request with
+//!   `429 Too Many Requests` so well-behaved clients back off before the
+//!   hard wall. The soft zone only exists for capacities ≥ 8 — tiny
+//!   queues (tests, drain mode) stay exactly binary.
+//!
+//! Both answers carry `Retry-After`, estimated from the batch executor's
+//! recently observed drain rate (requests/second, reported via
+//! [`AdmissionController::note_drained`]) — "the backlog ahead of you at
+//! the current drain rate", clamped to `1..=30` seconds.
+//!
+//! Shedding never touches accepted work: an admitted request is queued
+//! and embedded by the same batch path as under no load, so admission
+//! control cannot change output bits.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shed every Nth request inside the soft zone.
+const SOFT_SHED_PERIOD: u64 = 4;
+/// Soft zone exists only at or above this capacity.
+const SOFT_MIN_CAPACITY: usize = 8;
+/// `Retry-After` clamp (seconds).
+const RETRY_AFTER_MIN: u64 = 1;
+const RETRY_AFTER_MAX: u64 = 30;
+
+/// Outcome of an admission decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admission {
+    /// Enqueue the request.
+    Accept,
+    /// Reject with `status` (429 soft / 503 hard) and a `Retry-After`.
+    Shed { status: u16, retry_after_secs: u64 },
+}
+
+/// Bounded-accept-queue policy with relaxed-atomic counters (decisions
+/// are made under the queue lock; the counters are monitoring data).
+#[derive(Debug)]
+pub struct AdmissionController {
+    capacity: usize,
+    soft_limit: usize,
+    accepted: AtomicU64,
+    shed_soft: AtomicU64,
+    shed_hard: AtomicU64,
+    soft_clock: AtomicU64,
+    /// Recently observed drain rate, requests/second (gauge).
+    drain_rps: AtomicU64,
+}
+
+impl AdmissionController {
+    pub fn new(capacity: usize) -> Self {
+        let soft_limit = if capacity >= SOFT_MIN_CAPACITY {
+            (capacity * 3).div_ceil(4)
+        } else {
+            capacity
+        };
+        AdmissionController {
+            capacity,
+            soft_limit,
+            accepted: AtomicU64::new(0),
+            shed_soft: AtomicU64::new(0),
+            shed_hard: AtomicU64::new(0),
+            soft_clock: AtomicU64::new(0),
+            drain_rps: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Decide for one embed request given the current pending-queue
+    /// length. Call with the queue lock held.
+    pub fn decide(&self, queue_len: usize) -> Admission {
+        if queue_len >= self.capacity {
+            self.shed_hard.fetch_add(1, Ordering::Relaxed);
+            return Admission::Shed {
+                status: 503,
+                retry_after_secs: self.estimate_retry_after(queue_len),
+            };
+        }
+        if queue_len >= self.soft_limit {
+            let tick = self.soft_clock.fetch_add(1, Ordering::Relaxed);
+            if tick % SOFT_SHED_PERIOD == SOFT_SHED_PERIOD - 1 {
+                self.shed_soft.fetch_add(1, Ordering::Relaxed);
+                return Admission::Shed {
+                    status: 429,
+                    retry_after_secs: self.estimate_retry_after(queue_len),
+                };
+            }
+        }
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+        Admission::Accept
+    }
+
+    /// Report a drained batch so `Retry-After` tracks the real drain
+    /// rate. Called by the batch executor after each pooled embed.
+    pub fn note_drained(&self, requests: u64, wall_secs: f64) {
+        if wall_secs > 0.0 && requests > 0 {
+            let rps = (requests as f64 / wall_secs).round() as u64;
+            self.drain_rps.store(rps.max(1), Ordering::Relaxed);
+        }
+    }
+
+    /// Seconds until the current backlog clears at the observed drain
+    /// rate; 1 when no drain has been observed yet.
+    fn estimate_retry_after(&self, queue_len: usize) -> u64 {
+        let rps = self.drain_rps.load(Ordering::Relaxed);
+        if rps == 0 {
+            return RETRY_AFTER_MIN;
+        }
+        (queue_len as u64).div_ceil(rps).clamp(RETRY_AFTER_MIN, RETRY_AFTER_MAX)
+    }
+
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_soft(&self) -> u64 {
+        self.shed_soft.load(Ordering::Relaxed)
+    }
+
+    pub fn shed_hard(&self) -> u64 {
+        self.shed_hard.load(Ordering::Relaxed)
+    }
+
+    pub fn drain_rps(&self) -> u64 {
+        self.drain_rps.load(Ordering::Relaxed)
+    }
+
+    /// `/metrics` fragment.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("capacity", Json::num(self.capacity as f64)),
+            ("soft_limit", Json::num(self.soft_limit as f64)),
+            ("accepted", Json::num(self.accepted() as f64)),
+            ("shed_429", Json::num(self.shed_soft() as f64)),
+            ("shed_503", Json::num(self.shed_hard() as f64)),
+            ("drain_rps", Json::num(self.drain_rps() as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_capacity_sheds_everything_hard() {
+        let a = AdmissionController::new(0);
+        for len in 0..5 {
+            match a.decide(len) {
+                Admission::Shed { status: 503, retry_after_secs } => {
+                    assert!(retry_after_secs >= 1);
+                }
+                other => panic!("expected hard shed, got {other:?}"),
+            }
+        }
+        assert_eq!(a.shed_hard(), 5);
+        assert_eq!(a.accepted(), 0);
+    }
+
+    #[test]
+    fn small_capacity_is_binary() {
+        // capacity < 8: no soft zone — accept below, 503 at/above.
+        let a = AdmissionController::new(2);
+        assert_eq!(a.decide(0), Admission::Accept);
+        assert_eq!(a.decide(1), Admission::Accept);
+        match a.decide(2) {
+            Admission::Shed { status, .. } => assert_eq!(status, 503),
+            Admission::Accept => panic!("full queue must shed"),
+        }
+        assert_eq!(a.accepted(), 2);
+        assert_eq!(a.shed_soft(), 0);
+    }
+
+    #[test]
+    fn soft_zone_browns_out_every_fourth() {
+        let a = AdmissionController::new(16); // soft limit = 12
+        for _ in 0..8 {
+            assert_eq!(a.decide(4), Admission::Accept); // below soft zone
+        }
+        let mut soft = 0;
+        for _ in 0..8 {
+            if let Admission::Shed { status, .. } = a.decide(13) {
+                assert_eq!(status, 429);
+                soft += 1;
+            }
+        }
+        assert_eq!(soft, 2, "every 4th request in the soft zone sheds");
+        assert_eq!(a.shed_soft(), 2);
+        assert_eq!(a.shed_hard(), 0);
+    }
+
+    #[test]
+    fn retry_after_tracks_drain_rate() {
+        let a = AdmissionController::new(8);
+        // No drain observed yet: conservative 1s.
+        match a.decide(8) {
+            Admission::Shed { retry_after_secs, .. } => assert_eq!(retry_after_secs, 1),
+            Admission::Accept => panic!(),
+        }
+        // 2 requests/second observed: backlog of 8 → 4 seconds.
+        a.note_drained(4, 2.0);
+        assert_eq!(a.drain_rps(), 2);
+        match a.decide(8) {
+            Admission::Shed { retry_after_secs, .. } => assert_eq!(retry_after_secs, 4),
+            Admission::Accept => panic!(),
+        }
+        // Huge backlog still clamps at 30s.
+        match a.decide(1_000_000) {
+            Admission::Shed { retry_after_secs, .. } => assert_eq!(retry_after_secs, 30),
+            Admission::Accept => panic!(),
+        }
+    }
+
+    #[test]
+    fn metrics_json_has_counters() {
+        let a = AdmissionController::new(4);
+        let _ = a.decide(0);
+        let _ = a.decide(4);
+        let j = a.to_json();
+        assert_eq!(j.get("accepted").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("shed_503").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(j.get("capacity").and_then(|v| v.as_f64()), Some(4.0));
+    }
+}

@@ -1,0 +1,378 @@
+//! Feedback controllers for the serve tier: adaptive micro-batch sizing
+//! and worker-pool autoscaling.
+//!
+//! Both controllers are sampled by one control thread on a fixed
+//! interval ([`crate::serve::CONTROL_INTERVAL`]) and only ever *observe*
+//! monitoring data — the embed-latency histogram window and the queue
+//! depths. Neither can change output bits: the batch cap only decides
+//! how many queued requests share one pooled `map_points_with` call
+//! (per-row results are independent of batch composition), and the pool
+//! size only decides how many HTTP workers parse sockets.
+//!
+//! * [`BatchController`] — AIMD-flavored cap on rows drained per batch.
+//!   While the windowed p95 is above `target_p95_us` the cap halves
+//!   (shrink fast under pressure, down to `floor`); while it is below
+//!   half the target the cap doubles (grow back toward `ceiling`). An
+//!   idle window reads as p95 = 0 and therefore also grows — that is the
+//!   re-convergence path after a load spike passes.
+//! * [`PoolAutoscaler`] — ±1-worker steps between `min..=max`. Scale up
+//!   immediately when the observed backlog exceeds the effective worker
+//!   count; scale down only after `DOWN_COOLDOWN` consecutive
+//!   near-idle intervals (backlog ≤ 1 *and* embed arrival under
+//!   2 req/s), so a brief lull never thrashes the pool. Scale-down is
+//!   advisory: the serve loop turns it into a *retire ticket* a worker
+//!   consumes at its next idle wakeup.
+
+use crate::engine::metrics::LatencySnapshot;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+/// Consecutive near-idle control intervals before one scale-down step.
+pub const DOWN_COOLDOWN: u64 = 10;
+/// Arrival rate (embeds/second) below which an interval counts as idle.
+const IDLE_ARRIVAL_QPS: f64 = 2.0;
+/// Backlog at or below which an interval counts as idle (1 tolerates a
+/// monitoring client's own connection).
+const IDLE_BACKLOG: usize = 1;
+
+/// What the batch controller did with its cap this window.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchDecision {
+    Grow(usize),
+    Shrink(usize),
+    Hold,
+}
+
+/// Adaptive drain-cap controller. `cap()` is read by the batch executor
+/// before every drain; `observe_window` is called by the control thread
+/// with the latency histogram's last window.
+#[derive(Debug)]
+pub struct BatchController {
+    floor: usize,
+    ceiling: usize,
+    /// 0 disables adaptation (cap pinned at `ceiling`).
+    target_p95_us: u64,
+    cap: AtomicUsize,
+    grows: AtomicU64,
+    shrinks: AtomicU64,
+    windows: AtomicU64,
+    last_window_p95_us: AtomicU64,
+}
+
+impl BatchController {
+    /// `target_p95_ms == 0` disables adaptation. The cap starts at the
+    /// ceiling — the legacy fixed-cap behavior — and only moves once
+    /// latency evidence says it should.
+    pub fn new(floor: usize, ceiling: usize, target_p95_ms: f64) -> Self {
+        let ceiling = ceiling.max(1);
+        let floor = floor.clamp(1, ceiling);
+        BatchController {
+            floor,
+            ceiling,
+            target_p95_us: (target_p95_ms * 1_000.0).round() as u64,
+            cap: AtomicUsize::new(ceiling),
+            grows: AtomicU64::new(0),
+            shrinks: AtomicU64::new(0),
+            windows: AtomicU64::new(0),
+            last_window_p95_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Rows the batch executor may drain into one pooled call right now.
+    pub fn cap(&self) -> usize {
+        self.cap.load(Ordering::Relaxed)
+    }
+
+    pub fn floor(&self) -> usize {
+        self.floor
+    }
+
+    pub fn ceiling(&self) -> usize {
+        self.ceiling
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.target_p95_us > 0
+    }
+
+    /// Feed one control-interval window of the embed-latency histogram.
+    pub fn observe_window(&self, window: &LatencySnapshot) -> BatchDecision {
+        if !self.enabled() {
+            return BatchDecision::Hold;
+        }
+        self.windows.fetch_add(1, Ordering::Relaxed);
+        let p95 = if window.count == 0 { 0.0 } else { window.percentile_us(0.95) };
+        self.last_window_p95_us.store(p95 as u64, Ordering::Relaxed);
+        let cur = self.cap.load(Ordering::Relaxed);
+        if p95 > self.target_p95_us as f64 {
+            let next = (cur / 2).max(self.floor);
+            if next != cur {
+                self.cap.store(next, Ordering::Relaxed);
+                self.shrinks.fetch_add(1, Ordering::Relaxed);
+                return BatchDecision::Shrink(next);
+            }
+        } else if p95 * 2.0 < self.target_p95_us as f64 {
+            let next = (cur * 2).min(self.ceiling);
+            if next != cur {
+                self.cap.store(next, Ordering::Relaxed);
+                self.grows.fetch_add(1, Ordering::Relaxed);
+                return BatchDecision::Grow(next);
+            }
+        }
+        BatchDecision::Hold
+    }
+
+    /// `/metrics` fragment.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.enabled())),
+            ("cap", Json::num(self.cap() as f64)),
+            ("floor", Json::num(self.floor as f64)),
+            ("ceiling", Json::num(self.ceiling as f64)),
+            ("target_p95_us", Json::num(self.target_p95_us as f64)),
+            (
+                "last_window_p95_us",
+                Json::num(self.last_window_p95_us.load(Ordering::Relaxed) as f64),
+            ),
+            ("grows", Json::num(self.grows.load(Ordering::Relaxed) as f64)),
+            ("shrinks", Json::num(self.shrinks.load(Ordering::Relaxed) as f64)),
+            ("windows", Json::num(self.windows.load(Ordering::Relaxed) as f64)),
+        ])
+    }
+}
+
+/// What the pool autoscaler asks the serve loop to do this interval.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Spawn one worker.
+    Up,
+    /// Issue one retire ticket.
+    Down,
+    Hold,
+}
+
+/// ±1-step worker-pool controller between `min..=max`.
+#[derive(Debug)]
+pub struct PoolAutoscaler {
+    min: usize,
+    max: usize,
+    idle_intervals: AtomicU64,
+    scale_ups: AtomicU64,
+    scale_downs: AtomicU64,
+    /// Gauges for `/metrics` (arrival stored as milli-qps).
+    last_backlog: AtomicU64,
+    last_arrival_mqps: AtomicU64,
+}
+
+impl PoolAutoscaler {
+    pub fn new(min: usize, max: usize) -> Self {
+        let min = min.max(1);
+        PoolAutoscaler {
+            min,
+            max: max.max(min),
+            idle_intervals: AtomicU64::new(0),
+            scale_ups: AtomicU64::new(0),
+            scale_downs: AtomicU64::new(0),
+            last_backlog: AtomicU64::new(0),
+            last_arrival_mqps: AtomicU64::new(0),
+        }
+    }
+
+    pub fn bounds(&self) -> (usize, usize) {
+        (self.min, self.max)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.max > self.min
+    }
+
+    /// One control interval: `active` live workers of which
+    /// `pending_retires` already hold a ticket, `backlog` connections +
+    /// queued embeds awaiting a worker, `arrival_qps` embed requests per
+    /// second over the interval.
+    pub fn observe(
+        &self,
+        active: usize,
+        pending_retires: usize,
+        backlog: usize,
+        arrival_qps: f64,
+    ) -> ScaleDecision {
+        self.last_backlog.store(backlog as u64, Ordering::Relaxed);
+        self.last_arrival_mqps.store((arrival_qps * 1_000.0) as u64, Ordering::Relaxed);
+        if !self.enabled() {
+            return ScaleDecision::Hold;
+        }
+        let effective = active.saturating_sub(pending_retires).max(self.min.min(active));
+        if backlog > effective && effective < self.max {
+            self.idle_intervals.store(0, Ordering::Relaxed);
+            self.scale_ups.fetch_add(1, Ordering::Relaxed);
+            return ScaleDecision::Up;
+        }
+        if backlog <= IDLE_BACKLOG && arrival_qps < IDLE_ARRIVAL_QPS {
+            let idle = self.idle_intervals.fetch_add(1, Ordering::Relaxed) + 1;
+            if idle >= DOWN_COOLDOWN && effective > self.min {
+                self.idle_intervals.store(0, Ordering::Relaxed);
+                self.scale_downs.fetch_add(1, Ordering::Relaxed);
+                return ScaleDecision::Down;
+            }
+        } else {
+            self.idle_intervals.store(0, Ordering::Relaxed);
+        }
+        ScaleDecision::Hold
+    }
+
+    /// `/metrics` fragment; `active`/`pending_retires` live in the serve
+    /// loop, so the caller passes them in.
+    pub fn to_json(&self, active: usize, pending_retires: usize) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.enabled())),
+            ("min", Json::num(self.min as f64)),
+            ("max", Json::num(self.max as f64)),
+            ("active", Json::num(active as f64)),
+            ("pending_retires", Json::num(pending_retires as f64)),
+            ("scale_ups", Json::num(self.scale_ups.load(Ordering::Relaxed) as f64)),
+            ("scale_downs", Json::num(self.scale_downs.load(Ordering::Relaxed) as f64)),
+            ("last_backlog", Json::num(self.last_backlog.load(Ordering::Relaxed) as f64)),
+            (
+                "last_arrival_qps",
+                Json::num(self.last_arrival_mqps.load(Ordering::Relaxed) as f64 / 1_000.0),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::metrics::LatencyHistogram;
+
+    fn window_with(lat_us: u64, count: usize) -> LatencySnapshot {
+        let h = LatencyHistogram::new();
+        for _ in 0..count {
+            h.record_us(lat_us);
+        }
+        h.snapshot()
+    }
+
+    #[test]
+    fn batch_cap_shrinks_under_pressure_to_floor() {
+        let c = BatchController::new(4, 64, 1.0); // target p95 = 1000µs
+        assert_eq!(c.cap(), 64, "starts at ceiling");
+        let slow = window_with(5_000, 100); // p95 = 5000µs > target
+        assert_eq!(c.observe_window(&slow), BatchDecision::Shrink(32));
+        assert_eq!(c.observe_window(&slow), BatchDecision::Shrink(16));
+        assert_eq!(c.observe_window(&slow), BatchDecision::Shrink(8));
+        assert_eq!(c.observe_window(&slow), BatchDecision::Shrink(4));
+        // Clamped at the floor: further pressure holds.
+        assert_eq!(c.observe_window(&slow), BatchDecision::Hold);
+        assert_eq!(c.cap(), 4);
+    }
+
+    #[test]
+    fn batch_cap_regrows_when_fast_or_idle() {
+        let c = BatchController::new(4, 64, 1.0);
+        let slow = window_with(5_000, 100);
+        while c.observe_window(&slow) != BatchDecision::Hold {}
+        assert_eq!(c.cap(), 4);
+        // Fast windows (p95 < target/2) double the cap back up...
+        let fast = window_with(100, 100); // p95 = 100µs, 2·100 < 1000
+        assert_eq!(c.observe_window(&fast), BatchDecision::Grow(8));
+        // ...and so do idle windows (p95 reads as 0) — re-convergence.
+        let idle = LatencyHistogram::new().snapshot();
+        assert_eq!(c.observe_window(&idle), BatchDecision::Grow(16));
+        assert_eq!(c.observe_window(&idle), BatchDecision::Grow(32));
+        assert_eq!(c.observe_window(&idle), BatchDecision::Grow(64));
+        assert_eq!(c.observe_window(&idle), BatchDecision::Hold);
+        assert_eq!(c.cap(), 64);
+    }
+
+    #[test]
+    fn batch_cap_holds_in_the_dead_band() {
+        let c = BatchController::new(4, 64, 1.0);
+        // p95 = 1000µs: not above target, not below half of it.
+        let mid = window_with(700, 100); // bucket upper bound 1000µs
+        assert_eq!(c.observe_window(&mid), BatchDecision::Hold);
+        assert_eq!(c.cap(), 64);
+    }
+
+    #[test]
+    fn disabled_controller_pins_cap_at_ceiling() {
+        let c = BatchController::new(4, 64, 0.0);
+        assert!(!c.enabled());
+        let slow = window_with(5_000, 100);
+        assert_eq!(c.observe_window(&slow), BatchDecision::Hold);
+        assert_eq!(c.cap(), 64);
+    }
+
+    #[test]
+    fn pool_scales_up_on_backlog_within_bounds() {
+        let s = PoolAutoscaler::new(1, 4);
+        // Backlog above the worker count: up, repeatedly, until max.
+        assert_eq!(s.observe(1, 0, 8, 100.0), ScaleDecision::Up);
+        assert_eq!(s.observe(2, 0, 8, 100.0), ScaleDecision::Up);
+        assert_eq!(s.observe(3, 0, 8, 100.0), ScaleDecision::Up);
+        // At max: hold even with backlog.
+        assert_eq!(s.observe(4, 0, 8, 100.0), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn pool_scales_down_only_after_cooldown() {
+        let s = PoolAutoscaler::new(1, 4);
+        for i in 0..DOWN_COOLDOWN - 1 {
+            assert_eq!(s.observe(4, 0, 0, 0.0), ScaleDecision::Hold, "interval {i}");
+        }
+        assert_eq!(s.observe(4, 0, 0, 0.0), ScaleDecision::Down);
+        // Counter reset: the next step-down needs a full cooldown again.
+        assert_eq!(s.observe(3, 1, 0, 0.0), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn busy_interval_resets_the_idle_counter() {
+        let s = PoolAutoscaler::new(1, 4);
+        for _ in 0..DOWN_COOLDOWN - 1 {
+            assert_eq!(s.observe(2, 0, 0, 0.0), ScaleDecision::Hold);
+        }
+        // A burst of arrivals (no backlog yet) resets the cooldown.
+        assert_eq!(s.observe(2, 0, 1, 50.0), ScaleDecision::Hold);
+        for _ in 0..DOWN_COOLDOWN - 1 {
+            assert_eq!(s.observe(2, 0, 0, 0.0), ScaleDecision::Hold);
+        }
+        assert_eq!(s.observe(2, 0, 0, 0.0), ScaleDecision::Down);
+    }
+
+    #[test]
+    fn pool_never_retires_below_min() {
+        let s = PoolAutoscaler::new(2, 4);
+        for _ in 0..DOWN_COOLDOWN * 3 {
+            let d = s.observe(2, 0, 0, 0.0);
+            assert_eq!(d, ScaleDecision::Hold, "at min, never Down");
+        }
+        // Pending retires count against the effective size.
+        for _ in 0..DOWN_COOLDOWN * 3 {
+            let d = s.observe(3, 1, 0, 0.0);
+            assert_eq!(d, ScaleDecision::Hold, "3 active - 1 retiring = min");
+        }
+    }
+
+    #[test]
+    fn fixed_pool_is_inert() {
+        let s = PoolAutoscaler::new(4, 4);
+        assert!(!s.enabled());
+        assert_eq!(s.observe(4, 0, 100, 1e6), ScaleDecision::Hold);
+        for _ in 0..DOWN_COOLDOWN * 2 {
+            assert_eq!(s.observe(4, 0, 0, 0.0), ScaleDecision::Hold);
+        }
+    }
+
+    #[test]
+    fn monitoring_client_does_not_block_scale_down() {
+        // A /metrics poller keeps ~1 connection around: backlog 1 with
+        // no embed arrivals must still count as idle.
+        let s = PoolAutoscaler::new(1, 4);
+        for _ in 0..DOWN_COOLDOWN - 1 {
+            assert_eq!(s.observe(3, 0, 1, 0.5), ScaleDecision::Hold);
+        }
+        assert_eq!(s.observe(3, 0, 1, 0.5), ScaleDecision::Down);
+    }
+}

@@ -9,7 +9,7 @@ use crate::util::json::Json;
 use anyhow::{anyhow, bail, Context, Result};
 use std::io::{Read, Write};
 use std::net::TcpStream;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One keep-alive connection to the server.
 pub struct Conn {
@@ -31,6 +31,18 @@ impl Conn {
         path: &str,
         body: Option<&str>,
     ) -> Result<(u16, String)> {
+        let r = self.request_response(method, path, body)?;
+        Ok((r.status, r.body))
+    }
+
+    /// Issue one request and read the full response including headers
+    /// (needed by load-shedding clients that honor `Retry-After`).
+    pub fn request_response(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<Response> {
         let b = body.unwrap_or("");
         let head = format!(
             "{method} {path} HTTP/1.1\r\nHost: isospark\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n",
@@ -39,9 +51,9 @@ impl Conn {
         self.stream.write_all(head.as_bytes()).context("send request head")?;
         self.stream.write_all(b.as_bytes()).context("send request body")?;
         loop {
-            if let Some((code, body, used)) = parse_response(&self.buf)? {
+            if let Some((resp, used)) = parse_response_full(&self.buf)? {
                 self.buf.drain(..used);
-                return Ok((code, body));
+                return Ok(resp);
             }
             let mut tmp = [0u8; 8192];
             let n = self.stream.read(&mut tmp).context("read response")?;
@@ -53,9 +65,29 @@ impl Conn {
     }
 }
 
+/// One parsed HTTP response: status, headers (names lower-cased), body.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl Response {
+    /// First header with the given (lower-case) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str())
+    }
+}
+
 /// Parse one complete response (status + content-length body) from the
 /// front of `buf`; `None` when incomplete.
 fn parse_response(buf: &[u8]) -> Result<Option<(u16, String, usize)>> {
+    Ok(parse_response_full(buf)?.map(|(r, used)| (r.status, r.body, used)))
+}
+
+/// [`parse_response`] keeping the headers.
+fn parse_response_full(buf: &[u8]) -> Result<Option<(Response, usize)>> {
     let Some(head_end) = buf.windows(4).position(|w| w == b"\r\n\r\n") else {
         return Ok(None);
     };
@@ -67,12 +99,16 @@ fn parse_response(buf: &[u8]) -> Result<Option<(u16, String, usize)>> {
         .nth(1)
         .and_then(|c| c.parse().ok())
         .ok_or_else(|| anyhow!("bad status line {status_line:?}"))?;
+    let mut headers = Vec::new();
     let mut body_len = 0usize;
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
-                body_len = value.trim().parse().context("bad Content-Length")?;
+            let name = name.trim().to_ascii_lowercase();
+            let value = value.trim().to_string();
+            if name == "content-length" {
+                body_len = value.parse().context("bad Content-Length")?;
             }
+            headers.push((name, value));
         }
     }
     let total = head_end + 4 + body_len;
@@ -80,7 +116,7 @@ fn parse_response(buf: &[u8]) -> Result<Option<(u16, String, usize)>> {
         return Ok(None);
     }
     let body = String::from_utf8_lossy(&buf[head_end + 4..total]).into_owned();
-    Ok(Some((code, body, total)))
+    Ok(Some((Response { status: code, headers, body }, total)))
 }
 
 /// `GET path` on a fresh connection, parsing the JSON body.
@@ -101,16 +137,28 @@ pub fn post_json(addr: &str, path: &str, body: &Json) -> Result<(u16, Json)> {
     Ok((code, j))
 }
 
-/// Embed `pts` over an existing connection.
-pub fn embed_on(conn: &mut Conn, pts: &Matrix) -> Result<Matrix> {
+/// Embed `pts` over an existing connection via `path` (the legacy
+/// `/v1/embed` or a model-scoped `/v1/models/<name>/embed`).
+pub fn embed_path_on(conn: &mut Conn, path: &str, pts: &Matrix) -> Result<Matrix> {
     let body = Json::obj(vec![("points", matrix_to_json(pts))]).to_string();
-    let (code, text) = conn.request("POST", "/v1/embed", Some(&body))?;
+    let (code, text) = conn.request("POST", path, Some(&body))?;
     if code != 200 {
         bail!("embed failed with status {code}: {text:.200}");
     }
     let j = Json::parse(&text).map_err(|e| anyhow!("bad embed response: {e}"))?;
     let emb = j.get("embedding").ok_or_else(|| anyhow!("embed response missing \"embedding\""))?;
     matrix_from_json(emb).map_err(|e| anyhow!("bad embedding matrix: {e}"))
+}
+
+/// Embed `pts` over an existing connection (legacy default-model path).
+pub fn embed_on(conn: &mut Conn, pts: &Matrix) -> Result<Matrix> {
+    embed_path_on(conn, "/v1/embed", pts)
+}
+
+/// Embed `pts` against the named model on a fresh connection.
+pub fn embed_model(addr: &str, model: &str, pts: &Matrix) -> Result<Matrix> {
+    let mut c = Conn::connect(addr)?;
+    embed_path_on(&mut c, &format!("/v1/models/{model}/embed"), pts)
 }
 
 /// Embed `pts` on a fresh connection.
@@ -210,6 +258,251 @@ pub fn loopback_load(
     })
 }
 
+/// One step of paced (open-loop) load: requests are launched on a fixed
+/// schedule derived from `target_qps` rather than back-to-back, so the
+/// offered load is controlled even when the server slows down — the gap
+/// between offered and achieved QPS is exactly the saturation signal the
+/// soak ladder looks for.
+#[derive(Clone, Debug)]
+pub struct PacedReport {
+    pub target_qps: f64,
+    pub wall_secs: f64,
+    /// Requests that got any HTTP response.
+    pub sent: usize,
+    pub ok: usize,
+    /// 429/503 rejections.
+    pub shed: usize,
+    /// Transport failures + unexpected statuses.
+    pub errors: usize,
+    /// Successful embeds per second.
+    pub achieved_qps: f64,
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub max_us: f64,
+    /// Whether every observed rejection carried a `Retry-After` header.
+    pub shed_has_retry_after: bool,
+}
+
+impl PacedReport {
+    pub fn shed_fraction(&self) -> f64 {
+        if self.sent == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.sent as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("target_qps", Json::num(self.target_qps)),
+            ("achieved_qps", Json::num(self.achieved_qps)),
+            ("wall_secs", Json::num(self.wall_secs)),
+            ("sent", Json::num(self.sent as f64)),
+            ("ok", Json::num(self.ok as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("shed_fraction", Json::num(self.shed_fraction())),
+            ("mean_us", Json::num(self.mean_us)),
+            ("p50_us", Json::num(self.p50_us)),
+            ("p95_us", Json::num(self.p95_us)),
+            ("p99_us", Json::num(self.p99_us)),
+            ("max_us", Json::num(self.max_us)),
+        ])
+    }
+}
+
+#[derive(Default)]
+struct ClientTally {
+    sent: usize,
+    ok: usize,
+    shed: usize,
+    errors: usize,
+    lats_us: Vec<f64>,
+    all_shed_had_retry_after: bool,
+    saw_shed: bool,
+}
+
+/// Hold `target_qps` of embed load against `path` for `secs` seconds.
+/// Pacing is spread over enough client threads that one slow response
+/// does not stall the whole schedule; a client whose connection dies
+/// reconnects and keeps pacing. Shed responses (429/503) are counted,
+/// not retried — the ladder wants to *see* the shed rate.
+pub fn paced_load(
+    addr: &str,
+    path: &str,
+    target_qps: f64,
+    secs: f64,
+    pts_per_request: usize,
+    pool: &Matrix,
+) -> Result<PacedReport> {
+    if pool.nrows() < pts_per_request {
+        bail!("query pool has {} rows < {pts_per_request} per request", pool.nrows());
+    }
+    if !(target_qps > 0.0) || !(secs > 0.0) {
+        bail!("paced load needs positive target_qps and secs");
+    }
+    let span = pool.nrows() - pts_per_request + 1;
+    // ~5 in-flight-capable requests per client keeps pacing honest up to
+    // a few hundred ms of per-request latency.
+    let clients = ((target_qps / 5.0).ceil() as usize).clamp(1, 32);
+    let interval = clients as f64 / target_qps;
+    let sw = Instant::now();
+    let per_client: Vec<Result<ClientTally>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || -> Result<ClientTally> {
+                    let mut conn = Conn::connect(addr)?;
+                    let mut t =
+                        ClientTally { all_shed_had_retry_after: true, ..ClientTally::default() };
+                    let start = Instant::now();
+                    // Stagger client schedules across one interval.
+                    let mut next = interval * c as f64 / clients as f64;
+                    let mut r = 0usize;
+                    while start.elapsed().as_secs_f64() < secs {
+                        let now = start.elapsed().as_secs_f64();
+                        if now < next {
+                            std::thread::sleep(Duration::from_secs_f64((next - now).min(0.05)));
+                            continue;
+                        }
+                        next += interval;
+                        let off = (c * 131 + r * pts_per_request) % span;
+                        r += 1;
+                        let pts = pool.slice(off, off + pts_per_request, 0, pool.ncols());
+                        let body =
+                            Json::obj(vec![("points", matrix_to_json(&pts))]).to_string();
+                        let t0 = Instant::now();
+                        match conn.request_response("POST", path, Some(&body)) {
+                            Ok(resp) => {
+                                t.sent += 1;
+                                match resp.status {
+                                    200 => {
+                                        t.ok += 1;
+                                        t.lats_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                                    }
+                                    429 | 503 => {
+                                        t.shed += 1;
+                                        t.saw_shed = true;
+                                        if resp.header("retry-after").is_none() {
+                                            t.all_shed_had_retry_after = false;
+                                        }
+                                    }
+                                    _ => t.errors += 1,
+                                }
+                            }
+                            Err(_) => {
+                                // Connection killed (stall cutoff, server
+                                // stopping): reconnect and keep pacing.
+                                t.errors += 1;
+                                match Conn::connect(addr) {
+                                    Ok(fresh) => conn = fresh,
+                                    Err(_) => break,
+                                }
+                            }
+                        }
+                    }
+                    Ok(t)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("paced client panicked"))))
+            .collect()
+    });
+    let wall = sw.elapsed().as_secs_f64();
+    let mut agg = ClientTally { all_shed_had_retry_after: true, ..ClientTally::default() };
+    for r in per_client {
+        let t = r.context("paced load client failed")?;
+        agg.sent += t.sent;
+        agg.ok += t.ok;
+        agg.shed += t.shed;
+        agg.errors += t.errors;
+        agg.saw_shed |= t.saw_shed;
+        agg.all_shed_had_retry_after &= t.all_shed_had_retry_after;
+        agg.lats_us.extend(t.lats_us);
+    }
+    agg.lats_us.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let n = agg.lats_us.len();
+    Ok(PacedReport {
+        target_qps,
+        wall_secs: wall,
+        sent: agg.sent,
+        ok: agg.ok,
+        shed: agg.shed,
+        errors: agg.errors,
+        achieved_qps: if wall > 0.0 { agg.ok as f64 / wall } else { 0.0 },
+        mean_us: if n == 0 { 0.0 } else { agg.lats_us.iter().sum::<f64>() / n as f64 },
+        p50_us: percentile(&agg.lats_us, 0.50),
+        p95_us: percentile(&agg.lats_us, 0.95),
+        p99_us: percentile(&agg.lats_us, 0.99),
+        max_us: agg.lats_us.last().copied().unwrap_or(0.0),
+        shed_has_retry_after: !agg.saw_shed || agg.all_shed_had_retry_after,
+    })
+}
+
+/// Result of walking the QPS ladder: every step, plus the knee — the last
+/// rung the server held *healthily* (achieved ≥ 90% of offered, shed ≤ 5%).
+#[derive(Clone, Debug)]
+pub struct SoakOutcome {
+    pub steps: Vec<PacedReport>,
+    /// Achieved QPS at the knee (0 when even the first rung collapsed).
+    pub knee_qps: f64,
+    /// Client-side p95 latency (µs) at the knee.
+    pub knee_p95_us: f64,
+    /// True when the ladder ended by overload rather than by `qps_max`.
+    pub saturated: bool,
+}
+
+impl SoakOutcome {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("knee_qps", Json::num(self.knee_qps)),
+            ("knee_p95_us", Json::num(self.knee_p95_us)),
+            ("saturated", Json::Bool(self.saturated)),
+            ("steps", Json::arr(self.steps.iter().map(PacedReport::to_json).collect())),
+        ])
+    }
+}
+
+/// Soak the server: hold `start_qps` for `secs_per_step`, then double the
+/// offered load until either the server stops keeping up (achieved < 90%
+/// of offered, or > 5% shed) or `qps_max` is reached. The knee of the
+/// latency/throughput curve is the last healthy rung.
+pub fn soak(
+    addr: &str,
+    path: &str,
+    start_qps: f64,
+    qps_max: f64,
+    secs_per_step: f64,
+    pts_per_request: usize,
+    pool: &Matrix,
+) -> Result<SoakOutcome> {
+    let mut steps: Vec<PacedReport> = Vec::new();
+    let mut qps = start_qps.max(1.0);
+    let mut knee: Option<(f64, f64)> = None;
+    let mut saturated = false;
+    loop {
+        let step = paced_load(addr, path, qps, secs_per_step, pts_per_request, pool)?;
+        let healthy = step.achieved_qps >= 0.9 * step.target_qps && step.shed_fraction() <= 0.05;
+        let (aq, p95) = (step.achieved_qps, step.p95_us);
+        steps.push(step);
+        if healthy {
+            knee = Some((aq, p95));
+        } else {
+            saturated = true;
+            break;
+        }
+        if qps >= qps_max {
+            break;
+        }
+        qps = (qps * 2.0).min(qps_max);
+    }
+    let (knee_qps, knee_p95_us) = knee.unwrap_or((0.0, 0.0));
+    Ok(SoakOutcome { steps, knee_qps, knee_p95_us, saturated })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,5 +518,15 @@ mod tests {
             .unwrap()
             .is_none());
         assert!(parse_response(b"GARBAGE\r\n\r\n").is_err());
+    }
+
+    #[test]
+    fn parse_response_full_keeps_headers() {
+        let raw = b"HTTP/1.1 503 Service Unavailable\r\nRetry-After: 7\r\nContent-Length: 2\r\n\r\n{}";
+        let (resp, used) = parse_response_full(raw).unwrap().unwrap();
+        assert_eq!(resp.status, 503);
+        assert_eq!(resp.header("retry-after"), Some("7"));
+        assert_eq!(resp.body, "{}");
+        assert_eq!(used, raw.len());
     }
 }

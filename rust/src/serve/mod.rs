@@ -1,4 +1,4 @@
-//! `isospark serve` — an embedding server over a saved [`FittedModel`].
+//! `isospark serve` — an embedding server over saved [`FittedModel`]s.
 //!
 //! The ROADMAP's north star is a fitted manifold that *outlives* the O(n³)
 //! batch job and serves projections to clients. This module is that layer:
@@ -6,88 +6,79 @@
 //! framing hand-rolled in [`http`], as `util::json` hand-rolls JSON)
 //! exposing
 //!
-//! * `POST /v1/embed` — `{"points": [[…],…]}` → `{"embedding": [[…],…]}`,
-//!   bit-identical to calling [`FittedModel::map_points`] in-process;
-//! * `GET  /healthz` — liveness + model summary;
-//! * `GET  /metrics` — request counters, embed latency histogram with
-//!   approximate p50/p95/p99, QPS, micro-batching stats, and (when the
-//!   server was started with a PJRT backend) the per-op offload-coverage
-//!   counters from [`crate::engine::metrics::OffloadStats`];
-//! * `POST /v1/reload` — atomically hot-swap the model from disk behind
-//!   `RwLock<Arc<FittedModel>>`; a failed load keeps the current model.
+//! * `POST /v1/models/<name>/embed` — `{"points": [[…],…]}` →
+//!   `{"embedding": [[…],…]}`, bit-identical to calling
+//!   [`FittedModel::map_points`] in-process on the named model;
+//! * `POST /v1/models/<name>/reload` / `GET /v1/models/<name>/metrics` —
+//!   per-model hot swap and counters ([`registry`]);
+//! * `POST /v1/embed`, `POST /v1/reload` — legacy single-model paths,
+//!   aliasing the *default* (first-registered) model;
+//! * `GET /v1/models` — the registered names;
+//! * `GET /healthz` — liveness + model summaries;
+//! * `GET /metrics` — request counters, embed latency histogram with
+//!   approximate p50/p95/p99, QPS, micro-batching stats, the admission /
+//!   adaptive-batching / autoscaling controller states, per-model
+//!   sections, and (when started with a PJRT backend) the per-op
+//!   offload-coverage counters.
 //!
 //! ## Architecture
 //!
 //! Connections are accepted by one acceptor thread and claimed by a pool
-//! of worker threads from a shared queue — the same
-//! dynamic-claiming shape as [`crate::engine::executor`], but long-lived
-//! because connections (unlike stage tasks) are open-ended. Workers parse
-//! requests and answer everything except `/v1/embed` directly.
+//! of worker threads from a shared queue — the same dynamic-claiming
+//! shape as [`crate::engine::executor`], but long-lived because
+//! connections (unlike stage tasks) are open-ended. Workers parse
+//! requests and answer everything except embeds directly. A **control
+//! thread** samples the latency histogram and queue depths every
+//! [`CONTROL_INTERVAL`] and drives two feedback controllers
+//! ([`autoscale`]): the adaptive micro-batch cap, and the worker pool
+//! size between `threads_min..=threads_max` (scale-up spawns a worker;
+//! scale-down issues a *retire ticket* an idle worker consumes at its
+//! next wakeup, so a busy worker is never interrupted).
 //!
-//! ## Micro-batching
+//! ## Micro-batching and admission
 //!
-//! Embed requests do not call the model from the worker: they enqueue the
-//! parsed points and block on a response channel. A single batch-executor
-//! thread drains *everything currently queued* (up to `max_batch` points),
-//! concatenates it into one matrix, runs one
-//! [`FittedModel::map_points_with`] call on the worker pool, and scatters
-//! the rows back to the waiting requests. While a batch executes, new
-//! arrivals pile up and form the next batch — classic adaptive batching:
-//! zero added latency when idle, block-sized backend calls under load.
-//! Because each row is projected by the same serial code regardless of
-//! batch composition, coalescing never changes bits.
+//! Embed requests do not call the model from the worker: they pass the
+//! [`admission::AdmissionController`] (full queue ⇒ immediate `429`/`503`
+//! + `Retry-After` instead of unbounded queueing), then park the parsed
+//! points in a bounded queue and block on a response channel. A single
+//! batch-executor thread drains everything currently queued — up to the
+//! controller's *adaptive* cap — groups it by model, concatenates each
+//! group into one matrix, runs one [`FittedModel::map_points_with`] call
+//! on the projection pool, and scatters the rows back. While a batch
+//! executes, new arrivals pile up and form the next batch: zero added
+//! latency when idle, block-sized backend calls under load.
+//!
+//! ## Determinism under load
+//!
+//! None of the production machinery can change output bits. Each row is
+//! projected by the same serial code regardless of batch composition, so
+//! the adaptive cap only re-partitions work; `map_points_with` is
+//! bit-identical for every worker count, so pool size is invisible; and
+//! admission control only decides *whether* a request runs, never *how*.
+//! An accepted embed under overload returns exactly the bytes it would
+//! have returned on an idle server — `tests/serve_load.rs` pins this.
 
+pub mod admission;
+pub mod autoscale;
 pub mod client;
 pub mod http;
+pub mod registry;
+
+pub use crate::config::ServeConfig;
 
 use crate::backend::Backend;
+use crate::engine::metrics::{LatencyHistogram, LATENCY_BUCKETS_US};
 use crate::model::FittedModel;
 use crate::util::json::Json;
 use anyhow::{Context, Result};
+use registry::{ModelEntry, Registry};
 use std::collections::VecDeque;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
-
-/// Server configuration.
-#[derive(Clone, Debug)]
-pub struct ServeConfig {
-    /// Bind address (default loopback; set `0.0.0.0` to expose).
-    pub host: String,
-    /// TCP port; 0 binds an ephemeral port (see [`ServerHandle::port`]).
-    pub port: u16,
-    /// HTTP worker threads, which is also the `map_points` pool size
-    /// (0 = all cores).
-    pub threads: usize,
-    /// Maximum points coalesced into one `map_points` call.
-    pub max_batch: usize,
-    /// Load shedding: maximum embed requests parked in the micro-batch
-    /// queue. Arrivals beyond the bound are answered immediately with
-    /// `503` + `Retry-After` instead of queueing without limit — bounded
-    /// memory and bounded worst-case latency under overload. The default
-    /// is generous; `0` sheds everything (useful for tests).
-    pub max_queue: usize,
-}
-
-impl Default for ServeConfig {
-    fn default() -> Self {
-        Self {
-            host: "127.0.0.1".to_string(),
-            port: 0,
-            threads: 0,
-            max_batch: 1024,
-            max_queue: 4096,
-        }
-    }
-}
-
-/// Upper bounds (µs) of the embed-latency histogram buckets; one implicit
-/// overflow bucket follows.
-const LAT_BUCKETS_US: [u64; 12] =
-    [50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000];
 
 /// Wait slice for idle condvar loops; shutdown latency is bounded by it.
 const POLL: Duration = Duration::from_millis(250);
@@ -105,6 +96,13 @@ const MAX_STALL_SLICES: u32 = 100;
 /// client that stopped reading its response.
 const WRITE_LIMIT: Duration = Duration::from_secs(10);
 
+/// Sampling interval of the control thread driving the adaptive-batching
+/// and pool-autoscaling controllers.
+pub const CONTROL_INTERVAL: Duration = Duration::from_millis(100);
+
+/// Stop-check granularity inside the control thread's sleep.
+const CONTROL_SLICE: Duration = Duration::from_millis(20);
+
 /// Thread-safe server counters (all relaxed atomics — monitoring data).
 struct ServerMetrics {
     started: Instant,
@@ -117,10 +115,7 @@ struct ServerMetrics {
     batches: AtomicU64,
     batched_points: AtomicU64,
     max_batch_points: AtomicU64,
-    lat_count: AtomicU64,
-    lat_sum_us: AtomicU64,
-    lat_max_us: AtomicU64,
-    lat_buckets: [AtomicU64; LAT_BUCKETS_US.len() + 1],
+    latency: LatencyHistogram,
 }
 
 impl ServerMetrics {
@@ -136,139 +131,126 @@ impl ServerMetrics {
             batches: AtomicU64::new(0),
             batched_points: AtomicU64::new(0),
             max_batch_points: AtomicU64::new(0),
-            lat_count: AtomicU64::new(0),
-            lat_sum_us: AtomicU64::new(0),
-            lat_max_us: AtomicU64::new(0),
-            lat_buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            latency: LatencyHistogram::new(),
         }
     }
+}
 
-    fn record_latency_us(&self, us: u64) {
-        self.lat_count.fetch_add(1, Ordering::Relaxed);
-        self.lat_sum_us.fetch_add(us, Ordering::Relaxed);
-        self.lat_max_us.fetch_max(us, Ordering::Relaxed);
-        let idx = LAT_BUCKETS_US
+/// The full `GET /metrics` document: the legacy server-wide fields, the
+/// three controller states, and a per-model section.
+fn metrics_json(sh: &Shared) -> Json {
+    let m = &sh.metrics;
+    let uptime = m.started.elapsed().as_secs_f64();
+    let embeds = m.embed.load(Ordering::Relaxed);
+    let lat = m.latency.snapshot();
+    let mut hist: Vec<Json> = LATENCY_BUCKETS_US
+        .iter()
+        .enumerate()
+        .map(|(i, &le)| {
+            Json::obj(vec![
+                ("le_us", Json::num(le as f64)),
+                ("count", Json::num(lat.buckets[i] as f64)),
+            ])
+        })
+        .collect();
+    hist.push(Json::obj(vec![
+        ("le_us", Json::Null), // overflow bucket
+        ("count", Json::num(lat.buckets[LATENCY_BUCKETS_US.len()] as f64)),
+    ]));
+    let batches = m.batches.load(Ordering::Relaxed);
+    let batched = m.batched_points.load(Ordering::Relaxed);
+    let offload = match sh.backend.as_ref().and_then(Backend::offload_snapshot) {
+        None => Json::Null,
+        Some(snap) => Json::arr(
+            snap.iter()
+                .map(|s| {
+                    Json::obj(vec![
+                        ("op", Json::str(s.op.name())),
+                        ("exact", Json::num(s.exact as f64)),
+                        ("padded", Json::num(s.padded as f64)),
+                        ("fallback", Json::num(s.missed as f64)),
+                        ("coverage", Json::num(s.coverage())),
+                    ])
+                })
+                .collect(),
+        ),
+    };
+    let models = Json::obj(
+        sh.registry
+            .entries()
             .iter()
-            .position(|&le| us <= le)
-            .unwrap_or(LAT_BUCKETS_US.len());
-        self.lat_buckets[idx].fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Approximate quantile from the histogram: the upper bound of the
-    /// bucket holding the q-th request (max observed for the overflow
-    /// bucket).
-    fn percentile_us(&self, q: f64) -> f64 {
-        let count = self.lat_count.load(Ordering::Relaxed);
-        if count == 0 {
-            return 0.0;
-        }
-        let target = ((q * count as f64).ceil() as u64).clamp(1, count);
-        let mut cum = 0u64;
-        for (i, b) in self.lat_buckets.iter().enumerate() {
-            cum += b.load(Ordering::Relaxed);
-            if cum >= target {
-                return match LAT_BUCKETS_US.get(i) {
-                    Some(&le) => le as f64,
-                    None => self.lat_max_us.load(Ordering::Relaxed) as f64,
-                };
-            }
-        }
-        self.lat_max_us.load(Ordering::Relaxed) as f64
-    }
-
-    fn to_json(&self, model: &FittedModel, backend: Option<&Backend>) -> Json {
-        let uptime = self.started.elapsed().as_secs_f64();
-        let embeds = self.embed.load(Ordering::Relaxed);
-        let count = self.lat_count.load(Ordering::Relaxed);
-        let mean_us = if count == 0 {
-            0.0
-        } else {
-            self.lat_sum_us.load(Ordering::Relaxed) as f64 / count as f64
-        };
-        let mut hist: Vec<Json> = LAT_BUCKETS_US
-            .iter()
-            .enumerate()
-            .map(|(i, &le)| {
-                Json::obj(vec![
-                    ("le_us", Json::num(le as f64)),
-                    ("count", Json::num(self.lat_buckets[i].load(Ordering::Relaxed) as f64)),
-                ])
+            .map(|e| {
+                (
+                    e.name(),
+                    Json::obj(vec![
+                        ("model", model_json(&e.current())),
+                        ("metrics", e.metrics.to_json()),
+                        ("reloads_ok", Json::num(e.reloads_ok() as f64)),
+                        ("reloads_failed", Json::num(e.reloads_failed() as f64)),
+                    ]),
+                )
             })
-            .collect();
-        hist.push(Json::obj(vec![
-            ("le_us", Json::Null), // overflow bucket
-            (
-                "count",
-                Json::num(self.lat_buckets[LAT_BUCKETS_US.len()].load(Ordering::Relaxed) as f64),
+            .collect(),
+    );
+    Json::obj(vec![
+        ("uptime_secs", Json::num(uptime)),
+        (
+            "requests",
+            Json::obj(vec![
+                ("embed", Json::num(embeds as f64)),
+                ("healthz", Json::num(m.healthz.load(Ordering::Relaxed) as f64)),
+                ("metrics", Json::num(m.metrics.load(Ordering::Relaxed) as f64)),
+                ("reload", Json::num(m.reload.load(Ordering::Relaxed) as f64)),
+                ("errors", Json::num(m.errors.load(Ordering::Relaxed) as f64)),
+                ("shed", Json::num(m.shed.load(Ordering::Relaxed) as f64)),
+            ]),
+        ),
+        ("qps", Json::num(if uptime > 0.0 { embeds as f64 / uptime } else { 0.0 })),
+        (
+            "embed_latency_us",
+            Json::obj(vec![
+                ("count", Json::num(lat.count as f64)),
+                ("mean", Json::num(lat.mean_us())),
+                ("p50", Json::num(lat.percentile_us(0.50))),
+                ("p95", Json::num(lat.percentile_us(0.95))),
+                ("p99", Json::num(lat.percentile_us(0.99))),
+                ("max", Json::num(lat.max_us as f64)),
+                ("histogram", Json::arr(hist)),
+            ]),
+        ),
+        (
+            "batching",
+            Json::obj(vec![
+                ("batches", Json::num(batches as f64)),
+                ("points", Json::num(batched as f64)),
+                (
+                    "max_points_in_batch",
+                    Json::num(m.max_batch_points.load(Ordering::Relaxed) as f64),
+                ),
+                (
+                    "mean_points_per_batch",
+                    Json::num(if batches == 0 { 0.0 } else { batched as f64 / batches as f64 }),
+                ),
+            ]),
+        ),
+        ("admission", sh.admission.to_json()),
+        ("adaptive_batch", sh.batcher.to_json()),
+        (
+            "autoscale",
+            sh.scaler.to_json(
+                sh.active_workers.load(Ordering::SeqCst),
+                sh.pending_retires.load(Ordering::SeqCst),
             ),
-        ]));
-        let batches = self.batches.load(Ordering::Relaxed);
-        let batched = self.batched_points.load(Ordering::Relaxed);
-        let offload = match backend.and_then(Backend::offload_snapshot) {
-            None => Json::Null,
-            Some(snap) => Json::arr(
-                snap.iter()
-                    .map(|s| {
-                        Json::obj(vec![
-                            ("op", Json::str(s.op.name())),
-                            ("exact", Json::num(s.exact as f64)),
-                            ("padded", Json::num(s.padded as f64)),
-                            ("fallback", Json::num(s.missed as f64)),
-                            ("coverage", Json::num(s.coverage())),
-                        ])
-                    })
-                    .collect(),
-            ),
-        };
-        Json::obj(vec![
-            ("uptime_secs", Json::num(uptime)),
-            (
-                "requests",
-                Json::obj(vec![
-                    ("embed", Json::num(embeds as f64)),
-                    ("healthz", Json::num(self.healthz.load(Ordering::Relaxed) as f64)),
-                    ("metrics", Json::num(self.metrics.load(Ordering::Relaxed) as f64)),
-                    ("reload", Json::num(self.reload.load(Ordering::Relaxed) as f64)),
-                    ("errors", Json::num(self.errors.load(Ordering::Relaxed) as f64)),
-                    ("shed", Json::num(self.shed.load(Ordering::Relaxed) as f64)),
-                ]),
-            ),
-            ("qps", Json::num(if uptime > 0.0 { embeds as f64 / uptime } else { 0.0 })),
-            (
-                "embed_latency_us",
-                Json::obj(vec![
-                    ("count", Json::num(count as f64)),
-                    ("mean", Json::num(mean_us)),
-                    ("p50", Json::num(self.percentile_us(0.50))),
-                    ("p95", Json::num(self.percentile_us(0.95))),
-                    ("p99", Json::num(self.percentile_us(0.99))),
-                    ("max", Json::num(self.lat_max_us.load(Ordering::Relaxed) as f64)),
-                    ("histogram", Json::arr(hist)),
-                ]),
-            ),
-            (
-                "batching",
-                Json::obj(vec![
-                    ("batches", Json::num(batches as f64)),
-                    ("points", Json::num(batched as f64)),
-                    (
-                        "max_points_in_batch",
-                        Json::num(self.max_batch_points.load(Ordering::Relaxed) as f64),
-                    ),
-                    (
-                        "mean_points_per_batch",
-                        Json::num(if batches == 0 { 0.0 } else { batched as f64 / batches as f64 }),
-                    ),
-                ]),
-            ),
-            ("model", model_json(model)),
-            ("offload", offload),
-        ])
-    }
+        ),
+        ("model", model_json(&sh.registry.default_entry().current())),
+        ("models", models),
+        ("offload", offload),
+    ])
 }
 
 /// One embed request parked in the micro-batch queue.
 struct Pending {
+    entry: Arc<ModelEntry>,
     pts: crate::linalg::Matrix,
     tx: mpsc::Sender<Result<crate::linalg::Matrix, String>>,
 }
@@ -283,8 +265,7 @@ struct Conn {
 }
 
 struct Shared {
-    model: RwLock<Arc<FittedModel>>,
-    model_path: Mutex<Option<PathBuf>>,
+    registry: Registry,
     backend: Option<Backend>,
     conns: Mutex<VecDeque<Conn>>,
     conns_cv: Condvar,
@@ -292,9 +273,17 @@ struct Shared {
     queue_cv: Condvar,
     stop: AtomicBool,
     metrics: ServerMetrics,
-    workers: usize,
-    max_batch: usize,
-    max_queue: usize,
+    admission: admission::AdmissionController,
+    batcher: autoscale::BatchController,
+    scaler: autoscale::PoolAutoscaler,
+    /// Live HTTP workers (initial + autoscaled).
+    active_workers: AtomicUsize,
+    /// Retire tickets issued by the autoscaler, consumed by idle workers.
+    pending_retires: AtomicUsize,
+    /// Join handles of workers spawned after startup by the autoscaler.
+    extra_threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Projection pool size for each pooled `map_points_with` call.
+    map_workers: usize,
 }
 
 /// A running server; dropping the handle leaves the threads running —
@@ -317,15 +306,31 @@ impl ServerHandle {
         self.addr.port()
     }
 
-    /// Currently served model.
+    /// Currently served default model (the first registered).
     pub fn model(&self) -> Arc<FittedModel> {
-        self.shared.model.read().unwrap().clone()
+        self.shared.registry.default_entry().current()
+    }
+
+    /// The model registry (names, per-model metrics, reload).
+    pub fn registry(&self) -> &Registry {
+        &self.shared.registry
+    }
+
+    /// Live HTTP worker count (floats between the configured bounds when
+    /// autoscaling is on).
+    pub fn active_workers(&self) -> usize {
+        self.shared.active_workers.load(Ordering::SeqCst)
     }
 
     /// Block this thread for the server's lifetime (i.e. forever — the
     /// CLI's foreground mode; the process is stopped by signal).
     pub fn wait(mut self) {
         for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        let extras: Vec<_> =
+            std::mem::take(&mut *self.shared.extra_threads.lock().unwrap());
+        for t in extras {
             let _ = t.join();
         }
     }
@@ -341,25 +346,42 @@ impl ServerHandle {
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
+        // The control thread is joined above, so no new workers can
+        // appear while we collect the autoscaled ones.
+        let extras: Vec<_> =
+            std::mem::take(&mut *self.shared.extra_threads.lock().unwrap());
+        for t in extras {
+            let _ = t.join();
+        }
     }
 }
 
-/// Start serving `model`. `model_path` seeds the default for
-/// `POST /v1/reload`; `backend` is only consulted for the `/metrics`
-/// offload-coverage section (projection itself is pure native code).
+/// Start serving a single `model` under the default name (the legacy
+/// entry point). `model_path` seeds the default for `POST /v1/reload`;
+/// `backend` is only consulted for the `/metrics` offload-coverage
+/// section (projection itself is pure native code).
 pub fn start(
     model: FittedModel,
     model_path: Option<PathBuf>,
     backend: Option<Backend>,
     cfg: &ServeConfig,
 ) -> Result<ServerHandle> {
+    start_registry(Registry::single(model, model_path), backend, cfg)
+}
+
+/// Start serving every model in `registry` (the first entry is the
+/// default the legacy single-model paths alias).
+pub fn start_registry(
+    registry: Registry,
+    backend: Option<Backend>,
+    cfg: &ServeConfig,
+) -> Result<ServerHandle> {
     let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
         .with_context(|| format!("bind {}:{}", cfg.host, cfg.port))?;
     let addr = listener.local_addr().context("query bound address")?;
-    let workers = crate::engine::executor::resolve_workers(cfg.threads);
+    let (min_workers, max_workers) = cfg.pool_bounds();
     let shared = Arc::new(Shared {
-        model: RwLock::new(Arc::new(model)),
-        model_path: Mutex::new(model_path),
+        registry,
         backend,
         conns: Mutex::new(VecDeque::new()),
         conns_cv: Condvar::new(),
@@ -367,11 +389,19 @@ pub fn start(
         queue_cv: Condvar::new(),
         stop: AtomicBool::new(false),
         metrics: ServerMetrics::new(),
-        workers,
-        max_batch: cfg.max_batch.max(1),
-        max_queue: cfg.max_queue,
+        admission: admission::AdmissionController::new(cfg.max_queue),
+        batcher: autoscale::BatchController::new(
+            cfg.batch_min,
+            cfg.max_batch.max(1),
+            cfg.target_p95_ms,
+        ),
+        scaler: autoscale::PoolAutoscaler::new(min_workers, max_workers),
+        active_workers: AtomicUsize::new(0),
+        pending_retires: AtomicUsize::new(0),
+        extra_threads: Mutex::new(Vec::new()),
+        map_workers: max_workers,
     });
-    let mut threads = Vec::with_capacity(workers + 2);
+    let mut threads = Vec::with_capacity(min_workers + 3);
     {
         let sh = Arc::clone(&shared);
         threads.push(
@@ -381,14 +411,8 @@ pub fn start(
                 .context("spawn acceptor")?,
         );
     }
-    for i in 0..workers {
-        let sh = Arc::clone(&shared);
-        threads.push(
-            std::thread::Builder::new()
-                .name(format!("serve-worker-{i}"))
-                .spawn(move || worker_loop(&sh))
-                .context("spawn worker")?,
-        );
+    for i in 0..min_workers {
+        threads.push(spawn_worker(&shared, format!("serve-worker-{i}"))?);
     }
     {
         let sh = Arc::clone(&shared);
@@ -399,7 +423,94 @@ pub fn start(
                 .context("spawn batch executor")?,
         );
     }
+    {
+        let sh = Arc::clone(&shared);
+        threads.push(
+            std::thread::Builder::new()
+                .name("serve-control".into())
+                .spawn(move || control_loop(&sh))
+                .context("spawn control loop")?,
+        );
+    }
     Ok(ServerHandle { addr, shared, threads })
+}
+
+/// Spawn one HTTP worker, accounting it in `active_workers` *before* the
+/// thread starts so the autoscaler never under-counts.
+fn spawn_worker(sh: &Arc<Shared>, name: String) -> Result<std::thread::JoinHandle<()>> {
+    sh.active_workers.fetch_add(1, Ordering::SeqCst);
+    let sh2 = Arc::clone(sh);
+    match std::thread::Builder::new().name(name).spawn(move || {
+        worker_loop(&sh2);
+        sh2.active_workers.fetch_sub(1, Ordering::SeqCst);
+    }) {
+        Ok(h) => Ok(h),
+        Err(e) => {
+            sh.active_workers.fetch_sub(1, Ordering::SeqCst);
+            Err(anyhow::anyhow!("spawn serve worker: {e}"))
+        }
+    }
+}
+
+/// The feedback-control thread: every [`CONTROL_INTERVAL`] feed the
+/// latency window to the batch controller and the queue depths to the
+/// pool autoscaler, then act on the scaling decision.
+fn control_loop(sh: &Arc<Shared>) {
+    let mut prev_lat = sh.metrics.latency.snapshot();
+    let mut prev_embeds = sh.metrics.embed.load(Ordering::Relaxed);
+    let mut last = Instant::now();
+    let mut extra_idx = 0u64;
+    loop {
+        let deadline = Instant::now() + CONTROL_INTERVAL;
+        while Instant::now() < deadline {
+            if sh.stop.load(Ordering::Relaxed) {
+                return;
+            }
+            std::thread::sleep(CONTROL_SLICE);
+        }
+        let now = Instant::now();
+        let dt = now.duration_since(last).as_secs_f64().max(1e-9);
+        last = now;
+
+        let cur = sh.metrics.latency.snapshot();
+        let _ = sh.batcher.observe_window(&cur.since(&prev_lat));
+        prev_lat = cur;
+
+        let embeds = sh.metrics.embed.load(Ordering::Relaxed);
+        let arrival_qps = embeds.saturating_sub(prev_embeds) as f64 / dt;
+        prev_embeds = embeds;
+        let backlog = sh.conns.lock().unwrap().len() + sh.queue.lock().unwrap().len();
+        let active = sh.active_workers.load(Ordering::SeqCst);
+        let pending = sh.pending_retires.load(Ordering::SeqCst);
+        match sh.scaler.observe(active, pending, backlog, arrival_qps) {
+            autoscale::ScaleDecision::Up => {
+                // Cancel an unconsumed retire ticket first — capacity is
+                // restored without paying for a thread spawn.
+                let cancelled = sh
+                    .pending_retires
+                    .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |t| t.checked_sub(1))
+                    .is_ok();
+                if !cancelled {
+                    extra_idx += 1;
+                    if let Ok(h) = spawn_worker(sh, format!("serve-worker-x{extra_idx}")) {
+                        sh.extra_threads.lock().unwrap().push(h);
+                    }
+                }
+            }
+            autoscale::ScaleDecision::Down => {
+                sh.pending_retires.fetch_add(1, Ordering::SeqCst);
+                // Wake an idle worker so the ticket is consumed promptly.
+                sh.conns_cv.notify_all();
+            }
+            autoscale::ScaleDecision::Hold => {}
+        }
+    }
+}
+
+fn take_retire_ticket(sh: &Shared) -> bool {
+    sh.pending_retires
+        .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |t| t.checked_sub(1))
+        .is_ok()
 }
 
 fn accept_loop(listener: TcpListener, sh: &Shared) {
@@ -435,14 +546,19 @@ fn worker_loop(sh: &Shared) {
                 if let Some(c) = q.pop_front() {
                     break c;
                 }
+                // Only an idle worker (no connection waiting) retires, so
+                // a scale-down never abandons queued work.
+                if take_retire_ticket(sh) {
+                    return;
+                }
                 q = sh.conns_cv.wait_timeout(q, POLL).unwrap().0;
             }
         };
         // Serve the connection for one scheduling slice. A keep-alive
         // connection that is still open afterwards goes back to the queue
-        // with its read state, so `threads` workers multiplex any number
+        // with its read state, so the workers multiplex any number
         // of connections instead of each worker being pinned to one
-        // (which would starve connection `threads + 1` indefinitely).
+        // (which would starve connection `workers + 1` indefinitely).
         if let Some(conn) = serve_slice(sh, conn) {
             sh.conns.lock().unwrap().push_back(conn);
             sh.conns_cv.notify_one();
@@ -539,69 +655,136 @@ fn serve_slice(sh: &Shared, mut conn: Conn) -> Option<Conn> {
 }
 
 fn route(sh: &Shared, req: &http::Request, keep: bool) -> Vec<u8> {
+    // Model-scoped paths first: /v1/models/<name>/{embed,reload,metrics}.
+    if let Some((name, action)) = registry::route_model_path(&req.path) {
+        let entry = match sh.registry.get(name) {
+            Some(e) => Arc::clone(e),
+            None => return err_json(sh, 404, sh.registry.unknown(name), keep),
+        };
+        return match (req.method.as_str(), action) {
+            ("POST", "embed") => handle_embed(sh, &entry, req, keep),
+            ("POST", "reload") => handle_reload(sh, &entry, req, keep),
+            ("GET", "metrics") => {
+                sh.metrics.metrics.fetch_add(1, Ordering::Relaxed);
+                ok_json(
+                    &Json::obj(vec![
+                        ("name", Json::str(entry.name())),
+                        ("model", model_json(&entry.current())),
+                        ("metrics", entry.metrics.to_json()),
+                        ("reloads_ok", Json::num(entry.reloads_ok() as f64)),
+                        ("reloads_failed", Json::num(entry.reloads_failed() as f64)),
+                    ]),
+                    keep,
+                )
+            }
+            (_, "embed" | "reload" | "metrics") => {
+                err_json(sh, 405, format!("method {} not allowed here", req.method), keep)
+            }
+            _ => err_json(sh, 404, format!("no such model action {action:?}"), keep),
+        };
+    }
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
             sh.metrics.healthz.fetch_add(1, Ordering::Relaxed);
-            let model = sh.model.read().unwrap().clone();
             let body = Json::obj(vec![
                 ("status", Json::str("ok")),
                 ("uptime_secs", Json::num(sh.metrics.started.elapsed().as_secs_f64())),
-                ("model", model_json(&model)),
+                ("model", model_json(&sh.registry.default_entry().current())),
+                (
+                    "models",
+                    Json::arr(sh.registry.names().iter().map(|n| Json::str(*n)).collect()),
+                ),
             ]);
             ok_json(&body, keep)
         }
         ("GET", "/metrics") => {
             sh.metrics.metrics.fetch_add(1, Ordering::Relaxed);
-            let model = sh.model.read().unwrap().clone();
-            ok_json(&sh.metrics.to_json(&model, sh.backend.as_ref()), keep)
+            ok_json(&metrics_json(sh), keep)
         }
-        ("POST", "/v1/embed") => handle_embed(sh, req, keep),
-        ("POST", "/v1/reload") => handle_reload(sh, req, keep),
-        (_, "/healthz" | "/metrics" | "/v1/embed" | "/v1/reload") => {
+        ("GET", "/v1/models") => {
+            let names = sh.registry.names().iter().map(|n| Json::str(*n)).collect();
+            ok_json(&Json::obj(vec![("models", Json::arr(names))]), keep)
+        }
+        ("POST", "/v1/embed") => {
+            let entry = Arc::clone(sh.registry.default_entry());
+            handle_embed(sh, &entry, req, keep)
+        }
+        ("POST", "/v1/reload") => {
+            let entry = Arc::clone(sh.registry.default_entry());
+            handle_reload(sh, &entry, req, keep)
+        }
+        (_, "/healthz" | "/metrics" | "/v1/embed" | "/v1/reload" | "/v1/models") => {
             err_json(sh, 405, format!("method {} not allowed here", req.method), keep)
         }
         _ => err_json(sh, 404, format!("no such endpoint {:?}", req.path), keep),
     }
 }
 
-fn handle_embed(sh: &Shared, req: &http::Request, keep: bool) -> Vec<u8> {
+/// A rejected embed: status, message, and the `Retry-After` hint carried
+/// by every transient (429/503) rejection.
+struct Reject {
+    status: u16,
+    msg: String,
+    retry_after_secs: Option<u64>,
+}
+
+impl Reject {
+    fn client_error(status: u16, msg: String) -> Self {
+        Reject { status, msg, retry_after_secs: None }
+    }
+
+    fn transient(status: u16, msg: String, retry_after_secs: u64) -> Self {
+        Reject { status, msg, retry_after_secs: Some(retry_after_secs) }
+    }
+}
+
+fn handle_embed(sh: &Shared, entry: &Arc<ModelEntry>, req: &http::Request, keep: bool) -> Vec<u8> {
     let sw = Instant::now();
     sh.metrics.embed.fetch_add(1, Ordering::Relaxed);
-    let resp = match embed_inner(sh, &req.body) {
+    entry.metrics.embeds.fetch_add(1, Ordering::Relaxed);
+    let resp = match embed_inner(sh, entry, &req.body) {
         Ok(body) => ok_json(&body, keep),
-        // Every embed 503 (shed, shutdown, drain timeout) is transient by
-        // construction, so they all carry a Retry-After hint.
-        Err((503, msg)) => {
+        Err(rej) => {
             sh.metrics.errors.fetch_add(1, Ordering::Relaxed);
-            let body = Json::obj(vec![("error", Json::str(msg))]);
-            http::response_with_headers(
-                503,
-                "application/json",
-                body.to_string().as_bytes(),
-                keep,
-                &[("Retry-After", "1")],
-            )
+            entry.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            let body = Json::obj(vec![("error", Json::str(rej.msg))]).to_string();
+            match rej.retry_after_secs {
+                Some(secs) => {
+                    let ra = secs.to_string();
+                    http::response_with_headers(
+                        rej.status,
+                        "application/json",
+                        body.as_bytes(),
+                        keep,
+                        &[("Retry-After", ra.as_str())],
+                    )
+                }
+                None => http::response(rej.status, "application/json", body.as_bytes(), keep),
+            }
         }
-        Err((status, msg)) => err_json(sh, status, msg, keep),
     };
-    sh.metrics.record_latency_us(sw.elapsed().as_micros() as u64);
+    let us = sw.elapsed().as_micros() as u64;
+    sh.metrics.latency.record_us(us);
+    entry.metrics.latency.record_us(us);
     resp
 }
 
-fn embed_inner(sh: &Shared, body: &[u8]) -> Result<Json, (u16, String)> {
-    let text =
-        std::str::from_utf8(body).map_err(|_| (400, "body is not UTF-8".to_string()))?;
-    let j = Json::parse(text).map_err(|e| (400, format!("bad JSON body: {e}")))?;
+fn embed_inner(sh: &Shared, entry: &Arc<ModelEntry>, body: &[u8]) -> Result<Json, Reject> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| Reject::client_error(400, "body is not UTF-8".to_string()))?;
+    let j = Json::parse(text)
+        .map_err(|e| Reject::client_error(400, format!("bad JSON body: {e}")))?;
     let pts = j
         .get("points")
-        .ok_or_else(|| (400, "missing \"points\" array".to_string()))?;
-    let pts = matrix_from_json(pts).map_err(|e| (400, format!("bad points: {e}")))?;
+        .ok_or_else(|| Reject::client_error(400, "missing \"points\" array".to_string()))?;
+    let pts = matrix_from_json(pts)
+        .map_err(|e| Reject::client_error(400, format!("bad points: {e}")))?;
     if pts.nrows() == 0 {
-        return Err((400, "empty points array".to_string()));
+        return Err(Reject::client_error(400, "empty points array".to_string()));
     }
-    let model = sh.model.read().unwrap().clone();
+    let model = entry.current();
     if pts.ncols() != model.dim() {
-        return Err((
+        return Err(Reject::client_error(
             400,
             format!("point dimensionality {} != model D {}", pts.ncols(), model.dim()),
         ));
@@ -616,19 +799,28 @@ fn embed_inner(sh: &Shared, body: &[u8]) -> Result<Json, (u16, String)> {
         // wait out the full recv timeout with nobody left to serve it.
         let mut q = sh.queue.lock().unwrap();
         if sh.stop.load(Ordering::Relaxed) {
-            return Err((503, "server is shutting down".to_string()));
+            return Err(Reject::transient(503, "server is shutting down".to_string(), 1));
         }
-        // Load shedding: a full micro-batch queue answers 503 immediately
-        // instead of queueing unboundedly — the client backs off (the
-        // response carries Retry-After) and memory stays bounded.
-        if q.len() >= sh.max_queue {
-            sh.metrics.shed.fetch_add(1, Ordering::Relaxed);
-            return Err((
-                503,
-                format!("embed queue full ({} pending requests); retry shortly", q.len()),
-            ));
+        // Admission control: a filling queue browns out (429), a full one
+        // sheds hard (503) — the client backs off (Retry-After tracks the
+        // drain rate) and queue memory stays bounded.
+        match sh.admission.decide(q.len()) {
+            admission::Admission::Accept => {
+                q.push_back(Pending { entry: Arc::clone(entry), pts, tx });
+            }
+            admission::Admission::Shed { status, retry_after_secs } => {
+                sh.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(Reject::transient(
+                    status,
+                    format!(
+                        "embed queue at {} of {} pending requests; retry shortly",
+                        q.len(),
+                        sh.admission.capacity()
+                    ),
+                    retry_after_secs,
+                ));
+            }
         }
-        q.push_back(Pending { pts, tx });
     }
     sh.queue_cv.notify_one();
     match rx.recv_timeout(Duration::from_secs(60)) {
@@ -639,12 +831,16 @@ fn embed_inner(sh: &Shared, body: &[u8]) -> Result<Json, (u16, String)> {
         ])),
         // Model was hot-swapped between validation and execution and the
         // new model disagrees about D — the client should retry.
-        Ok(Err(msg)) => Err((400, msg)),
-        Err(_) => Err((503, "embed queue timed out (server overloaded or stopping)".to_string())),
+        Ok(Err(msg)) => Err(Reject::client_error(400, msg)),
+        Err(_) => Err(Reject::transient(
+            503,
+            "embed queue timed out (server overloaded or stopping)".to_string(),
+            1,
+        )),
     }
 }
 
-fn handle_reload(sh: &Shared, req: &http::Request, keep: bool) -> Vec<u8> {
+fn handle_reload(sh: &Shared, entry: &Arc<ModelEntry>, req: &http::Request, keep: bool) -> Vec<u8> {
     sh.metrics.reload.fetch_add(1, Ordering::Relaxed);
     let requested: Option<PathBuf> = if req.body.is_empty() {
         None
@@ -654,39 +850,25 @@ fn handle_reload(sh: &Shared, req: &http::Request, keep: bool) -> Vec<u8> {
             None => return err_json(sh, 400, "bad JSON body".to_string(), keep),
         }
     };
-    let path = match requested.or_else(|| sh.model_path.lock().unwrap().clone()) {
-        Some(p) => p,
-        None => {
-            return err_json(
-                sh,
-                400,
-                "no \"path\" given and the server was started without a model path".to_string(),
-                keep,
-            )
-        }
-    };
-    match FittedModel::load(&path) {
-        Ok(new_model) => {
-            let arc = Arc::new(new_model);
-            *sh.model.write().unwrap() = Arc::clone(&arc);
-            *sh.model_path.lock().unwrap() = Some(path.clone());
-            ok_json(
-                &Json::obj(vec![
-                    ("status", Json::str("reloaded")),
-                    ("path", Json::str(path.display().to_string())),
-                    ("model", model_json(&arc)),
-                ]),
-                keep,
-            )
-        }
-        // The RwLock is only taken on success: a broken artifact on disk
-        // can never displace the model that is already serving.
-        Err(e) => err_json(sh, 400, format!("reload failed, keeping current model: {e:#}"), keep),
+    // The registry loads (and checksum-verifies) before swapping: a
+    // broken artifact on disk can never displace the serving model.
+    match sh.registry.reload(entry.name(), requested.as_deref()) {
+        Ok((fresh, path)) => ok_json(
+            &Json::obj(vec![
+                ("status", Json::str("reloaded")),
+                ("name", Json::str(entry.name())),
+                ("path", Json::str(path.display().to_string())),
+                ("model", model_json(&fresh)),
+            ]),
+            keep,
+        ),
+        Err(msg) => err_json(sh, 400, format!("reload failed, keeping current model: {msg}"), keep),
     }
 }
 
-/// Batch-executor loop: drain the queue, run one pooled `map_points`,
-/// scatter results. Exits once stopped *and* drained.
+/// Batch-executor loop: drain the queue up to the adaptive cap, run one
+/// pooled `map_points` per model, scatter results. Exits once stopped
+/// *and* drained.
 fn batch_loop(sh: &Shared) {
     loop {
         let drained: Vec<Pending> = {
@@ -700,11 +882,12 @@ fn batch_loop(sh: &Shared) {
                 }
                 q = sh.queue_cv.wait_timeout(q, POLL).unwrap().0;
             }
+            let cap = sh.batcher.cap();
             let mut out = Vec::new();
             let mut rows = 0usize;
             while let Some(p) = q.front() {
                 let r = p.pts.nrows();
-                if !out.is_empty() && rows + r > sh.max_batch {
+                if !out.is_empty() && rows + r > cap {
                     break;
                 }
                 rows += r;
@@ -712,12 +895,34 @@ fn batch_loop(sh: &Shared) {
             }
             out
         };
+        let sw = Instant::now();
+        let reqs = drained.len() as u64;
         execute_batch(sh, drained);
+        // Feed the drain rate back so Retry-After tracks reality.
+        sh.admission.note_drained(reqs, sw.elapsed().as_secs_f64().max(1e-6));
     }
 }
 
+/// Group a drained batch by model (arrival order preserved within each
+/// group) and execute one pooled projection per group.
 fn execute_batch(sh: &Shared, drained: Vec<Pending>) {
-    let model = sh.model.read().unwrap().clone();
+    let mut groups: Vec<(Arc<ModelEntry>, Vec<Pending>)> = Vec::new();
+    for p in drained {
+        match groups.iter_mut().find(|(e, _)| Arc::ptr_eq(e, &p.entry)) {
+            Some((_, v)) => v.push(p),
+            None => {
+                let e = Arc::clone(&p.entry);
+                groups.push((e, vec![p]));
+            }
+        }
+    }
+    for (entry, batch) in groups {
+        execute_group(sh, &entry, batch);
+    }
+}
+
+fn execute_group(sh: &Shared, entry: &ModelEntry, drained: Vec<Pending>) {
+    let model = entry.current();
     let d_in = model.dim();
     // Requests validated against a model that has since been hot-swapped
     // to a different input dimensionality get individual errors; the rest
@@ -745,7 +950,10 @@ fn execute_batch(sh: &Shared, drained: Vec<Pending>) {
     sh.metrics.batches.fetch_add(1, Ordering::Relaxed);
     sh.metrics.batched_points.fetch_add(total as u64, Ordering::Relaxed);
     sh.metrics.max_batch_points.fetch_max(total as u64, Ordering::Relaxed);
-    match model.map_points_with(&big, sh.workers) {
+    entry.metrics.batches.fetch_add(1, Ordering::Relaxed);
+    entry.metrics.batched_points.fetch_add(total as u64, Ordering::Relaxed);
+    entry.metrics.max_batch_points.fetch_max(total as u64, Ordering::Relaxed);
+    match model.map_points_with(&big, sh.map_workers) {
         Ok(emb) => {
             let d_out = emb.ncols();
             let mut row = 0usize;
@@ -870,19 +1078,20 @@ mod tests {
     }
 
     #[test]
-    fn latency_histogram_percentiles() {
+    fn server_latency_histogram_reports_percentiles() {
         let m = ServerMetrics::new();
         for _ in 0..90 {
-            m.record_latency_us(80); // ≤100 bucket
+            m.latency.record_us(80); // ≤100 bucket
         }
         for _ in 0..10 {
-            m.record_latency_us(9_000); // ≤10_000 bucket
+            m.latency.record_us(9_000); // ≤10_000 bucket
         }
-        assert_eq!(m.percentile_us(0.50), 100.0);
-        assert_eq!(m.percentile_us(0.95), 10_000.0);
-        assert_eq!(m.lat_max_us.load(Ordering::Relaxed), 9_000);
+        let s = m.latency.snapshot();
+        assert_eq!(s.percentile_us(0.50), 100.0);
+        assert_eq!(s.percentile_us(0.95), 10_000.0);
+        assert_eq!(s.max_us, 9_000);
         // Overflow bucket reports the observed max.
-        m.record_latency_us(400_000);
-        assert_eq!(m.percentile_us(1.0), 400_000.0);
+        m.latency.record_us(400_000);
+        assert_eq!(m.latency.snapshot().percentile_us(1.0), 400_000.0);
     }
 }

@@ -1,0 +1,261 @@
+//! Multi-model registry: one serve process, N fitted manifolds.
+//!
+//! The set of model *names* is fixed at startup (`--models a=dir,b=dir`);
+//! what each name *points at* is hot-swappable via
+//! `POST /v1/models/<name>/reload`, with the same contract as the legacy
+//! single-model reload: the replacement artifact is loaded and verified
+//! **before** the swap, so a failed reload leaves the old model serving
+//! and in-flight batches — which hold their own `Arc` — are never torn.
+//!
+//! Routing: `POST /v1/models/<name>/embed` (and `reload` / `GET
+//! metrics`) namespaces every per-model operation under
+//! [`route_model_path`]. The legacy paths `/v1/embed` and `/v1/reload`
+//! keep working and alias the *default* entry — the first model
+//! registered, named [`DEFAULT_MODEL`] for single-model starts.
+//!
+//! Each entry carries its own [`ModelMetrics`] (request counts, embed
+//! latency histogram, batching shape) so `/metrics` can report per-model
+//! load next to the server-wide aggregates.
+
+use crate::engine::metrics::LatencyHistogram;
+use crate::model::FittedModel;
+use crate::util::json::Json;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Name under which a single-model start registers its model.
+pub const DEFAULT_MODEL: &str = "default";
+
+/// Model names: path-segment safe, bounded.
+pub fn valid_name(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name.bytes().all(|b| b.is_ascii_alphanumeric() || matches!(b, b'-' | b'_' | b'.'))
+}
+
+/// Split `/v1/models/<name>/<action>` into `(name, action)`.
+pub fn route_model_path(path: &str) -> Option<(&str, &str)> {
+    let rest = path.strip_prefix("/v1/models/")?;
+    let (name, action) = rest.split_once('/')?;
+    if name.is_empty() || action.is_empty() || action.contains('/') {
+        return None;
+    }
+    Some((name, action))
+}
+
+/// Per-model serving counters (relaxed atomics — monitoring data).
+#[derive(Debug, Default)]
+pub struct ModelMetrics {
+    pub embeds: AtomicU64,
+    pub errors: AtomicU64,
+    pub latency: LatencyHistogram,
+    pub batches: AtomicU64,
+    pub batched_points: AtomicU64,
+    pub max_batch_points: AtomicU64,
+}
+
+impl ModelMetrics {
+    pub fn to_json(&self) -> Json {
+        let lat = self.latency.snapshot();
+        Json::obj(vec![
+            ("embeds", Json::num(self.embeds.load(Ordering::Relaxed) as f64)),
+            ("errors", Json::num(self.errors.load(Ordering::Relaxed) as f64)),
+            (
+                "embed_latency_us",
+                Json::obj(vec![
+                    ("count", Json::num(lat.count as f64)),
+                    ("mean", Json::num(lat.mean_us())),
+                    ("p50", Json::num(lat.percentile_us(0.50))),
+                    ("p95", Json::num(lat.percentile_us(0.95))),
+                    ("p99", Json::num(lat.percentile_us(0.99))),
+                    ("max", Json::num(lat.max_us as f64)),
+                ]),
+            ),
+            (
+                "batching",
+                Json::obj(vec![
+                    ("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64)),
+                    ("points", Json::num(self.batched_points.load(Ordering::Relaxed) as f64)),
+                    (
+                        "max_batch_points",
+                        Json::num(self.max_batch_points.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// One named, hot-swappable model slot.
+pub struct ModelEntry {
+    name: String,
+    model: RwLock<Arc<FittedModel>>,
+    /// Artifact directory the model was loaded from; reload without an
+    /// explicit path re-reads this one.
+    path: Mutex<Option<PathBuf>>,
+    pub metrics: ModelMetrics,
+    reloads_ok: AtomicU64,
+    reloads_failed: AtomicU64,
+}
+
+impl ModelEntry {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// The model currently serving this name. Batches clone the `Arc`
+    /// once per drain, so a concurrent reload never tears a batch.
+    pub fn current(&self) -> Arc<FittedModel> {
+        Arc::clone(&self.model.read().expect("model lock poisoned"))
+    }
+
+    pub fn reloads_ok(&self) -> u64 {
+        self.reloads_ok.load(Ordering::Relaxed)
+    }
+
+    pub fn reloads_failed(&self) -> u64 {
+        self.reloads_failed.load(Ordering::Relaxed)
+    }
+
+    pub fn source_path(&self) -> Option<PathBuf> {
+        self.path.lock().expect("path lock poisoned").clone()
+    }
+}
+
+/// The fixed name → entry map. Lookup is a linear scan: the registry is
+/// a handful of models, and a `Vec` keeps registration order — entry 0
+/// is the default the legacy paths alias.
+pub struct Registry {
+    entries: Vec<Arc<ModelEntry>>,
+}
+
+impl Registry {
+    /// Registry for a single-model start (legacy `serve --model`).
+    pub fn single(model: FittedModel, path: Option<PathBuf>) -> Registry {
+        Registry::from_entries(vec![(DEFAULT_MODEL.to_string(), model, path)])
+            .expect("single-entry registry is always valid")
+    }
+
+    /// Build from `(name, model, source_path)` triples. Names must be
+    /// non-empty, unique, and path-segment safe; the first entry becomes
+    /// the default for the legacy single-model routes.
+    pub fn from_entries(
+        entries: Vec<(String, FittedModel, Option<PathBuf>)>,
+    ) -> Result<Registry, String> {
+        if entries.is_empty() {
+            return Err("registry needs at least one model".to_string());
+        }
+        let mut out: Vec<Arc<ModelEntry>> = Vec::with_capacity(entries.len());
+        for (name, model, path) in entries {
+            if !valid_name(&name) {
+                return Err(format!(
+                    "invalid model name {name:?}: use 1-64 chars of [A-Za-z0-9._-]"
+                ));
+            }
+            if out.iter().any(|e| e.name == name) {
+                return Err(format!("duplicate model name {name:?}"));
+            }
+            out.push(Arc::new(ModelEntry {
+                name,
+                model: RwLock::new(Arc::new(model)),
+                path: Mutex::new(path),
+                metrics: ModelMetrics::default(),
+                reloads_ok: AtomicU64::new(0),
+                reloads_failed: AtomicU64::new(0),
+            }));
+        }
+        Ok(Registry { entries: out })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Arc<ModelEntry>> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// The entry the legacy single-model routes alias (first registered).
+    pub fn default_entry(&self) -> &Arc<ModelEntry> {
+        &self.entries[0]
+    }
+
+    pub fn entries(&self) -> &[Arc<ModelEntry>] {
+        &self.entries
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.entries.iter().map(|e| e.name.as_str()).collect()
+    }
+
+    /// Hot-reload one entry: load (and thereby checksum-verify) the
+    /// artifact **before** swapping, so failure keeps the old model
+    /// serving. Returns the freshly serving model and the path it came
+    /// from.
+    pub fn reload(
+        &self,
+        name: &str,
+        requested: Option<&Path>,
+    ) -> Result<(Arc<FittedModel>, PathBuf), String> {
+        let entry = self.get(name).ok_or_else(|| self.unknown(name))?;
+        let dir = match requested {
+            Some(p) => p.to_path_buf(),
+            None => entry
+                .source_path()
+                .ok_or_else(|| format!("model {name:?} was not loaded from disk; pass a path"))?,
+        };
+        match FittedModel::load(&dir) {
+            Ok(m) => {
+                let fresh = Arc::new(m);
+                *entry.model.write().expect("model lock poisoned") = Arc::clone(&fresh);
+                *entry.path.lock().expect("path lock poisoned") = Some(dir.clone());
+                entry.reloads_ok.fetch_add(1, Ordering::Relaxed);
+                Ok((fresh, dir))
+            }
+            Err(e) => {
+                entry.reloads_failed.fetch_add(1, Ordering::Relaxed);
+                Err(format!("reload of model {name:?} from {} failed: {e:#}", dir.display()))
+            }
+        }
+    }
+
+    /// 404 body text naming what *does* exist.
+    pub fn unknown(&self, name: &str) -> String {
+        format!("no model {name:?}; available: [{}]", self.names().join(", "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_routing_splits_name_and_action() {
+        assert_eq!(route_model_path("/v1/models/a/embed"), Some(("a", "embed")));
+        assert_eq!(route_model_path("/v1/models/m-1.v2/metrics"), Some(("m-1.v2", "metrics")));
+        assert_eq!(route_model_path("/v1/models/a"), None);
+        assert_eq!(route_model_path("/v1/models//embed"), None);
+        assert_eq!(route_model_path("/v1/models/a/"), None);
+        assert_eq!(route_model_path("/v1/models/a/b/c"), None);
+        assert_eq!(route_model_path("/v1/embed"), None);
+    }
+
+    #[test]
+    fn name_validation() {
+        assert!(valid_name("default"));
+        assert!(valid_name("swiss_roll-v2.1"));
+        assert!(!valid_name(""));
+        assert!(!valid_name("has space"));
+        assert!(!valid_name("slash/y"));
+        assert!(!valid_name(&"x".repeat(65)));
+    }
+
+    #[test]
+    fn model_metrics_json_shape() {
+        let m = ModelMetrics::default();
+        m.embeds.fetch_add(3, Ordering::Relaxed);
+        m.latency.record_us(40);
+        let j = m.to_json();
+        assert_eq!(j.get("embeds").and_then(|v| v.as_f64()), Some(3.0));
+        let lat = j.get("embed_latency_us").unwrap();
+        assert_eq!(lat.get("count").and_then(|v| v.as_f64()), Some(1.0));
+        assert!(j.get("batching").is_some());
+    }
+}

@@ -1,0 +1,615 @@
+//! Serve tier under load, end to end over real sockets:
+//!
+//! * admission control: a full accept queue sheds with 503 (and the soft
+//!   zone with 429), always carrying `Retry-After`, while every *accepted*
+//!   embed stays bit-identical to in-process `map_points`;
+//! * the adaptive micro-batch cap observably moves under latency pressure
+//!   and re-converges to the ceiling when the load passes, never leaving
+//!   `[floor, ceiling]`;
+//! * shutdown mid-load strands no queued embed: every in-flight request
+//!   resolves as a correct 200, a 503, or a closed connection — never a
+//!   hang;
+//! * the pool autoscaler stays inside `threads_min..=threads_max` and
+//!   returns to min after the load passes;
+//! * the multi-model registry routes by path, hot-reloads one model while
+//!   another serves concurrently, and 404s unknown names with context;
+//! * the hand-rolled HTTP parser accepts byte-at-a-time delivery split at
+//!   every boundary and never panics on malformed or fuzzed input.
+
+use isospark::backend::Backend;
+use isospark::config::{ClusterConfig, IsomapConfig};
+use isospark::coordinator::streaming::StreamingModel;
+use isospark::data::swiss_roll;
+use isospark::model::FittedModel;
+use isospark::serve::registry::Registry;
+use isospark::serve::{self, client, ServeConfig};
+use isospark::util::json::Json;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+fn fit_model(n: usize, seed: u64) -> FittedModel {
+    let ds = swiss_roll::euler_isometric(n, seed);
+    let cfg = IsomapConfig { k: 10, d: 2, block: 64, seed, ..Default::default() };
+    let m = (n / 6).max(40);
+    StreamingModel::fit(&ds.points, &cfg, m, &ClusterConfig::local(), &Backend::Native)
+        .expect("fit")
+        .into_model()
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("isospark_serve_ld_{}_{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn assert_bits_eq(a: &isospark::linalg::Matrix, b: &isospark::linalg::Matrix, what: &str) {
+    assert_eq!((a.nrows(), a.ncols()), (b.nrows(), b.ncols()), "{what}: shape");
+    for (i, (x, y)) in a.as_slice().iter().zip(b.as_slice()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: entry {i}: {x} vs {y}");
+    }
+}
+
+fn embed_body(pts: &isospark::linalg::Matrix) -> String {
+    Json::obj(vec![("points", serve::matrix_to_json(pts))]).to_string()
+}
+
+fn embedding_of(body: &str) -> isospark::linalg::Matrix {
+    let j = Json::parse(body).expect("embed response is JSON");
+    serve::matrix_from_json(j.get("embedding").expect("embedding field")).expect("matrix")
+}
+
+fn metric_at<'a>(metrics: &'a Json, path: &[&str]) -> &'a Json {
+    let mut cur = metrics;
+    for key in path {
+        cur = cur.get(key).unwrap_or_else(|| panic!("missing /metrics key {key:?}"));
+    }
+    cur
+}
+
+#[test]
+fn zero_capacity_queue_sheds_every_embed_with_retry_after() {
+    let model = fit_model(240, 4);
+    let fresh = swiss_roll::euler_isometric(8, 91).points;
+    let handle = serve::start(
+        model,
+        None,
+        None,
+        &ServeConfig { threads: 2, max_queue: 0, ..Default::default() },
+    )
+    .expect("start");
+    let addr = handle.addr();
+
+    let body = embed_body(&fresh);
+    let mut conn = client::Conn::connect(&addr).unwrap();
+    for round in 0..3 {
+        let resp = conn.request_response("POST", "/v1/embed", Some(&body)).unwrap();
+        assert_eq!(resp.status, 503, "round {round}: {}", resp.body);
+        let ra: u64 = resp
+            .header("retry-after")
+            .unwrap_or_else(|| panic!("round {round}: shed response lacks Retry-After"))
+            .parse()
+            .expect("numeric Retry-After");
+        assert!((1..=30).contains(&ra), "Retry-After {ra} out of range");
+        assert!(resp.body.contains("queue"), "shed body names the queue: {}", resp.body);
+    }
+    // Non-embed endpoints are never shed: the replica stays observable.
+    let (code, health) = client::get_json(&addr, "/healthz").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(health.get("status").and_then(Json::as_str), Some("ok"));
+    let (_, metrics) = client::get_json(&addr, "/metrics").unwrap();
+    assert!(metric_at(&metrics, &["requests", "shed"]).as_usize().unwrap() >= 3);
+    assert!(metric_at(&metrics, &["admission", "shed_503"]).as_usize().unwrap() >= 3);
+    assert_eq!(metric_at(&metrics, &["admission", "capacity"]).as_usize(), Some(0));
+    handle.shutdown();
+}
+
+#[test]
+fn overload_sheds_transiently_while_accepted_embeds_stay_bit_identical() {
+    let model = fit_model(280, 6);
+    let fresh = swiss_roll::euler_isometric(64, 17).points;
+    let expected = model.map_points(&fresh).unwrap();
+    // A one-deep accept queue under 8 concurrent clients guarantees
+    // contention: while the batch executor holds one request, any second
+    // concurrent arrival must shed.
+    let handle = serve::start(
+        model,
+        None,
+        None,
+        &ServeConfig {
+            threads: 4,
+            max_queue: 1,
+            max_batch: 8,
+            target_p95_ms: 0.0,
+            ..Default::default()
+        },
+    )
+    .expect("start");
+    let addr = handle.addr();
+
+    let clients = 8usize;
+    let rounds = 30usize;
+    let rows = fresh.nrows() / clients;
+    let ok_total = AtomicUsize::new(0);
+    let shed_total = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for c in 0..clients {
+            let addr = addr.clone();
+            let (fresh, expected) = (&fresh, &expected);
+            let (ok_total, shed_total) = (&ok_total, &shed_total);
+            scope.spawn(move || {
+                let mut conn = client::Conn::connect(&addr).unwrap();
+                let pts = fresh.slice(c * rows, (c + 1) * rows, 0, fresh.ncols());
+                let want = expected.slice(c * rows, (c + 1) * rows, 0, expected.ncols());
+                let body = embed_body(&pts);
+                for round in 0..rounds {
+                    let resp =
+                        conn.request_response("POST", "/v1/embed", Some(&body)).unwrap();
+                    match resp.status {
+                        200 => {
+                            // The acceptance criterion: accepted-under-
+                            // overload output is bitwise what an idle
+                            // server (and in-process map_points) returns.
+                            let got = embedding_of(&resp.body);
+                            assert_bits_eq(&got, &want, &format!("client {c} round {round}"));
+                            ok_total.fetch_add(1, Ordering::Relaxed);
+                        }
+                        429 | 503 => {
+                            let ra: u64 = resp
+                                .header("retry-after")
+                                .expect("shed carries Retry-After")
+                                .parse()
+                                .expect("numeric Retry-After");
+                            assert!(ra >= 1);
+                            shed_total.fetch_add(1, Ordering::Relaxed);
+                        }
+                        other => panic!("unexpected status {other}: {}", resp.body),
+                    }
+                }
+            });
+        }
+    });
+    let (ok, shed) = (ok_total.load(Ordering::Relaxed), shed_total.load(Ordering::Relaxed));
+    assert_eq!(ok + shed, clients * rounds, "every request resolved");
+    assert!(ok >= 1, "some requests must be served (ok={ok} shed={shed})");
+    assert!(shed >= 1, "a one-deep queue under 8 clients must shed (ok={ok} shed={shed})");
+    let (_, metrics) = client::get_json(&addr, "/metrics").unwrap();
+    assert_eq!(metric_at(&metrics, &["requests", "shed"]).as_usize(), Some(shed));
+    handle.shutdown();
+}
+
+#[test]
+fn adaptive_batch_cap_shrinks_under_pressure_and_reconverges_when_idle() {
+    let model = fit_model(260, 12);
+    let pool = swiss_roll::euler_isometric(64, 23).points;
+    // A 1µs p95 target is unattainable over real sockets, so every loaded
+    // control window shrinks the cap; idle windows read p95 = 0 and grow
+    // it back — both controller motions become observable.
+    let handle = serve::start(
+        model,
+        None,
+        None,
+        &ServeConfig {
+            threads: 2,
+            max_batch: 64,
+            batch_min: 1,
+            target_p95_ms: 0.001,
+            ..Default::default()
+        },
+    )
+    .expect("start");
+    let addr = handle.addr();
+
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        for t in 0..4usize {
+            let addr = addr.clone();
+            let (pool, stop) = (&pool, &stop);
+            scope.spawn(move || {
+                let mut conn = client::Conn::connect(&addr).unwrap();
+                let pts = pool.slice(t * 8, t * 8 + 8, 0, pool.ncols());
+                while !stop.load(Ordering::Relaxed) {
+                    client::embed_on(&mut conn, &pts).unwrap();
+                }
+            });
+        }
+
+        // Under load: poll until the controller has shrunk the cap.
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let shrunk = loop {
+            let (_, metrics) = client::get_json(&addr, "/metrics").unwrap();
+            let cap = metric_at(&metrics, &["adaptive_batch", "cap"]).as_usize().unwrap();
+            let shrinks =
+                metric_at(&metrics, &["adaptive_batch", "shrinks"]).as_usize().unwrap();
+            assert!((1..=64).contains(&cap), "cap {cap} escaped [floor, ceiling]");
+            if shrinks >= 1 && cap < 64 {
+                break cap;
+            }
+            assert!(Instant::now() < deadline, "cap never shrank under load (cap {cap})");
+            std::thread::sleep(Duration::from_millis(50));
+        };
+        assert!(shrunk < 64);
+        stop.store(true, Ordering::Relaxed);
+    });
+
+    // Idle: empty windows read p95 = 0, so the cap doubles back up to the
+    // ceiling — the re-convergence path after the spike passes.
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        let (_, metrics) = client::get_json(&addr, "/metrics").unwrap();
+        let cap = metric_at(&metrics, &["adaptive_batch", "cap"]).as_usize().unwrap();
+        assert!((1..=64).contains(&cap), "cap {cap} escaped [floor, ceiling]");
+        if cap == 64 {
+            let grows = metric_at(&metrics, &["adaptive_batch", "grows"]).as_usize().unwrap();
+            assert!(grows >= 1, "re-convergence must be counted as grows");
+            break;
+        }
+        assert!(Instant::now() < deadline, "cap never re-converged to the ceiling (cap {cap})");
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn shutdown_mid_load_strands_no_embed() {
+    let model = fit_model(260, 8);
+    let fresh = swiss_roll::euler_isometric(16, 41).points;
+    let expected = model.map_points(&fresh).unwrap();
+    let handle = serve::start(
+        model,
+        None,
+        None,
+        &ServeConfig { threads: 2, ..Default::default() },
+    )
+    .expect("start");
+    let addr = handle.addr();
+
+    let ok_total = AtomicUsize::new(0);
+    let body = embed_body(&fresh);
+    std::thread::scope(|scope| {
+        for _ in 0..6usize {
+            let addr = addr.clone();
+            let (body, expected, ok_total) = (&body, &expected, &ok_total);
+            scope.spawn(move || {
+                let mut conn = client::Conn::connect(&addr).unwrap();
+                loop {
+                    match conn.request_response("POST", "/v1/embed", Some(body)) {
+                        // A request the server accepted must complete with
+                        // the right bits, even racing shutdown.
+                        Ok(resp) if resp.status == 200 => {
+                            assert_bits_eq(&embedding_of(&resp.body), expected, "during shutdown");
+                            ok_total.fetch_add(1, Ordering::Relaxed);
+                        }
+                        // Shed at the stop gate: also a clean resolution.
+                        Ok(resp) if resp.status == 503 => break,
+                        Ok(resp) => panic!("unexpected status {}: {}", resp.status, resp.body),
+                        // Connection torn down by the stopping server.
+                        Err(_) => break,
+                    }
+                }
+            });
+        }
+        std::thread::sleep(Duration::from_millis(300));
+        // The scope only exits if every client thread terminates — i.e. no
+        // embed was left stranded waiting on a response that never comes.
+        handle.shutdown();
+    });
+    assert!(ok_total.load(Ordering::Relaxed) >= 1, "load ran before shutdown");
+}
+
+#[test]
+fn pool_autoscaler_stays_in_bounds_and_returns_to_min() {
+    let model = fit_model(260, 14);
+    let pool = swiss_roll::euler_isometric(64, 29).points;
+    let handle = serve::start(
+        model,
+        None,
+        None,
+        &ServeConfig { threads_min: 1, threads_max: 4, ..Default::default() },
+    )
+    .expect("start");
+    let addr = handle.addr();
+    assert_eq!(handle.active_workers(), 1, "starts at threads_min");
+
+    let stop = AtomicBool::new(false);
+    let mut max_seen = 0usize;
+    std::thread::scope(|scope| {
+        for t in 0..8usize {
+            let addr = addr.clone();
+            let (pool, stop) = (&pool, &stop);
+            scope.spawn(move || {
+                let mut conn = client::Conn::connect(&addr).unwrap();
+                let pts = pool.slice(t * 4, t * 4 + 4, 0, pool.ncols());
+                while !stop.load(Ordering::Relaxed) {
+                    client::embed_on(&mut conn, &pts).unwrap();
+                }
+            });
+        }
+        // Sample the pool size while 8 connections contend for it.
+        let until = Instant::now() + Duration::from_secs(4);
+        while Instant::now() < until {
+            let active = handle.active_workers();
+            assert!(
+                (1..=4).contains(&active),
+                "active workers {active} escaped threads_min..=threads_max"
+            );
+            max_seen = max_seen.max(active);
+            std::thread::sleep(Duration::from_millis(25));
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    assert!(max_seen >= 2, "8 contending connections must scale the pool up (saw {max_seen})");
+    let (_, metrics) = client::get_json(&addr, "/metrics").unwrap();
+    assert!(metric_at(&metrics, &["autoscale", "scale_ups"]).as_usize().unwrap() >= 1);
+    assert_eq!(metric_at(&metrics, &["autoscale", "min"]).as_usize(), Some(1));
+    assert_eq!(metric_at(&metrics, &["autoscale", "max"]).as_usize(), Some(4));
+
+    // Idle: retire tickets drain the pool back to min (each step needs
+    // DOWN_COOLDOWN consecutive idle control intervals, so be generous).
+    let deadline = Instant::now() + Duration::from_secs(40);
+    loop {
+        let active = handle.active_workers();
+        assert!((1..=4).contains(&active), "active workers {active} out of bounds going down");
+        if active == 1 {
+            break;
+        }
+        assert!(Instant::now() < deadline, "pool never returned to min (active {active})");
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    handle.shutdown();
+}
+
+#[test]
+fn registry_routes_reloads_and_isolates_models() {
+    let model_a = fit_model(260, 31);
+    let model_b = fit_model(260, 32);
+    let model_c = fit_model(260, 33);
+    let dir_b = tmp_dir("reg_b");
+    let dir_c = tmp_dir("reg_c");
+    model_b.save(&dir_b).unwrap();
+    model_c.save(&dir_c).unwrap();
+    let fresh = swiss_roll::euler_isometric(12, 61).points;
+    let expect_a = model_a.map_points(&fresh).unwrap();
+    let expect_b = model_b.map_points(&fresh).unwrap();
+    let expect_c = model_c.map_points(&fresh).unwrap();
+    assert!(expect_b.max_abs_diff(&expect_c) > 0.0, "fixture models indistinguishable");
+
+    let registry = Registry::from_entries(vec![
+        ("alpha".to_string(), model_a, None),
+        ("beta".to_string(), FittedModel::load(&dir_b).unwrap(), Some(dir_b.clone())),
+    ])
+    .unwrap();
+    let handle = serve::start_registry(
+        registry,
+        None,
+        &ServeConfig { threads: 4, ..Default::default() },
+    )
+    .expect("start");
+    let addr = handle.addr();
+
+    // Both models route by path; the legacy path aliases the first entry.
+    assert_bits_eq(&client::embed_model(&addr, "alpha", &fresh).unwrap(), &expect_a, "alpha");
+    assert_bits_eq(&client::embed_model(&addr, "beta", &fresh).unwrap(), &expect_b, "beta");
+    assert_bits_eq(&client::embed(&addr, &fresh).unwrap(), &expect_a, "legacy → default");
+
+    let (code, models) = client::get_json(&addr, "/v1/models").unwrap();
+    assert_eq!(code, 200);
+    let names: Vec<&str> = models
+        .get("models")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_str)
+        .collect();
+    assert_eq!(names, vec!["alpha", "beta"]);
+
+    // Unknown model: 404 naming what does exist.
+    let mut conn = client::Conn::connect(&addr).unwrap();
+    let resp =
+        conn.request_response("POST", "/v1/models/nope/embed", Some(&embed_body(&fresh))).unwrap();
+    assert_eq!(resp.status, 404, "{}", resp.body);
+    assert!(resp.body.contains("available"), "404 lists alternatives: {}", resp.body);
+    assert!(resp.body.contains("alpha"), "{}", resp.body);
+    // Wrong method on a known per-model action: 405, not 404.
+    let resp = conn.request_response("GET", "/v1/models/alpha/embed", None).unwrap();
+    assert_eq!(resp.status, 405, "{}", resp.body);
+
+    // Hot-reload beta → model_c while alpha serves concurrently: alpha's
+    // bits never waver, beta switches over atomically.
+    std::thread::scope(|scope| {
+        let alpha_addr = addr.clone();
+        let (fresh_ref, expect_a_ref) = (&fresh, &expect_a);
+        let hammer = scope.spawn(move || {
+            let mut conn = client::Conn::connect(&alpha_addr).unwrap();
+            for round in 0..40 {
+                let got =
+                    client::embed_path_on(&mut conn, "/v1/models/alpha/embed", fresh_ref).unwrap();
+                assert_bits_eq(&got, expect_a_ref, &format!("alpha during reload, round {round}"));
+            }
+        });
+        let body = Json::obj(vec![("path", Json::str(dir_c.to_str().unwrap()))]);
+        let (code, resp) = client::post_json(&addr, "/v1/models/beta/reload", &body).unwrap();
+        assert_eq!(code, 200, "{resp}");
+        hammer.join().unwrap();
+    });
+    assert_bits_eq(&client::embed_model(&addr, "beta", &fresh).unwrap(), &expect_c, "beta after");
+    assert_bits_eq(&client::embed_model(&addr, "alpha", &fresh).unwrap(), &expect_a, "alpha after");
+
+    // Failed reload: 400 with context, beta keeps serving model_c.
+    let bad = Json::obj(vec![("path", Json::str("/nonexistent/model/dir"))]);
+    let (code, resp) = client::post_json(&addr, "/v1/models/beta/reload", &bad).unwrap();
+    assert_eq!(code, 400, "{resp}");
+    assert!(format!("{resp}").contains("keeping current model"), "{resp}");
+    assert_bits_eq(
+        &client::embed_model(&addr, "beta", &fresh).unwrap(),
+        &expect_c,
+        "beta after failed reload",
+    );
+    // Alpha was registered without a source path: pathless reload errors.
+    let (code, resp) =
+        client::post_json(&addr, "/v1/models/alpha/reload", &Json::obj(vec![])).unwrap();
+    assert_eq!(code, 400, "{resp}");
+    assert!(format!("{resp}").contains("pass a path"), "{resp}");
+
+    // Per-model observability: the name-scoped endpoint and the /metrics
+    // "models" section both account per-model traffic.
+    let (code, alpha_m) = client::get_json(&addr, "/v1/models/alpha/metrics").unwrap();
+    assert_eq!(code, 200);
+    let alpha_embeds =
+        metric_at(&alpha_m, &["metrics", "embeds"]).as_usize().unwrap();
+    assert!(alpha_embeds >= 40, "alpha embeds {alpha_embeds}");
+    let (_, metrics) = client::get_json(&addr, "/metrics").unwrap();
+    assert!(metric_at(&metrics, &["models", "beta", "reloads_ok"]).as_usize().unwrap() >= 1);
+    assert!(metric_at(&metrics, &["models", "beta", "reloads_failed"]).as_usize().unwrap() >= 1);
+    handle.shutdown();
+}
+
+#[test]
+fn registry_rejects_invalid_and_duplicate_names() {
+    let model = fit_model(240, 51);
+    let err = Registry::from_entries(vec![("has space".to_string(), model.clone(), None)])
+        .unwrap_err();
+    assert!(err.contains("invalid model name"), "{err}");
+    let err = Registry::from_entries(vec![
+        ("twin".to_string(), model.clone(), None),
+        ("twin".to_string(), model.clone(), None),
+    ])
+    .unwrap_err();
+    assert!(err.contains("duplicate"), "{err}");
+    let err = Registry::from_entries(vec![]).unwrap_err();
+    assert!(err.contains("at least one"), "{err}");
+}
+
+/// Property/fuzz tests for the hand-rolled HTTP parser, mirroring the
+/// byte-at-a-time discipline of `dist/proto.rs`: framing must be
+/// insensitive to how the network fragments the stream, and malformed
+/// input must yield typed errors, never panics.
+mod http_fuzz {
+    use isospark::serve::http;
+
+    fn canonical_requests() -> Vec<Vec<u8>> {
+        let post = |path: &str, body: &str| {
+            format!(
+                "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            )
+            .into_bytes()
+        };
+        vec![
+            b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n".to_vec(),
+            b"GET /v1/models HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n".to_vec(),
+            post("/v1/embed", "{\"points\": [[1.0, 2.0, 3.0]]}"),
+            post("/v1/models/alpha/embed", "{\"points\": [[0.5, -1.25, 3e-7]]}"),
+            post("/v1/models/m-1.v2/reload", "{\"path\": \"/tmp/m\"}"),
+        ]
+    }
+
+    #[test]
+    fn every_split_point_parses_identically() {
+        for full in canonical_requests() {
+            let (whole, used) = http::try_parse(&full).expect("canonical parses").expect("complete");
+            assert_eq!(used, full.len());
+            for cut in 0..full.len() {
+                // Any strict prefix is incomplete — never an error, never
+                // a truncated parse.
+                assert!(
+                    matches!(http::try_parse(&full[..cut]), Ok(None)),
+                    "prefix of {} bytes misparsed (path {})",
+                    cut,
+                    whole.path
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn byte_at_a_time_delivery_matches_one_shot() {
+        for full in canonical_requests() {
+            let (whole, _) = http::try_parse(&full).unwrap().unwrap();
+            let mut buf = Vec::new();
+            let mut parsed = None;
+            for (i, &b) in full.iter().enumerate() {
+                buf.push(b);
+                if let Some((req, used)) = http::try_parse(&buf).unwrap() {
+                    assert_eq!(i, full.len() - 1, "parsed before the final byte of {}", whole.path);
+                    assert_eq!(used, full.len());
+                    parsed = Some(req);
+                }
+            }
+            let req = parsed.expect("full delivery parses");
+            assert_eq!(req.method, whole.method);
+            assert_eq!(req.path, whole.path);
+            assert_eq!(req.body, whole.body);
+        }
+    }
+
+    #[test]
+    fn pipelined_stream_parses_in_order() {
+        let reqs = canonical_requests();
+        let mut stream: Vec<u8> = Vec::new();
+        for r in &reqs {
+            stream.extend_from_slice(r);
+        }
+        let mut seen = Vec::new();
+        while !stream.is_empty() {
+            let (req, used) = http::try_parse(&stream).unwrap().expect("next pipelined request");
+            seen.push(req.path.clone());
+            stream.drain(..used);
+        }
+        let want: Vec<String> = reqs
+            .iter()
+            .map(|r| {
+                let (req, _) = http::try_parse(r).unwrap().unwrap();
+                req.path
+            })
+            .collect();
+        assert_eq!(seen, want);
+    }
+
+    /// Deterministic xorshift64* generator — no rand crate in this repo.
+    struct Lcg(u64);
+    impl Lcg {
+        fn next_u64(&mut self) -> u64 {
+            let mut x = self.0;
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            self.0 = x;
+            x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+        }
+    }
+
+    #[test]
+    fn fuzzed_input_yields_typed_errors_never_panics() {
+        let mut rng = Lcg(0x9E37_79B9_7F4A_7C15);
+        // Pure garbage of every size class.
+        for _ in 0..2_000 {
+            let len = (rng.next_u64() % 600) as usize;
+            let buf: Vec<u8> = (0..len).map(|_| (rng.next_u64() & 0xff) as u8).collect();
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                let _ = http::try_parse(&buf);
+            }));
+            assert!(r.is_ok(), "parser panicked on {len}-byte garbage");
+        }
+        // Mutations of valid requests: flip a few bytes, parse, never panic.
+        for full in canonical_requests() {
+            for _ in 0..400 {
+                let mut buf = full.clone();
+                for _ in 0..=(rng.next_u64() % 3) {
+                    let i = (rng.next_u64() as usize) % buf.len();
+                    buf[i] = (rng.next_u64() & 0xff) as u8;
+                }
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let _ = http::try_parse(&buf);
+                }));
+                assert!(r.is_ok(), "parser panicked on mutated request");
+            }
+        }
+        // Oversized inputs stay typed errors.
+        let huge = vec![b'H'; http::MAX_HEAD_BYTES + 64];
+        assert!(http::try_parse(&huge).is_err());
+        let body_bomb =
+            format!("POST / HTTP/1.1\r\nContent-Length: {}\r\n\r\n", http::MAX_BODY_BYTES + 1);
+        assert!(http::try_parse(body_bomb.as_bytes()).is_err());
+    }
+}
